@@ -1,0 +1,20 @@
+use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+use tapa::hls::estimate_all;
+use tapa::floorplan::{floorplan, FloorplanConfig};
+use tapa::device::u250;
+
+fn main() {
+    let mut b = TaskGraphBuilder::new("shared");
+    let p = b.proto("Fat", ComputeSpec { mac_ops: 200, alu_ops: 400, bram_bytes: 256*1024, uram_bytes: 0, trip_count: 64, ii: 1, pipeline_depth: 4 });
+    let a = b.invoke(p, "a");
+    let c = b.invoke(p, "b");
+    b.shared_mem("m", 512, 1024, a, c);
+    let mut g = b.build().unwrap();
+    let d = u250();
+    let est = estimate_all(&g);
+    let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+    println!("first: {:?} cost={}", fp.assignment, fp.cost);
+    g.same_slot.push((a, c));
+    let fp2 = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+    println!("with same_slot: {:?} cost={}", fp2.assignment, fp2.cost);
+}

@@ -1,0 +1,53 @@
+//! Cycle-accurate dataflow simulation demo: the §5 throughput-neutrality
+//! claim and the §3.4 burst detector (Table 1), observable directly.
+//!
+//! Run with: `cargo run --release --example dataflow_sim`
+
+use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+use tapa::hls::estimate_all;
+use tapa::sim::{simulate, BurstDetector, SimConfig};
+
+fn main() {
+    // 1. Throughput neutrality: a reconvergent diamond, unpipelined vs
+    //    pipelined+balanced vs pipelined-unbalanced.
+    let n = 100_000u64;
+    let mut b = TaskGraphBuilder::new("diamond");
+    let p = b.proto("K", ComputeSpec::passthrough(n));
+    let src = b.invoke(p, "src");
+    let top = b.invoke(p, "top");
+    let bot = b.invoke(p, "bot");
+    let join = b.invoke(p, "join");
+    b.stream("st", 64, 2, src, top);   // 0
+    b.stream("sb", 64, 2, src, bot);   // 1
+    b.stream("tj", 64, 2, top, join);  // 2
+    b.stream("bj", 64, 2, bot, join);  // 3
+    let g = b.build().unwrap();
+    let est = estimate_all(&g);
+    let cfg = SimConfig::default();
+
+    println!("diamond, {n} tokens per channel:");
+    for (name, lat) in [
+        ("no pipelining", [0u32, 0, 0, 0]),
+        ("balanced   +6/+6", [6, 6, 0, 0]),
+        ("unbalanced +6/+0", [6, 0, 0, 0]),
+    ] {
+        let r = simulate(&g, &est, &lat, &cfg).unwrap();
+        println!("  {name:<18} {:>8} cycles", r.cycles);
+    }
+    println!("balanced pipelining adds only fill latency; unbalanced throttles on the shallow FIFO.\n");
+
+    // 2. Burst detector trace (Table 1).
+    println!("burst detector on 64,65,66,67,128,129,130,256:");
+    let mut d = BurstDetector::new(8, 256);
+    for (cycle, addr) in [64u64, 65, 66, 67, 128, 129, 130, 256].into_iter().enumerate() {
+        let out = d.push_addr(addr);
+        let (base, len) = d.state();
+        let out_s = out
+            .map(|b| format!("burst(addr={}, len={})", b.addr, b.len))
+            .unwrap_or_default();
+        println!("  cycle {cycle}: in={addr:<4} state=(base={:?}, len={len}) {out_s}", base.unwrap());
+    }
+    if let Some(b) = d.flush() {
+        println!("  flush:   burst(addr={}, len={})", b.addr, b.len);
+    }
+}

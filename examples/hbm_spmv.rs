@@ -1,0 +1,53 @@
+//! HBM-specific optimizations on the Serpens SpMV accelerator (§7.4,
+//! Tables 8 & 10): async_mmap interface, automatic channel binding, and
+//! multi-floorplan candidate generation.
+//!
+//! Run with: `cargo run --release --example hbm_spmv`
+
+use tapa::bench_suite::hbm::spmv;
+use tapa::floorplan::multi::{generate_with_failures, DEFAULT_SWEEP};
+use tapa::floorplan::{bind_hbm_channels, floorplan, FloorplanConfig};
+use tapa::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+use tapa::hls::estimate_all;
+use tapa::report::fmt_mhz;
+
+fn main() {
+    let (orig_d, opt_d) = spmv(24);
+    let cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+
+    // Interface comparison (Table 8's BRAM column).
+    let orig = run_flow(&orig_d, FlowVariant::Baseline, &cfg);
+    let opt = run_flow(&opt_d, FlowVariant::Tapa, &cfg);
+    println!("SpMV A24, 28 HBM channels:");
+    println!("  orig (mmap):       {:>7} MHz   BRAM {:.2}%", fmt_mhz(orig.fmax_mhz), orig.util_pct[2]);
+    println!("  opt (async_mmap):  {:>7} MHz   BRAM {:.2}%", fmt_mhz(opt.fmax_mhz), opt.util_pct[2]);
+
+    // Automatic HBM channel binding (§6.2).
+    let device = opt_d.device.device();
+    let est = estimate_all(&opt_d.graph);
+    let fp = floorplan(&opt_d.graph, &device, &est, &FloorplanConfig::default()).unwrap();
+    let bind = bind_hbm_channels(&opt_d.graph, &device, &fp).unwrap();
+    println!(
+        "\nauto channel binding: {} ports bound, all column-local: {}",
+        bind.assignments.len(),
+        bind.all_local
+    );
+    for (pi, ch) in bind.assignments.iter().take(6) {
+        println!("  port {:<8} → channel {ch}", opt_d.graph.ext_ports[*pi].name);
+    }
+    println!("  …");
+
+    // Multi-floorplan generation (§6.3 / Table 10).
+    println!("\nmulti-floorplan sweep (utilization ratio → Eq.1 cost):");
+    for (ratio, plan) in
+        generate_with_failures(&opt_d.graph, &device, &est, &FloorplanConfig::default(), &DEFAULT_SWEEP)
+    {
+        match plan {
+            Some(p) => println!("  ratio {ratio:.2} → cost {}", p.cost),
+            None => println!("  ratio {ratio:.2} → Failed"),
+        }
+    }
+}

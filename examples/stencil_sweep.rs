@@ -1,0 +1,40 @@
+//! Reproduce Fig. 12's stencil sweep interactively: SODA chains of 1–8
+//! kernels on U250 and U280, original flow vs TAPA.
+//!
+//! Run with: `cargo run --release --example stencil_sweep`
+
+use tapa::bench_suite::stencil::stencil;
+use tapa::device::DeviceKind;
+use tapa::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+use tapa::report::fmt_mhz;
+
+fn main() {
+    let cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    for dev in [DeviceKind::U250, DeviceKind::U280] {
+        println!("\n== {} ==", dev.name());
+        println!("{:<8} {:>10} {:>10} {:>8}", "kernels", "orig MHz", "tapa MHz", "spread");
+        for k in 1..=8 {
+            let d = stencil(k, dev);
+            let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+            let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+            // How many slots the optimized flow spread the kernels over.
+            let spread = {
+                let mut s = opt.placement.slot.clone();
+                s.sort();
+                s.dedup();
+                s.len()
+            };
+            println!(
+                "{:<8} {:>10} {:>10} {:>8}",
+                k,
+                fmt_mhz(orig.fmax_mhz),
+                fmt_mhz(opt.fmax_mhz),
+                spread
+            );
+        }
+    }
+    println!("\npaper reference: orig averages 69–86 MHz with failures; tapa 266–273 MHz.");
+}

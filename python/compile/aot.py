@@ -1,0 +1,51 @@
+"""AOT lowering: placer_step -> HLO text -> artifacts/placer_step.hlo.txt.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+rust runtime's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py for the reference recipe.
+
+Runs ONCE at build time (`make artifacts`); python is never on the rust
+request path.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, placer_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/placer_step.hlo.txt",
+        help="output HLO text path",
+    )
+    args = ap.parse_args()
+
+    lowered = jax.jit(placer_step).lower(*example_args())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+    print(f"wrote {len(text)} chars to {args.out} (sha256 {digest})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the RUDY kernel - the correctness reference the
+Pallas implementation is tested against (and the same math as
+rust/src/place/analytical.rs::rudy_map)."""
+
+import jax.numpy as jnp
+
+from .rudy import GRID
+
+
+def rudy_ref(x0, x1, y0, y1, dens):
+    """Reference congestion map; inputs in grid-cell units, shapes (E,)."""
+    cx0 = jnp.arange(GRID, dtype=jnp.float32)
+    cy0 = jnp.arange(GRID, dtype=jnp.float32)
+    # (GRID_y, E) vertical overlaps and (GRID_x, E) horizontal overlaps.
+    oy = jnp.maximum(
+        jnp.minimum(y1[None, :], cy0[:, None] + 1.0)
+        - jnp.maximum(y0[None, :], cy0[:, None]),
+        0.0,
+    )
+    ox = jnp.maximum(
+        jnp.minimum(x1[None, :], cx0[:, None] + 1.0)
+        - jnp.maximum(x0[None, :], cx0[:, None]),
+        0.0,
+    )
+    # map[gy, gx] = sum_e oy[gy, e] * ox[gx, e] * dens[e]
+    return jnp.einsum("ye,xe,e->yx", oy, ox, dens)

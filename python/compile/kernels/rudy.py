@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: RUDY congestion-map accumulation.
+
+Every net spreads its routing demand uniformly over its (inflated)
+bounding box; the map cell (gy, gx) accumulates the overlap-weighted
+density of all nets. This is the O(cells x nets) hot spot of the
+analytical-placement inner loop (DESIGN.md section "Hardware adaptation"):
+on TPU we tile the GRID x GRID map by rows (BlockSpec over the grid
+dimension), keep the whole net list resident in VMEM, and compute each
+row's 32 x MAX_E overlap products as dense VPU ops - no scatter.
+
+Inputs are pre-normalized to *grid-cell units* by the L2 model
+(`model.net_bboxes`): x0/x1/y0/y1 in cells, `dens` premultiplied by
+1/cell_area so the kernel itself is device-geometry agnostic.
+
+interpret=True: the CPU PJRT plugin cannot execute Mosaic custom calls;
+interpret mode lowers to plain HLO, which both jax-CPU and the rust
+runtime execute. Real-TPU performance is *estimated* in DESIGN.md/
+EXPERIMENTS.md from the VMEM footprint instead.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes - keep in sync with rust/src/place/analytical.rs.
+MAX_V = 512
+MAX_E = 1024
+GRID = 32
+
+
+def _rudy_row_kernel(x0_ref, x1_ref, y0_ref, y1_ref, dens_ref, out_ref):
+    """Compute one row (GRID cells) of the congestion map.
+
+    Block shapes: inputs are the full net arrays (MAX_E,); the output
+    block is (1, GRID). Cell row index = program_id(0).
+    """
+    gy = pl.program_id(0)
+    x0 = x0_ref[...]
+    x1 = x1_ref[...]
+    y0 = y0_ref[...]
+    y1 = y1_ref[...]
+    dens = dens_ref[...]
+
+    # Vertical overlap of every net with this cell row: cells are unit
+    # squares in normalized coordinates.
+    cy0 = gy.astype(jnp.float32)
+    oy = jnp.maximum(
+        jnp.minimum(y1, cy0 + 1.0) - jnp.maximum(y0, cy0), 0.0
+    )  # (MAX_E,)
+
+    # Horizontal overlap with each of the GRID cells in the row:
+    cx0 = jax.lax.iota(jnp.float32, GRID)  # (GRID,)
+    ox = jnp.maximum(
+        jnp.minimum(x1[None, :], cx0[:, None] + 1.0)
+        - jnp.maximum(x0[None, :], cx0[:, None]),
+        0.0,
+    )  # (GRID, MAX_E)
+
+    cell = jnp.sum(ox * (oy * dens)[None, :], axis=1)  # (GRID,)
+    out_ref[...] = cell[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rudy_pallas(x0, x1, y0, y1, dens):
+    """Congestion map via the Pallas kernel; inputs in grid-cell units.
+
+    Returns a (GRID, GRID) float32 map of demand densities.
+    """
+    return pl.pallas_call(
+        _rudy_row_kernel,
+        grid=(GRID,),
+        in_specs=[
+            pl.BlockSpec((MAX_E,), lambda gy: (0,)),
+            pl.BlockSpec((MAX_E,), lambda gy: (0,)),
+            pl.BlockSpec((MAX_E,), lambda gy: (0,)),
+            pl.BlockSpec((MAX_E,), lambda gy: (0,)),
+            pl.BlockSpec((MAX_E,), lambda gy: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, GRID), lambda gy: (gy, 0)),
+        out_shape=jax.ShapeDtypeStruct((GRID, GRID), jnp.float32),
+        interpret=True,
+    )(x0, x1, y0, y1, dens)

@@ -1,0 +1,85 @@
+"""L2 JAX model: one analytical-placement step (quadratic wirelength +
+anchor pull, gradient descent) fused with the L1 RUDY congestion kernel.
+
+The math mirrors rust/src/place/analytical.rs::RustStep exactly - the rust
+implementation is the runtime fallback and the cross-check oracle.
+
+Fixed AOT shapes (keep in sync with rust/src/place/analytical.rs):
+  pos     (MAX_V, 2) f32   module positions (padding rows ignored)
+  pairs   (MAX_E, 2) i32   net endpoints (padding nets have weight 0)
+  weight  (MAX_E,)   f32   pre-normalized net weights
+  anchor  (MAX_V, 2) f32   slot-center anchors
+  canvas  (2,)       f32   (cols, rows) canvas extent
+  lr      ()         f32   gradient step
+  alpha   ()         f32   anchor pull weight
+Outputs: (pos', congestion (GRID, GRID), wl ()).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rudy import GRID, MAX_E, MAX_V, rudy_pallas
+
+__all__ = ["MAX_V", "MAX_E", "GRID", "placer_step", "net_bboxes", "potential"]
+
+
+def potential(pos, pairs, weight, anchor, alpha):
+    """Placement potential: weighted quadratic wirelength + anchor spring.
+
+    The anchor term is restricted in effect to live modules because padded
+    rows have pos == anchor == 0.
+    """
+    pa = pos[pairs[:, 0]]  # (E, 2)
+    pb = pos[pairs[:, 1]]
+    d = pa - pb
+    wl = jnp.sum(weight * jnp.sum(d * d, axis=1))
+    spring = alpha * jnp.sum((pos - anchor) ** 2)
+    return wl + spring, wl
+
+
+def net_bboxes(pos, pairs, weight, canvas):
+    """Per-net inflated bounding boxes in *grid-cell units* + density.
+
+    Inflation: half a cell on each side so zero-length nets still carry
+    demand (same as the rust reference).
+    """
+    cell_w = canvas[0] / GRID
+    cell_h = canvas[1] / GRID
+    pa = pos[pairs[:, 0]]
+    pb = pos[pairs[:, 1]]
+    x0 = jnp.minimum(pa[:, 0], pb[:, 0]) - 0.5 * cell_w
+    x1 = jnp.maximum(pa[:, 0], pb[:, 0]) + 0.5 * cell_w
+    y0 = jnp.minimum(pa[:, 1], pb[:, 1]) - 0.5 * cell_h
+    y1 = jnp.maximum(pa[:, 1], pb[:, 1]) + 0.5 * cell_h
+    area = (x1 - x0) * (y1 - y0)
+    # With boxes in cell units, a cell's contribution is
+    # dens * ox_cells * oy_cells; matching the rust reference
+    # (w * overlap_canvas / area / cell_area) requires dens = w / area
+    # with `area` in canvas units — the cell_w·cell_h factors cancel.
+    dens = weight / jnp.maximum(area, 1e-6)
+    return x0 / cell_w, x1 / cell_w, y0 / cell_h, y1 / cell_h, dens
+
+
+def placer_step(pos, pairs, weight, anchor, canvas, lr, alpha):
+    """One gradient step + congestion map of the *updated* positions."""
+    (_, wl), grads = jax.value_and_grad(
+        lambda p: potential(p, pairs, weight, anchor, alpha), has_aux=True
+    )(pos)
+    new_pos = pos - lr * grads
+    x0, x1, y0, y1, dens = net_bboxes(new_pos, pairs, weight, canvas)
+    cong = rudy_pallas(x0, x1, y0, y1, dens)
+    return new_pos, cong, wl
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((MAX_V, 2), f32),
+        jax.ShapeDtypeStruct((MAX_E, 2), jnp.int32),
+        jax.ShapeDtypeStruct((MAX_E,), f32),
+        jax.ShapeDtypeStruct((MAX_V, 2), f32),
+        jax.ShapeDtypeStruct((2,), f32),
+        jax.ShapeDtypeStruct((), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )

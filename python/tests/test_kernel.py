@@ -1,0 +1,87 @@
+"""L1 correctness: Pallas RUDY kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps box geometries and weights; the kernel must match the
+reference within float32 tolerance for every generated case.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import rudy_ref
+from compile.kernels.rudy import GRID, MAX_E, rudy_pallas
+
+
+def _boxes(rng, n_live):
+    x0 = rng.uniform(-2, GRID + 2, MAX_E).astype(np.float32)
+    y0 = rng.uniform(-2, GRID + 2, MAX_E).astype(np.float32)
+    x1 = x0 + rng.uniform(0, GRID, MAX_E).astype(np.float32)
+    y1 = y0 + rng.uniform(0, GRID, MAX_E).astype(np.float32)
+    dens = np.zeros(MAX_E, np.float32)
+    dens[:n_live] = rng.uniform(0.01, 4.0, n_live).astype(np.float32)
+    return map(jnp.asarray, (x0, x1, y0, y1, dens))
+
+
+def test_empty_input_is_zero_map():
+    z = jnp.zeros(MAX_E, jnp.float32)
+    out = rudy_pallas(z, z, z, z, z)
+    assert out.shape == (GRID, GRID)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_single_unit_box_fills_one_cell():
+    x0 = jnp.zeros(MAX_E, jnp.float32).at[0].set(5.0)
+    x1 = jnp.zeros(MAX_E, jnp.float32).at[0].set(6.0)
+    y0 = jnp.zeros(MAX_E, jnp.float32).at[0].set(7.0)
+    y1 = jnp.zeros(MAX_E, jnp.float32).at[0].set(8.0)
+    dens = jnp.zeros(MAX_E, jnp.float32).at[0].set(3.0)
+    out = np.array(rudy_pallas(x0, x1, y0, y1, dens))
+    assert out[7, 5] == pytest.approx(3.0)
+    out[7, 5] = 0.0
+    np.testing.assert_array_equal(out, 0.0)
+
+
+def test_matches_reference_fixed_seed():
+    rng = np.random.default_rng(42)
+    args = list(_boxes(rng, 200))
+    ref = np.asarray(rudy_ref(*args))
+    pal = np.asarray(rudy_pallas(*args))
+    np.testing.assert_allclose(pal, ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    n_live=st.integers(0, MAX_E),
+)
+def test_matches_reference_hypothesis(seed, n_live):
+    rng = np.random.default_rng(seed)
+    args = list(_boxes(rng, n_live))
+    ref = np.asarray(rudy_ref(*args))
+    pal = np.asarray(rudy_pallas(*args))
+    np.testing.assert_allclose(pal, ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_mass_conservation(seed):
+    """A box fully inside the canvas deposits exactly its weight:
+    sum(map) * cell_area == dens * box_area (cell units: cell_area = 1)."""
+    rng = np.random.default_rng(seed)
+    x0v = np.zeros(MAX_E, np.float32)
+    x1v = np.zeros(MAX_E, np.float32)
+    y0v = np.zeros(MAX_E, np.float32)
+    y1v = np.zeros(MAX_E, np.float32)
+    dens = np.zeros(MAX_E, np.float32)
+    n = 32
+    x0v[:n] = rng.uniform(0, GRID - 5, n)
+    y0v[:n] = rng.uniform(0, GRID - 5, n)
+    x1v[:n] = x0v[:n] + rng.uniform(0.1, 5, n)
+    y1v[:n] = y0v[:n] + rng.uniform(0.1, 5, n)
+    dens[:n] = rng.uniform(0.1, 2.0, n)
+    out = np.asarray(rudy_pallas(*map(jnp.asarray, (x0v, x1v, y0v, y1v, dens))))
+    expect = float(
+        np.sum(dens[:n] * (x1v[:n] - x0v[:n]) * (y1v[:n] - y0v[:n]))
+    )
+    assert np.sum(out) == pytest.approx(expect, rel=1e-4)

@@ -1,0 +1,119 @@
+"""L2 correctness: the placer step's gradient math and shape contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    GRID,
+    MAX_E,
+    MAX_V,
+    example_args,
+    net_bboxes,
+    placer_step,
+    potential,
+)
+
+
+def toy(seed=0, num_v=8, num_e=8, canvas=(2.0, 4.0)):
+    rng = np.random.default_rng(seed)
+    pos = np.zeros((MAX_V, 2), np.float32)
+    anchor = np.zeros((MAX_V, 2), np.float32)
+    pos[:num_v] = rng.uniform(0.1, 1.9, (num_v, 2)).astype(np.float32)
+    anchor[:num_v] = rng.uniform(0.1, 1.9, (num_v, 2)).astype(np.float32)
+    pairs = np.zeros((MAX_E, 2), np.int32)
+    weight = np.zeros(MAX_E, np.float32)
+    for e in range(num_e):
+        pairs[e] = [e % num_v, (e + 1) % num_v]
+        weight[e] = 0.25 + (e % 4) * 0.25
+    return (
+        jnp.asarray(pos),
+        jnp.asarray(pairs),
+        jnp.asarray(weight),
+        jnp.asarray(anchor),
+        jnp.asarray(np.array(canvas, np.float32)),
+    )
+
+
+def test_shapes_match_aot_contract():
+    pos, pairs, weight, anchor, canvas = toy()
+    new_pos, cong, wl = placer_step(
+        pos, pairs, weight, anchor, canvas, jnp.float32(0.01), jnp.float32(0.6)
+    )
+    specs = example_args()
+    assert new_pos.shape == specs[0].shape
+    assert cong.shape == (GRID, GRID)
+    assert wl.shape == ()
+
+
+def test_gradient_matches_manual_formula():
+    """grad wrt x_v = sum 2 w (x_v - x_other) + 2 alpha (x_v - anchor)."""
+    pos, pairs, weight, anchor, canvas = toy()
+    alpha = jnp.float32(0.6)
+    grads = jax.grad(
+        lambda p: potential(p, pairs, weight, anchor, alpha)[0]
+    )(pos)
+    g = np.zeros((MAX_V, 2), np.float32)
+    posn = np.asarray(pos)
+    for e in range(MAX_E):
+        w = float(weight[e])
+        if w == 0.0:
+            continue
+        a, b = int(pairs[e, 0]), int(pairs[e, 1])
+        d = posn[a] - posn[b]
+        g[a] += 2 * w * d
+        g[b] -= 2 * w * d
+    g += 2 * 0.6 * (posn - np.asarray(anchor))
+    np.testing.assert_allclose(np.asarray(grads), g, rtol=1e-4, atol=1e-5)
+
+
+def test_step_decreases_potential():
+    pos, pairs, weight, anchor, canvas = toy()
+    alpha = jnp.float32(0.6)
+    lr = jnp.float32(0.01)
+    p0 = float(potential(pos, pairs, weight, anchor, alpha)[0])
+    new_pos, _, _ = placer_step(pos, pairs, weight, anchor, canvas, lr, alpha)
+    p1 = float(potential(new_pos, pairs, weight, anchor, alpha)[0])
+    assert p1 < p0
+
+
+def test_padding_is_inert():
+    pos, pairs, weight, anchor, canvas = toy(num_v=6, num_e=5)
+    lr, alpha = jnp.float32(0.01), jnp.float32(0.6)
+    base = placer_step(pos, pairs, weight, anchor, canvas, lr, alpha)
+    # Poison padded net endpoints (weight stays 0): nothing may change.
+    pairs2 = jnp.asarray(np.asarray(pairs)).at[10:, :].set(3)
+    poisoned = placer_step(pos, pairs2, weight, anchor, canvas, lr, alpha)
+    np.testing.assert_allclose(np.asarray(base[0]), np.asarray(poisoned[0]))
+    np.testing.assert_allclose(np.asarray(base[1]), np.asarray(poisoned[1]))
+
+
+def test_bboxes_inflated_by_half_cell():
+    pos, pairs, weight, anchor, canvas = toy()
+    x0, x1, y0, y1, dens = net_bboxes(pos, pairs, weight, canvas)
+    # In cell units the inflation is exactly 1 cell total per axis.
+    a, b = int(pairs[0, 0]), int(pairs[0, 1])
+    cell_w = float(canvas[0]) / GRID
+    lo = min(float(pos[a, 0]), float(pos[b, 0])) / cell_w - 0.5
+    hi = max(float(pos[a, 0]), float(pos[b, 0])) / cell_w + 0.5
+    assert float(x0[0]) == pytest.approx(lo, rel=1e-5)
+    assert float(x1[0]) == pytest.approx(hi, rel=1e-5)
+    assert float(dens[0]) > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    num_v=st.integers(2, 64),
+    lr=st.floats(1e-4, 0.02),
+)
+def test_step_never_nans(seed, num_v, lr):
+    pos, pairs, weight, anchor, canvas = toy(seed=seed, num_v=num_v, num_e=num_v)
+    new_pos, cong, wl = placer_step(
+        pos, pairs, weight, anchor, canvas, jnp.float32(lr), jnp.float32(0.6)
+    )
+    assert np.isfinite(np.asarray(new_pos)).all()
+    assert np.isfinite(np.asarray(cong)).all()
+    assert np.isfinite(float(wl))

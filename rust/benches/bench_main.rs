@@ -1,0 +1,135 @@
+//! Benchmark harness (`cargo bench`): regenerates every table and figure
+//! of the paper's evaluation section (§7) from the implemented flow, then
+//! runs performance micro-benchmarks of the hot paths (floorplan ILP,
+//! latency-balancing LP, cycle-accurate simulator, analytical-placement
+//! step on both executors).
+//!
+//! criterion is not available offline; this is a plain `harness = false`
+//! bench with wall-clock timing and min/median reporting.
+
+use std::time::Instant;
+
+use tapa::bench_suite::experiments::{self, ALL_EXPERIMENTS};
+use tapa::flow::FlowConfig;
+
+fn time_it<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples.first().copied().unwrap_or(0.0);
+    let med = samples[samples.len() / 2];
+    println!("[perf] {name:<44} min {:>9.3} ms   median {:>9.3} ms", min * 1e3, med * 1e3);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    // `cargo bench -- table4` runs a single experiment; `-- perf` runs
+    // only the micro-benchmarks.
+    let filter: Option<&str> = args.iter().skip(1).find(|a| !a.starts_with('-')).map(|s| s.as_str());
+
+    let cfg = FlowConfig::default();
+    let t_all = Instant::now();
+
+    if filter != Some("perf") {
+        for id in ALL_EXPERIMENTS {
+            if let Some(f) = filter {
+                if f != *id {
+                    continue;
+                }
+            }
+            let t0 = Instant::now();
+            match experiments::run_experiment(id, &cfg) {
+                Some(table) => {
+                    println!("{}", table.render());
+                    println!("[{} regenerated in {:.2}s]\n", id, t0.elapsed().as_secs_f64());
+                }
+                None => eprintln!("unknown experiment {id}"),
+            }
+        }
+    }
+
+    if filter.is_none() || filter == Some("perf") {
+        perf_micro();
+    }
+    println!("total bench time: {:.1}s", t_all.elapsed().as_secs_f64());
+}
+
+/// §Perf micro-benchmarks (EXPERIMENTS.md records before/after here).
+fn perf_micro() {
+    use tapa::bench_suite::cnn::cnn;
+    use tapa::device::DeviceKind;
+    use tapa::floorplan::{floorplan, FloorplanConfig};
+    use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+    use tapa::hls::estimate_all;
+    use tapa::pipeline::balance_latency;
+    use tapa::place::{
+        analytical::build_arrays, place_floorplan_guided, AnalyticalParams, RustStep,
+        StepExecutor,
+    };
+    use tapa::sim::{simulate, SimConfig};
+
+    println!("== performance micro-benchmarks ==");
+
+    // 1. Floorplan ILP on the largest CNN (Table 11's hardest row).
+    let big = cnn(16, DeviceKind::U250);
+    let device = big.device.device();
+    let est = estimate_all(&big.graph);
+    let fp_cfg = FloorplanConfig::default();
+    time_it("floorplan cnn_13x16 (ILP/hybrid, 3 divs)", 3, || {
+        let _ = floorplan(&big.graph, &device, &est, &fp_cfg).unwrap();
+    });
+
+    // 2. Latency-balancing LP at CNN-13x16 scale.
+    let fp = floorplan(&big.graph, &device, &est, &fp_cfg).unwrap();
+    let lat: Vec<u32> = big
+        .graph
+        .edges
+        .iter()
+        .map(|e| 2 * fp.crossings(&device, e.producer, e.consumer) as u32)
+        .collect();
+    time_it("latency balancing cnn_13x16 (SDC LP)", 3, || {
+        let _ = balance_latency(&big.graph, &lat).unwrap();
+    });
+
+    // 3. Cycle-accurate simulator throughput: 64-node chain, 100k tokens.
+    let mut b = TaskGraphBuilder::new("simperf");
+    let p = b.proto("K", ComputeSpec::passthrough(100_000));
+    let ids = b.invoke_n(p, "k", 64);
+    for i in 0..63 {
+        b.stream(&format!("s{i}"), 64, 2, ids[i], ids[i + 1]);
+    }
+    let g = b.build().unwrap();
+    let gest = estimate_all(&g);
+    let zero = vec![0u32; g.num_edges()];
+    let t0 = Instant::now();
+    let r = simulate(&g, &gest, &zero, &SimConfig::default()).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let node_ticks = r.cycles as f64 * 64.0;
+    println!(
+        "[perf] simulator: {:.1}M node-ticks/s ({} cycles, 64 nodes, {:.2}s)",
+        node_ticks / dt / 1e6,
+        r.cycles,
+        dt
+    );
+
+    // 4. Analytical placement step: rust reference vs PJRT artifact.
+    let arrays = build_arrays(&big.graph, &device, &fp);
+    let params = AnalyticalParams::default();
+    time_it("placer step rust-ref (512v/1024e)", 20, || {
+        let _ = RustStep.step(&arrays, &params);
+    });
+    if let Some(engine) = tapa::runtime::Engine::load_default() {
+        time_it("placer step xla-pjrt (512v/1024e)", 20, || {
+            let _ = engine.step(&arrays, &params);
+        });
+        time_it("full guided placement (16 iters, pjrt)", 3, || {
+            let _ = place_floorplan_guided(&big.graph, &device, &fp, &params, &engine);
+        });
+    } else {
+        println!("[perf] xla-pjrt step skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,186 @@
+//! PolySA CNN systolic arrays (§7.2, Fig. 13, Tables 4 & 11).
+//!
+//! 13 × c PE grid with row feeders (weight/activation loaders carrying the
+//! large buffers), per-column feeders/drainers, and three memory-facing IO
+//! modules. Footprints are calibrated against Table 4 (e.g. 13×2 ≈ 18%
+//! LUT / 8.6% DSP / 22% BRAM on U250; 13×16 ≈ 58% / 68% / 50%).
+
+use crate::device::DeviceKind;
+use crate::flow::Design;
+use crate::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
+
+const ROWS: usize = 13;
+
+fn pe_spec(trip: u64) -> ComputeSpec {
+    // ~40 DSP and ~2.4K LUT per PE, one 8-BRAM local buffer.
+    ComputeSpec {
+        mac_ops: 12,
+        alu_ops: 40,
+        bram_bytes: 6 * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 8,
+    }
+}
+
+fn row_io_spec(trip: u64) -> ComputeSpec {
+    // Row feeders/drainers carry the big reuse buffers (~30 BRAM, ~5K LUT).
+    ComputeSpec {
+        mac_ops: 0,
+        alu_ops: 110,
+        bram_bytes: 30 * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 6,
+    }
+}
+
+fn col_io_spec(trip: u64) -> ComputeSpec {
+    // Column feeders/drainers: ~8K LUT, small DSP, 20 BRAM.
+    ComputeSpec {
+        mac_ops: 2,
+        alu_ops: 170,
+        bram_bytes: 20 * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 6,
+    }
+}
+
+/// Simulated trip count calibrated to Table 4's cycle column:
+/// 53 591 cycles at c=2 growing ~17.6K per 2 columns.
+pub fn cnn_trip(c: usize) -> u64 {
+    53_400 + 8_810 * (c as u64 - 2)
+}
+
+/// Build the 13×`c` CNN accelerator for `dev`.
+pub fn cnn(c: usize, dev: DeviceKind) -> Design {
+    assert!(c >= 2 && c % 2 == 0 && c <= 16);
+    let trip = cnn_trip(c);
+    let name = format!("cnn_13x{c}_{}", dev.name().to_lowercase());
+    let mut b = TaskGraphBuilder::new(&name);
+    let p_pe = b.proto("PE", pe_spec(trip));
+    let p_row = b.proto("RowIO", row_io_spec(trip));
+    let p_col = b.proto("ColIO", col_io_spec(trip));
+    let p_mem = b.proto("MemIO", col_io_spec(trip));
+
+    // PE grid.
+    let mut pes = Vec::with_capacity(ROWS * c);
+    for r in 0..ROWS {
+        for cc in 0..c {
+            pes.push(b.invoke(p_pe, &format!("pe_{r}_{cc}")));
+        }
+    }
+    let pe = |r: usize, cc: usize| pes[r * c + cc];
+
+    // Row feeders on the left, row drainers on the right.
+    let rfeed = b.invoke_n(p_row, "row_feed", ROWS);
+    let rdrain = b.invoke_n(p_row, "row_drain", ROWS);
+    // Column feeders on top, drainers at the bottom.
+    let cfeed = b.invoke_n(p_col, "col_feed", c);
+    let cdrain = b.invoke_n(p_col, "col_drain", c);
+    // Memory IO fan-in/out.
+    let mem_in = b.invoke(p_mem, "mem_in");
+    let mem_w = b.invoke(p_mem, "mem_wt");
+    let mem_out = b.invoke(p_mem, "mem_out");
+
+    // Systolic streams, 64-bit, FIFO depth 8 (PolySA sizes channel
+    // depths to absorb the feeder/PE latency mismatch along the array).
+    const D: u32 = 32;
+    // Feeder/drainer chains carry the cross-array skew (~9 cycles/hop).
+    const CHAIN_D: u32 = 160;
+    for r in 0..ROWS {
+        b.stream(&format!("rf{r}"), 64, D, rfeed[r], pe(r, 0));
+        for cc in 0..c - 1 {
+            b.stream(&format!("h_{r}_{cc}"), 64, D, pe(r, cc), pe(r, cc + 1));
+        }
+        b.stream(&format!("rd{r}"), 64, D, pe(r, c - 1), rdrain[r]);
+    }
+    for cc in 0..c {
+        b.stream(&format!("cf{cc}"), 64, D, cfeed[cc], pe(0, cc));
+        for r in 0..ROWS - 1 {
+            b.stream(&format!("v_{r}_{cc}"), 64, D, pe(r, cc), pe(r + 1, cc));
+        }
+        b.stream(&format!("cd{cc}"), 64, D, pe(ROWS - 1, cc), cdrain[cc]);
+    }
+    // Memory distribution/collection as daisy chains (PolySA feeder
+    // chains): the 512-bit AXI data is deserialized at the memory nodes
+    // and forwarded along 128-bit chains — no wide skewed joins.
+    b.stream("min_chain0", 128, CHAIN_D, mem_in, rfeed[0]);
+    for r in 0..ROWS - 1 {
+        b.stream(&format!("min_chain{}", r + 1), 128, CHAIN_D, rfeed[r], rfeed[r + 1]);
+    }
+    // Drain chain runs downward so the accumulated chain skew tracks the
+    // array's vertical compute skew (PolySA's drain order).
+    for r in 0..ROWS - 1 {
+        b.stream(&format!("mout_chain{r}"), 128, CHAIN_D, rdrain[r], rdrain[r + 1]);
+    }
+    b.stream("mout_tail", 128, CHAIN_D, rdrain[ROWS - 1], mem_out);
+    b.stream("mw_chain0", 128, CHAIN_D, mem_w, cfeed[0]);
+    for cc in 0..c - 1 {
+        b.stream(&format!("mw_chain{}", cc + 1), 128, CHAIN_D, cfeed[cc], cfeed[cc + 1]);
+    }
+    // 3 external memory ports (the CNN of Fig. 3 uses three DDR banks).
+    let mem = match dev {
+        DeviceKind::U250 => MemKind::Ddr,
+        DeviceKind::U280 => MemKind::Hbm,
+    };
+    b.mmap_port("ddr_in", PortStyle::Mmap, mem, 512, mem_in, None);
+    b.mmap_port("ddr_w", PortStyle::Mmap, mem, 512, mem_w, None);
+    b.mmap_port("ddr_out", PortStyle::Mmap, mem, 512, mem_out, None);
+
+    Design { name, graph: b.build().unwrap(), device: dev }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::{estimate_all, total_area};
+
+    #[test]
+    fn grid_shape_scales() {
+        let d = cnn(2, DeviceKind::U250);
+        // 26 PEs + 26 row IO + 4 col IO + 3 mem = 59.
+        assert_eq!(d.graph.num_insts(), 59);
+        let d16 = cnn(16, DeviceKind::U250);
+        assert_eq!(d16.graph.num_insts(), 13 * 16 + 26 + 32 + 3);
+        assert!(d16.graph.num_edges() > d.graph.num_edges());
+    }
+
+    #[test]
+    fn dsp_matches_table4_endpoints() {
+        let cap = DeviceKind::U250.device().total_capacity();
+        for (c, lo, hi) in [(2usize, 5.5, 11.0), (16, 52.0, 72.0)] {
+            let d = cnn(c, DeviceKind::U250);
+            let est = estimate_all(&d.graph);
+            let dsp_pct = 100.0 * total_area(&d.graph, &est).dsp as f64 / cap.dsp as f64;
+            assert!(
+                (lo..hi).contains(&dsp_pct),
+                "13x{c}: dsp%={dsp_pct}, expect [{lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn lut_matches_table4_endpoints() {
+        let cap = DeviceKind::U250.device().total_capacity();
+        for (c, lo, hi) in [(2usize, 10.0, 24.0), (16, 42.0, 66.0)] {
+            let d = cnn(c, DeviceKind::U250);
+            let est = estimate_all(&d.graph);
+            let lut_pct = 100.0 * total_area(&d.graph, &est).lut as f64 / cap.lut as f64;
+            assert!(
+                (lo..hi).contains(&lut_pct),
+                "13x{c}: lut%={lut_pct}, expect [{lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn trip_counts_track_table4_cycles() {
+        assert_eq!(cnn_trip(2), 53_400);
+        assert!(cnn_trip(16) > 170_000 && cnn_trip(16) < 180_000);
+    }
+}

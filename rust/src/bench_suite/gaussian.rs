@@ -1,0 +1,138 @@
+//! AutoSA Gaussian-elimination triangles (§7.2, Fig. 14, Table 5).
+//!
+//! n×n triangular PE array (PE(i,j) for j ≤ i) with fixed-size IO modules
+//! holding the input/output buffers — which is why Table 5's BRAM column
+//! is constant (13.24%) across sizes while LUT grows from 18.6% to 54%.
+
+use crate::device::DeviceKind;
+use crate::flow::Design;
+use crate::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
+
+fn pe_spec(trip: u64) -> ComputeSpec {
+    // ~2.6K LUT, ~3 DSP per PE (Table 5: 24×24 → 300 PEs, 11.3% DSP).
+    ComputeSpec {
+        mac_ops: 1,
+        alu_ops: 52,
+        bram_bytes: 0,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 6,
+    }
+}
+
+fn io_spec(trip: u64) -> ComputeSpec {
+    // 24 fixed IO modules × 30 BRAM ≈ 712 blocks = 13.2% of U250.
+    ComputeSpec {
+        mac_ops: 0,
+        alu_ops: 150,
+        bram_bytes: 30 * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 4,
+    }
+}
+
+/// Fixed IO module count (independent of n — Table 5's constant BRAM row).
+const NUM_IO: usize = 24;
+
+/// Table 5 cycle calibration: 758 @ n=12 … 2361 @ n=24.
+pub fn gauss_trip(n: usize) -> u64 {
+    // Roughly quadratic-ish growth fitted to the published points.
+    700 + (n as u64 - 12) * 130
+}
+
+/// Build the n×n Gaussian-elimination design.
+pub fn gaussian(n: usize, dev: DeviceKind) -> Design {
+    assert!((4..=24).contains(&n));
+    let trip = gauss_trip(n);
+    let name = format!("gauss_{n}x{n}_{}", dev.name().to_lowercase());
+    let mut b = TaskGraphBuilder::new(&name);
+    let p_pe = b.proto("GaussPE", pe_spec(trip));
+    let p_io = b.proto("GaussIO", io_spec(trip));
+
+    // Triangle of PEs.
+    let mut idx = std::collections::HashMap::new();
+    for i in 0..n {
+        for j in 0..=i {
+            let id = b.invoke(p_pe, &format!("pe_{i}_{j}"));
+            idx.insert((i, j), id);
+        }
+    }
+    // Streams down and right within the triangle (32-bit).
+    for i in 0..n {
+        for j in 0..=i {
+            if i + 1 < n {
+                b.stream(&format!("d_{i}_{j}"), 32, 2, idx[&(i, j)], idx[&(i + 1, j)]);
+            }
+            if j < i {
+                b.stream(&format!("r_{i}_{j}"), 32, 2, idx[&(i, j)], idx[&(i, j + 1)]);
+            }
+        }
+    }
+    // Fixed IO ring: feeders into the diagonal, drainers from the last row.
+    let ios = b.invoke_n(p_io, "io", NUM_IO);
+    for (k, &io) in ios.iter().enumerate() {
+        if k % 2 == 0 {
+            // Feeder into a diagonal PE.
+            let t = (k / 2) % n;
+            b.stream(&format!("feed{k}"), 256, 2, io, idx[&(t, t)]);
+        } else {
+            // Drainer from a bottom-row PE.
+            let t = (k / 2) % n;
+            b.stream(&format!("drain{k}"), 256, 2, idx[&(n - 1, t)], io);
+        }
+    }
+    let mem = match dev {
+        DeviceKind::U250 => MemKind::Ddr,
+        DeviceKind::U280 => MemKind::Hbm,
+    };
+    b.mmap_port("m_in", PortStyle::Mmap, mem, 512, ios[0], None);
+    b.mmap_port("m_out", PortStyle::Mmap, mem, 512, ios[1], None);
+    Design { name, graph: b.build().unwrap(), device: dev }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+    use crate::hls::{estimate_all, total_area};
+
+    #[test]
+    fn triangle_counts() {
+        let d = gaussian(12, DeviceKind::U250);
+        assert_eq!(d.graph.num_insts(), 78 + NUM_IO);
+        let d24 = gaussian(24, DeviceKind::U250);
+        assert_eq!(d24.graph.num_insts(), 300 + NUM_IO);
+    }
+
+    #[test]
+    fn bram_constant_across_sizes() {
+        // Table 5: BRAM% identical for all four sizes.
+        let cap = DeviceKind::U250.device().total_capacity();
+        let pct = |n: usize| {
+            let d = gaussian(n, DeviceKind::U250);
+            let est = estimate_all(&d.graph);
+            100.0 * total_area(&d.graph, &est).bram18 as f64 / cap.bram18 as f64
+        };
+        let p12 = pct(12);
+        let p24 = pct(24);
+        assert!((p12 - p24).abs() < 1.5, "p12={p12} p24={p24}");
+        assert!((10.0..18.0).contains(&p12), "p12={p12}");
+    }
+
+    #[test]
+    fn lut_grows_with_size() {
+        let cap = DeviceKind::U250.device().total_capacity();
+        let pct = |n: usize| {
+            let d = gaussian(n, DeviceKind::U250);
+            let est = estimate_all(&d.graph);
+            100.0 * total_area(&d.graph, &est).lut as f64 / cap.lut as f64
+        };
+        let p12 = pct(12);
+        let p24 = pct(24);
+        assert!(p24 > 2.0 * p12, "p12={p12} p24={p24}");
+        assert!((30.0..72.0).contains(&p24), "p24={p24}");
+    }
+}

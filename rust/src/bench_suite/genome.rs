@@ -1,0 +1,92 @@
+//! Genome sequencing / Minimap2 overlapping (§7.2): processing elements in
+//! a broadcast topology communicating through shared BRAM channels — the
+//! one non-dataflow benchmark, exercising the `SharedMem` edge kind (never
+//! pipelined; co-located by floorplan feedback instead).
+
+use crate::device::DeviceKind;
+use crate::flow::Design;
+use crate::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
+
+const PES: usize = 12;
+
+/// Build the genome-sequencing design (U250).
+pub fn genome() -> Design {
+    let trip = 40_000;
+    let name = "genome_u250".to_string();
+    let mut b = TaskGraphBuilder::new(&name);
+    let p_disp = b.proto(
+        "Dispatcher",
+        ComputeSpec {
+            mac_ops: 0,
+            alu_ops: 700,
+            bram_bytes: 48 * 2304,
+            uram_bytes: 0,
+            trip_count: trip,
+            ii: 1,
+            pipeline_depth: 4,
+        },
+    );
+    let p_pe = b.proto(
+        "OverlapPE",
+        ComputeSpec {
+            mac_ops: 20,
+            alu_ops: 760, // ~35K LUT per PE
+            bram_bytes: 40 * 2304,
+            uram_bytes: 0,
+            trip_count: trip,
+            ii: 1,
+            pipeline_depth: 12,
+        },
+    );
+    let p_coll = b.proto(
+        "Collector",
+        ComputeSpec {
+            mac_ops: 0,
+            alu_ops: 500,
+            bram_bytes: 24 * 2304,
+            uram_bytes: 0,
+            trip_count: trip,
+            ii: 1,
+            pipeline_depth: 4,
+        },
+    );
+    let disp = b.invoke(p_disp, "dispatch");
+    let pes = b.invoke_n(p_pe, "pe", PES);
+    let coll = b.invoke(p_coll, "collect");
+    // Broadcast via shared BRAM channels; results return via BRAM too.
+    for (i, &pe) in pes.iter().enumerate() {
+        b.shared_mem(&format!("bin{i}"), 128, 512, disp, pe);
+        b.shared_mem(&format!("bout{i}"), 128, 512, pe, coll);
+    }
+    b.mmap_port("reads", PortStyle::Mmap, MemKind::Ddr, 512, disp, None);
+    b.mmap_port("overlaps", PortStyle::Mmap, MemKind::Ddr, 512, coll, None);
+    Design { name, graph: b.build().unwrap(), device: DeviceKind::U250 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EdgeKind;
+
+    #[test]
+    fn broadcast_uses_shared_mem_channels() {
+        let d = genome();
+        assert_eq!(d.graph.num_insts(), PES + 2);
+        assert!(d.graph.edges.iter().all(|e| e.kind == EdgeKind::SharedMem));
+        assert_eq!(d.graph.num_edges(), 2 * PES);
+    }
+
+    #[test]
+    fn shared_mem_never_pipelined_in_flow() {
+        use crate::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+        let d = genome();
+        let cfg = FlowConfig {
+            sim: SimOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_flow(&d, FlowVariant::Tapa, &cfg);
+        if let Some(plan) = &r.pipeline {
+            assert!(plan.edge_lat.iter().all(|&l| l == 0), "BRAM channels unpipelined");
+        }
+    }
+}

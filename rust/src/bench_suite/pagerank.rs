@@ -1,0 +1,131 @@
+//! HBM PageRank graph processing (§7.2, Table 7): eight processing units,
+//! each on two HBM ports, plus a central controller on five HBM ports.
+//! The control loops form dependency cycles at task granularity — the
+//! design that exercises the §5.2 cycle-feedback path of the latency
+//! balancer.
+
+use crate::device::DeviceKind;
+use crate::flow::Design;
+use crate::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
+
+const PUS: usize = 8;
+
+/// Build the PageRank design (Table 7: ~39% LUT, ~27% BRAM, ~14% DSP,
+/// 120 458 cycles, 136 → 210 MHz).
+pub fn pagerank() -> Design {
+    let trip = 120_200;
+    let name = "pagerank_u280".to_string();
+    let mut b = TaskGraphBuilder::new(&name);
+    let p_pu = b.proto(
+        "ProcUnit",
+        ComputeSpec {
+            mac_ops: 54, // ×8 PUs ≈ 1.3K DSP → 14.4%
+            alu_ops: 1_150, // ≈ 52K LUT per PU
+            bram_bytes: 120 * 2304,
+            uram_bytes: 0,
+            trip_count: trip,
+            ii: 1,
+            pipeline_depth: 10,
+        },
+    );
+    let p_ctrl = b.proto(
+        "Controller",
+        ComputeSpec {
+            mac_ops: 4,
+            alu_ops: 900,
+            bram_bytes: 60 * 2304,
+            uram_bytes: 0,
+            trip_count: trip,
+            ii: 1,
+            pipeline_depth: 6,
+        },
+    );
+    // Small IO shims own the HBM ports (the usual TAPA structure: a thin
+    // loader task sits next to the channel, compute sits wherever the
+    // floorplanner likes).
+    let p_io = b.proto(
+        "HbmIo",
+        ComputeSpec {
+            mac_ops: 0,
+            alu_ops: 60,
+            bram_bytes: 0,
+            uram_bytes: 0,
+            trip_count: trip,
+            ii: 1,
+            pipeline_depth: 3,
+        },
+    );
+    let pus = b.invoke_n(p_pu, "pu", PUS);
+    let ctrl = b.invoke(p_ctrl, "ctrl");
+    // Cyclic control: ctrl → PU (work) and PU → ctrl (updates). The
+    // update channels start pre-loaded so the control loop can turn over
+    // (credit-based bootstrap — how real cyclic dataflow resets).
+    for (i, &pu) in pus.iter().enumerate() {
+        b.stream(&format!("work{i}"), 256, 64, ctrl, pu);
+        b.stream_with_init(&format!("upd{i}"), 256, 64, 64, pu, ctrl);
+    }
+    // 2 HBM ports per PU + 5 for the controller = 21 channels, each owned
+    // by a dedicated IO shim streaming into/out of its compute task.
+    for (i, &pu) in pus.iter().enumerate() {
+        let io_a = b.invoke(p_io, &format!("io_a{i}"));
+        let io_b = b.invoke(p_io, &format!("io_b{i}"));
+        b.mmap_port(&format!("h_a{i}"), PortStyle::Mmap, MemKind::Hbm, 512, io_a, None);
+        b.mmap_port(&format!("h_b{i}"), PortStyle::Mmap, MemKind::Hbm, 512, io_b, None);
+        b.stream(&format!("lda{i}"), 512, 4, io_a, pu);
+        b.stream(&format!("stb{i}"), 512, 4, pu, io_b);
+    }
+    for k in 0..5 {
+        let io = b.invoke(p_io, &format!("io_c{k}"));
+        b.mmap_port(&format!("h_c{k}"), PortStyle::Mmap, MemKind::Hbm, 512, io, None);
+        if k % 2 == 0 {
+            b.stream(&format!("cin{k}"), 512, 4, io, ctrl);
+        } else {
+            b.stream(&format!("cout{k}"), 512, 4, ctrl, io);
+        }
+    }
+    Design { name, graph: b.build().unwrap(), device: DeviceKind::U280 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::validate::cyclic_insts;
+
+    #[test]
+    fn has_dependency_cycles() {
+        let d = pagerank();
+        let cyc = cyclic_insts(&d.graph);
+        assert_eq!(cyc.len(), PUS + 1, "all PUs + ctrl are in cycles");
+    }
+
+    #[test]
+    fn uses_21_hbm_channels() {
+        let d = pagerank();
+        assert_eq!(d.graph.hbm_ports(), 2 * PUS + 5);
+    }
+
+    #[test]
+    fn cycle_feedback_resolves_without_throughput_loss() {
+        // The control SCC (ctrl + 8 PUs) cannot share one slot; the §5.2
+        // fallback must keep the floorplan and leave cycle-internal edges
+        // unpipelined so latency balancing stays feasible.
+        use crate::floorplan::FloorplanConfig;
+        use crate::hls::estimate_all;
+        use crate::pipeline::pipeline_with_feedback;
+        let d = pagerank();
+        let mut g = d.graph.clone();
+        let device = d.device.device();
+        let est = estimate_all(&g);
+        let (_fp, plan) =
+            pipeline_with_feedback(&mut g, &device, &est, &FloorplanConfig::default(), 4)
+                .expect("pagerank must floorplan");
+        assert!(plan.cycle_feedback.is_empty(), "cycles resolved");
+        // ctrl↔PU edges are cycle-internal → zero inserted latency; the
+        // acyclic HBM-IO spurs may be pipelined freely.
+        for (e, edge) in g.edges.iter().enumerate() {
+            if edge.name.starts_with("work") || edge.name.starts_with("upd") {
+                assert_eq!(plan.edge_lat[e], 0, "cycle edge {} must stay unpipelined", edge.name);
+            }
+        }
+    }
+}

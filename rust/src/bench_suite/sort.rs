@@ -1,0 +1,95 @@
+//! HBM bucket sort (§7.2, Table 6): 8 parallel processing lanes joined by
+//! two fully-connected 8×8 crossbar layers of 256-bit FIFO channels — the
+//! stress case for floorplan-aware pipelining of wide all-to-all wiring.
+//! Requires 16 external memory ports → U280 only.
+
+use crate::device::DeviceKind;
+use crate::flow::Design;
+use crate::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
+
+const LANES: usize = 8;
+
+fn lane_spec(trip: u64, lut: u32, bram_blocks: u64) -> ComputeSpec {
+    ComputeSpec {
+        mac_ops: 0,
+        alu_ops: lut / 45,
+        bram_bytes: bram_blocks * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 6,
+    }
+}
+
+/// Build the bucket-sort design (Table 6: ~28% LUT, ~16% BRAM, 78 629
+/// cycles on U280).
+pub fn bucket_sort() -> Design {
+    let trip = 78_400;
+    let name = "bucket_sort_u280".to_string();
+    let mut b = TaskGraphBuilder::new(&name);
+    let p_read = b.proto("Reader", lane_spec(trip, 6_000, 8));
+    let p_class = b.proto("Classifier", lane_spec(trip, 11_000, 10));
+    let p_bucket = b.proto("Bucketer", lane_spec(trip, 12_000, 16));
+    let p_merge = b.proto("Merger", lane_spec(trip, 11_000, 10));
+    let p_write = b.proto("Writer", lane_spec(trip, 6_000, 8));
+
+    let readers = b.invoke_n(p_read, "read", LANES);
+    let class = b.invoke_n(p_class, "classify", LANES);
+    let buckets = b.invoke_n(p_bucket, "bucket", LANES);
+    let mergers = b.invoke_n(p_merge, "merge", LANES);
+    let writers = b.invoke_n(p_write, "write", LANES);
+
+    for i in 0..LANES {
+        b.stream(&format!("rc{i}"), 256, 4, readers[i], class[i]);
+        b.stream(&format!("mw{i}"), 256, 4, mergers[i], writers[i]);
+    }
+    // Crossbar 1: classifiers → bucketers (full 8×8, 256-bit).
+    for i in 0..LANES {
+        for j in 0..LANES {
+            b.stream(&format!("x1_{i}_{j}"), 256, 4, class[i], buckets[j]);
+        }
+    }
+    // Crossbar 2: bucketers → mergers.
+    for i in 0..LANES {
+        for j in 0..LANES {
+            b.stream(&format!("x2_{i}_{j}"), 256, 4, buckets[i], mergers[j]);
+        }
+    }
+    // 16 HBM ports: one per reader + one per writer.
+    for i in 0..LANES {
+        b.mmap_port(&format!("h_in{i}"), PortStyle::Mmap, MemKind::Hbm, 256, readers[i], None);
+        b.mmap_port(&format!("h_out{i}"), PortStyle::Mmap, MemKind::Hbm, 256, writers[i], None);
+    }
+    Design { name, graph: b.build().unwrap(), device: DeviceKind::U280 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_full_crossbars() {
+        let d = bucket_sort();
+        assert_eq!(d.graph.num_insts(), 5 * LANES);
+        // 2 crossbars (64 each) + 16 lane links = 144 edges.
+        assert_eq!(d.graph.num_edges(), 2 * LANES * LANES + 2 * LANES);
+        assert_eq!(d.graph.hbm_ports(), 16);
+    }
+
+    #[test]
+    fn u280_only_16_ports() {
+        // §7.3: "the design requires 16 external memory ports and U250
+        // only has 4 available" — it targets U280's HBM.
+        let d = bucket_sort();
+        assert!(d.graph.hbm_ports() > DeviceKind::U250.device().total_ddr_ports());
+        assert_eq!(d.device, DeviceKind::U280);
+    }
+
+    #[test]
+    fn crossbar_widths_are_256() {
+        let d = bucket_sort();
+        for e in &d.graph.edges {
+            assert_eq!(e.width_bits, 256);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! SODA stencil chains (§7.2, Fig. 11 leftmost, Fig. 12).
+//!
+//! Linear topology: Load → K₁ → K₂ → … → K_k → Store over 512-bit
+//! streams. Each kernel is deliberately large — "each kernel of the design
+//! is very large and uses about half the resources of a slot" (§7.3) —
+//! which is what makes the baseline flow fail routing beyond a few
+//! kernels and causes the U280 frequency dip at k ≥ 7.
+
+use crate::device::DeviceKind;
+use crate::flow::Design;
+use crate::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
+
+/// One SODA kernel ≈ half a slot: ~86 K LUT, 150 DSP, ~100 BRAM_18K of
+/// line buffers.
+fn kernel_spec(trip: u64) -> ComputeSpec {
+    ComputeSpec {
+        mac_ops: 50,
+        alu_ops: 1900,
+        bram_bytes: 100 * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 12,
+    }
+}
+
+fn io_spec(trip: u64) -> ComputeSpec {
+    ComputeSpec {
+        mac_ops: 0,
+        alu_ops: 120,
+        bram_bytes: 4 * 2304,
+        uram_bytes: 0,
+        trip_count: trip,
+        ii: 1,
+        pipeline_depth: 4,
+    }
+}
+
+/// Build the `k`-kernel stencil chain for `dev`.
+pub fn stencil(k: usize, dev: DeviceKind) -> Design {
+    assert!((1..=8).contains(&k));
+    let trip = 16_384;
+    let name = format!("stencil_k{k}_{}", dev.name().to_lowercase());
+    let mut b = TaskGraphBuilder::new(&name);
+    let pk = b.proto("SodaKernel", kernel_spec(trip));
+    let pio = b.proto("SodaIo", io_spec(trip));
+    let load = b.invoke(pio, "load");
+    let store = b.invoke(pio, "store");
+    let kernels = b.invoke_n(pk, "kernel", k);
+    b.stream("in", 512, 4, load, kernels[0]);
+    for i in 0..k - 1 {
+        b.stream(&format!("s{i}"), 512, 4, kernels[i], kernels[i + 1]);
+    }
+    b.stream("out", 512, 4, kernels[k - 1], store);
+    let mem = match dev {
+        DeviceKind::U250 => MemKind::Ddr,
+        DeviceKind::U280 => MemKind::Hbm,
+    };
+    b.mmap_port("mem_in", PortStyle::Mmap, mem, 512, load, None);
+    b.mmap_port("mem_out", PortStyle::Mmap, mem, 512, store, None);
+    Design { name, graph: b.build().unwrap(), device: dev }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::estimate_all;
+
+    #[test]
+    fn chain_shape() {
+        let d = stencil(4, DeviceKind::U250);
+        assert_eq!(d.graph.num_insts(), 6); // load + 4 kernels + store
+        assert_eq!(d.graph.num_edges(), 5);
+    }
+
+    #[test]
+    fn kernel_is_about_half_a_slot() {
+        let d = stencil(1, DeviceKind::U280);
+        let est = estimate_all(&d.graph);
+        let kernel_lut = est[2].area.lut; // first kernel
+        let slot_lut = DeviceKind::U280.device().slots[0].capacity.lut;
+        let ratio = kernel_lut as f64 / slot_lut as f64;
+        assert!((0.35..0.65).contains(&ratio), "kernel/slot = {ratio}");
+    }
+
+    #[test]
+    fn eight_kernels_near_but_under_device() {
+        use crate::hls::total_area;
+        let d = stencil(8, DeviceKind::U280);
+        let est = estimate_all(&d.graph);
+        let util = total_area(&d.graph, &est)
+            .max_utilization(&DeviceKind::U280.device().total_capacity());
+        assert!(util > 0.4 && util < 0.95, "util={util}");
+    }
+}

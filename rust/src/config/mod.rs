@@ -1,0 +1,254 @@
+//! Configuration system: a small TOML-subset parser (no external crates
+//! offline) feeding [`crate::flow::FlowConfig`] and CLI defaults.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float and boolean values, `#` comments. This covers every
+//! knob the launcher exposes (see `tapa --help` and `examples/*.toml`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key → value` (top-level keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<(String, String), Value>,
+}
+
+/// Parse failures.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ConfigError {
+    #[error("line {0}: expected `key = value`, got `{1}`")]
+    BadLine(usize, String),
+    #[error("line {0}: unterminated string")]
+    BadString(usize),
+    #[error("io: {0}")]
+    Io(String),
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(ConfigError::BadLine(ln + 1, raw.to_string()));
+            };
+            let key = line[..eq].trim().to_string();
+            let val_str = line[eq + 1..].trim();
+            if key.is_empty() || val_str.is_empty() {
+                return Err(ConfigError::BadLine(ln + 1, raw.to_string()));
+            }
+            let value = parse_value(val_str, ln + 1)?;
+            cfg.values.insert((section.clone(), key), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Config, ConfigError> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| ConfigError::Io(e.to_string()))?;
+        Config::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// Typed getters with defaults.
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// Number of entries (diagnostics).
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Build a [`crate::flow::FlowConfig`] from the `[floorplan]`,
+    /// `[placer]` and `[sim]` sections.
+    pub fn flow_config(&self) -> crate::flow::FlowConfig {
+        let mut fc = crate::flow::FlowConfig::default();
+        fc.floorplan.max_util = self.f64_or("floorplan", "max_util", fc.floorplan.max_util);
+        fc.floorplan.stages_per_crossing = self
+            .i64_or("floorplan", "stages_per_crossing", fc.floorplan.stages_per_crossing as i64)
+            as u32;
+        fc.floorplan.ilp_vertex_threshold = self
+            .i64_or("floorplan", "ilp_vertex_threshold", fc.floorplan.ilp_vertex_threshold as i64)
+            as usize;
+        fc.floorplan.max_bb_nodes =
+            self.i64_or("floorplan", "max_bb_nodes", fc.floorplan.max_bb_nodes as i64) as usize;
+        fc.analytical.lr = self.f64_or("placer", "lr", fc.analytical.lr as f64) as f32;
+        fc.analytical.alpha = self.f64_or("placer", "alpha", fc.analytical.alpha as f64) as f32;
+        fc.analytical.iters =
+            self.i64_or("placer", "iters", fc.analytical.iters as i64) as usize;
+        fc.sim.enabled = self.bool_or("sim", "enabled", fc.sim.enabled);
+        fc.sim.mem_latency = self.i64_or("sim", "mem_latency", fc.sim.mem_latency as i64) as u32;
+        fc.sim.max_cycles = self.i64_or("sim", "max_cycles", fc.sim.max_cycles as i64) as u64;
+        fc
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Value, ConfigError> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let Some(end) = stripped.find('"') else {
+            return Err(ConfigError::BadString(ln));
+        };
+        return Ok(Value::Str(stripped[..end].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare word → string (device names etc.).
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+device = "u250"
+[floorplan]
+max_util = 0.7        # ratio
+stages_per_crossing = 2
+[sim]
+enabled = true
+max_cycles = 1000000
+[placer]
+lr = 0.01
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "device"), Some(&Value::Str("u250".into())));
+        assert_eq!(c.f64_or("floorplan", "max_util", 0.0), 0.7);
+        assert_eq!(c.i64_or("floorplan", "stages_per_crossing", 0), 2);
+        assert_eq!(c.bool_or("sim", "enabled", false), true);
+        assert_eq!(c.i64_or("sim", "max_cycles", 0), 1_000_000);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert!(c.is_empty());
+        assert_eq!(c.f64_or("floorplan", "max_util", 0.75), 0.75);
+        assert_eq!(c.str_or("", "device", "u280"), "u280");
+    }
+
+    #[test]
+    fn flow_config_roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let fc = c.flow_config();
+        assert_eq!(fc.floorplan.max_util, 0.7);
+        assert_eq!(fc.analytical.lr, 0.01);
+        assert_eq!(fc.sim.max_cycles, 1_000_000);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let c = Config::parse("name = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(c.get("", "name"), Some(&Value::Str("a # not comment".into())));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert_eq!(
+            Config::parse("just garbage").unwrap_err(),
+            ConfigError::BadLine(1, "just garbage".into())
+        );
+        assert!(matches!(
+            Config::parse("x = \"unterminated"),
+            Err(ConfigError::BadString(1))
+        ));
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let c = Config::parse("a = -3\nb = 2.5e-1").unwrap();
+        assert_eq!(c.i64_or("", "a", 0), -3);
+        assert!((c.f64_or("", "b", 0.0) - 0.25).abs() < 1e-12);
+    }
+}

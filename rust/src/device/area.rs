@@ -1,0 +1,218 @@
+//! Resource (area) vectors: LUT / FF / BRAM_18K / DSP / URAM counts.
+//!
+//! These mirror the resource types that both Vitis HLS reports and the
+//! paper's floorplan ILP constrains (Eq. 2), plus HBM channel counts which
+//! §6.2 treats as "another type of resource".
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// Number of scalar resource kinds tracked in an [`AreaVector`].
+pub const NUM_RESOURCE_KINDS: usize = 6;
+
+/// Names for reporting, index-aligned with [`AreaVector::as_array`].
+pub const RESOURCE_NAMES: [&str; NUM_RESOURCE_KINDS] =
+    ["LUT", "FF", "BRAM_18K", "DSP", "URAM", "HBM_CH"];
+
+/// A vector of FPGA resource counts.
+///
+/// `hbm_ch` is the paper's §6.2 trick: slots physically adjacent to the HBM
+/// stacks "have" HBM channels as a resource, tasks that bind an HBM port
+/// "consume" one, and the floorplan ILP then performs channel binding for
+/// free.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AreaVector {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram18: u64,
+    pub dsp: u64,
+    pub uram: u64,
+    pub hbm_ch: u64,
+}
+
+impl AreaVector {
+    pub const ZERO: AreaVector =
+        AreaVector { lut: 0, ff: 0, bram18: 0, dsp: 0, uram: 0, hbm_ch: 0 };
+
+    /// Construct from the four classic fabric resources.
+    pub fn new(lut: u64, ff: u64, bram18: u64, dsp: u64) -> Self {
+        AreaVector { lut, ff, bram18, dsp, uram: 0, hbm_ch: 0 }
+    }
+
+    /// Builder-style URAM count.
+    pub fn with_uram(mut self, uram: u64) -> Self {
+        self.uram = uram;
+        self
+    }
+
+    /// Builder-style HBM channel requirement/capacity.
+    pub fn with_hbm_ch(mut self, hbm_ch: u64) -> Self {
+        self.hbm_ch = hbm_ch;
+        self
+    }
+
+    /// Fixed-order array view (see [`RESOURCE_NAMES`]).
+    pub fn as_array(&self) -> [u64; NUM_RESOURCE_KINDS] {
+        [self.lut, self.ff, self.bram18, self.dsp, self.uram, self.hbm_ch]
+    }
+
+    /// Build from the fixed-order array view.
+    pub fn from_array(a: [u64; NUM_RESOURCE_KINDS]) -> Self {
+        AreaVector { lut: a[0], ff: a[1], bram18: a[2], dsp: a[3], uram: a[4], hbm_ch: a[5] }
+    }
+
+    /// True if every component of `self` fits within `cap`.
+    pub fn fits_within(&self, cap: &AreaVector) -> bool {
+        self.as_array().iter().zip(cap.as_array().iter()).all(|(a, c)| a <= c)
+    }
+
+    /// Component-wise utilization ratios vs a capacity vector; components
+    /// with zero capacity report 0 when unused and +inf when over-used.
+    pub fn utilization(&self, cap: &AreaVector) -> [f64; NUM_RESOURCE_KINDS] {
+        let mut out = [0.0; NUM_RESOURCE_KINDS];
+        for (i, (a, c)) in self.as_array().iter().zip(cap.as_array().iter()).enumerate() {
+            out[i] = if *c == 0 {
+                if *a == 0 { 0.0 } else { f64::INFINITY }
+            } else {
+                *a as f64 / *c as f64
+            };
+        }
+        out
+    }
+
+    /// Maximum utilization ratio across resource kinds.
+    pub fn max_utilization(&self, cap: &AreaVector) -> f64 {
+        self.utilization(cap).into_iter().fold(0.0, f64::max)
+    }
+
+    /// Scale every component by `ratio`, rounding down. Used to derive the
+    /// per-slot utilization cap from the device capacity (§4.1, §6.3).
+    pub fn scaled(&self, ratio: f64) -> AreaVector {
+        let mut a = self.as_array();
+        for v in &mut a {
+            *v = (*v as f64 * ratio).floor() as u64;
+        }
+        AreaVector::from_array(a)
+    }
+
+    /// Component-wise saturating subtraction.
+    pub fn saturating_sub(&self, rhs: &AreaVector) -> AreaVector {
+        let a = self.as_array();
+        let b = rhs.as_array();
+        let mut out = [0u64; NUM_RESOURCE_KINDS];
+        for i in 0..NUM_RESOURCE_KINDS {
+            out[i] = a[i].saturating_sub(b[i]);
+        }
+        AreaVector::from_array(out)
+    }
+
+    /// Sum a sequence of area vectors.
+    pub fn sum<'a, I: IntoIterator<Item = &'a AreaVector>>(iter: I) -> AreaVector {
+        iter.into_iter().fold(AreaVector::ZERO, |acc, v| acc + *v)
+    }
+}
+
+impl Add for AreaVector {
+    type Output = AreaVector;
+    fn add(self, rhs: AreaVector) -> AreaVector {
+        let a = self.as_array();
+        let b = rhs.as_array();
+        let mut out = [0u64; NUM_RESOURCE_KINDS];
+        for i in 0..NUM_RESOURCE_KINDS {
+            out[i] = a[i] + b[i];
+        }
+        AreaVector::from_array(out)
+    }
+}
+
+impl AddAssign for AreaVector {
+    fn add_assign(&mut self, rhs: AreaVector) {
+        *self = *self + rhs;
+    }
+}
+
+impl Sub for AreaVector {
+    type Output = AreaVector;
+    fn sub(self, rhs: AreaVector) -> AreaVector {
+        self.saturating_sub(&rhs)
+    }
+}
+
+impl Mul<u64> for AreaVector {
+    type Output = AreaVector;
+    fn mul(self, k: u64) -> AreaVector {
+        let mut a = self.as_array();
+        for v in &mut a {
+            *v *= k;
+        }
+        AreaVector::from_array(a)
+    }
+}
+
+impl fmt::Display for AreaVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LUT={} FF={} BRAM={} DSP={} URAM={} HBM={}",
+            self.lut, self.ff, self.bram18, self.dsp, self.uram, self.hbm_ch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_scale() {
+        let a = AreaVector::new(100, 200, 10, 5);
+        let b = AreaVector::new(1, 2, 3, 4).with_uram(7).with_hbm_ch(1);
+        let s = a + b;
+        assert_eq!(s.lut, 101);
+        assert_eq!(s.uram, 7);
+        assert_eq!(s.hbm_ch, 1);
+        let h = s.scaled(0.5);
+        assert_eq!(h.lut, 50);
+        assert_eq!(h.ff, 101);
+    }
+
+    #[test]
+    fn fits_within_checks_all_components() {
+        let cap = AreaVector::new(100, 100, 10, 10).with_hbm_ch(2);
+        assert!(AreaVector::new(100, 100, 10, 10).fits_within(&cap));
+        assert!(!AreaVector::new(101, 0, 0, 0).fits_within(&cap));
+        assert!(!AreaVector::new(0, 0, 0, 0).with_hbm_ch(3).fits_within(&cap));
+    }
+
+    #[test]
+    fn utilization_handles_zero_capacity() {
+        let cap = AreaVector::new(100, 0, 0, 0);
+        let used = AreaVector::new(50, 0, 0, 0);
+        let u = used.utilization(&cap);
+        assert_eq!(u[0], 0.5);
+        assert_eq!(u[1], 0.0);
+        let over = AreaVector::new(0, 1, 0, 0);
+        assert!(over.utilization(&cap)[1].is_infinite());
+    }
+
+    #[test]
+    fn max_utilization_picks_binding_resource() {
+        let cap = AreaVector::new(100, 100, 10, 10);
+        let used = AreaVector::new(10, 10, 9, 1);
+        assert!((used.max_utilization(&cap) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturating_sub_clamps() {
+        let a = AreaVector::new(1, 1, 1, 1);
+        let b = AreaVector::new(2, 0, 2, 0);
+        let d = a - b;
+        assert_eq!(d, AreaVector::new(0, 1, 0, 1));
+    }
+
+    #[test]
+    fn sum_of_vectors() {
+        let xs = [AreaVector::new(1, 2, 3, 4), AreaVector::new(10, 20, 30, 40)];
+        assert_eq!(AreaVector::sum(xs.iter()), AreaVector::new(11, 22, 33, 44));
+    }
+}

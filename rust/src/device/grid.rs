@@ -1,0 +1,195 @@
+//! Coarse slot-grid view of a multi-die FPGA (§4.1).
+//!
+//! The device is a `rows × cols` grid of [`Slot`]s. Row boundaries model
+//! SLR (die) crossings; the column boundary models the vertical IP column
+//! (DDR controllers / IO banks on U250 and U280). The physical design
+//! simulators attach routing capacities to slot boundaries.
+
+use super::area::AreaVector;
+use super::hbm::HbmTopology;
+
+/// Identifier of a slot: `(row, col)` packed as an index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SlotId(pub usize);
+
+/// One coarse floorplanning region.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    /// Row in the device grid (0 = bottom, where HBM sits on U280).
+    pub row: usize,
+    /// Column in the device grid.
+    pub col: usize,
+    /// Programmable resources available in the slot (after subtracting
+    /// the shell / platform region overhead).
+    pub capacity: AreaVector,
+    /// External DDR ports directly attached to this slot (count).
+    pub ddr_ports: usize,
+}
+
+/// A multi-die FPGA as seen by the coarse-grained floorplanner.
+#[derive(Clone, Debug)]
+pub struct Device {
+    /// Human-readable part name, e.g. `"xcu250"`.
+    pub name: String,
+    /// Grid rows (number of SLRs, or SLR subdivisions).
+    pub rows: usize,
+    /// Grid columns.
+    pub cols: usize,
+    /// `rows * cols` slots in row-major order (row 0 first).
+    pub slots: Vec<Slot>,
+    /// Wires that can cross each horizontal (SLR) boundary between two
+    /// vertically adjacent slots, in bits. Models the limited SLL count.
+    pub sll_capacity_bits: u64,
+    /// Wires that can cross the vertical IP-column boundary between two
+    /// horizontally adjacent slots, in bits.
+    pub col_capacity_bits: u64,
+    /// HBM topology if the device has HBM (U280).
+    pub hbm: Option<HbmTopology>,
+    /// Total number of SLR (die) regions, for reporting.
+    pub num_slr: usize,
+    /// Extra routing congestion inside every slot caused by embedded IP
+    /// columns that are *not* modelled as slot boundaries. Zero for the
+    /// default grids (the DDR column is a boundary there); positive for
+    /// the Fig.-15 merged-column control, where the IP column sits in the
+    /// middle of each slot and detours routes (§2.3).
+    pub ip_interference: f64,
+}
+
+impl Device {
+    /// Index of slot `(row, col)`.
+    pub fn slot_id(&self, row: usize, col: usize) -> SlotId {
+        debug_assert!(row < self.rows && col < self.cols);
+        SlotId(row * self.cols + col)
+    }
+
+    /// Slot lookup by id.
+    pub fn slot(&self, id: SlotId) -> &Slot {
+        &self.slots[id.0]
+    }
+
+    /// `(row, col)` of a slot id.
+    pub fn coords(&self, id: SlotId) -> (usize, usize) {
+        (id.0 / self.cols, id.0 % self.cols)
+    }
+
+    /// Number of slots.
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Manhattan distance between two slots in grid units; this is the
+    /// number of slot-boundary crossings a direct connection incurs
+    /// (the cost unit in Eq. 1).
+    pub fn slot_distance(&self, a: SlotId, b: SlotId) -> usize {
+        let (ar, ac) = self.coords(a);
+        let (br, bc) = self.coords(b);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+
+    /// Number of SLR (die-boundary) crossings between two slots. Rows map
+    /// 1:1 to SLRs in our grids, so this is the row distance.
+    pub fn slr_crossings(&self, a: SlotId, b: SlotId) -> usize {
+        let (ar, _) = self.coords(a);
+        let (br, _) = self.coords(b);
+        ar.abs_diff(br)
+    }
+
+    /// Total device capacity (sum over slots).
+    pub fn total_capacity(&self) -> AreaVector {
+        AreaVector::sum(self.slots.iter().map(|s| &s.capacity))
+    }
+
+    /// Total DDR ports on the device.
+    pub fn total_ddr_ports(&self) -> usize {
+        self.slots.iter().map(|s| s.ddr_ports).sum()
+    }
+
+    /// All slot ids in row-major order.
+    pub fn slot_ids(&self) -> impl Iterator<Item = SlotId> {
+        (0..self.slots.len()).map(SlotId)
+    }
+
+    /// Collapse the vertical IP-column split, yielding a device with one
+    /// slot per row (the Fig. 15 "4-slot" control experiment on U250).
+    pub fn merged_columns(&self) -> Device {
+        let mut slots = Vec::with_capacity(self.rows);
+        for r in 0..self.rows {
+            let mut cap = AreaVector::ZERO;
+            let mut ddr = 0;
+            for c in 0..self.cols {
+                let s = self.slot(self.slot_id(r, c));
+                cap += s.capacity;
+                ddr += s.ddr_ports;
+            }
+            slots.push(Slot { row: r, col: 0, capacity: cap, ddr_ports: ddr });
+        }
+        Device {
+            name: format!("{}-merged", self.name),
+            rows: self.rows,
+            cols: 1,
+            slots,
+            sll_capacity_bits: self.sll_capacity_bits,
+            // The merged device no longer has an internal column boundary…
+            col_capacity_bits: 0,
+            hbm: self.hbm.clone(),
+            num_slr: self.num_slr,
+            // …so the IP column interferes with in-slot routing instead.
+            ip_interference: 0.14,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parts::{u250, u280};
+
+    #[test]
+    fn u250_grid_shape() {
+        let d = u250();
+        assert_eq!(d.rows, 4);
+        assert_eq!(d.cols, 2);
+        assert_eq!(d.num_slots(), 8);
+        assert_eq!(d.num_slr, 4);
+        assert!(d.hbm.is_none());
+    }
+
+    #[test]
+    fn u280_grid_shape() {
+        let d = u280();
+        assert_eq!(d.rows, 3);
+        assert_eq!(d.cols, 2);
+        assert_eq!(d.num_slots(), 6);
+        assert!(d.hbm.is_some());
+    }
+
+    #[test]
+    fn slot_distance_is_manhattan() {
+        let d = u250();
+        let a = d.slot_id(0, 0);
+        let b = d.slot_id(3, 1);
+        assert_eq!(d.slot_distance(a, b), 4);
+        assert_eq!(d.slr_crossings(a, b), 3);
+        assert_eq!(d.slot_distance(a, a), 0);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let d = u250();
+        for id in d.slot_ids() {
+            let (r, c) = d.coords(id);
+            assert_eq!(d.slot_id(r, c), id);
+            let s = d.slot(id);
+            assert_eq!((s.row, s.col), (r, c));
+        }
+    }
+
+    #[test]
+    fn merged_columns_preserves_capacity() {
+        let d = u250();
+        let m = d.merged_columns();
+        assert_eq!(m.cols, 1);
+        assert_eq!(m.num_slots(), 4);
+        assert_eq!(m.total_capacity(), d.total_capacity());
+        assert_eq!(m.total_ddr_ports(), d.total_ddr_ports());
+    }
+}

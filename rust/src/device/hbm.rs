@@ -1,0 +1,126 @@
+//! HBM subsystem model for the Alveo U280 (§2.2, §6.2).
+//!
+//! 32 pseudo-channels at the bottom edge, bundled into 8 groups of 4
+//! adjacent channels; each group has a built-in 4×4 crossbar giving full
+//! connectivity within the group. Accesses outside the group traverse
+//! lateral links between crossbars — longer latency and shared bandwidth.
+
+/// Channel index type (0..32).
+pub type HbmChannel = usize;
+
+/// HBM topology parameters.
+#[derive(Clone, Debug)]
+pub struct HbmTopology {
+    /// Total pseudo-channels (32 on U280).
+    pub num_channels: usize,
+    /// Channels per crossbar group (4 on U280).
+    pub group_size: usize,
+    /// Latency in HBM-clock cycles for an access that stays inside its
+    /// crossbar group.
+    pub intra_group_latency: u32,
+    /// Extra latency per lateral crossbar hop for inter-group accesses.
+    pub lateral_hop_latency: u32,
+    /// Relative bandwidth derating per lateral hop (link sharing); the
+    /// effective bandwidth of an access through `h` hops is
+    /// `base * derate^h`.
+    pub lateral_bw_derate: f64,
+    /// Per-channel peak bandwidth in GB/s (256-bit @ 450 MHz ≈ 14.4 GB/s).
+    pub channel_bw_gbps: f64,
+}
+
+impl HbmTopology {
+    /// The U280 HBM subsystem.
+    pub fn u280() -> Self {
+        HbmTopology {
+            num_channels: 32,
+            group_size: 4,
+            intra_group_latency: 30,
+            lateral_hop_latency: 8,
+            lateral_bw_derate: 0.85,
+            channel_bw_gbps: 14.4,
+        }
+    }
+
+    /// Number of groups.
+    pub fn num_groups(&self) -> usize {
+        self.num_channels / self.group_size
+    }
+
+    /// Group index of a channel.
+    pub fn group_of(&self, ch: HbmChannel) -> usize {
+        assert!(ch < self.num_channels, "channel {ch} out of range");
+        ch / self.group_size
+    }
+
+    /// Lateral crossbar hops between the AXI port co-located with channel
+    /// slot `port_ch` and target channel `target_ch` (0 if same group).
+    pub fn lateral_hops(&self, port_ch: HbmChannel, target_ch: HbmChannel) -> usize {
+        self.group_of(port_ch).abs_diff(self.group_of(target_ch))
+    }
+
+    /// Access latency in HBM cycles from AXI port `port_ch` to channel
+    /// `target_ch` (§6.2: inter-group accesses traverse lateral links).
+    pub fn access_latency(&self, port_ch: HbmChannel, target_ch: HbmChannel) -> u32 {
+        self.intra_group_latency
+            + self.lateral_hop_latency * self.lateral_hops(port_ch, target_ch) as u32
+    }
+
+    /// Effective bandwidth (GB/s) of an access path with lateral hops.
+    pub fn effective_bandwidth(&self, port_ch: HbmChannel, target_ch: HbmChannel) -> f64 {
+        let hops = self.lateral_hops(port_ch, target_ch);
+        self.channel_bw_gbps * self.lateral_bw_derate.powi(hops as i32)
+    }
+
+    /// True when a binding is "intra-group only" — the common case §6.2
+    /// observes, where binding does not affect bandwidth at all.
+    pub fn binding_is_intra_group(&self, binding: &[(HbmChannel, HbmChannel)]) -> bool {
+        binding.iter().all(|&(p, t)| self.lateral_hops(p, t) == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u280_has_8_groups_of_4() {
+        let h = HbmTopology::u280();
+        assert_eq!(h.num_groups(), 8);
+        assert_eq!(h.group_of(0), 0);
+        assert_eq!(h.group_of(3), 0);
+        assert_eq!(h.group_of(4), 1);
+        assert_eq!(h.group_of(31), 7);
+    }
+
+    #[test]
+    fn intra_group_access_is_fastest() {
+        let h = HbmTopology::u280();
+        assert_eq!(h.access_latency(0, 3), h.intra_group_latency);
+        assert!(h.access_latency(0, 31) > h.access_latency(0, 4));
+        assert_eq!(h.lateral_hops(0, 31), 7);
+    }
+
+    #[test]
+    fn bandwidth_derates_per_hop() {
+        let h = HbmTopology::u280();
+        let bw0 = h.effective_bandwidth(8, 9);
+        let bw1 = h.effective_bandwidth(8, 12);
+        let bw7 = h.effective_bandwidth(0, 31);
+        assert_eq!(bw0, h.channel_bw_gbps);
+        assert!(bw1 < bw0);
+        assert!(bw7 < bw1);
+    }
+
+    #[test]
+    fn binding_classification() {
+        let h = HbmTopology::u280();
+        assert!(h.binding_is_intra_group(&[(0, 1), (5, 6), (30, 31)]));
+        assert!(!h.binding_is_intra_group(&[(0, 4)]));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn channel_out_of_range_panics() {
+        HbmTopology::u280().group_of(32);
+    }
+}

@@ -1,0 +1,17 @@
+//! Device models for the multi-die FPGAs evaluated in the paper (§2.3).
+//!
+//! The floorplanner views a device as a coarse grid of *slots* separated by
+//! die (SLR) boundaries and IP columns (§4.1). Each slot carries a resource
+//! capacity vector, a routing capacity, and optional attached external
+//! memory ports (DDR or HBM pseudo-channels). This is all the downstream
+//! flow needs: the paper's own floorplanner consumes exactly this view.
+
+pub mod area;
+pub mod grid;
+pub mod hbm;
+pub mod parts;
+
+pub use area::AreaVector;
+pub use grid::{Device, Slot, SlotId};
+pub use hbm::HbmTopology;
+pub use parts::{u250, u280, DeviceKind};

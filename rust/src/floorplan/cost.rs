@@ -1,0 +1,97 @@
+//! Floorplan cost function (Eq. 1): the bitwidth-weighted total number of
+//! slot boundaries crossed by every channel.
+
+use crate::device::{Device, SlotId};
+use crate::graph::TaskGraph;
+
+/// Eq. 1: `Σ_e width(e) · (|row_i − row_j| + |col_i − col_j|)`.
+pub fn slot_crossing_cost(g: &TaskGraph, device: &Device, assignment: &[SlotId]) -> u64 {
+    g.edges
+        .iter()
+        .map(|e| {
+            let d = device.slot_distance(assignment[e.producer.0], assignment[e.consumer.0]);
+            e.width_bits as u64 * d as u64
+        })
+        .sum()
+}
+
+/// Total bits crossing each horizontal (SLR) boundary; index `k` counts the
+/// boundary between row `k` and row `k+1`. Used by the routing model.
+pub fn sll_crossing_bits(g: &TaskGraph, device: &Device, assignment: &[SlotId]) -> Vec<u64> {
+    let mut out = vec![0u64; device.rows.saturating_sub(1)];
+    for e in &g.edges {
+        let (r1, _) = device.coords(assignment[e.producer.0]);
+        let (r2, _) = device.coords(assignment[e.consumer.0]);
+        let (lo, hi) = (r1.min(r2), r1.max(r2));
+        for k in lo..hi {
+            out[k] += e.width_bits as u64;
+        }
+    }
+    out
+}
+
+/// Total bits crossing the vertical IP-column boundary per row.
+pub fn col_crossing_bits(g: &TaskGraph, device: &Device, assignment: &[SlotId]) -> Vec<u64> {
+    let mut out = vec![0u64; device.rows];
+    if device.cols < 2 {
+        return out;
+    }
+    for e in &g.edges {
+        let (r1, c1) = device.coords(assignment[e.producer.0]);
+        let (r2, c2) = device.coords(assignment[e.consumer.0]);
+        if c1 != c2 {
+            // Attribute the column crossing to the producer's row (the
+            // router will pick one row to cross in).
+            let row = r1.min(r2);
+            let _ = r2;
+            out[row] += e.width_bits as u64;
+            let _ = (c1, c2);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+
+    fn two_task_graph(width: u32) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.stream("s", width, 2, a, c);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn cost_is_width_times_distance() {
+        let g = two_task_graph(64);
+        let d = u250();
+        let same = vec![d.slot_id(0, 0), d.slot_id(0, 0)];
+        assert_eq!(slot_crossing_cost(&g, &d, &same), 0);
+        let far = vec![d.slot_id(0, 0), d.slot_id(3, 1)];
+        assert_eq!(slot_crossing_cost(&g, &d, &far), 64 * 4);
+    }
+
+    #[test]
+    fn sll_crossings_count_each_boundary() {
+        let g = two_task_graph(32);
+        let d = u250();
+        let asgn = vec![d.slot_id(0, 0), d.slot_id(2, 0)];
+        let sll = sll_crossing_bits(&g, &d, &asgn);
+        assert_eq!(sll, vec![32, 32, 0]);
+    }
+
+    #[test]
+    fn col_crossings_attributed_once() {
+        let g = two_task_graph(32);
+        let d = u250();
+        let asgn = vec![d.slot_id(1, 0), d.slot_id(1, 1)];
+        let col = col_crossing_bits(&g, &d, &asgn);
+        assert_eq!(col.iter().sum::<u64>(), 32);
+        assert_eq!(col[1], 32);
+    }
+}

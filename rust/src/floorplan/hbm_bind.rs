@@ -1,0 +1,211 @@
+//! Automatic HBM channel binding (§6.2).
+//!
+//! The floorplan ILP already decides *which bottom-row slot* every
+//! HBM-facing task lives in (channels are a slot resource). This module
+//! assigns each external HBM port a concrete pseudo-channel: user-requested
+//! bindings are honored; the rest get channels from the range physically
+//! below their task's slot, packed group-by-group so accesses stay
+//! intra-group (binding then cannot hurt bandwidth — §6.2's key
+//! observation).
+
+use super::Floorplan;
+use crate::device::Device;
+use crate::graph::{MemKind, TaskGraph};
+
+/// Binding result: `port index in g.ext_ports → channel`.
+#[derive(Clone, Debug, Default)]
+pub struct HbmBinding {
+    /// `(ext_port_index, channel)` for every HBM port.
+    pub assignments: Vec<(usize, usize)>,
+    /// Number of ports whose requested binding was honored.
+    pub honored_requests: usize,
+    /// True when every bound port is served by a channel in the column
+    /// range under its slot (no lateral crossbar traffic needed for the
+    /// *binding itself*).
+    pub all_local: bool,
+}
+
+/// Binding failures.
+#[derive(Debug, thiserror::Error)]
+pub enum BindError {
+    #[error("device has no HBM")]
+    NoHbm,
+    #[error("channel {0} requested twice")]
+    DuplicateRequest(usize),
+    #[error("not enough free channels in column {0}")]
+    ColumnExhausted(usize),
+}
+
+/// Channels physically under a slot column: col 0 → 0..16, col 1 → 16..32
+/// on U280 (16 channels per bottom-row slot).
+fn column_range(device: &Device, col: usize) -> std::ops::Range<usize> {
+    let per_col = device
+        .hbm
+        .as_ref()
+        .map(|h| h.num_channels / device.cols)
+        .unwrap_or(0);
+    col * per_col..(col + 1) * per_col
+}
+
+/// Bind all HBM ports of a floorplanned design.
+pub fn bind_hbm_channels(
+    g: &TaskGraph,
+    device: &Device,
+    fp: &Floorplan,
+) -> Result<HbmBinding, BindError> {
+    let Some(hbm) = device.hbm.as_ref() else {
+        return if g.hbm_ports() == 0 {
+            Ok(HbmBinding { all_local: true, ..Default::default() })
+        } else {
+            Err(BindError::NoHbm)
+        };
+    };
+
+    let mut taken = vec![false; hbm.num_channels];
+    let mut binding = HbmBinding { all_local: true, ..Default::default() };
+
+    // Pass 1: honor explicit requests (§6.2 "users could specify the
+    // partial binding of channels").
+    for (pi, port) in g.ext_ports.iter().enumerate() {
+        if port.mem != MemKind::Hbm {
+            continue;
+        }
+        if let Some(ch) = port.requested_channel {
+            if taken[ch] {
+                return Err(BindError::DuplicateRequest(ch));
+            }
+            taken[ch] = true;
+            binding.assignments.push((pi, ch));
+            binding.honored_requests += 1;
+            let (_, col) = device.coords(fp.slot_of(port.owner));
+            if !column_range(device, col).contains(&ch) {
+                binding.all_local = false;
+            }
+        }
+    }
+
+    // Pass 2: auto-bind the rest, preferring the channel range under the
+    // owning task's slot column, filling whole groups first.
+    for (pi, port) in g.ext_ports.iter().enumerate() {
+        if port.mem != MemKind::Hbm || port.requested_channel.is_some() {
+            continue;
+        }
+        let (_, col) = device.coords(fp.slot_of(port.owner));
+        let preferred = column_range(device, col);
+        let pick = preferred
+            .clone()
+            .find(|&c| !taken[c])
+            .or_else(|| (0..hbm.num_channels).find(|&c| !taken[c]));
+        match pick {
+            Some(c) => {
+                taken[c] = true;
+                if !preferred.contains(&c) {
+                    binding.all_local = false;
+                }
+                binding.assignments.push((pi, c));
+            }
+            None => return Err(BindError::ColumnExhausted(col)),
+        }
+    }
+    binding.assignments.sort();
+    Ok(binding)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u280;
+    use crate::floorplan::{floorplan, FloorplanConfig};
+    use crate::graph::{ComputeSpec, PortStyle, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+
+    fn hbm_design(nports: usize, request: Option<(usize, usize)>) -> (TaskGraph, Floorplan) {
+        let mut b = TaskGraphBuilder::new("hbm");
+        let p = b.proto("PE", ComputeSpec::passthrough(64));
+        let ids = b.invoke_n(p, "pe", nports);
+        for i in 0..nports - 1 {
+            b.stream(&format!("s{i}"), 32, 2, ids[i], ids[i + 1]);
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            let req = request.and_then(|(pi, ch)| if pi == i { Some(ch) } else { None });
+            b.mmap_port(&format!("h{i}"), PortStyle::AsyncMmap, MemKind::Hbm, 512, id, req);
+        }
+        let g = b.build().unwrap();
+        let d = u280();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        (g, fp)
+    }
+
+    #[test]
+    fn binds_all_ports_uniquely() {
+        let (g, fp) = hbm_design(8, None);
+        let d = u280();
+        let bind = bind_hbm_channels(&g, &d, &fp).unwrap();
+        assert_eq!(bind.assignments.len(), 8);
+        let mut chans: Vec<usize> = bind.assignments.iter().map(|&(_, c)| c).collect();
+        chans.sort();
+        chans.dedup();
+        assert_eq!(chans.len(), 8, "channels must be unique");
+    }
+
+    #[test]
+    fn honors_explicit_request() {
+        let (g, fp) = hbm_design(4, Some((2, 7)));
+        let d = u280();
+        let bind = bind_hbm_channels(&g, &d, &fp).unwrap();
+        assert_eq!(bind.honored_requests, 1);
+        let port2 = bind.assignments.iter().find(|&&(pi, _)| pi == 2).unwrap();
+        assert_eq!(port2.1, 7);
+    }
+
+    #[test]
+    fn duplicate_request_rejected() {
+        let mut b = TaskGraphBuilder::new("dup");
+        let p = b.proto("PE", ComputeSpec::passthrough(64));
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.stream("s", 32, 2, a, c);
+        b.mmap_port("h0", PortStyle::AsyncMmap, MemKind::Hbm, 512, a, Some(5));
+        b.mmap_port("h1", PortStyle::AsyncMmap, MemKind::Hbm, 512, c, Some(5));
+        let g = b.build().unwrap();
+        let d = u280();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        assert!(matches!(
+            bind_hbm_channels(&g, &d, &fp),
+            Err(BindError::DuplicateRequest(5))
+        ));
+    }
+
+    #[test]
+    fn no_hbm_device_ok_without_hbm_ports() {
+        let mut b = TaskGraphBuilder::new("ddr_only");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.stream("s", 32, 2, a, c);
+        let g = b.build().unwrap();
+        let d = crate::device::u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let bind = bind_hbm_channels(&g, &d, &fp).unwrap();
+        assert!(bind.assignments.is_empty());
+        assert!(bind.all_local);
+    }
+
+    #[test]
+    fn column_range_splits_channels() {
+        let d = u280();
+        assert_eq!(column_range(&d, 0), 0..16);
+        assert_eq!(column_range(&d, 1), 16..32);
+    }
+
+    #[test]
+    fn full_32_channel_binding() {
+        let (g, fp) = hbm_design(32, None);
+        let d = u280();
+        let bind = bind_hbm_channels(&g, &d, &fp).unwrap();
+        assert_eq!(bind.assignments.len(), 32);
+    }
+}

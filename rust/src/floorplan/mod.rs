@@ -1,0 +1,334 @@
+//! Coarse-grained floorplanning coupled with HLS (§4).
+//!
+//! The device is a grid of slots; every task instance is assigned to one
+//! slot by iterative 2-way partitioning, each iteration solved as an ILP
+//! (§4.3). HBM channel binding rides along as a slot resource (§6.2), and
+//! a utilization-ratio sweep yields multiple Pareto floorplan candidates
+//! (§6.3).
+
+pub mod cost;
+pub mod hbm_bind;
+pub mod multi;
+pub mod partition;
+
+pub use cost::slot_crossing_cost;
+pub use hbm_bind::{bind_hbm_channels, HbmBinding};
+pub use multi::generate_candidates;
+pub use partition::{partition_device, PartitionStats};
+
+use crate::device::{AreaVector, Device, SlotId};
+use crate::graph::{InstId, TaskGraph};
+use crate::hls::TaskEstimate;
+
+/// Floorplanner configuration.
+#[derive(Clone, Debug)]
+pub struct FloorplanConfig {
+    /// Maximum resource-utilization ratio per slot (§4.1 "to reduce the
+    /// resource contention in each slot"). Default 0.75 — the paper finds
+    /// AutoBridge effective up to ~75% device utilization.
+    pub max_util: f64,
+    /// Use the exact ILP when the vertex count is at most this; larger
+    /// instances use the LP-relaxation + rounding + FM-refinement hybrid
+    /// (documented substitution — Gurobi-scale exactness is not available
+    /// to a dense-tableau B&B at 500 binaries).
+    pub ilp_vertex_threshold: usize,
+    /// Branch-and-bound node cap per partitioning iteration.
+    pub max_bb_nodes: usize,
+    /// Levels of pipelining added per slot-boundary crossing (§7.1: two).
+    pub stages_per_crossing: u32,
+    /// Random seed for tie-breaking in the refinement heuristic.
+    pub seed: u64,
+}
+
+impl Default for FloorplanConfig {
+    fn default() -> Self {
+        FloorplanConfig {
+            max_util: 0.75,
+            ilp_vertex_threshold: 70,
+            max_bb_nodes: 150,
+            stages_per_crossing: 2,
+            seed: 0xF10,
+        }
+    }
+}
+
+/// Floorplanning failures.
+#[derive(Debug, thiserror::Error)]
+pub enum FloorplanError {
+    #[error("design does not fit the device even at 100% utilization: {0}")]
+    DoesNotFit(String),
+    #[error("partitioning infeasible at utilization ratio {0}")]
+    Infeasible(f64),
+    #[error("not enough {0} ports: design needs {1}, device has {2}")]
+    NotEnoughPorts(&'static str, usize, usize),
+}
+
+/// A completed floorplan: one slot per task instance.
+#[derive(Clone, Debug)]
+pub struct Floorplan {
+    /// Slot assignment, indexed by `InstId`.
+    pub assignment: Vec<SlotId>,
+    /// Eq. 1 cost of the assignment.
+    pub cost: u64,
+    /// Utilization ratio the plan was generated with.
+    pub util_ratio: f64,
+    /// Per-iteration solver statistics (Table 11).
+    pub stats: Vec<PartitionStats>,
+}
+
+impl Floorplan {
+    /// Slot of one instance.
+    pub fn slot_of(&self, inst: InstId) -> SlotId {
+        self.assignment[inst.0]
+    }
+
+    /// Number of slot-boundary crossings of an edge under this floorplan.
+    pub fn crossings(&self, device: &Device, producer: InstId, consumer: InstId) -> usize {
+        device.slot_distance(self.slot_of(producer), self.slot_of(consumer))
+    }
+
+    /// Aggregate area placed in each slot.
+    pub fn slot_loads(
+        &self,
+        g: &TaskGraph,
+        estimates: &[TaskEstimate],
+        device: &Device,
+    ) -> Vec<AreaVector> {
+        let mut loads = vec![AreaVector::ZERO; device.num_slots()];
+        for (i, slot) in self.assignment.iter().enumerate() {
+            loads[slot.0] += estimates[i].area;
+        }
+        // FIFOs are attributed half to each endpoint slot; a cross-slot
+        // FIFO's registers live on both sides.
+        for e in &g.edges {
+            let a = crate::hls::fifo::fifo_area(e.width_bits, e.depth);
+            let half = AreaVector::from_array({
+                let mut arr = a.as_array();
+                for v in &mut arr {
+                    *v = v.div_ceil(2);
+                }
+                arr
+            });
+            loads[self.slot_of(e.producer).0] += half;
+            loads[self.slot_of(e.consumer).0] += half;
+        }
+        loads
+    }
+
+    /// Maximum utilization over slots and resource kinds.
+    pub fn max_slot_utilization(
+        &self,
+        g: &TaskGraph,
+        estimates: &[TaskEstimate],
+        device: &Device,
+    ) -> f64 {
+        self.slot_loads(g, estimates, device)
+            .iter()
+            .zip(device.slots.iter())
+            .map(|(load, slot)| load.max_utilization(&slot.capacity))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run the full coarse-grained floorplanning flow (Fig. 1 "AutoBridge"
+/// box): feasibility pre-checks, then iterative 2-way partitioning, with
+/// automatic utilization-ratio relaxation on infeasibility.
+pub fn floorplan(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    cfg: &FloorplanConfig,
+) -> Result<Floorplan, FloorplanError> {
+    // Pre-check: port counts first (most specific diagnostic), then area.
+    let hbm_need = g.hbm_ports();
+    let hbm_have = device.slots.iter().map(|s| s.capacity.hbm_ch as usize).sum::<usize>();
+    if hbm_need > hbm_have {
+        return Err(FloorplanError::NotEnoughPorts("HBM", hbm_need, hbm_have));
+    }
+    let mut total = AreaVector::sum(estimates.iter().map(|e| &e.area));
+    for e in &g.edges {
+        total += crate::hls::fifo::fifo_area(e.width_bits, e.depth);
+    }
+    let cap = device.total_capacity();
+    if !total.fits_within(&cap) {
+        return Err(FloorplanError::DoesNotFit(format!(
+            "need [{total}] have [{cap}]"
+        )));
+    }
+    let ddr_need = g
+        .ext_ports
+        .iter()
+        .filter(|p| p.mem == crate::graph::MemKind::Ddr)
+        .count();
+    // Multiple ports can share a DDR controller, but not more than ~4 each.
+    let ddr_have = device.total_ddr_ports() * 4;
+    if ddr_need > ddr_have {
+        return Err(FloorplanError::NotEnoughPorts("DDR", ddr_need, ddr_have));
+    }
+
+    // Fast-fail: a same-slot group larger than any single slot can never
+    // floorplan regardless of the utilization ratio — skip the relaxation
+    // ladder entirely (hit by the §5.2 cycle-feedback path on designs like
+    // PageRank whose control SCC exceeds one slot).
+    {
+        let mut group_area: std::collections::HashMap<usize, AreaVector> =
+            std::collections::HashMap::new();
+        let mut parent: Vec<usize> = (0..g.num_insts()).collect();
+        fn find(p: &mut Vec<usize>, x: usize) -> usize {
+            let mut r = x;
+            while p[r] != r {
+                r = p[r];
+            }
+            let mut c = x;
+            while p[c] != r {
+                let n = p[c];
+                p[c] = r;
+                c = n;
+            }
+            r
+        }
+        for &(a, b) in &g.same_slot {
+            let (ra, rb) = (find(&mut parent, a.0), find(&mut parent, b.0));
+            if ra != rb {
+                parent[ra] = rb;
+            }
+        }
+        for v in 0..g.num_insts() {
+            let r = find(&mut parent, v);
+            *group_area.entry(r).or_insert(AreaVector::ZERO) += estimates[v].area;
+        }
+        let max_slot = device
+            .slots
+            .iter()
+            .map(|s| s.capacity)
+            .fold(AreaVector::ZERO, |acc, c| {
+                let a = acc.as_array();
+                let b = c.as_array();
+                let mut out = [0u64; crate::device::area::NUM_RESOURCE_KINDS];
+                for i in 0..out.len() {
+                    out[i] = a[i].max(b[i]);
+                }
+                AreaVector::from_array(out)
+            });
+        for (_, area) in group_area {
+            if !area.fits_within(&max_slot) {
+                return Err(FloorplanError::Infeasible(cfg.max_util));
+            }
+        }
+    }
+
+    // Try the requested ratio first, relaxing toward 1.0 on infeasibility
+    // (§6.3 notes the ratio is the main floorplan-space knob).
+    let mut ratio = cfg.max_util;
+    loop {
+        match partition_device(g, device, estimates, ratio, cfg) {
+            Ok((assignment, stats)) => {
+                let cost = cost::slot_crossing_cost(g, device, &assignment);
+                return Ok(Floorplan { assignment, cost, util_ratio: ratio, stats });
+            }
+            Err(_) if ratio < 0.999 => {
+                ratio = (ratio + 0.07).min(1.0);
+            }
+            Err(_) => return Err(FloorplanError::Infeasible(ratio)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+
+    fn chain_graph(n: usize) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("chain");
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 8,
+                alu_ops: 16,
+                bram_bytes: 4096,
+                uram_bytes: 0,
+                trip_count: 1024,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 64, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn floorplan_chain_respects_capacity_and_reports_cost() {
+        let g = chain_graph(8);
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        assert_eq!(fp.assignment.len(), 8);
+        assert!(fp.max_slot_utilization(&g, &est, &d) <= 1.0);
+        // Chain cost is at most (n-1) * width * max_distance.
+        assert!(fp.cost <= 7 * 64 * 4);
+    }
+
+    #[test]
+    fn floorplan_single_task() {
+        let mut b = TaskGraphBuilder::new("one");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        b.invoke(p, "k");
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        assert_eq!(fp.cost, 0);
+    }
+
+    #[test]
+    fn oversized_design_rejected() {
+        let mut b = TaskGraphBuilder::new("huge");
+        let p = b.proto(
+            "Huge",
+            ComputeSpec {
+                mac_ops: 5000, // 15000 DSPs > 12288 on U250
+                alu_ops: 0,
+                bram_bytes: 0,
+                uram_bytes: 0,
+                trip_count: 1,
+                ii: 1,
+                pipeline_depth: 1,
+            },
+        );
+        b.invoke(p, "huge");
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        assert!(matches!(
+            floorplan(&g, &d, &est, &FloorplanConfig::default()),
+            Err(FloorplanError::DoesNotFit(_))
+        ));
+    }
+
+    #[test]
+    fn hbm_port_shortage_rejected() {
+        use crate::graph::{MemKind, PortStyle};
+        let mut b = TaskGraphBuilder::new("hbm_heavy");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let ids = b.invoke_n(p, "k", 33);
+        for i in 0..32 {
+            b.stream(&format!("s{i}"), 32, 2, ids[i], ids[32]);
+        }
+        for (i, &id) in ids.iter().enumerate().take(33) {
+            b.mmap_port(&format!("h{i}"), PortStyle::AsyncMmap, MemKind::Hbm, 512, id, None);
+        }
+        let g = b.build().unwrap();
+        let d = crate::device::u280();
+        let est = estimate_all(&g);
+        assert!(matches!(
+            floorplan(&g, &d, &est, &FloorplanConfig::default()),
+            Err(FloorplanError::NotEnoughPorts("HBM", 33, 32))
+        ));
+    }
+}

@@ -1,0 +1,160 @@
+//! Multi-floorplan candidate generation (§6.3).
+//!
+//! One floorplan trades local logic density against global routing demand;
+//! which wins is unpredictable before routing. TAPA sweeps the per-slot
+//! maximum-utilization ratio to produce a set of Pareto candidates and
+//! implements them all in parallel (Table 10).
+
+use super::{floorplan, Floorplan, FloorplanConfig};
+use crate::device::Device;
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+
+/// A candidate floorplan tagged with the knob that produced it.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub util_ratio: f64,
+    pub plan: Floorplan,
+}
+
+/// Default utilization-ratio sweep (§6.3: "we sweep through a range of
+/// this parameter").
+pub const DEFAULT_SWEEP: [f64; 7] = [0.55, 0.60, 0.65, 0.70, 0.75, 0.80, 0.85];
+
+/// Generate floorplan candidates by sweeping the utilization ratio,
+/// de-duplicating identical slot assignments. Candidates that fail to
+/// floorplan at their ratio are skipped (the paper's sweep also yields
+/// "Failed" entries — callers needing those use [`generate_with_failures`]).
+pub fn generate_candidates(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+    sweep: &[f64],
+) -> Vec<Candidate> {
+    generate_with_failures(g, device, estimates, base, sweep)
+        .into_iter()
+        .filter_map(|(ratio, plan)| plan.map(|plan| Candidate { util_ratio: ratio, plan }))
+        .collect()
+}
+
+/// Like [`generate_candidates`] but keeps failed sweep points as `None`
+/// (Table 10 reports "Failed" rows explicitly).
+pub fn generate_with_failures(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+    sweep: &[f64],
+) -> Vec<(f64, Option<Floorplan>)> {
+    let mut out: Vec<(f64, Option<Floorplan>)> = Vec::new();
+    for &ratio in sweep {
+        let cfg = FloorplanConfig { max_util: ratio, ..base.clone() };
+        // Use partition directly (no automatic ratio relaxation): the sweep
+        // point must reflect *this* ratio or be a failure.
+        let plan = match super::partition::partition_device(g, device, estimates, ratio, &cfg)
+        {
+            Ok((assignment, stats)) => {
+                let cost = super::cost::slot_crossing_cost(g, device, &assignment);
+                Some(Floorplan { assignment, cost, util_ratio: ratio, stats })
+            }
+            Err(_) => None,
+        };
+        // De-duplicate identical assignments (keep first occurrence).
+        let dup = plan.as_ref().is_some_and(|p| {
+            out.iter().any(|(_, q)| {
+                q.as_ref().is_some_and(|q| q.assignment == p.assignment)
+            })
+        });
+        if !dup {
+            out.push((ratio, plan));
+        }
+    }
+    out
+}
+
+/// Convenience: floorplan with the default config, falling back across the
+/// sweep; returns the lowest-cost successful candidate.
+pub fn best_candidate(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+) -> Option<Candidate> {
+    let mut cands = generate_candidates(g, device, estimates, base, &DEFAULT_SWEEP);
+    if cands.is_empty() {
+        // Last resort: default single floorplan with relaxation.
+        return floorplan(g, device, estimates, base)
+            .ok()
+            .map(|plan| Candidate { util_ratio: plan.util_ratio, plan });
+    }
+    cands.sort_by_key(|c| c.plan.cost);
+    cands.into_iter().next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+
+    fn graph(n: usize) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("sweep");
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 32,
+                alu_ops: 64,
+                bram_bytes: 32 * 1024,
+                uram_bytes: 0,
+                trip_count: 512,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn sweep_produces_candidates() {
+        let g = graph(12);
+        let d = u250();
+        let est = estimate_all(&g);
+        let cands =
+            generate_candidates(&g, &d, &est, &FloorplanConfig::default(), &DEFAULT_SWEEP);
+        assert!(!cands.is_empty());
+        // All candidates distinct by construction.
+        for i in 0..cands.len() {
+            for j in i + 1..cands.len() {
+                assert_ne!(cands[i].plan.assignment, cands[j].plan.assignment);
+            }
+        }
+    }
+
+    #[test]
+    fn best_candidate_minimizes_cost() {
+        let g = graph(12);
+        let d = u250();
+        let est = estimate_all(&g);
+        let best = best_candidate(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let all = generate_candidates(&g, &d, &est, &FloorplanConfig::default(), &DEFAULT_SWEEP);
+        for c in &all {
+            assert!(best.plan.cost <= c.plan.cost);
+        }
+    }
+
+    #[test]
+    fn with_failures_reports_every_sweep_point_or_dedups() {
+        let g = graph(8);
+        let d = u250();
+        let est = estimate_all(&g);
+        let rows = generate_with_failures(&g, &d, &est, &FloorplanConfig::default(), &[0.6, 0.8]);
+        assert!(!rows.is_empty());
+        assert!(rows.len() <= 2);
+    }
+}

@@ -1,0 +1,381 @@
+//! End-to-end flow orchestration: the `tapa compile` pipeline of Fig. 1
+//! plus the evaluation variants of §7.5.
+//!
+//! ```text
+//! graph ── hls ──┬─ baseline:  pack-place → route → STA          (orig)
+//!                └─ tapa:      floorplan → pipeline → guided
+//!                              place → route → STA → sim          (opt)
+//! ```
+
+use crate::device::{Device, DeviceKind};
+use crate::floorplan::{FloorplanConfig, Floorplan};
+use crate::graph::TaskGraph;
+use crate::hls::{estimate_all, TaskEstimate};
+use crate::pipeline::{pipeline_with_feedback, PipelinePlan};
+use crate::place::{
+    place_baseline, place_floorplan_guided, AnalyticalParams, Placement, RustStep,
+    StepExecutor,
+};
+use crate::route::{route, RouteReport};
+use crate::sim::{simulate, SimConfig};
+use crate::timing::{analyze_with_areas, TimingReport};
+
+/// Flow variants evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FlowVariant {
+    /// The unmodified commercial flow (the "orig" columns).
+    Baseline,
+    /// Full TAPA: floorplan + pipelining + constraints (the "opt" columns).
+    Tapa,
+    /// Fig. 15 control: pipeline as TAPA would, but do NOT pass floorplan
+    /// constraints to place & route.
+    PipelineOnlyNoConstraints,
+    /// Fig. 3 discussion: floorplan constraints without pipelining.
+    FloorplanOnlyNoPipeline,
+    /// Fig. 15 control: grid without the middle-column split (4 slots on
+    /// U250).
+    TapaCoarse4Slot,
+}
+
+impl FlowVariant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlowVariant::Baseline => "baseline",
+            FlowVariant::Tapa => "tapa",
+            FlowVariant::PipelineOnlyNoConstraints => "pipeline-only",
+            FlowVariant::FloorplanOnlyNoPipeline => "floorplan-only",
+            FlowVariant::TapaCoarse4Slot => "tapa-4slot",
+        }
+    }
+}
+
+/// A design under evaluation (benchmark instance).
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub name: String,
+    pub graph: TaskGraph,
+    pub device: DeviceKind,
+}
+
+/// Everything a paper table/figure needs about one flow run.
+#[derive(Clone, Debug)]
+pub struct FlowResult {
+    pub variant: FlowVariant,
+    pub fmax_mhz: Option<f64>,
+    /// Simulated execution cycles (None when simulation skipped).
+    pub cycles: Option<u64>,
+    /// Resource utilization (% of device) per kind: LUT, FF, BRAM, DSP,
+    /// URAM.
+    pub util_pct: [f64; 5],
+    pub route: RouteReport,
+    pub timing: TimingReport,
+    /// Present for floorplanned variants.
+    pub floorplan: Option<Floorplan>,
+    pub pipeline: Option<PipelinePlan>,
+    /// Placement (diagnostics).
+    pub placement: Placement,
+}
+
+impl FlowResult {
+    pub fn failed(&self) -> bool {
+        self.route.failed()
+    }
+}
+
+/// Flow configuration.
+#[derive(Clone, Debug, Default)]
+pub struct FlowConfig {
+    pub floorplan: FloorplanConfig,
+    pub analytical: AnalyticalParams,
+    pub sim: SimOptions,
+}
+
+/// Simulation options for the flow.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    /// Run the cycle-accurate simulation (can be slow for huge designs).
+    pub enabled: bool,
+    pub mem_latency: u32,
+    pub max_cycles: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { enabled: true, mem_latency: 40, max_cycles: 50_000_000 }
+    }
+}
+
+/// Run one variant of the flow on a design.
+pub fn run_flow(design: &Design, variant: FlowVariant, cfg: &FlowConfig) -> FlowResult {
+    run_flow_with_executor(design, variant, cfg, &RustStep)
+}
+
+/// Run one variant with an explicit analytical-step executor (the PJRT
+/// engine from [`crate::runtime`] or the Rust fallback).
+pub fn run_flow_with_executor(
+    design: &Design,
+    variant: FlowVariant,
+    cfg: &FlowConfig,
+    exec: &dyn StepExecutor,
+) -> FlowResult {
+    let device = match variant {
+        FlowVariant::TapaCoarse4Slot => design.device.device().merged_columns(),
+        _ => design.device.device(),
+    };
+    let estimates = estimate_all(&design.graph);
+
+    match variant {
+        FlowVariant::Baseline => run_baseline(design, &device, &estimates, cfg),
+        FlowVariant::Tapa | FlowVariant::TapaCoarse4Slot => {
+            run_tapa(design, &device, &estimates, cfg, exec, true, true)
+        }
+        FlowVariant::FloorplanOnlyNoPipeline => {
+            run_tapa(design, &device, &estimates, cfg, exec, false, true)
+        }
+        FlowVariant::PipelineOnlyNoConstraints => {
+            run_tapa(design, &device, &estimates, cfg, exec, true, false)
+        }
+    }
+}
+
+fn utilization_pct(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    plan: Option<&PipelinePlan>,
+) -> [f64; 5] {
+    let mut total = crate::device::AreaVector::sum(estimates.iter().map(|e| &e.area));
+    for e in &g.edges {
+        total += crate::hls::fifo::fifo_area(e.width_bits, e.depth);
+    }
+    if let Some(p) = plan {
+        total += p.area_overhead;
+    }
+    let cap = device.total_capacity();
+    let t = total.as_array();
+    let c = cap.as_array();
+    let pct = |i: usize| {
+        if c[i] == 0 {
+            0.0
+        } else {
+            100.0 * t[i] as f64 / c[i] as f64
+        }
+    };
+    [pct(0), pct(1), pct(2), pct(3), pct(4)]
+}
+
+fn run_baseline(
+    design: &Design,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    cfg: &FlowConfig,
+) -> FlowResult {
+    let g = &design.graph;
+    let placement = place_baseline(g, device, estimates);
+    let route_rep = route(g, device, estimates, &placement);
+    let stages = vec![0u32; g.num_edges()];
+    let timing = analyze_with_areas(g, device, &placement, &route_rep, &stages, Some(estimates));
+    let cycles = if cfg.sim.enabled && !route_rep.failed() {
+        simulate(
+            g,
+            estimates,
+            &stages,
+            &SimConfig { max_cycles: cfg.sim.max_cycles, mem_latency: cfg.sim.mem_latency },
+        )
+        .ok()
+        .map(|r| r.cycles)
+    } else {
+        None
+    };
+    FlowResult {
+        variant: FlowVariant::Baseline,
+        fmax_mhz: timing.fmax_mhz,
+        cycles,
+        util_pct: utilization_pct(g, device, estimates, None),
+        route: route_rep,
+        timing,
+        floorplan: None,
+        pipeline: None,
+        placement,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_tapa(
+    design: &Design,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    cfg: &FlowConfig,
+    exec: &dyn StepExecutor,
+    do_pipeline: bool,
+    pass_constraints: bool,
+) -> FlowResult {
+    let mut g = design.graph.clone();
+    let fp_cfg = cfg.floorplan.clone();
+    let (fp, mut plan) = match pipeline_with_feedback(&mut g, device, estimates, &fp_cfg, 3) {
+        Ok(x) => x,
+        Err(_) => {
+            // Cannot floorplan at all (design too big): degrade to the
+            // baseline flow but keep the variant tag.
+            let mut r = run_baseline(design, device, estimates, cfg);
+            r.variant = FlowVariant::Tapa;
+            return r;
+        }
+    };
+    if !do_pipeline {
+        plan.edge_lat.iter_mut().for_each(|l| *l = 0);
+        plan.edge_balance.iter_mut().for_each(|l| *l = 0);
+        plan.area_overhead = crate::device::AreaVector::ZERO;
+    }
+
+    // Placement: honoring constraints uses the floorplan-guided analytical
+    // placer; the Fig.-15 control drops the constraints (packer placement)
+    // while keeping the pipeline registers.
+    let placement = if pass_constraints {
+        let (p, _cong) =
+            place_floorplan_guided(&g, device, &fp, &cfg.analytical, exec);
+        p
+    } else {
+        place_baseline(&g, device, estimates)
+    };
+
+    // Effective register stages for timing: with constraints, registers
+    // align with real crossings; without, they are scattered — half of
+    // their benefit is lost on the actual critical crossing (§7.1:
+    // under-pipelined wires unseen during HLS).
+    let stages: Vec<u32> = (0..g.num_edges())
+        .map(|e| {
+            let total = plan.total_lat(e);
+            if pass_constraints {
+                total
+            } else {
+                total / 2
+            }
+        })
+        .collect();
+
+    let mut estimates_aug: Vec<TaskEstimate> = estimates.to_vec();
+    // Attribute pipeline-register area to the producer-side tasks so the
+    // router sees it.
+    if do_pipeline {
+        for (e, edge) in g.edges.iter().enumerate() {
+            let a = crate::hls::fifo::pipeline_stage_area(edge.width_bits, plan.total_lat(e));
+            estimates_aug[edge.producer.0].area += a;
+        }
+    }
+
+    let route_rep = route(&g, device, &estimates_aug, &placement);
+    let timing = analyze_with_areas(&g, device, &placement, &route_rep, &stages, Some(&estimates_aug));
+    let cycles = if cfg.sim.enabled && !route_rep.failed() {
+        let lat: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
+        simulate(
+            &g,
+            estimates,
+            &lat,
+            &SimConfig { max_cycles: cfg.sim.max_cycles, mem_latency: cfg.sim.mem_latency },
+        )
+        .ok()
+        .map(|r| r.cycles)
+    } else {
+        None
+    };
+    FlowResult {
+        variant: if pass_constraints && do_pipeline {
+            FlowVariant::Tapa
+        } else if do_pipeline {
+            FlowVariant::PipelineOnlyNoConstraints
+        } else {
+            FlowVariant::FloorplanOnlyNoPipeline
+        },
+        fmax_mhz: timing.fmax_mhz,
+        cycles,
+        util_pct: utilization_pct(&g, device, estimates, do_pipeline.then_some(&plan)),
+        route: route_rep,
+        timing,
+        floorplan: Some(fp),
+        pipeline: Some(plan),
+        placement,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+
+    fn design(n: usize, fat: u32) -> Design {
+        let mut b = TaskGraphBuilder::new(&format!("flow_test_{n}x{fat}"));
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 25 * fat,
+                alu_ops: 200 * fat,
+                bram_bytes: 48 * 1024 * fat as u64,
+                uram_bytes: 0,
+                trip_count: 512,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+        }
+        Design { name: format!("flow_test_{n}x{fat}"), graph: b.build().unwrap(), device: DeviceKind::U250 }
+    }
+
+    #[test]
+    fn tapa_beats_baseline_on_large_design() {
+        let d = design(20, 4);
+        let cfg = FlowConfig::default();
+        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let fo = orig.fmax_mhz.unwrap_or(0.0);
+        let ft = opt.fmax_mhz.expect("tapa flow must route");
+        assert!(ft > fo, "tapa {ft} must beat baseline {fo}");
+        assert!(ft > 250.0, "tapa fmax {ft}");
+    }
+
+    #[test]
+    fn cycles_nearly_identical_between_variants() {
+        let d = design(8, 1);
+        let cfg = FlowConfig::default();
+        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let (co, ct) = (orig.cycles.unwrap(), opt.cycles.unwrap());
+        let delta = ct as i64 - co as i64;
+        assert!(delta >= 0);
+        assert!((delta as f64) < co as f64 * 0.05 + 100.0, "orig={co} opt={ct}");
+    }
+
+    #[test]
+    fn variants_produce_tagged_results() {
+        let d = design(6, 1);
+        let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+        for v in [
+            FlowVariant::Baseline,
+            FlowVariant::Tapa,
+            FlowVariant::PipelineOnlyNoConstraints,
+            FlowVariant::FloorplanOnlyNoPipeline,
+            FlowVariant::TapaCoarse4Slot,
+        ] {
+            let r = run_flow(&d, v, &cfg);
+            if v == FlowVariant::TapaCoarse4Slot {
+                assert_eq!(r.variant, FlowVariant::Tapa); // merged device, tapa path
+            } else {
+                assert_eq!(r.variant, v);
+            }
+        }
+    }
+
+    #[test]
+    fn floorplan_only_is_worst_for_spread_designs() {
+        let d = design(20, 4);
+        let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+        let full = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let fponly = run_flow(&d, FlowVariant::FloorplanOnlyNoPipeline, &cfg);
+        let f_full = full.fmax_mhz.unwrap_or(0.0);
+        let f_fp = fponly.fmax_mhz.unwrap_or(0.0);
+        assert!(f_full > f_fp, "full={f_full} floorplan-only={f_fp}");
+    }
+}

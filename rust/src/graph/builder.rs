@@ -1,0 +1,222 @@
+//! Builder API mirroring TAPA's C++ instantiation interface (§3.3.2):
+//!
+//! ```
+//! use tapa::graph::{TaskGraphBuilder, ComputeSpec, PortStyle, MemKind};
+//! let mut b = TaskGraphBuilder::new("vecadd");
+//! let load = b.proto("Load", ComputeSpec::passthrough(1024));
+//! let add  = b.proto("Add",  ComputeSpec::passthrough(1024));
+//! let store = b.proto("Store", ComputeSpec::passthrough(1024));
+//! // .invoke<PE_NUM>(Load, ...) — one call per instance:
+//! let l = b.invoke(load, "load_a");
+//! let a = b.invoke(add, "add");
+//! let s = b.invoke(store, "store");
+//! b.stream("str_a", 32, 2, l, a);
+//! b.stream("str_c", 32, 2, a, s);
+//! b.mmap_port("mem_a", PortStyle::Mmap, MemKind::Ddr, 512, l, None);
+//! b.mmap_port("mem_c", PortStyle::Mmap, MemKind::Ddr, 512, s, None);
+//! let graph = b.build().unwrap();
+//! assert_eq!(graph.num_insts(), 3);
+//! ```
+
+use super::validate::{validate, GraphError};
+use super::*;
+
+/// Incremental builder for a [`TaskGraph`].
+#[derive(Debug, Default)]
+pub struct TaskGraphBuilder {
+    graph: TaskGraph,
+}
+
+impl TaskGraphBuilder {
+    /// Start a new program named `name` (the top-level task).
+    pub fn new(name: &str) -> Self {
+        TaskGraphBuilder {
+            graph: TaskGraph { name: name.to_string(), ..Default::default() },
+        }
+    }
+
+    /// Declare a task prototype (a C++ task function).
+    pub fn proto(&mut self, name: &str, compute: ComputeSpec) -> ProtoId {
+        self.graph.protos.push(TaskProto { name: name.to_string(), compute });
+        ProtoId(self.graph.protos.len() - 1)
+    }
+
+    /// `task().invoke(f, ...)` — instantiate a prototype.
+    pub fn invoke(&mut self, proto: ProtoId, name: &str) -> InstId {
+        assert!(proto.0 < self.graph.protos.len(), "unknown proto");
+        self.graph.insts.push(TaskInst {
+            name: name.to_string(),
+            proto,
+            detached: false,
+        });
+        InstId(self.graph.insts.len() - 1)
+    }
+
+    /// `task().invoke<detach>(f, ...)` — instantiate a detached task
+    /// (§3.3.3) excluded from the termination barrier.
+    pub fn invoke_detached(&mut self, proto: ProtoId, name: &str) -> InstId {
+        let id = self.invoke(proto, name);
+        self.graph.insts[id.0].detached = true;
+        id
+    }
+
+    /// Instantiate `n` copies (`invoke<PE_NUM>`); names get `_{i}` suffixes.
+    pub fn invoke_n(&mut self, proto: ProtoId, base_name: &str, n: usize) -> Vec<InstId> {
+        (0..n).map(|i| self.invoke(proto, &format!("{base_name}_{i}"))).collect()
+    }
+
+    /// `stream<T, depth>` connecting `producer → consumer`.
+    pub fn stream(
+        &mut self,
+        name: &str,
+        width_bits: u32,
+        depth: u32,
+        producer: InstId,
+        consumer: InstId,
+    ) -> EdgeId {
+        self.edge(name, EdgeKind::Fifo, width_bits, depth, producer, consumer)
+    }
+
+    /// A stream pre-loaded with `init` tokens at reset (feedback channels
+    /// in cyclic designs — §3.3.3's data-driven loops need bootstrapping).
+    pub fn stream_with_init(
+        &mut self,
+        name: &str,
+        width_bits: u32,
+        depth: u32,
+        init: u32,
+        producer: InstId,
+        consumer: InstId,
+    ) -> EdgeId {
+        let id = self.edge(name, EdgeKind::Fifo, width_bits, depth, producer, consumer);
+        self.graph.edges[id.0].initial_tokens = init.min(depth);
+        id
+    }
+
+    /// A shared-BRAM channel (genome benchmark style).
+    pub fn shared_mem(
+        &mut self,
+        name: &str,
+        width_bits: u32,
+        depth: u32,
+        producer: InstId,
+        consumer: InstId,
+    ) -> EdgeId {
+        self.edge(name, EdgeKind::SharedMem, width_bits, depth, producer, consumer)
+    }
+
+    fn edge(
+        &mut self,
+        name: &str,
+        kind: EdgeKind,
+        width_bits: u32,
+        depth: u32,
+        producer: InstId,
+        consumer: InstId,
+    ) -> EdgeId {
+        self.graph.edges.push(Edge {
+            name: name.to_string(),
+            kind,
+            width_bits,
+            depth,
+            initial_tokens: 0,
+            producer,
+            consumer,
+        });
+        EdgeId(self.graph.edges.len() - 1)
+    }
+
+    /// Declare an external memory port owned by `owner` (§3.4).
+    pub fn mmap_port(
+        &mut self,
+        name: &str,
+        style: PortStyle,
+        mem: MemKind,
+        width_bits: u32,
+        owner: InstId,
+        requested_channel: Option<usize>,
+    ) -> usize {
+        self.graph.ext_ports.push(ExtPort {
+            name: name.to_string(),
+            style,
+            mem,
+            width_bits,
+            owner,
+            requested_channel,
+        });
+        self.graph.ext_ports.len() - 1
+    }
+
+    /// Constrain two instances to the same floorplan slot.
+    pub fn same_slot(&mut self, a: InstId, b: InstId) {
+        self.graph.same_slot.push((a, b));
+    }
+
+    /// Finish and validate the graph.
+    pub fn build(self) -> Result<TaskGraph, GraphError> {
+        validate(&self.graph)?;
+        Ok(self.graph)
+    }
+
+    /// Finish without validation (tests of the validator itself).
+    pub fn build_unchecked(self) -> TaskGraph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invoke_n_creates_numbered_instances() {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("PE", ComputeSpec::passthrough(8));
+        let ids = b.invoke_n(p, "pe", 4);
+        let g = b.build_unchecked();
+        assert_eq!(ids.len(), 4);
+        assert_eq!(g.insts[ids[2].0].name, "pe_2");
+    }
+
+    #[test]
+    fn detached_flag_set() {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("Ctrl", ComputeSpec::passthrough(8));
+        let d = b.invoke_detached(p, "ctrl");
+        let g = b.build_unchecked();
+        assert!(g.insts[d.0].detached);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown proto")]
+    fn invoke_unknown_proto_panics() {
+        let mut b = TaskGraphBuilder::new("t");
+        b.invoke(ProtoId(3), "x");
+    }
+
+    #[test]
+    fn vecadd_listing1_shape() {
+        // Listing 1 with PE_NUM = 4: 4×Load(a) + 4×Load(b) + 4×Add +
+        // 4×Store = 16 instances, 12 streams, 8 mmap ports.
+        let pe_num = 4;
+        let mut b = TaskGraphBuilder::new("VecAdd");
+        let load = b.proto("Load", ComputeSpec::passthrough(1024));
+        let add = b.proto("Add", ComputeSpec::passthrough(1024));
+        let store = b.proto("Store", ComputeSpec::passthrough(1024));
+        let la = b.invoke_n(load, "load_a", pe_num);
+        let lb = b.invoke_n(load, "load_b", pe_num);
+        let ad = b.invoke_n(add, "add", pe_num);
+        let st = b.invoke_n(store, "store", pe_num);
+        for i in 0..pe_num {
+            b.stream(&format!("str_a_{i}"), 32, 2, la[i], ad[i]);
+            b.stream(&format!("str_b_{i}"), 32, 2, lb[i], ad[i]);
+            b.stream(&format!("str_c_{i}"), 32, 2, ad[i], st[i]);
+            b.mmap_port(&format!("mem1_{i}"), PortStyle::Mmap, MemKind::Ddr, 512, la[i], None);
+            b.mmap_port(&format!("mem2_{i}"), PortStyle::Mmap, MemKind::Ddr, 512, lb[i], None);
+        }
+        let g = b.build().unwrap();
+        assert_eq!(g.num_insts(), 16);
+        assert_eq!(g.num_edges(), 12);
+        assert_eq!(g.ext_ports.len(), 8);
+    }
+}

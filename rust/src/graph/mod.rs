@@ -1,0 +1,282 @@
+//! Task-parallel dataflow graph IR (§3).
+//!
+//! Mirrors the TAPA programming model: a program is a hierarchy of tasks
+//! communicating through typed streams; leaf tasks carry a behavioural
+//! compute spec that the [`crate::hls`] estimator lowers to area + an FSM
+//! schedule; the top-level task exposes `mmap` / `async_mmap` external
+//! memory ports (§3.4).
+
+pub mod builder;
+pub mod validate;
+
+pub use builder::TaskGraphBuilder;
+
+use crate::device::area::AreaVector;
+
+/// Index of a task prototype ("C++ function").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProtoId(pub usize);
+
+/// Index of a task instance (one `invoke`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstId(pub usize);
+
+/// Index of a stream (FIFO channel) or shared-memory channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EdgeId(pub usize);
+
+/// External memory technology a port binds to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemKind {
+    Ddr,
+    Hbm,
+}
+
+/// External-memory interface style (§3.4, Table 3): the classic array-style
+/// `mmap` infers AXI bursts statically and buffers them in BRAM; the
+/// `async_mmap` exposes the AXI channel as five streams plus a runtime
+/// burst detector and needs no BRAM buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PortStyle {
+    Mmap,
+    AsyncMmap,
+}
+
+/// An external memory port of the top-level task.
+#[derive(Clone, Debug)]
+pub struct ExtPort {
+    pub name: String,
+    pub style: PortStyle,
+    pub mem: MemKind,
+    /// AXI data width in bits (512 typical).
+    pub width_bits: u32,
+    /// Task instance that owns (drives) this port.
+    pub owner: InstId,
+    /// User-requested HBM channel binding; `None` = let TAPA choose (§6.2).
+    pub requested_channel: Option<usize>,
+}
+
+/// How a leaf task computes — enough detail for both the HLS-area model and
+/// the cycle-accurate simulator without carrying real C++.
+#[derive(Clone, Debug)]
+pub struct ComputeSpec {
+    /// Multiply-accumulate style ops per loop iteration (maps to DSPs).
+    pub mac_ops: u32,
+    /// ALU/logic ops per iteration (maps to LUTs).
+    pub alu_ops: u32,
+    /// On-chip buffer bytes best implemented in BRAM.
+    pub bram_bytes: u64,
+    /// On-chip buffer bytes best implemented in URAM (large buffers).
+    pub uram_bytes: u64,
+    /// Loop trip count per invocation (tokens processed).
+    pub trip_count: u64,
+    /// Initiation interval of the main pipelined loop.
+    pub ii: u32,
+    /// Pipeline depth (latency of one iteration through the datapath).
+    pub pipeline_depth: u32,
+}
+
+impl ComputeSpec {
+    /// A trivial pass-through task (1 ALU op, II=1).
+    pub fn passthrough(trip_count: u64) -> Self {
+        ComputeSpec {
+            mac_ops: 0,
+            alu_ops: 1,
+            bram_bytes: 0,
+            uram_bytes: 0,
+            trip_count,
+            ii: 1,
+            pipeline_depth: 2,
+        }
+    }
+}
+
+/// A task prototype — corresponds to one C++ task function.
+#[derive(Clone, Debug)]
+pub struct TaskProto {
+    pub name: String,
+    pub compute: ComputeSpec,
+}
+
+/// A task instance — one `invoke` of a prototype (§3.3.2).
+#[derive(Clone, Debug)]
+pub struct TaskInst {
+    pub name: String,
+    pub proto: ProtoId,
+    /// Detached tasks (§3.3.3) run forever and are excluded from the
+    /// program-termination barrier.
+    pub detached: bool,
+}
+
+/// Edge kind: FIFO stream (§3.1) or shared BRAM channel (the genome
+/// benchmark communicates through BRAM, §7.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EdgeKind {
+    Fifo,
+    SharedMem,
+}
+
+/// A communication channel between exactly two task instances.
+#[derive(Clone, Debug)]
+pub struct Edge {
+    pub name: String,
+    pub kind: EdgeKind,
+    /// Token width in bits (the `width` of Eq. 1's cost).
+    pub width_bits: u32,
+    /// FIFO capacity in tokens (`stream<T, capacity>`).
+    pub depth: u32,
+    /// Tokens pre-loaded into the channel at reset — how cyclic designs
+    /// (PageRank's control loop) bootstrap: the feedback FIFO starts
+    /// holding credits so the loop can turn over.
+    pub initial_tokens: u32,
+    pub producer: InstId,
+    pub consumer: InstId,
+}
+
+/// The flattened task graph of a TAPA program.
+///
+/// TAPA's hierarchy (§3.2) exists for authoring convenience; floorplanning
+/// operates on the flattened leaf-instance graph, which is what we store.
+/// `hierarchy_path` on instances preserves the authoring structure.
+#[derive(Clone, Debug, Default)]
+pub struct TaskGraph {
+    pub name: String,
+    pub protos: Vec<TaskProto>,
+    pub insts: Vec<TaskInst>,
+    pub edges: Vec<Edge>,
+    pub ext_ports: Vec<ExtPort>,
+    /// Pairs of instances that must share a slot (dependency-cycle feedback
+    /// from the latency balancer, §5.2, or user pragmas).
+    pub same_slot: Vec<(InstId, InstId)>,
+}
+
+impl TaskGraph {
+    /// Number of task instances (the `#V` of Table 11).
+    pub fn num_insts(&self) -> usize {
+        self.insts.len()
+    }
+
+    /// Number of channels (the `#E` of Table 11).
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Compute spec of an instance.
+    pub fn compute_of(&self, inst: InstId) -> &ComputeSpec {
+        &self.protos[self.insts[inst.0].proto.0].compute
+    }
+
+    /// Edges adjacent to an instance.
+    pub fn edges_of(&self, inst: InstId) -> impl Iterator<Item = (EdgeId, &Edge)> {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(move |(_, e)| e.producer == inst || e.consumer == inst)
+            .map(|(i, e)| (EdgeId(i), e))
+    }
+
+    /// Input (consumer-side) edges of an instance in declaration order.
+    pub fn in_edges(&self, inst: InstId) -> Vec<EdgeId> {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.consumer == inst)
+            .map(|(i, _)| EdgeId(i))
+            .collect()
+    }
+
+    /// Output (producer-side) edges of an instance in declaration order.
+    pub fn out_edges(&self, inst: InstId) -> Vec<EdgeId> {
+        self.edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.producer == inst)
+            .map(|(i, _)| EdgeId(i))
+            .collect()
+    }
+
+    /// External ports owned by an instance.
+    pub fn ports_of(&self, inst: InstId) -> Vec<usize> {
+        self.ext_ports
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.owner == inst)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of HBM channels required (ports bound to HBM memory).
+    pub fn hbm_ports(&self) -> usize {
+        self.ext_ports.iter().filter(|p| p.mem == MemKind::Hbm).count()
+    }
+
+    /// Per-instance HBM channel demand as an area-vector increment, for the
+    /// §6.2 binding-as-resource formulation.
+    pub fn hbm_demand(&self, inst: InstId) -> AreaVector {
+        let n = self
+            .ext_ports
+            .iter()
+            .filter(|p| p.owner == inst && p.mem == MemKind::Hbm)
+            .count() as u64;
+        AreaVector::ZERO.with_hbm_ch(n)
+    }
+
+    /// Total bit-width crossing between two instance sets — used by tests
+    /// and the route model.
+    pub fn cut_width(&self, in_a: &dyn Fn(InstId) -> bool) -> u64 {
+        self.edges
+            .iter()
+            .filter(|e| in_a(e.producer) != in_a(e.consumer))
+            .map(|e| e.width_bits as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_graph() -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("tiny");
+        let load = b.proto("Load", ComputeSpec::passthrough(1024));
+        let add = b.proto("Add", ComputeSpec::passthrough(1024));
+        let l0 = b.invoke(load, "load0");
+        let a0 = b.invoke(add, "add0");
+        let s = b.stream("s0", 32, 2, l0, a0);
+        assert_eq!(s, EdgeId(0));
+        b.mmap_port("m0", PortStyle::Mmap, MemKind::Ddr, 512, l0, None);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn adjacency_queries() {
+        let g = tiny_graph();
+        assert_eq!(g.num_insts(), 2);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.out_edges(InstId(0)), vec![EdgeId(0)]);
+        assert_eq!(g.in_edges(InstId(1)), vec![EdgeId(0)]);
+        assert_eq!(g.ports_of(InstId(0)), vec![0]);
+        assert!(g.ports_of(InstId(1)).is_empty());
+    }
+
+    #[test]
+    fn hbm_demand_counts_ports() {
+        let mut b = TaskGraphBuilder::new("h");
+        let p = b.proto("PE", ComputeSpec::passthrough(16));
+        let i0 = b.invoke(p, "pe0");
+        b.mmap_port("h0", PortStyle::AsyncMmap, MemKind::Hbm, 512, i0, None);
+        b.mmap_port("h1", PortStyle::AsyncMmap, MemKind::Hbm, 512, i0, Some(3));
+        let g = b.build().unwrap();
+        assert_eq!(g.hbm_ports(), 2);
+        assert_eq!(g.hbm_demand(InstId(0)).hbm_ch, 2);
+    }
+
+    #[test]
+    fn cut_width_counts_crossing_bits() {
+        let g = tiny_graph();
+        let w = g.cut_width(&|i| i == InstId(0));
+        assert_eq!(w, 32);
+        let w2 = g.cut_width(&|_| true);
+        assert_eq!(w2, 0);
+    }
+}

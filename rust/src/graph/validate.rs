@@ -1,0 +1,327 @@
+//! Structural validation of task graphs, and graph analyses shared by the
+//! floorplanner and latency balancer (weak connectivity, cycle detection
+//! via Tarjan SCC — dependency cycles matter for §5.2's feasibility
+//! feedback).
+
+use super::{EdgeId, InstId, TaskGraph};
+
+/// Validation failures.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum GraphError {
+    #[error("task graph has no instances")]
+    Empty,
+    #[error("edge {0} connects an instance to itself: {1}")]
+    SelfLoop(usize, String),
+    #[error("edge {0} ({1}) has zero width")]
+    ZeroWidth(usize, String),
+    #[error("edge {0} ({1}) has zero depth")]
+    ZeroDepth(usize, String),
+    #[error("instance {0} ({1}) is dangling: no edges and no external ports")]
+    Dangling(usize, String),
+    #[error("duplicate instance name: {0}")]
+    DuplicateName(String),
+    #[error("external port {0} has zero width")]
+    ZeroPortWidth(String),
+}
+
+/// Validate structural invariants (§3.2: "Each stream must be connected to
+/// exactly two tasks ... one producer and one consumer" is enforced by
+/// construction — edges store exactly one of each; here we check the rest).
+pub fn validate(g: &TaskGraph) -> Result<(), GraphError> {
+    if g.insts.is_empty() {
+        return Err(GraphError::Empty);
+    }
+    let mut names = std::collections::HashSet::new();
+    for inst in &g.insts {
+        if !names.insert(inst.name.clone()) {
+            return Err(GraphError::DuplicateName(inst.name.clone()));
+        }
+    }
+    for (i, e) in g.edges.iter().enumerate() {
+        if e.producer == e.consumer {
+            return Err(GraphError::SelfLoop(i, e.name.clone()));
+        }
+        if e.width_bits == 0 {
+            return Err(GraphError::ZeroWidth(i, e.name.clone()));
+        }
+        if e.depth == 0 {
+            return Err(GraphError::ZeroDepth(i, e.name.clone()));
+        }
+    }
+    for p in &g.ext_ports {
+        if p.width_bits == 0 {
+            return Err(GraphError::ZeroPortWidth(p.name.clone()));
+        }
+    }
+    // Dangling check: every instance must touch at least one edge or port.
+    let mut touched = vec![false; g.insts.len()];
+    for e in &g.edges {
+        touched[e.producer.0] = true;
+        touched[e.consumer.0] = true;
+    }
+    for p in &g.ext_ports {
+        touched[p.owner.0] = true;
+    }
+    // Single-instance programs are fine even without edges.
+    if g.insts.len() > 1 {
+        for (i, t) in touched.iter().enumerate() {
+            if !t {
+                return Err(GraphError::Dangling(i, g.insts[i].name.clone()));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Strongly connected components (Tarjan, iterative). Components with more
+/// than one vertex — or a vertex with a self-referential path — are
+/// dependency cycles at task granularity (the PageRank benchmark has them).
+pub fn sccs(g: &TaskGraph) -> Vec<Vec<InstId>> {
+    let n = g.insts.len();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in &g.edges {
+        adj[e.producer.0].push(e.consumer.0);
+    }
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack = Vec::new();
+    let mut next_index = 0usize;
+    let mut out = Vec::new();
+
+    // Iterative Tarjan with an explicit call stack: (v, child cursor).
+    for root in 0..n {
+        if index[root] != usize::MAX {
+            continue;
+        }
+        let mut call: Vec<(usize, usize)> = vec![(root, 0)];
+        while let Some(&mut (v, ref mut cursor)) = call.last_mut() {
+            if *cursor == 0 {
+                index[v] = next_index;
+                low[v] = next_index;
+                next_index += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if *cursor < adj[v].len() {
+                let w = adj[v][*cursor];
+                *cursor += 1;
+                if index[w] == usize::MAX {
+                    call.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                call.pop();
+                if let Some(&mut (parent, _)) = call.last_mut() {
+                    low[parent] = low[parent].min(low[v]);
+                }
+                if low[v] == index[v] {
+                    let mut comp = Vec::new();
+                    loop {
+                        let w = stack.pop().unwrap();
+                        on_stack[w] = false;
+                        comp.push(InstId(w));
+                        if w == v {
+                            break;
+                        }
+                    }
+                    comp.sort();
+                    out.push(comp);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Instances involved in any dependency cycle (SCC of size > 1, or with a
+/// direct two-edge cycle captured by SCC too).
+pub fn cyclic_insts(g: &TaskGraph) -> Vec<InstId> {
+    let mut out: Vec<InstId> =
+        sccs(g).into_iter().filter(|c| c.len() > 1).flatten().collect();
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// True when the dataflow graph (ignoring direction: weak connectivity)
+/// forms a single connected component.
+pub fn weakly_connected(g: &TaskGraph) -> bool {
+    if g.insts.is_empty() {
+        return true;
+    }
+    let n = g.insts.len();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in &g.edges {
+        adj[e.producer.0].push(e.consumer.0);
+        adj[e.consumer.0].push(e.producer.0);
+    }
+    let mut seen = vec![false; n];
+    let mut stack = vec![0usize];
+    seen[0] = true;
+    while let Some(v) = stack.pop() {
+        for &w in &adj[v] {
+            if !seen[w] {
+                seen[w] = true;
+                stack.push(w);
+            }
+        }
+    }
+    seen.into_iter().all(|s| s)
+}
+
+/// Topological order of instances; `None` if the graph has a cycle.
+pub fn topo_order(g: &TaskGraph) -> Option<Vec<InstId>> {
+    let n = g.insts.len();
+    let mut indeg = vec![0usize; n];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in &g.edges {
+        adj[e.producer.0].push(e.consumer.0);
+        indeg[e.consumer.0] += 1;
+    }
+    let mut queue: std::collections::VecDeque<usize> =
+        (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(v) = queue.pop_front() {
+        order.push(InstId(v));
+        for &w in &adj[v] {
+            indeg[w] -= 1;
+            if indeg[w] == 0 {
+                queue.push_back(w);
+            }
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+/// Edges on any path between `src` and `dst`? Not needed yet; kept minimal.
+pub fn edge_endpoints(g: &TaskGraph, e: EdgeId) -> (InstId, InstId) {
+    let edge = &g.edges[e.0];
+    (edge.producer, edge.consumer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ComputeSpec, TaskGraphBuilder};
+    use super::*;
+
+    fn chain(n: usize) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("chain");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 32, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn chain_is_acyclic_and_connected() {
+        let g = chain(5);
+        assert!(cyclic_insts(&g).is_empty());
+        assert!(weakly_connected(&g));
+        let order = topo_order(&g).unwrap();
+        assert_eq!(order.len(), 5);
+        assert_eq!(order[0], InstId(0));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut b = TaskGraphBuilder::new("cyc");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", 3);
+        b.stream("a", 32, 2, ids[0], ids[1]);
+        b.stream("b", 32, 2, ids[1], ids[2]);
+        b.stream("c", 32, 2, ids[2], ids[0]);
+        let g = b.build().unwrap();
+        let cyc = cyclic_insts(&g);
+        assert_eq!(cyc.len(), 3);
+        assert!(topo_order(&g).is_none());
+    }
+
+    #[test]
+    fn partial_cycle_flags_only_scc_members() {
+        let mut b = TaskGraphBuilder::new("pc");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", 4);
+        b.stream("a", 32, 2, ids[0], ids[1]);
+        b.stream("b", 32, 2, ids[1], ids[2]);
+        b.stream("c", 32, 2, ids[2], ids[1]); // cycle between 1 and 2
+        b.stream("d", 32, 2, ids[2], ids[3]);
+        let g = b.build().unwrap();
+        assert_eq!(cyclic_insts(&g), vec![InstId(1), InstId(2)]);
+    }
+
+    #[test]
+    fn validate_rejects_self_loop() {
+        let mut b = TaskGraphBuilder::new("bad");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let i = b.invoke(p, "k");
+        b.stream("s", 32, 2, i, i);
+        let g = b.build_unchecked();
+        assert!(matches!(validate(&g), Err(GraphError::SelfLoop(..))));
+    }
+
+    #[test]
+    fn validate_rejects_zero_width_and_depth() {
+        let mut b = TaskGraphBuilder::new("bad");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", 2);
+        b.stream("s", 0, 2, ids[0], ids[1]);
+        assert!(matches!(
+            validate(&b.build_unchecked()),
+            Err(GraphError::ZeroWidth(..))
+        ));
+
+        let mut b = TaskGraphBuilder::new("bad2");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", 2);
+        b.stream("s", 32, 0, ids[0], ids[1]);
+        assert!(matches!(
+            validate(&b.build_unchecked()),
+            Err(GraphError::ZeroDepth(..))
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_dangling_instance() {
+        let mut b = TaskGraphBuilder::new("bad");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", 3);
+        b.stream("s", 32, 2, ids[0], ids[1]);
+        // ids[2] has no edges/ports.
+        assert!(matches!(
+            validate(&b.build_unchecked()),
+            Err(GraphError::Dangling(2, _))
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_names() {
+        let mut b = TaskGraphBuilder::new("bad");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let a = b.invoke(p, "same");
+        let c = b.invoke(p, "same");
+        b.stream("s", 32, 2, a, c);
+        assert!(matches!(
+            validate(&b.build_unchecked()),
+            Err(GraphError::DuplicateName(_))
+        ));
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let mut b = TaskGraphBuilder::new("dis");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let ids = b.invoke_n(p, "k", 4);
+        b.stream("a", 32, 2, ids[0], ids[1]);
+        b.stream("b", 32, 2, ids[2], ids[3]);
+        let g = b.build().unwrap();
+        assert!(!weakly_connected(&g));
+    }
+}

@@ -1,0 +1,132 @@
+//! FIFO implementation-template selection and area model (§7.3).
+//!
+//! TAPA "uses a different FIFO template that chooses the implementation
+//! style (BRAM-based or shift-register-based) based on the area of the
+//! FIFO" — that is why some optimized designs report *lower* BRAM and FF
+//! than the originals (Tables 6–8). We reproduce both templates plus the
+//! naive always-BRAM baseline used by the original designs.
+
+use crate::device::area::AreaVector;
+
+/// FIFO implementation styles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FifoTemplate {
+    /// SRL (shift-register LUT) based; cheap for shallow/narrow FIFOs.
+    ShiftRegister,
+    /// BRAM_18K based; required once width×depth exceeds SRL capacity.
+    Bram,
+}
+
+/// Bits of storage above which a BRAM implementation is selected.
+/// One SLR16 LUT stores 16 bits of shift register; beyond ~1–2 Kb the SRL
+/// fabric cost overtakes a BRAM18.
+const SRL_BITS_THRESHOLD: u64 = 2048;
+
+/// Choose the template TAPA's area-aware FIFO selector would pick.
+pub fn select_template(width_bits: u32, depth: u32) -> FifoTemplate {
+    let bits = width_bits as u64 * depth as u64;
+    if bits <= SRL_BITS_THRESHOLD {
+        FifoTemplate::ShiftRegister
+    } else {
+        FifoTemplate::Bram
+    }
+}
+
+/// Area of one FIFO with TAPA's area-aware template selection.
+pub fn fifo_area(width_bits: u32, depth: u32) -> AreaVector {
+    fifo_area_with(select_template(width_bits, depth), width_bits, depth)
+}
+
+/// Area of one FIFO forced to always use BRAM (the baseline template some
+/// original benchmark sources enforce — §7.3 bucket-sort discussion).
+pub fn fifo_area_always_bram(width_bits: u32, depth: u32) -> AreaVector {
+    fifo_area_with(FifoTemplate::Bram, width_bits, depth)
+}
+
+fn fifo_area_with(t: FifoTemplate, width_bits: u32, depth: u32) -> AreaVector {
+    let w = width_bits as u64;
+    let d = depth as u64;
+    match t {
+        FifoTemplate::ShiftRegister => {
+            // SRL16/SRL32 chains: one LUT per bit per 16 depth steps, plus
+            // pointers/handshake; FFs register the head/tail.
+            let lut = w * d.div_ceil(16) + 24;
+            let ff = 2 * w + 16;
+            AreaVector::new(lut, ff, 0, 0)
+        }
+        FifoTemplate::Bram => {
+            // BRAM18 = 18 Kib; width quantizes to 36-bit ports at depth 512.
+            let bits = w * d;
+            let by_bits = bits.div_ceil(18 * 1024);
+            let by_width = w.div_ceil(36); // minimum blocks to cover width
+            let bram = by_bits.max(by_width).max(1);
+            let lut = 48 + w / 8; // addressing + handshake
+            let ff = 40 + w / 4;
+            AreaVector::new(lut, ff, bram, 0)
+        }
+    }
+}
+
+/// Extra register area for `stages` levels of interface pipelining added to
+/// a FIFO connection (§5.3, Fig. 10): each stage registers the full data
+/// width plus handshake in both directions.
+pub fn pipeline_stage_area(width_bits: u32, stages: u32) -> AreaVector {
+    let w = width_bits as u64;
+    let s = stages as u64;
+    // Per stage: data FFs + valid/ready FFs + small LUT overhead for the
+    // almost-full credit logic.
+    AreaVector::new(6 * s, (w + 4) * s, 0, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shallow_narrow_uses_srl() {
+        assert_eq!(select_template(32, 2), FifoTemplate::ShiftRegister);
+        assert_eq!(select_template(32, 64), FifoTemplate::ShiftRegister);
+    }
+
+    #[test]
+    fn wide_deep_uses_bram() {
+        assert_eq!(select_template(256, 32), FifoTemplate::Bram);
+        assert_eq!(select_template(512, 512), FifoTemplate::Bram);
+    }
+
+    #[test]
+    fn srl_fifo_has_no_bram() {
+        let a = fifo_area(32, 2);
+        assert_eq!(a.bram18, 0);
+        assert!(a.lut > 0 && a.ff > 0);
+    }
+
+    #[test]
+    fn bram_fifo_counts_blocks_by_bits_and_width() {
+        // 512 bits × 512 deep = 256 Kib → 15 BRAM18 by bits; 15 ≥ 512/36.
+        let a = fifo_area(512, 512);
+        assert_eq!(a.bram18, (512u64 * 512).div_ceil(18 * 1024).max(512u64.div_ceil(36)));
+        // Width-bound case: 512-bit wide but shallow still needs ≥ 15 blocks
+        // ... actually by_width = ceil(512/36) = 15.
+        let b = fifo_area(512, 8);
+        assert_eq!(b.bram18, 15);
+    }
+
+    #[test]
+    fn area_aware_template_saves_vs_always_bram() {
+        // §7.3: small FIFOs forced to BRAM waste blocks.
+        let naive = fifo_area_always_bram(32, 2);
+        let smart = fifo_area(32, 2);
+        assert!(naive.bram18 >= 1);
+        assert_eq!(smart.bram18, 0);
+    }
+
+    #[test]
+    fn pipeline_stage_area_scales_with_width_and_stages() {
+        let one = pipeline_stage_area(256, 1);
+        let two = pipeline_stage_area(256, 2);
+        assert_eq!(two.ff, 2 * one.ff);
+        assert!(one.ff >= 256);
+        assert_eq!(pipeline_stage_area(256, 0), AreaVector::ZERO);
+    }
+}

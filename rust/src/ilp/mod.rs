@@ -1,0 +1,158 @@
+//! Exact (M)ILP solver — the Gurobi stand-in (§7.1).
+//!
+//! The paper solves two problem classes with Gurobi:
+//! 1. the per-iteration floorplan partitioning ILP (§4.3): a few hundred
+//!    binary decision variables, resource-capacity rows and a
+//!    slot-crossing objective;
+//! 2. the latency-balancing LP (§5.2): a system of difference constraints
+//!    (SDC) whose constraint matrix is totally unimodular, so the LP
+//!    relaxation is integral.
+//!
+//! We implement a dense two-phase primal simplex ([`simplex`]) and a
+//! best-first branch-and-bound wrapper for binaries ([`branch`]). Both are
+//! exact; problem sizes here (≤ ~1000 columns) are well within reach.
+
+pub mod branch;
+pub mod simplex;
+
+pub use branch::{solve_milp, MilpResult, SolveParams};
+pub use simplex::{solve_lp, LpOutcome};
+
+/// Comparison operator of a linear constraint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear constraint `Σ coeff_i · x_i  (≤|≥|=)  rhs`.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// Sparse coefficient list `(var_index, coefficient)`.
+    pub coeffs: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+impl Constraint {
+    pub fn le(coeffs: Vec<(usize, f64)>, rhs: f64) -> Self {
+        Constraint { coeffs, cmp: Cmp::Le, rhs }
+    }
+    pub fn ge(coeffs: Vec<(usize, f64)>, rhs: f64) -> Self {
+        Constraint { coeffs, cmp: Cmp::Ge, rhs }
+    }
+    pub fn eq(coeffs: Vec<(usize, f64)>, rhs: f64) -> Self {
+        Constraint { coeffs, cmp: Cmp::Eq, rhs }
+    }
+}
+
+/// A minimization problem over non-negative variables.
+///
+/// All variables are `x_i ≥ 0`. Binary variables additionally get an
+/// implicit `x_i ≤ 1` row and are branched to integrality by
+/// [`solve_milp`]. (General integers are not needed by the flow.)
+#[derive(Clone, Debug, Default)]
+pub struct Problem {
+    pub num_vars: usize,
+    /// Objective coefficients (minimize `c · x`); indexed densely.
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+    /// `binary[i]` marks 0/1 variables.
+    pub binary: Vec<bool>,
+}
+
+impl Problem {
+    /// A problem with `n` continuous variables and zero objective.
+    pub fn new(n: usize) -> Self {
+        Problem {
+            num_vars: n,
+            objective: vec![0.0; n],
+            constraints: Vec::new(),
+            binary: vec![false; n],
+        }
+    }
+
+    /// Append a new variable; returns its index.
+    pub fn add_var(&mut self, obj_coeff: f64, binary: bool) -> usize {
+        self.num_vars += 1;
+        self.objective.push(obj_coeff);
+        self.binary.push(binary);
+        self.num_vars - 1
+    }
+
+    /// Add a constraint.
+    pub fn add(&mut self, c: Constraint) {
+        self.constraints.push(c);
+    }
+
+    /// Objective value of a candidate point.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.objective.iter().zip(x.iter()).map(|(c, v)| c * v).sum()
+    }
+
+    /// Check feasibility of a point within tolerance `tol`.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.len() != self.num_vars {
+            return false;
+        }
+        if x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        for (i, &b) in self.binary.iter().enumerate() {
+            if b && (x[i] < -tol || x[i] > 1.0 + tol) {
+                return false;
+            }
+        }
+        for c in &self.constraints {
+            let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
+            let ok = match c.cmp {
+                Cmp::Le => lhs <= c.rhs + tol,
+                Cmp::Ge => lhs >= c.rhs - tol,
+                Cmp::Eq => (lhs - c.rhs).abs() <= tol,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constraint_builders() {
+        let c = Constraint::le(vec![(0, 1.0), (1, 2.0)], 3.0);
+        assert_eq!(c.cmp, Cmp::Le);
+        assert_eq!(Constraint::ge(vec![], 0.0).cmp, Cmp::Ge);
+        assert_eq!(Constraint::eq(vec![], 0.0).cmp, Cmp::Eq);
+    }
+
+    #[test]
+    fn feasibility_check() {
+        let mut p = Problem::new(2);
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.0));
+        assert!(p.is_feasible(&[0.5, 0.5], 1e-9));
+        assert!(!p.is_feasible(&[0.9, 0.9], 1e-9));
+        assert!(!p.is_feasible(&[-0.1, 0.0], 1e-9));
+        assert!(!p.is_feasible(&[0.5], 1e-9));
+    }
+
+    #[test]
+    fn binary_bounds_checked() {
+        let mut p = Problem::new(1);
+        p.binary[0] = true;
+        assert!(p.is_feasible(&[1.0], 1e-9));
+        assert!(!p.is_feasible(&[1.5], 1e-9));
+    }
+
+    #[test]
+    fn objective_value() {
+        let mut p = Problem::new(2);
+        p.objective = vec![2.0, -1.0];
+        assert_eq!(p.objective_value(&[3.0, 4.0]), 2.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! # TAPA-rs
+//!
+//! A reproduction of *TAPA: A Scalable Task-Parallel Dataflow Programming
+//! Framework for Modern FPGAs with Co-Optimization of HLS and Physical
+//! Design* (Guo et al., ACM TRETS 2022) as a three-layer Rust + JAX/Pallas
+//! stack.
+//!
+//! The crate contains:
+//! - a task-parallel dataflow **graph IR** and builder API mirroring the
+//!   TAPA C++ API (`task().invoke(...)`, `stream<T, depth>`, `mmap`,
+//!   `async_mmap`) — [`graph`];
+//! - an **HLS estimator** substrate that stands in for Vitis HLS: per-task
+//!   area (LUT/FF/BRAM/DSP) and timing estimation — [`hls`];
+//! - an exact **ILP solver** (two-phase dense simplex + branch & bound)
+//!   standing in for Gurobi — [`ilp`];
+//! - the **coarse-grained floorplanner** (iterative 2-way partitioning,
+//!   HBM channel binding, multi-floorplan generation) — [`floorplan`];
+//! - **floorplan-aware pipelining** with SDC-based latency balancing —
+//!   [`pipeline`];
+//! - a cycle-accurate **dataflow simulator** (FSM tasks, almost-full
+//!   FIFOs, EoT tokens, peek, burst detection, HBM crossbar) — [`sim`];
+//! - **placement / routing / timing** simulators standing in for Vivado,
+//!   including an analytical placer whose inner loop is an AOT-compiled
+//!   JAX/Pallas artifact executed through PJRT — [`place`], [`route`],
+//!   [`timing`], [`runtime`];
+//! - device models for the Xilinx Alveo U250 / U280 — [`device`];
+//! - benchmark generators for all designs evaluated in the paper —
+//!   [`bench_suite`].
+
+pub mod config;
+pub mod device;
+pub mod graph;
+pub mod hls;
+pub mod ilp;
+pub mod floorplan;
+pub mod pipeline;
+pub mod sim;
+pub mod place;
+pub mod route;
+pub mod timing;
+pub mod runtime;
+pub mod bench_suite;
+pub mod report;
+pub mod util;
+pub mod flow;

@@ -1,0 +1,240 @@
+//! `tapa` — the command-line launcher.
+//!
+//! ```text
+//! tapa list                         list benchmark designs
+//! tapa compile --design NAME        run the TAPA flow on one design
+//!       [--variant V] [--config F]  (variants: baseline, tapa,
+//!                                    pipeline-only, floorplan-only,
+//!                                    tapa-4slot)
+//! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
+//! tapa bench --list                 list experiment ids
+//! tapa engine-info                  check the PJRT artifact
+//! ```
+//!
+//! Arguments are parsed by hand (no clap offline); unknown flags error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use tapa::bench_suite::{all_autobridge_designs, experiments};
+use tapa::config::Config;
+use tapa::flow::{run_flow_with_executor, FlowConfig, FlowVariant};
+use tapa::place::{RustStep, StepExecutor};
+use tapa::report::fmt_mhz;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("list") => cmd_list(),
+        Some("compile") => cmd_compile(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("engine-info") => cmd_engine_info(),
+        Some("help") | Some("--help") | None => {
+            print_help();
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("unknown command: {other}\n");
+            print_help();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "tapa — task-parallel dataflow flow with HLS/physical-design \
+         co-optimization\n\n\
+         USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
+         [--config FILE] [--no-sim]\n  tapa bench ID [--csv] [--config FILE]\n  \
+         tapa bench --list\n  tapa engine-info"
+    );
+}
+
+/// Parse `--key value` style flags.
+fn flag_value(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn has_flag(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn load_config(args: &[String]) -> FlowConfig {
+    match flag_value(args, "--config") {
+        Some(path) => match Config::load(&PathBuf::from(&path)) {
+            Ok(c) => c.flow_config(),
+            Err(e) => {
+                eprintln!("warning: bad config {path}: {e}; using defaults");
+                FlowConfig::default()
+            }
+        },
+        None => FlowConfig::default(),
+    }
+}
+
+fn cmd_list() -> ExitCode {
+    println!("{:<24} {:>6} {:>6}  device", "design", "#tasks", "#chan");
+    for d in all_autobridge_designs() {
+        println!(
+            "{:<24} {:>6} {:>6}  {}",
+            d.name,
+            d.graph.num_insts(),
+            d.graph.num_edges(),
+            d.device.name()
+        );
+    }
+    for (orig, opt) in tapa::bench_suite::hbm_design_pairs() {
+        for d in [orig, opt] {
+            println!(
+                "{:<24} {:>6} {:>6}  {}",
+                d.name,
+                d.graph.num_insts(),
+                d.graph.num_edges(),
+                d.device.name()
+            );
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn parse_variant(s: &str) -> Option<FlowVariant> {
+    Some(match s {
+        "baseline" => FlowVariant::Baseline,
+        "tapa" => FlowVariant::Tapa,
+        "pipeline-only" => FlowVariant::PipelineOnlyNoConstraints,
+        "floorplan-only" => FlowVariant::FloorplanOnlyNoPipeline,
+        "tapa-4slot" => FlowVariant::TapaCoarse4Slot,
+        _ => return None,
+    })
+}
+
+fn cmd_compile(args: &[String]) -> ExitCode {
+    let Some(name) = flag_value(args, "--design") else {
+        eprintln!("compile requires --design NAME (see `tapa list`)");
+        return ExitCode::FAILURE;
+    };
+    let variant = match flag_value(args, "--variant") {
+        Some(v) => match parse_variant(&v) {
+            Some(v) => v,
+            None => {
+                eprintln!("unknown variant {v}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => FlowVariant::Tapa,
+    };
+    let mut cfg = load_config(args);
+    if has_flag(args, "--no-sim") {
+        cfg.sim.enabled = false;
+    }
+
+    let all: Vec<_> = all_autobridge_designs()
+        .into_iter()
+        .chain(
+            tapa::bench_suite::hbm_design_pairs()
+                .into_iter()
+                .flat_map(|(a, b)| [a, b]),
+        )
+        .collect();
+    let Some(design) = all.into_iter().find(|d| d.name == name) else {
+        eprintln!("unknown design {name} (see `tapa list`)");
+        return ExitCode::FAILURE;
+    };
+
+    // Prefer the PJRT artifact; fall back to the rust reference step.
+    let engine = tapa::runtime::Engine::load_default();
+    let exec: &dyn StepExecutor = match &engine {
+        Some(e) => e,
+        None => &RustStep,
+    };
+    println!(
+        "compiling {} [{}] on {} (placer step: {})",
+        design.name,
+        variant.name(),
+        design.device.name(),
+        exec.name()
+    );
+    let t0 = std::time::Instant::now();
+    let r = run_flow_with_executor(&design, variant, &cfg, exec);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("flow completed in {dt:.2}s");
+    println!("  fmax        : {} MHz", fmt_mhz(r.fmax_mhz));
+    println!(
+        "  place/route : {}",
+        if r.route.placement_failed {
+            "PLACEMENT FAILED"
+        } else if r.route.routing_failed {
+            "ROUTING FAILED"
+        } else {
+            "ok"
+        }
+    );
+    println!(
+        "  util        : LUT {:.1}% FF {:.1}% BRAM {:.1}% DSP {:.1}% URAM {:.1}%",
+        r.util_pct[0], r.util_pct[1], r.util_pct[2], r.util_pct[3], r.util_pct[4]
+    );
+    println!("  congestion  : {:.3} (max slot)", r.route.max_congestion);
+    if let Some(fp) = &r.floorplan {
+        println!("  floorplan   : cost {} @ util ratio {:.2}", fp.cost, fp.util_ratio);
+    }
+    if let Some(c) = r.cycles {
+        println!("  sim cycles  : {c}");
+    }
+    ExitCode::SUCCESS
+}
+
+fn cmd_bench(args: &[String]) -> ExitCode {
+    if has_flag(args, "--list") {
+        for id in experiments::ALL_EXPERIMENTS {
+            println!("{id}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let Some(id) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("bench requires an experiment id (try `tapa bench --list`)");
+        return ExitCode::FAILURE;
+    };
+    let cfg = load_config(args);
+    match experiments::run_experiment(id, &cfg) {
+        Some(table) => {
+            if has_flag(args, "--csv") {
+                print!("{}", table.to_csv());
+            } else {
+                print!("{}", table.render());
+            }
+            ExitCode::SUCCESS
+        }
+        None => {
+            eprintln!("unknown experiment {id} (try `tapa bench --list`)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_engine_info() -> ExitCode {
+    match tapa::runtime::Engine::find_artifact() {
+        Some(path) => {
+            println!("artifact: {}", path.display());
+            match tapa::runtime::Engine::load(&path) {
+                Ok(e) => {
+                    println!("compiled on platform: {}", e.platform);
+                    ExitCode::SUCCESS
+                }
+                Err(err) => {
+                    eprintln!("failed to load: {err:#}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        None => {
+            eprintln!(
+                "artifact not found — run `make artifacts` (python/compile/aot.py)"
+            );
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! Latency balancing (§5.2): given per-edge inserted latency, add the
+//! minimum width-weighted extra latency so every pair of reconvergent
+//! paths carries equal total latency.
+//!
+//! Formulation (verbatim from the paper): integer `S_i` per vertex =
+//! maximum pipelining latency from `v_i` to the sink; constraints
+//! `S_i ≥ S_j + lat(e_ij)` for each edge `i→j`; balance of an edge is
+//! `S_i − S_j − lat(e_ij)`; minimize `Σ balance·width`. This is an SDC —
+//! totally unimodular, so the LP optimum is integral; we solve it with the
+//! in-crate simplex and round defensively.
+//!
+//! Infeasibility ⇒ a dependency cycle with positive inserted latency; we
+//! detect the cycle(s) and report the vertex pairs to co-locate (§5.2's
+//! floorplan feedback).
+
+use crate::graph::{InstId, TaskGraph};
+use crate::ilp::{solve_lp, Constraint, LpOutcome, Problem};
+
+/// Balancing outcome.
+#[derive(Clone, Debug)]
+pub struct BalanceResult {
+    /// Extra latency per edge (indexed like `g.edges`).
+    pub balance: Vec<u32>,
+    /// The vertex potentials `S_i` (useful for tests/diagnostics).
+    pub potential: Vec<u32>,
+    /// Width-weighted overhead `Σ balance·width`.
+    pub weighted_overhead: u64,
+}
+
+/// Balancing failure.
+#[derive(Debug, thiserror::Error)]
+pub enum BalanceError {
+    /// A dependency cycle carries inserted latency; pairs listed should be
+    /// constrained into the same slot and the floorplan re-run.
+    #[error("dependency cycle with pipelined edge; {} pair(s) to co-locate", .0.len())]
+    DependencyCycle(Vec<(InstId, InstId)>),
+}
+
+/// Solve the latency-balancing SDC.
+pub fn balance_latency(g: &TaskGraph, edge_lat: &[u32]) -> Result<BalanceResult, BalanceError> {
+    assert_eq!(edge_lat.len(), g.num_edges());
+    let n = g.num_insts();
+    if n == 0 || g.num_edges() == 0 {
+        return Ok(BalanceResult {
+            balance: vec![0; g.num_edges()],
+            potential: vec![0; n],
+            weighted_overhead: 0,
+        });
+    }
+
+    // Infeasibility pre-check via cycle detection: any directed cycle that
+    // contains an edge with lat > 0 is infeasible. (With all-zero latency a
+    // cycle is fine — S equal around the cycle.)
+    if let Some(pairs) = positive_cycles(g, edge_lat) {
+        return Err(BalanceError::DependencyCycle(pairs));
+    }
+
+    // LP: vars S_0..S_{n-1} ≥ 0.
+    // minimize Σ_e w_e (S_i − S_j − lat_e)  →  c_i += w, c_j −= w.
+    let mut p = Problem::new(n);
+    for (k, e) in g.edges.iter().enumerate() {
+        let (i, j) = (e.producer.0, e.consumer.0);
+        let w = e.width_bits as f64;
+        p.objective[i] += w;
+        p.objective[j] -= w;
+        p.add(Constraint::ge(
+            vec![(i, 1.0), (j, -1.0)],
+            edge_lat[k] as f64,
+        ));
+    }
+
+    let (x, _) = match solve_lp(&p) {
+        LpOutcome::Optimal { x, obj } => (x, obj),
+        // Cycle pre-check above makes this unreachable; be defensive.
+        LpOutcome::Infeasible => {
+            return Err(BalanceError::DependencyCycle(
+                positive_cycles(g, edge_lat).unwrap_or_default(),
+            ))
+        }
+        LpOutcome::Unbounded => unreachable!("SDC objective bounded below by 0"),
+    };
+
+    let potential: Vec<u32> = x.iter().map(|v| v.round().max(0.0) as u32).collect();
+    let mut balance = vec![0u32; g.num_edges()];
+    let mut overhead = 0u64;
+    for (k, e) in g.edges.iter().enumerate() {
+        let (i, j) = (e.producer.0, e.consumer.0);
+        let b = potential[i] as i64 - potential[j] as i64 - edge_lat[k] as i64;
+        debug_assert!(b >= 0, "SDC solution violates edge {k}");
+        balance[k] = b.max(0) as u32;
+        overhead += balance[k] as u64 * e.width_bits as u64;
+    }
+    Ok(BalanceResult { balance, potential, weighted_overhead: overhead })
+}
+
+/// Find directed cycles that contain at least one edge with positive
+/// latency; returns consecutive vertex pairs along each cycle (to be
+/// same-slot constrained), or `None` when no such cycle exists.
+fn positive_cycles(g: &TaskGraph, edge_lat: &[u32]) -> Option<Vec<(InstId, InstId)>> {
+    let comps = crate::graph::validate::sccs(g);
+    let mut pairs = Vec::new();
+    for comp in comps {
+        if comp.len() < 2 {
+            continue;
+        }
+        let members: std::collections::HashSet<usize> =
+            comp.iter().map(|i| i.0).collect();
+        // Any positive-latency edge fully inside this SCC dooms it.
+        let has_positive = g.edges.iter().enumerate().any(|(k, e)| {
+            edge_lat[k] > 0
+                && members.contains(&e.producer.0)
+                && members.contains(&e.consumer.0)
+        });
+        if has_positive {
+            // Co-locate along the component's internal edges.
+            for e in &g.edges {
+                if members.contains(&e.producer.0) && members.contains(&e.consumer.0) {
+                    pairs.push((e.producer, e.consumer));
+                }
+            }
+        }
+    }
+    if pairs.is_empty() {
+        None
+    } else {
+        Some(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+
+    /// Build the Fig. 9 example: v1→v2, v1→v3, v1→v4 (width 2), v1→…
+    /// Here a reduced version capturing the paper's worked example:
+    /// e13, e37, e27 pipelined with 1 unit each; e14 has width 2.
+    fn fig9() -> (crate::graph::TaskGraph, Vec<u32>) {
+        let mut b = TaskGraphBuilder::new("fig9");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let v1 = b.invoke(p, "v1");
+        let v2 = b.invoke(p, "v2");
+        let v3 = b.invoke(p, "v3");
+        let v4 = b.invoke(p, "v4");
+        let v5 = b.invoke(p, "v5");
+        let v6 = b.invoke(p, "v6");
+        let v7 = b.invoke(p, "v7");
+        // Edges in declaration order:
+        // 0:e12  1:e13  2:e14(w2)  3:e15  4:e16  5:e27  6:e37  7:e47
+        // 8:e57  9:e67
+        b.stream("e12", 1, 2, v1, v2);
+        b.stream("e13", 1, 2, v1, v3);
+        b.stream("e14", 2, 2, v1, v4);
+        b.stream("e15", 1, 2, v1, v5);
+        b.stream("e16", 1, 2, v1, v6);
+        b.stream("e27", 1, 2, v2, v7);
+        b.stream("e37", 1, 2, v3, v7);
+        b.stream("e47", 1, 2, v4, v7);
+        b.stream("e57", 1, 2, v5, v7);
+        b.stream("e67", 1, 2, v6, v7);
+        let g = b.build().unwrap();
+        // e13, e37, e27 carry 1 unit of inserted latency (paper caption).
+        let mut lat = vec![0u32; g.num_edges()];
+        lat[1] = 1; // e13
+        lat[6] = 1; // e37
+        lat[5] = 1; // e27
+        (g, lat)
+    }
+
+    #[test]
+    fn fig9_optimal_balance() {
+        // Paper: "the optimal solution is adding 2 units of latency to each
+        // of e47, e57, e67 and 1 unit of latency to e12."
+        let (g, lat) = fig9();
+        let res = balance_latency(&g, &lat).unwrap();
+        let idx = |name: &str| g.edges.iter().position(|e| e.name == name).unwrap();
+        // The paper's stated optimum puts 2 units on e47/e57/e67 and 1 on
+        // e12; ties exist on the width-1 two-edge paths (the unit can sit
+        // on either edge), so we assert the forced decisions plus per-path
+        // sums and the (unique) optimal overhead.
+        assert_eq!(res.balance[idx("e12")] + res.balance[idx("e27")], 1);
+        // e14 has width 2 > e47's width 1, so balance must sit on e47:
+        assert_eq!(res.balance[idx("e47")], 2);
+        assert_eq!(res.balance[idx("e14")], 0);
+        assert_eq!(res.balance[idx("e15")] + res.balance[idx("e57")], 2);
+        assert_eq!(res.balance[idx("e16")] + res.balance[idx("e67")], 2);
+        // Total weighted overhead: 1×1 + 2×1 + 2×1 + 2×1 = 7 (unique).
+        assert_eq!(res.weighted_overhead, 7);
+    }
+
+    #[test]
+    fn all_paths_balanced_property() {
+        let (g, lat) = fig9();
+        let res = balance_latency(&g, &lat).unwrap();
+        // Every reconvergent path v1→*→v7 has the same total latency.
+        let idx = |name: &str| g.edges.iter().position(|e| e.name == name).unwrap();
+        let total = |a: &str, b: &str| {
+            lat[idx(a)] + res.balance[idx(a)] + lat[idx(b)] + res.balance[idx(b)]
+        };
+        let t12 = total("e12", "e27");
+        assert_eq!(t12, total("e13", "e37"));
+        assert_eq!(t12, total("e14", "e47"));
+        assert_eq!(t12, total("e15", "e57"));
+        assert_eq!(t12, total("e16", "e67"));
+    }
+
+    #[test]
+    fn zero_latency_needs_no_balance() {
+        let (g, _) = fig9();
+        let res = balance_latency(&g, &vec![0; g.num_edges()]).unwrap();
+        assert!(res.balance.iter().all(|&b| b == 0));
+        assert_eq!(res.weighted_overhead, 0);
+    }
+
+    #[test]
+    fn chain_needs_no_balance() {
+        let mut b = TaskGraphBuilder::new("chain");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let ids = b.invoke_n(p, "k", 5);
+        for i in 0..4 {
+            b.stream(&format!("s{i}"), 32, 2, ids[i], ids[i + 1]);
+        }
+        let g = b.build().unwrap();
+        let lat = vec![3, 0, 5, 1];
+        let res = balance_latency(&g, &lat).unwrap();
+        // No reconvergent paths → no balancing required.
+        assert!(res.balance.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn cycle_with_latency_is_infeasible_with_pairs() {
+        let mut b = TaskGraphBuilder::new("cyc");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let ids = b.invoke_n(p, "k", 3);
+        b.stream("a", 32, 2, ids[0], ids[1]);
+        b.stream("b", 32, 2, ids[1], ids[2]);
+        b.stream("c", 32, 2, ids[2], ids[0]);
+        let g = b.build().unwrap();
+        let err = balance_latency(&g, &[1, 0, 0]).unwrap_err();
+        match err {
+            BalanceError::DependencyCycle(pairs) => {
+                assert_eq!(pairs.len(), 3, "all three cycle edges reported");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_without_latency_is_fine() {
+        let mut b = TaskGraphBuilder::new("cyc0");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let ids = b.invoke_n(p, "k", 3);
+        b.stream("a", 32, 2, ids[0], ids[1]);
+        b.stream("b", 32, 2, ids[1], ids[2]);
+        b.stream("c", 32, 2, ids[2], ids[0]);
+        let g = b.build().unwrap();
+        let res = balance_latency(&g, &[0, 0, 0]).unwrap();
+        assert!(res.balance.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn wider_edges_avoided_by_balancer() {
+        // Diamond where one side is wide: balance must go on the narrow
+        // parallel edge.
+        let mut b = TaskGraphBuilder::new("wide");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let s = b.invoke(p, "s");
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "c");
+        let t = b.invoke(p, "t");
+        b.stream("wide_in", 512, 2, s, a); // 0
+        b.stream("wide_out", 512, 2, a, t); // 1
+        b.stream("narrow_in", 8, 2, s, c); // 2
+        b.stream("narrow_out", 8, 2, c, t); // 3
+        let g = b.build().unwrap();
+        // Wide path gets 3 units of latency.
+        let res = balance_latency(&g, &[2, 1, 0, 0]).unwrap();
+        assert_eq!(res.balance[0], 0);
+        assert_eq!(res.balance[1], 0);
+        assert_eq!(res.balance[2] + res.balance[3], 3);
+        assert_eq!(res.weighted_overhead, 3 * 8);
+    }
+
+    #[test]
+    fn property_random_dags_always_balance() {
+        use crate::util::prop::{forall, Config};
+        forall(Config::default().cases(40), |rng| {
+            let n = rng.gen_range_in(3, 12);
+            let mut b = TaskGraphBuilder::new("rand");
+            let p = b.proto("K", ComputeSpec::passthrough(4));
+            let ids = b.invoke_n(p, "v", n);
+            let mut lat = Vec::new();
+            let mut k = 0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    if rng.gen_bool(0.4) {
+                        b.stream(&format!("e{k}"), 1 << rng.gen_range(7), 2, ids[i], ids[j]);
+                        lat.push(rng.gen_range(4) as u32);
+                        k += 1;
+                    }
+                }
+            }
+            if k == 0 {
+                return;
+            }
+            let g = b.build_unchecked();
+            let res = balance_latency(&g, &lat).unwrap();
+            // Invariant: for every edge, S_i − S_j = lat + balance ≥ lat.
+            for (e, edge) in g.edges.iter().enumerate() {
+                let si = res.potential[edge.producer.0] as i64;
+                let sj = res.potential[edge.consumer.0] as i64;
+                assert_eq!(si - sj, (lat[e] + res.balance[e]) as i64);
+            }
+        });
+    }
+}

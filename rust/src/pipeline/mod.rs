@@ -1,0 +1,302 @@
+//! Floorplan-aware pipelining (§5).
+//!
+//! Every slot-boundary crossing gets pipeline registers (default two
+//! levels per crossing, §7.1); then *latency balancing* (§5.2) adds
+//! compensating latency on reconvergent paths so the overall throughput is
+//! unaffected, minimizing the width-weighted register overhead. The
+//! balancing problem is a system of difference constraints (SDC) solved as
+//! an LP whose relaxation is integral.
+
+pub mod balance;
+
+pub use balance::{balance_latency, BalanceError, BalanceResult};
+
+use crate::device::{AreaVector, Device};
+use crate::floorplan::Floorplan;
+use crate::graph::{EdgeKind, TaskGraph};
+use crate::hls::fifo::pipeline_stage_area;
+
+/// The pipelining decision for one design.
+#[derive(Clone, Debug)]
+pub struct PipelinePlan {
+    /// Pipeline latency inserted on each edge by floorplan-aware
+    /// pipelining (stages per crossing × crossings), indexed by edge.
+    pub edge_lat: Vec<u32>,
+    /// Additional balancing latency from §5.2, indexed by edge.
+    pub edge_balance: Vec<u32>,
+    /// Register area added by pipelining + balancing.
+    pub area_overhead: AreaVector,
+    /// Instance pairs fed back to the floorplanner because a dependency
+    /// cycle made balancing infeasible (§5.2 "constrain those vertices
+    /// into the same region").
+    pub cycle_feedback: Vec<(crate::graph::InstId, crate::graph::InstId)>,
+}
+
+impl PipelinePlan {
+    /// Total inserted latency (pipelining + balancing) of an edge.
+    pub fn total_lat(&self, e: usize) -> u32 {
+        self.edge_lat[e] + self.edge_balance[e]
+    }
+
+    /// FIFO depth after pipelining: the §5.3 almost-full scheme requires
+    /// the FIFO to absorb `2 × lat` in-flight tokens on top of its
+    /// original capacity to avoid throughput loss.
+    pub fn effective_depth(&self, g: &TaskGraph, e: usize) -> u32 {
+        g.edges[e].depth + 2 * self.total_lat(e)
+    }
+}
+
+/// Compute per-edge pipeline latency from the floorplan, then balance.
+///
+/// Shared-memory edges (genome benchmark) are never pipelined — their
+/// endpoints are constrained to the same slot instead; if the floorplan
+/// separated them, they appear in `cycle_feedback`.
+pub fn pipeline_edges(
+    g: &TaskGraph,
+    device: &Device,
+    fp: &Floorplan,
+    stages_per_crossing: u32,
+) -> PipelinePlan {
+    let mut edge_lat = vec![0u32; g.num_edges()];
+    let mut feedback: Vec<(crate::graph::InstId, crate::graph::InstId)> = Vec::new();
+    for (i, e) in g.edges.iter().enumerate() {
+        let crossings = fp.crossings(device, e.producer, e.consumer) as u32;
+        match e.kind {
+            EdgeKind::Fifo => edge_lat[i] = crossings * stages_per_crossing,
+            EdgeKind::SharedMem => {
+                if crossings > 0 {
+                    feedback.push((e.producer, e.consumer));
+                }
+            }
+        }
+    }
+
+    match balance_latency(g, &edge_lat) {
+        Ok(res) => {
+            let mut area = AreaVector::ZERO;
+            for (i, e) in g.edges.iter().enumerate() {
+                area += pipeline_stage_area(e.width_bits, edge_lat[i] + res.balance[i]);
+            }
+            PipelinePlan {
+                edge_lat,
+                edge_balance: res.balance,
+                area_overhead: area,
+                cycle_feedback: feedback,
+            }
+        }
+        Err(BalanceError::DependencyCycle(pairs)) => {
+            // Report the cycle pairs; caller re-floorplans with same-slot
+            // constraints and calls us again.
+            feedback.extend(pairs);
+            PipelinePlan {
+                edge_balance: vec![0; edge_lat.len()],
+                edge_lat,
+                area_overhead: AreaVector::ZERO,
+                cycle_feedback: feedback,
+            }
+        }
+    }
+}
+
+/// Full §5 loop: pipeline; on dependency-cycle feedback, constrain the
+/// offending pairs into one slot, re-floorplan, and retry (at most
+/// `max_rounds` rounds).
+///
+/// If co-locating a whole cycle is infeasible (e.g. PageRank: the control
+/// SCC spans eight fat processing units that no single slot can hold),
+/// the constraints are rolled back and the cycle-internal edges are left
+/// *unpipelined* instead — throughput is preserved, and the resulting
+/// unregistered cross-slot wires show up in timing (which is exactly why
+/// PageRank's optimized frequency, 210 MHz, trails the other benchmarks).
+pub fn pipeline_with_feedback(
+    g: &mut TaskGraph,
+    device: &Device,
+    estimates: &[crate::hls::TaskEstimate],
+    cfg: &crate::floorplan::FloorplanConfig,
+    max_rounds: usize,
+) -> Result<(Floorplan, PipelinePlan), crate::floorplan::FloorplanError> {
+    let baseline_constraints = g.same_slot.len();
+    let mut fp = crate::floorplan::floorplan(g, device, estimates, cfg)?;
+    for _ in 0..max_rounds {
+        let plan = pipeline_edges(g, device, &fp, cfg.stages_per_crossing);
+        if plan.cycle_feedback.is_empty() {
+            return Ok((fp, plan));
+        }
+        for &(a, b) in &plan.cycle_feedback {
+            g.same_slot.push((a, b));
+        }
+        match crate::floorplan::floorplan(g, device, estimates, cfg) {
+            Ok(new_fp) => fp = new_fp,
+            Err(_) => {
+                // Roll back: co-location impossible; keep the original
+                // floorplan and zero the latency of cycle-internal edges.
+                g.same_slot.truncate(baseline_constraints);
+                fp = crate::floorplan::floorplan(g, device, estimates, cfg)?;
+                let plan = pipeline_edges_zeroing_cycles(g, device, &fp, cfg.stages_per_crossing);
+                return Ok((fp, plan));
+            }
+        }
+    }
+    // Final attempt; any residual cycles get zero-latency edges.
+    let plan = pipeline_edges_zeroing_cycles(g, device, &fp, cfg.stages_per_crossing);
+    Ok((fp, plan))
+}
+
+/// Pipeline all cross-slot edges except those inside dependency cycles,
+/// which stay at zero latency (unregistered) so balancing is feasible.
+pub fn pipeline_edges_zeroing_cycles(
+    g: &TaskGraph,
+    device: &Device,
+    fp: &Floorplan,
+    stages_per_crossing: u32,
+) -> PipelinePlan {
+    let cyclic: std::collections::HashSet<usize> = crate::graph::validate::sccs(g)
+        .into_iter()
+        .filter(|c| c.len() > 1)
+        .flatten()
+        .map(|i| i.0)
+        .collect();
+    let mut edge_lat = vec![0u32; g.num_edges()];
+    let mut feedback = Vec::new();
+    for (i, e) in g.edges.iter().enumerate() {
+        let crossings = fp.crossings(device, e.producer, e.consumer) as u32;
+        let in_cycle =
+            cyclic.contains(&e.producer.0) && cyclic.contains(&e.consumer.0);
+        match e.kind {
+            EdgeKind::Fifo if !in_cycle => {
+                edge_lat[i] = crossings * stages_per_crossing;
+            }
+            EdgeKind::Fifo => {}
+            EdgeKind::SharedMem => {
+                if crossings > 0 {
+                    feedback.push((e.producer, e.consumer));
+                }
+            }
+        }
+    }
+    match balance_latency(g, &edge_lat) {
+        Ok(res) => {
+            let mut area = AreaVector::ZERO;
+            for (i, e) in g.edges.iter().enumerate() {
+                area += pipeline_stage_area(e.width_bits, edge_lat[i] + res.balance[i]);
+            }
+            PipelinePlan {
+                edge_lat,
+                edge_balance: res.balance,
+                area_overhead: area,
+                cycle_feedback: Vec::new(),
+            }
+        }
+        Err(_) => PipelinePlan {
+            edge_balance: vec![0; edge_lat.len()],
+            edge_lat: vec![0; g.num_edges()],
+            area_overhead: AreaVector::ZERO,
+            cycle_feedback: feedback,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::floorplan::{floorplan, FloorplanConfig};
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+
+    /// Fig. 9's diamond: v1 → {v2..v6} → v7 with different widths.
+    fn diamond() -> (TaskGraph, Floorplan, crate::device::Device) {
+        let mut b = TaskGraphBuilder::new("diamond");
+        let p = b.proto("K", ComputeSpec::passthrough(64));
+        let v1 = b.invoke(p, "v1");
+        let v2 = b.invoke(p, "v2");
+        let v3 = b.invoke(p, "v3");
+        let v7 = b.invoke(p, "v7");
+        b.stream("e12", 1, 2, v1, v2);
+        b.stream("e13", 1, 2, v1, v3);
+        b.stream("e27", 1, 2, v2, v7);
+        b.stream("e37", 1, 2, v3, v7);
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        (g, fp, d)
+    }
+
+    #[test]
+    fn pipelining_adds_latency_only_on_crossings() {
+        let (g, fp, d) = diamond();
+        let plan = pipeline_edges(&g, &d, &fp, 2);
+        for (i, e) in g.edges.iter().enumerate() {
+            let crossings = fp.crossings(&d, e.producer, e.consumer) as u32;
+            assert_eq!(plan.edge_lat[i], 2 * crossings);
+        }
+    }
+
+    #[test]
+    fn balanced_paths_have_equal_latency() {
+        let (g, fp, d) = diamond();
+        let plan = pipeline_edges(&g, &d, &fp, 2);
+        assert!(plan.cycle_feedback.is_empty());
+        // Path v1→v2→v7 and v1→v3→v7 must carry equal total latency.
+        let lat = |name: &str| {
+            let i = g.edges.iter().position(|e| e.name == name).unwrap();
+            plan.total_lat(i)
+        };
+        assert_eq!(lat("e12") + lat("e27"), lat("e13") + lat("e37"));
+    }
+
+    #[test]
+    fn effective_depth_grows_with_latency() {
+        let (g, fp, d) = diamond();
+        let plan = pipeline_edges(&g, &d, &fp, 2);
+        for i in 0..g.num_edges() {
+            assert_eq!(
+                plan.effective_depth(&g, i),
+                g.edges[i].depth + 2 * plan.total_lat(i)
+            );
+        }
+    }
+
+    #[test]
+    fn shared_mem_edges_generate_feedback_not_pipelining() {
+        let mut b = TaskGraphBuilder::new("shared");
+        let p = b.proto(
+            "Fat",
+            ComputeSpec {
+                mac_ops: 200,
+                alu_ops: 400,
+                bram_bytes: 256 * 1024,
+                uram_bytes: 0,
+                trip_count: 64,
+                ii: 1,
+                pipeline_depth: 4,
+            },
+        );
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.shared_mem("m", 512, 1024, a, c);
+        let mut g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        // Force them apart with a tiny per-slot budget…
+        let cfg = FloorplanConfig { max_util: 0.75, ..Default::default() };
+        let (fp, plan) =
+            pipeline_with_feedback(&mut g, &d, &est, &cfg, 3).unwrap();
+        // After feedback they must share a slot and the edge is unpipelined.
+        assert_eq!(fp.slot_of(crate::graph::InstId(0)), fp.slot_of(crate::graph::InstId(1)));
+        assert_eq!(plan.edge_lat[0], 0);
+        assert!(plan.cycle_feedback.is_empty());
+    }
+
+    #[test]
+    fn area_overhead_counts_registered_bits() {
+        let (g, fp, d) = diamond();
+        let plan = pipeline_edges(&g, &d, &fp, 2);
+        let total_stages: u32 =
+            (0..g.num_edges()).map(|i| plan.total_lat(i)).sum();
+        if total_stages > 0 {
+            assert!(plan.area_overhead.ff > 0);
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Floorplan-guided analytical placement.
+//!
+//! Inside each floorplan slot, task positions are refined by iterating a
+//! quadratic-wirelength gradient step with an anchor pull toward the slot
+//! center. The step function is the repository's L2/L1 artifact: a JAX
+//! graph (gradient of the placement potential) fused with the Pallas RUDY
+//! congestion kernel, AOT-lowered to HLO and executed from this hot loop
+//! through PJRT. [`RustStep`] is the bit-faithful native fallback and
+//! correctness oracle.
+//!
+//! Array shapes are fixed for AOT compilation and shared with
+//! `python/compile/model.py` — keep in sync:
+//! `MAX_V` modules, `MAX_E` nets, `GRID`×`GRID` congestion cells.
+
+use super::{PlaceStrategy, Placement};
+use crate::device::Device;
+use crate::floorplan::Floorplan;
+use crate::graph::TaskGraph;
+
+/// Maximum modules in the AOT artifact (CNN 13×16 has 493).
+pub const MAX_V: usize = 512;
+/// Maximum nets in the AOT artifact (CNN 13×16 has 925).
+pub const MAX_E: usize = 1024;
+/// Congestion-map resolution (cells per axis over the whole canvas).
+pub const GRID: usize = 32;
+
+/// Analytical placement knobs (mirrored in `python/compile/model.py`).
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyticalParams {
+    /// Gradient-descent step size.
+    pub lr: f32,
+    /// Anchor (slot-center) pull weight.
+    pub alpha: f32,
+    /// Placement iterations.
+    pub iters: usize,
+}
+
+impl Default for AnalyticalParams {
+    fn default() -> Self {
+        AnalyticalParams { lr: 0.01, alpha: 0.6, iters: 16 }
+    }
+}
+
+/// Dense, padded arrays fed to one placement step (fixed AOT shapes).
+#[derive(Clone, Debug)]
+pub struct PlacerArrays {
+    /// Positions, interleaved `[x0, y0, x1, y1, …]`, length `2·MAX_V`.
+    pub pos: Vec<f32>,
+    /// Net endpoints `[a0, b0, a1, b1, …]` as f32 indices, length `2·MAX_E`
+    /// (f32 because the HLO gather indices are generated from iota).
+    pub pairs: Vec<i32>,
+    /// Net weights (bit widths), length `MAX_E`; 0 beyond `num_e`.
+    pub weight: Vec<f32>,
+    /// Anchor positions, interleaved, length `2·MAX_V`.
+    pub anchor: Vec<f32>,
+    /// Live module / net counts.
+    pub num_v: usize,
+    pub num_e: usize,
+    /// Canvas extent (cols, rows) for congestion-map normalization.
+    pub canvas: (f32, f32),
+}
+
+/// One placement step's outputs.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// Updated positions (same layout as input).
+    pub pos: Vec<f32>,
+    /// RUDY congestion map, `GRID × GRID`, row-major.
+    pub congestion: Vec<f32>,
+    /// Weighted quadratic wirelength before the step.
+    pub wl: f32,
+}
+
+/// Executes one analytical-placement step. Implemented natively by
+/// [`RustStep`] and by the PJRT artifact in [`crate::runtime`].
+pub trait StepExecutor {
+    fn step(&self, arrays: &PlacerArrays, params: &AnalyticalParams) -> StepOutput;
+    /// Identifier for reports ("rust-ref" / "xla-pjrt").
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference implementation of the step — the same math as
+/// `python/compile/model.py::placer_step` (quadratic wirelength gradient +
+/// anchor pull; RUDY congestion accumulation identical to
+/// `python/compile/kernels/ref.py`).
+pub struct RustStep;
+
+impl StepExecutor for RustStep {
+    fn step(&self, a: &PlacerArrays, p: &AnalyticalParams) -> StepOutput {
+        let mut grad = vec![0.0f32; 2 * MAX_V];
+        let mut wl = 0.0f32;
+        for e in 0..a.num_e {
+            let w = a.weight[e];
+            if w == 0.0 {
+                continue;
+            }
+            let i = a.pairs[2 * e] as usize;
+            let j = a.pairs[2 * e + 1] as usize;
+            let dx = a.pos[2 * i] - a.pos[2 * j];
+            let dy = a.pos[2 * i + 1] - a.pos[2 * j + 1];
+            wl += w * (dx * dx + dy * dy);
+            grad[2 * i] += 2.0 * w * dx;
+            grad[2 * i + 1] += 2.0 * w * dy;
+            grad[2 * j] -= 2.0 * w * dx;
+            grad[2 * j + 1] -= 2.0 * w * dy;
+        }
+        let mut pos = a.pos.clone();
+        for v in 0..a.num_v {
+            for d in 0..2 {
+                let k = 2 * v + d;
+                let g = grad[k] + 2.0 * p.alpha * (a.pos[k] - a.anchor[k]);
+                pos[k] = a.pos[k] - p.lr * g;
+            }
+        }
+        let congestion = rudy_map(&pos, a);
+        StepOutput { pos, congestion, wl }
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-ref"
+    }
+}
+
+/// RUDY congestion accumulation (reference math, mirrored by the Pallas
+/// kernel): every net spreads `weight` uniformly over its bounding box
+/// (inflated by half a cell so zero-area nets still register demand).
+pub fn rudy_map(pos: &[f32], a: &PlacerArrays) -> Vec<f32> {
+    let (cw, ch) = a.canvas;
+    let cell_w = cw / GRID as f32;
+    let cell_h = ch / GRID as f32;
+    let mut map = vec![0.0f32; GRID * GRID];
+    for e in 0..a.num_e {
+        let w = a.weight[e];
+        if w == 0.0 {
+            continue;
+        }
+        let i = a.pairs[2 * e] as usize;
+        let j = a.pairs[2 * e + 1] as usize;
+        let (x0, x1) = minmax(pos[2 * i], pos[2 * j]);
+        let (y0, y1) = minmax(pos[2 * i + 1], pos[2 * j + 1]);
+        // Inflate by half a cell on each side.
+        let x0 = x0 - 0.5 * cell_w;
+        let x1 = x1 + 0.5 * cell_w;
+        let y0 = y0 - 0.5 * cell_h;
+        let y1 = y1 + 0.5 * cell_h;
+        let area = (x1 - x0) * (y1 - y0);
+        let dens = w / area.max(1e-6);
+        let cell_area = cell_w * cell_h;
+        for gy in 0..GRID {
+            let cy0 = gy as f32 * cell_h;
+            let cy1 = cy0 + cell_h;
+            let oy = overlap(y0, y1, cy0, cy1);
+            if oy <= 0.0 {
+                continue;
+            }
+            for gx in 0..GRID {
+                let cx0 = gx as f32 * cell_w;
+                let cx1 = cx0 + cell_w;
+                let ox = overlap(x0, x1, cx0, cx1);
+                if ox > 0.0 {
+                    // Map values are demand *densities* (weight per unit
+                    // canvas area): cell integral × 1/cell_area.
+                    map[gy * GRID + gx] += dens * ox * oy / cell_area;
+                }
+            }
+        }
+    }
+    map
+}
+
+fn minmax(a: f32, b: f32) -> (f32, f32) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+fn overlap(a0: f32, a1: f32, b0: f32, b1: f32) -> f32 {
+    (a1.min(b1) - a0.max(b0)).max(0.0)
+}
+
+/// Build the padded arrays for a floorplanned design.
+pub fn build_arrays(
+    g: &TaskGraph,
+    device: &Device,
+    fp: &Floorplan,
+) -> PlacerArrays {
+    assert!(g.num_insts() <= MAX_V, "design exceeds MAX_V={MAX_V}");
+    assert!(g.num_edges() <= MAX_E, "design exceeds MAX_E={MAX_E}");
+    let init = super::baseline::spread_positions(device, &fp.assignment);
+    let mut pos = vec![0.0f32; 2 * MAX_V];
+    let mut anchor = vec![0.0f32; 2 * MAX_V];
+    for v in 0..g.num_insts() {
+        pos[2 * v] = init[v].0;
+        pos[2 * v + 1] = init[v].1;
+        let (row, col) = device.coords(fp.assignment[v]);
+        anchor[2 * v] = col as f32 + 0.5;
+        anchor[2 * v + 1] = row as f32 + 0.5;
+    }
+    let mut pairs = vec![0i32; 2 * MAX_E];
+    let mut weight = vec![0.0f32; MAX_E];
+    for (e, edge) in g.edges.iter().enumerate() {
+        pairs[2 * e] = edge.producer.0 as i32;
+        pairs[2 * e + 1] = edge.consumer.0 as i32;
+        // Normalized weights keep the gradient step stable (lr is tuned
+        // for w ≈ O(1); raw bit widths up to 512 would overshoot).
+        weight[e] = edge.width_bits as f32 / 128.0;
+    }
+    PlacerArrays {
+        pos,
+        pairs,
+        weight,
+        anchor,
+        num_v: g.num_insts(),
+        num_e: g.num_edges(),
+        canvas: (device.cols as f32, device.rows as f32),
+    }
+}
+
+/// Run floorplan-guided analytical placement: iterate the step executor,
+/// clamping every instance into its floorplan slot after each step (the
+/// hard constraint the tcl file would impose on Vivado).
+pub fn place_floorplan_guided(
+    g: &TaskGraph,
+    device: &Device,
+    fp: &Floorplan,
+    params: &AnalyticalParams,
+    exec: &dyn StepExecutor,
+) -> (Placement, Vec<f32>) {
+    let mut arrays = build_arrays(g, device, fp);
+    let mut congestion = vec![0.0f32; GRID * GRID];
+    let mut last_wl = f32::INFINITY;
+    for _ in 0..params.iters {
+        let out = exec.step(&arrays, params);
+        arrays.pos = out.pos;
+        congestion = out.congestion;
+        // Clamp into floorplan slots (margin keeps logic off boundaries).
+        for v in 0..arrays.num_v {
+            let (row, col) = device.coords(fp.assignment[v]);
+            let m = 0.02f32;
+            arrays.pos[2 * v] =
+                arrays.pos[2 * v].clamp(col as f32 + m, (col + 1) as f32 - m);
+            arrays.pos[2 * v + 1] =
+                arrays.pos[2 * v + 1].clamp(row as f32 + m, (row + 1) as f32 - m);
+        }
+        // Early exit on convergence.
+        if (last_wl - out.wl).abs() <= 1e-3 * last_wl.abs() {
+            break;
+        }
+        last_wl = out.wl;
+    }
+    let xy: Vec<(f32, f32)> = (0..g.num_insts())
+        .map(|v| (arrays.pos[2 * v], arrays.pos[2 * v + 1]))
+        .collect();
+    (
+        Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: fp.assignment.clone(),
+            xy,
+        },
+        congestion,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::floorplan::{floorplan, FloorplanConfig};
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+
+    fn setup(n: usize) -> (TaskGraph, Device, Floorplan) {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("K", ComputeSpec::passthrough(64));
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 64, 2, ids[i], ids[i + 1]);
+        }
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        (g, d, fp)
+    }
+
+    #[test]
+    fn step_reduces_wirelength() {
+        let (g, d, fp) = setup(12);
+        let arrays = build_arrays(&g, &d, &fp);
+        let params = AnalyticalParams::default();
+        let out1 = RustStep.step(&arrays, &params);
+        let mut arrays2 = arrays.clone();
+        arrays2.pos = out1.pos.clone();
+        let out2 = RustStep.step(&arrays2, &params);
+        assert!(out2.wl <= out1.wl, "wl must not increase: {} → {}", out1.wl, out2.wl);
+    }
+
+    #[test]
+    fn placement_stays_in_slots() {
+        let (g, d, fp) = setup(12);
+        let (p, _) = place_floorplan_guided(
+            &g, &d, &fp, &AnalyticalParams::default(), &RustStep,
+        );
+        for v in 0..g.num_insts() {
+            let (row, col) = d.coords(fp.assignment[v]);
+            let (x, y) = p.xy[v];
+            assert!(x >= col as f32 && x <= (col + 1) as f32, "x={x} col={col}");
+            assert!(y >= row as f32 && y <= (row + 1) as f32, "y={y} row={row}");
+        }
+    }
+
+    #[test]
+    fn congestion_mass_conserved() {
+        // Total RUDY mass equals Σ weights (each net spreads its weight).
+        let (g, d, fp) = setup(8);
+        let arrays = build_arrays(&g, &d, &fp);
+        let map = rudy_map(&arrays.pos, &arrays);
+        let (cw, ch) = arrays.canvas;
+        let cell_area = (cw / GRID as f32) * (ch / GRID as f32);
+        let mass: f32 = map.iter().map(|&m| m * cell_area).sum();
+        let total_w: f32 = arrays.weight.iter().sum();
+        // Boxes clipped at canvas edges lose some mass; allow 20%.
+        assert!(
+            mass >= 0.8 * total_w && mass <= 1.01 * total_w,
+            "mass={mass} total={total_w}"
+        );
+    }
+
+    #[test]
+    fn padded_entries_are_inert() {
+        let (g, d, fp) = setup(5);
+        let mut arrays = build_arrays(&g, &d, &fp);
+        // Poison padding positions; results must not change.
+        let base = RustStep.step(&arrays, &AnalyticalParams::default());
+        for v in g.num_insts()..MAX_V {
+            arrays.pos[2 * v] = 777.0;
+            arrays.pos[2 * v + 1] = -555.0;
+        }
+        let poisoned = RustStep.step(&arrays, &AnalyticalParams::default());
+        assert_eq!(base.wl, poisoned.wl);
+        assert_eq!(base.congestion, poisoned.congestion);
+        for v in 0..g.num_insts() {
+            assert_eq!(base.pos[2 * v], poisoned.pos[2 * v]);
+        }
+    }
+
+    #[test]
+    fn guided_placement_beats_initial_hpwl() {
+        let (g, d, fp) = setup(16);
+        let arrays = build_arrays(&g, &d, &fp);
+        let init_xy: Vec<(f32, f32)> = (0..g.num_insts())
+            .map(|v| (arrays.pos[2 * v], arrays.pos[2 * v + 1]))
+            .collect();
+        let init = Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: fp.assignment.clone(),
+            xy: init_xy,
+        };
+        let (refined, _) = place_floorplan_guided(
+            &g, &d, &fp, &AnalyticalParams::default(), &RustStep,
+        );
+        assert!(refined.hpwl(&g) <= init.hpwl(&g) * 1.001);
+    }
+}

@@ -1,0 +1,257 @@
+//! Routing / congestion model — the Vivado-router stand-in.
+//!
+//! The paper's failures come from two mechanisms it describes explicitly:
+//! local congestion (logic packed too densely near IPs/HBM, §1–§2.4) and
+//! oversubscribed die-boundary wiring (limited SLLs). We model both:
+//! per-slot routing demand vs. capacity, and per-boundary crossing bits
+//! vs. SLL capacity, with a deterministic per-design jitter standing in
+//! for P&R noise (the paper's Table 10 shows the same design ±50 MHz
+//! across floorplan candidates — the noise is real and material).
+
+use crate::device::{Device, SlotId};
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+use crate::place::Placement;
+
+/// Routed-design report.
+#[derive(Clone, Debug)]
+pub struct RouteReport {
+    /// Per-slot routing congestion = demand / capacity.
+    pub slot_congestion: Vec<f64>,
+    /// Per-SLR-boundary utilization = crossing bits / SLL capacity.
+    pub boundary_util: Vec<f64>,
+    /// Worst slot congestion.
+    pub max_congestion: f64,
+    /// Worst boundary utilization.
+    pub max_boundary: f64,
+    /// Placement failed: some slot cannot physically hold its logic.
+    pub placement_failed: bool,
+    /// Routing failed: congestion or boundary overflow beyond limits.
+    pub routing_failed: bool,
+}
+
+impl RouteReport {
+    pub fn failed(&self) -> bool {
+        self.placement_failed || self.routing_failed
+    }
+}
+
+/// Area utilization above which placement itself gives up.
+const PLACE_FAIL_UTIL: f64 = 0.96;
+/// Routing-demand ratio above which the router fails.
+const ROUTE_FAIL_CONG: f64 = 1.0;
+/// Boundary (SLL) utilization above which the router fails.
+const ROUTE_FAIL_BOUNDARY: f64 = 1.0;
+/// Weight of LUT utilization in routing demand (LUT-dense logic is the
+/// main consumer of local routing).
+const CONG_LUT_WEIGHT: f64 = 0.78;
+/// Weight of FF utilization in routing demand.
+const CONG_FF_WEIGHT: f64 = 0.22;
+/// Net-passing demand normalizer: bits traversing a slot, relative to
+/// this fraction of the slot's LUT capacity, add to congestion.
+const NET_BITS_PER_LUT_CAP: f64 = 1.40;
+
+/// Route a placed design.
+pub fn route(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    placement: &Placement,
+) -> RouteReport {
+    let nslots = device.num_slots();
+    let mut area_util = vec![0.0f64; nslots];
+    let mut lut_util = vec![0.0f64; nslots];
+    let mut ff_util = vec![0.0f64; nslots];
+
+    // Per-slot placed area.
+    let mut slot_area = vec![crate::device::AreaVector::ZERO; nslots];
+    for (v, s) in placement.slot.iter().enumerate() {
+        slot_area[s.0] += estimates[v].area;
+    }
+    for s in 0..nslots {
+        let cap = &device.slots[s].capacity;
+        area_util[s] = slot_area[s].max_utilization(cap);
+        lut_util[s] = slot_area[s].lut as f64 / cap.lut.max(1) as f64;
+        ff_util[s] = slot_area[s].ff as f64 / cap.ff.max(1) as f64;
+    }
+
+    // Net demand: each net loads every slot its L-shaped route spans, and
+    // boundary crossings load the SLLs.
+    let mut net_bits = vec![0u64; nslots];
+    let mut boundary_bits = vec![0u64; device.rows.saturating_sub(1)];
+    for e in &g.edges {
+        let (pr, pc) = device.coords(placement.slot[e.producer.0]);
+        let (cr, cc) = device.coords(placement.slot[e.consumer.0]);
+        let w = e.width_bits as u64;
+        let (r0, r1) = (pr.min(cr), pr.max(cr));
+        let (c0, c1) = (pc.min(cc), pc.max(cc));
+        // L-route: traverse rows in the producer column, then columns in
+        // the consumer row.
+        for r in r0..=r1 {
+            net_bits[device.slot_id(r, pc).0] += w;
+        }
+        for c in c0..=c1 {
+            net_bits[device.slot_id(cr, c).0] += w;
+        }
+        for b in r0..r1 {
+            boundary_bits[b] += w;
+        }
+    }
+
+    // Unconstrained packing interleaves unrelated nets; floorplan
+    // constraints give the router breathing room (Figs. 3–4). Baseline
+    // placements see a routing-pressure surcharge on every slot.
+    let pressure = match placement.strategy {
+        crate::place::PlaceStrategy::BaselinePack => 1.18,
+        crate::place::PlaceStrategy::FloorplanGuided => 1.0,
+    };
+    let slot_congestion: Vec<f64> = (0..nslots)
+        .map(|s| {
+            let net_term = net_bits[s] as f64
+                / (device.slots[s].capacity.lut as f64 * NET_BITS_PER_LUT_CAP).max(1.0);
+            (CONG_LUT_WEIGHT * lut_util[s] + CONG_FF_WEIGHT * ff_util[s] + net_term)
+                * pressure
+                + device.ip_interference
+        })
+        .collect();
+    let boundary_util: Vec<f64> = boundary_bits
+        .iter()
+        .map(|&b| b as f64 / device.sll_capacity_bits.max(1) as f64)
+        .collect();
+
+    // Deterministic P&R jitter per (design, strategy): ±6%.
+    let jitter = route_jitter(&g.name, placement.strategy as u8);
+
+    let max_congestion =
+        slot_congestion.iter().cloned().fold(0.0, f64::max) * jitter;
+    let max_boundary = boundary_util.iter().cloned().fold(0.0, f64::max) * jitter;
+    let max_area = area_util.iter().cloned().fold(0.0, f64::max);
+
+    RouteReport {
+        slot_congestion,
+        boundary_util,
+        max_congestion,
+        max_boundary,
+        placement_failed: max_area > PLACE_FAIL_UTIL,
+        routing_failed: max_congestion > ROUTE_FAIL_CONG || max_boundary > ROUTE_FAIL_BOUNDARY,
+    }
+}
+
+/// Deterministic pseudo-random factor in [0.94, 1.06] from a design name —
+/// models run-to-run P&R variation without nondeterminism.
+pub fn route_jitter(name: &str, salt: u8) -> f64 {
+    let mut h: u64 = 0xcbf29ce484222325 ^ salt as u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+    0.94 + 0.12 * unit
+}
+
+/// Convenience: which slots hold any logic (diagnostics / Fig. 3-style
+/// spread reports).
+pub fn occupied_slots(placement: &Placement, device: &Device) -> Vec<SlotId> {
+    let mut out: Vec<SlotId> = placement.slot.clone();
+    out.sort();
+    out.dedup();
+    let _ = device;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+    use crate::place::{place_baseline, PlaceStrategy, Placement};
+
+    fn fat_chain(n: usize, fat_mult: u32) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new(format!("fat{n}x{fat_mult}").as_str());
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 100 * fat_mult,
+                alu_ops: 600 * fat_mult,
+                bram_bytes: 64 * 1024 * fat_mult as u64,
+                uram_bytes: 0,
+                trip_count: 64,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 256, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn packed_fat_design_has_higher_congestion_than_spread() {
+        let g = fat_chain(16, 4);
+        let d = u250();
+        let est = estimate_all(&g);
+        let packed = place_baseline(&g, &d, &est);
+        let rep_packed = route(&g, &d, &est, &packed);
+
+        // Spread placement: round-robin across slots.
+        let spread_slots: Vec<_> =
+            (0..16).map(|v| crate::device::SlotId(v % d.num_slots())).collect();
+        let xy = crate::place::baseline::spread_positions(&d, &spread_slots);
+        let spread = Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: spread_slots,
+            xy,
+        };
+        let rep_spread = route(&g, &d, &est, &spread);
+        assert!(
+            rep_packed.max_congestion > rep_spread.max_congestion,
+            "packed {} vs spread {}",
+            rep_packed.max_congestion,
+            rep_spread.max_congestion
+        );
+    }
+
+    #[test]
+    fn boundary_bits_accumulate_over_spans() {
+        let mut b = TaskGraphBuilder::new("span");
+        let p = b.proto("K", ComputeSpec::passthrough(4));
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.stream("s", 512, 2, a, c);
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        let pl = Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: vec![d.slot_id(0, 0), d.slot_id(3, 0)],
+            xy: vec![(0.5, 0.5), (0.5, 3.5)],
+        };
+        let rep = route(&g, &d, &est, &pl);
+        assert!(rep.boundary_util.iter().all(|&u| u > 0.0));
+        assert_eq!(rep.boundary_util.len(), 3);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let j1 = route_jitter("cnn_13x8", 0);
+        let j2 = route_jitter("cnn_13x8", 0);
+        assert_eq!(j1, j2);
+        for name in ["a", "b", "stencil_4", "spmv_a24"] {
+            let j = route_jitter(name, 1);
+            assert!((0.94..=1.06).contains(&j));
+        }
+    }
+
+    #[test]
+    fn small_design_routes_fine_either_way() {
+        let g = fat_chain(4, 1);
+        let d = u250();
+        let est = estimate_all(&g);
+        let p = place_baseline(&g, &d, &est);
+        let rep = route(&g, &d, &est, &p);
+        assert!(!rep.failed(), "{rep:?}");
+    }
+}

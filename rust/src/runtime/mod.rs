@@ -1,0 +1,197 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifact and execute it
+//! from the Rust hot path. Python never runs at request time — the HLO
+//! text in `artifacts/` was produced once by `make artifacts`
+//! (`python/compile/aot.py`), and this module compiles it with the PJRT
+//! CPU client and serves [`crate::place::StepExecutor`] calls.
+
+use crate::place::analytical::{
+    AnalyticalParams, PlacerArrays, StepExecutor, StepOutput, GRID, MAX_E, MAX_V,
+};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/placer_step.hlo.txt";
+
+/// A compiled placer-step executable on the PJRT CPU client.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    /// Platform name, for reports.
+    pub platform: String,
+}
+
+impl Engine {
+    /// Load and compile the HLO-text artifact.
+    pub fn load(path: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile placer_step")?;
+        Ok(Engine { platform: client.platform_name(), exe })
+    }
+
+    /// Locate the artifact by walking up from the current directory (so
+    /// examples, tests and benches all find it).
+    pub fn find_artifact() -> Option<PathBuf> {
+        let mut dir = std::env::current_dir().ok()?;
+        loop {
+            let candidate = dir.join(DEFAULT_ARTIFACT);
+            if candidate.exists() {
+                return Some(candidate);
+            }
+            if !dir.pop() {
+                return None;
+            }
+        }
+    }
+
+    /// Load the default artifact if present.
+    pub fn load_default() -> Option<Engine> {
+        let path = Self::find_artifact()?;
+        match Engine::load(&path) {
+            Ok(e) => Some(e),
+            Err(err) => {
+                eprintln!("warning: failed to load {}: {err:#}", path.display());
+                None
+            }
+        }
+    }
+
+    /// Raw execution of one placer step.
+    pub fn run_step(
+        &self,
+        arrays: &PlacerArrays,
+        params: &AnalyticalParams,
+    ) -> Result<StepOutput> {
+        debug_assert_eq!(arrays.pos.len(), 2 * MAX_V);
+        debug_assert_eq!(arrays.pairs.len(), 2 * MAX_E);
+        let pos = xla::Literal::vec1(arrays.pos.as_slice())
+            .reshape(&[MAX_V as i64, 2])?;
+        let pairs = xla::Literal::vec1(arrays.pairs.as_slice())
+            .reshape(&[MAX_E as i64, 2])?;
+        let weight = xla::Literal::vec1(arrays.weight.as_slice());
+        let anchor = xla::Literal::vec1(arrays.anchor.as_slice())
+            .reshape(&[MAX_V as i64, 2])?;
+        let canvas = xla::Literal::vec1(&[arrays.canvas.0, arrays.canvas.1]);
+        let lr = xla::Literal::scalar(params.lr);
+        let alpha = xla::Literal::scalar(params.alpha);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[pos, pairs, weight, anchor, canvas, lr, alpha])?[0][0]
+            .to_literal_sync()?;
+        let (new_pos, cong, wl) = result.to_tuple3()?;
+        Ok(StepOutput {
+            pos: new_pos.to_vec::<f32>()?,
+            congestion: cong.to_vec::<f32>()?,
+            wl: wl.to_vec::<f32>()?[0],
+        })
+    }
+}
+
+impl StepExecutor for Engine {
+    fn step(&self, arrays: &PlacerArrays, params: &AnalyticalParams) -> StepOutput {
+        match self.run_step(arrays, params) {
+            Ok(out) => out,
+            Err(err) => {
+                // Fail safe: fall back to the rust reference so a broken
+                // artifact degrades quality, not correctness.
+                eprintln!("warning: PJRT step failed ({err:#}); using rust fallback");
+                crate::place::RustStep.step(arrays, params)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::place::RustStep;
+    use crate::util::assert_allclose;
+
+    fn engine() -> Option<Engine> {
+        Engine::load_default()
+    }
+
+    fn toy_arrays() -> PlacerArrays {
+        let mut pos = vec![0.0f32; 2 * MAX_V];
+        let mut anchor = vec![0.0f32; 2 * MAX_V];
+        let mut pairs = vec![0i32; 2 * MAX_E];
+        let mut weight = vec![0.0f32; MAX_E];
+        // 8 modules in a ring, anchored at two slot centers.
+        for v in 0..8 {
+            pos[2 * v] = 0.3 + 0.17 * v as f32;
+            pos[2 * v + 1] = 0.4 + 0.11 * ((v * 3) % 5) as f32;
+            anchor[2 * v] = if v < 4 { 0.5 } else { 1.5 };
+            anchor[2 * v + 1] = 0.5;
+        }
+        for e in 0..8 {
+            pairs[2 * e] = e as i32;
+            pairs[2 * e + 1] = ((e + 1) % 8) as i32;
+            weight[e] = 0.25 + 0.25 * (e % 3) as f32;
+        }
+        PlacerArrays {
+            pos,
+            pairs,
+            weight,
+            anchor,
+            num_v: 8,
+            num_e: 8,
+            canvas: (2.0, 4.0),
+        }
+    }
+
+    /// The core three-layer contract: the XLA artifact and the rust
+    /// reference compute the same step.
+    #[test]
+    fn xla_step_matches_rust_reference() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts/placer_step.hlo.txt not built");
+            return;
+        };
+        let arrays = toy_arrays();
+        let params = AnalyticalParams::default();
+        let x = eng.run_step(&arrays, &params).expect("xla step");
+        let r = RustStep.step(&arrays, &params);
+        assert!(
+            (x.wl - r.wl).abs() <= 1e-3 * r.wl.abs().max(1.0),
+            "wl {} vs {}",
+            x.wl,
+            r.wl
+        );
+        assert_allclose(&x.pos[..16], &r.pos[..16], 1e-4, 1e-5);
+        assert_eq!(x.congestion.len(), GRID * GRID);
+        assert_allclose(&x.congestion, &r.congestion, 1e-3, 1e-4);
+    }
+
+    #[test]
+    fn engine_reports_platform() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifact not built");
+            return;
+        };
+        assert!(!eng.platform.is_empty());
+        assert_eq!(StepExecutor::name(&eng), "xla-pjrt");
+    }
+
+    #[test]
+    fn repeated_execution_is_deterministic() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifact not built");
+            return;
+        };
+        let arrays = toy_arrays();
+        let params = AnalyticalParams::default();
+        let a = eng.run_step(&arrays, &params).unwrap();
+        let b = eng.run_step(&arrays, &params).unwrap();
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.congestion, b.congestion);
+    }
+}

@@ -1,0 +1,220 @@
+//! Runtime burst detector of the `async_mmap` AXI adapter (§3.4, Table 1).
+//!
+//! Individual addresses stream in; the detector merges runs of consecutive
+//! addresses into AXI burst transactions. A non-consecutive address (or an
+//! idle timeout) concludes the current burst. Table 1's trace is encoded
+//! verbatim as a test below.
+
+/// One emitted AXI burst transaction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Burst {
+    /// Starting address of the burst.
+    pub addr: u64,
+    /// Number of beats.
+    pub len: u32,
+}
+
+/// State machine merging sequential addresses into bursts.
+#[derive(Clone, Debug)]
+pub struct BurstDetector {
+    /// Idle cycles without a new input above which the current burst is
+    /// concluded ("In the case that the next input address is not
+    /// available above a threshold, the burst detector will also conclude").
+    idle_threshold: u32,
+    /// Maximum AXI burst length (256 beats for AXI4).
+    max_len: u32,
+    base_addr: Option<u64>,
+    length: u32,
+    idle: u32,
+    /// Total bursts emitted (statistics).
+    pub bursts_emitted: u64,
+    /// Total beats covered (statistics).
+    pub beats: u64,
+}
+
+impl BurstDetector {
+    pub fn new(idle_threshold: u32, max_len: u32) -> Self {
+        BurstDetector {
+            idle_threshold,
+            max_len,
+            base_addr: None,
+            length: 0,
+            idle: 0,
+            bursts_emitted: 0,
+            beats: 0,
+        }
+    }
+
+    /// Internal state visible for the Table-1 reproduction: (base, length).
+    pub fn state(&self) -> (Option<u64>, u32) {
+        (self.base_addr, self.length)
+    }
+
+    fn emit(&mut self) -> Option<Burst> {
+        let base = self.base_addr.take()?;
+        let b = Burst { addr: base, len: self.length };
+        self.bursts_emitted += 1;
+        self.beats += self.length as u64;
+        self.length = 0;
+        Some(b)
+    }
+
+    /// One cycle with a new input address. Returns the burst concluded this
+    /// cycle, if any (Table 1 "Output" row).
+    pub fn push_addr(&mut self, addr: u64) -> Option<Burst> {
+        self.idle = 0;
+        match self.base_addr {
+            None => {
+                self.base_addr = Some(addr);
+                self.length = 1;
+                None
+            }
+            Some(base) => {
+                let expected = base + self.length as u64;
+                if addr == expected && self.length < self.max_len {
+                    self.length += 1;
+                    None
+                } else {
+                    let burst = self.emit();
+                    self.base_addr = Some(addr);
+                    self.length = 1;
+                    burst
+                }
+            }
+        }
+    }
+
+    /// One cycle without input. Concludes the burst after the idle
+    /// threshold. Returns the concluded burst, if any.
+    pub fn tick_idle(&mut self) -> Option<Burst> {
+        if self.base_addr.is_none() {
+            return None;
+        }
+        self.idle += 1;
+        if self.idle > self.idle_threshold {
+            self.idle = 0;
+            self.emit()
+        } else {
+            None
+        }
+    }
+
+    /// Flush at end of stream.
+    pub fn flush(&mut self) -> Option<Burst> {
+        self.emit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1, verbatim: inputs 64,65,66,67,128,129,130,256 per cycle.
+    #[test]
+    fn table1_trace() {
+        let mut d = BurstDetector::new(8, 256);
+        let inputs = [64u64, 65, 66, 67, 128, 129, 130, 256];
+        let mut outputs: Vec<(usize, Burst)> = Vec::new();
+        for (cycle, &a) in inputs.iter().enumerate() {
+            if let Some(b) = d.push_addr(a) {
+                outputs.push((cycle, b));
+            }
+            // Internal state rows of Table 1:
+            let (base, len) = d.state();
+            match cycle {
+                0..=3 => {
+                    assert_eq!(base, Some(64));
+                    assert_eq!(len, cycle as u32 + 1);
+                }
+                4..=6 => {
+                    assert_eq!(base, Some(128));
+                    assert_eq!(len, cycle as u32 - 3);
+                }
+                7 => {
+                    assert_eq!(base, Some(256));
+                    assert_eq!(len, 1);
+                }
+                _ => unreachable!(),
+            }
+        }
+        // Output row: burst (64, len 4) at cycle 4; burst (128, len 3) at 7.
+        assert_eq!(outputs, vec![
+            (4, Burst { addr: 64, len: 4 }),
+            (7, Burst { addr: 128, len: 3 }),
+        ]);
+        // Flush the trailing single-beat burst.
+        assert_eq!(d.flush(), Some(Burst { addr: 256, len: 1 }));
+    }
+
+    #[test]
+    fn idle_timeout_concludes_burst() {
+        let mut d = BurstDetector::new(3, 256);
+        d.push_addr(10);
+        d.push_addr(11);
+        assert_eq!(d.tick_idle(), None);
+        assert_eq!(d.tick_idle(), None);
+        assert_eq!(d.tick_idle(), None);
+        // 4th idle cycle exceeds threshold 3.
+        assert_eq!(d.tick_idle(), Some(Burst { addr: 10, len: 2 }));
+        assert_eq!(d.tick_idle(), None, "nothing left to conclude");
+    }
+
+    #[test]
+    fn max_len_splits_long_runs() {
+        let mut d = BurstDetector::new(8, 4);
+        let mut bursts = Vec::new();
+        for a in 0..10u64 {
+            if let Some(b) = d.push_addr(a) {
+                bursts.push(b);
+            }
+        }
+        if let Some(b) = d.flush() {
+            bursts.push(b);
+        }
+        assert_eq!(bursts, vec![
+            Burst { addr: 0, len: 4 },
+            Burst { addr: 4, len: 4 },
+            Burst { addr: 8, len: 2 },
+        ]);
+    }
+
+    #[test]
+    fn random_addresses_are_single_beat() {
+        let mut d = BurstDetector::new(8, 256);
+        let mut bursts = Vec::new();
+        for a in [100u64, 50, 200, 7] {
+            if let Some(b) = d.push_addr(a) {
+                bursts.push(b);
+            }
+        }
+        if let Some(b) = d.flush() {
+            bursts.push(b);
+        }
+        assert_eq!(bursts.len(), 4);
+        assert!(bursts.iter().all(|b| b.len == 1));
+    }
+
+    /// Efficiency property (§3.4 "as efficient as inferring burst
+    /// transactions statically"): a fully sequential stream of N addresses
+    /// produces ceil(N / max_len) bursts.
+    #[test]
+    fn sequential_stream_is_maximally_merged() {
+        use crate::util::prop::{forall, Config};
+        forall(Config::default().cases(32), |rng| {
+            let n = rng.gen_range_in(1, 2000);
+            let max_len = 1 << rng.gen_range_in(1, 9); // 2..256
+            let mut d = BurstDetector::new(8, max_len as u32);
+            let mut count = 0u64;
+            for a in 0..n as u64 {
+                if d.push_addr(a).is_some() {
+                    count += 1;
+                }
+            }
+            if d.flush().is_some() {
+                count += 1;
+            }
+            assert_eq!(count, n.div_ceil(max_len) as u64);
+            assert_eq!(d.beats, n as u64);
+        });
+    }
+}

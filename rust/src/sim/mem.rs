@@ -1,0 +1,213 @@
+//! External memory port models (§3.4, §6.2): DDR and HBM access latency /
+//! bandwidth, including the HBM lateral-crossbar penalty for inter-group
+//! bindings, and an `async_mmap` port that couples a request stream with
+//! the runtime burst detector.
+
+use super::burst::{Burst, BurstDetector};
+use crate::device::hbm::HbmTopology;
+use crate::graph::MemKind;
+use std::collections::VecDeque;
+
+/// Nominal access latency of a DDR4 controller in user-clock cycles.
+pub const DDR_LATENCY: u32 = 40;
+
+/// Latency and bandwidth of one bound memory port.
+#[derive(Clone, Copy, Debug)]
+pub struct PortTiming {
+    /// Request → first data latency in user-clock cycles.
+    pub latency: u32,
+    /// Sustained beats per cycle (≤ 1.0).
+    pub beats_per_cycle: f64,
+}
+
+/// Timing of a port given its binding (§6.2: inter-group HBM accesses pay
+/// lateral hops in both latency and bandwidth).
+pub fn port_timing(
+    mem: MemKind,
+    hbm: Option<&HbmTopology>,
+    port_ch: usize,
+    target_ch: usize,
+) -> PortTiming {
+    match (mem, hbm) {
+        (MemKind::Ddr, _) | (MemKind::Hbm, None) => {
+            PortTiming { latency: DDR_LATENCY, beats_per_cycle: 1.0 }
+        }
+        (MemKind::Hbm, Some(h)) => {
+            let lat = h.access_latency(port_ch, target_ch);
+            let bw = h.effective_bandwidth(port_ch, target_ch) / h.channel_bw_gbps;
+            PortTiming { latency: lat, beats_per_cycle: bw }
+        }
+    }
+}
+
+/// An `async_mmap` read port: addresses pushed into `read_addr` pass the
+/// burst detector; data beats come back after the channel latency at the
+/// channel's sustained bandwidth (Listing 3/4's five-stream interface,
+/// reduced to the read pair — the write pair is symmetric).
+#[derive(Clone, Debug)]
+pub struct AsyncMmapReadPort {
+    timing: PortTiming,
+    detector: BurstDetector,
+    /// Issued bursts in flight: (completion_cycle_of_first_beat, burst).
+    in_flight: VecDeque<(u64, Burst)>,
+    /// Data beats ready for the user to read: (ready_cycle, addr).
+    ready: VecDeque<(u64, u64)>,
+    /// Fractional beat accumulator for bandwidth derating.
+    credit: f64,
+    pub beats_returned: u64,
+}
+
+impl AsyncMmapReadPort {
+    pub fn new(timing: PortTiming) -> Self {
+        AsyncMmapReadPort {
+            timing,
+            detector: BurstDetector::new(8, 256),
+            in_flight: VecDeque::new(),
+            ready: VecDeque::new(),
+            credit: 0.0,
+            beats_returned: 0,
+        }
+    }
+
+    /// User pushes one read address this cycle.
+    pub fn push_addr(&mut self, now: u64, addr: u64) {
+        if let Some(b) = self.detector.push_addr(addr) {
+            self.issue(now, b);
+        }
+    }
+
+    /// Idle cycle on the address stream.
+    pub fn tick_idle(&mut self, now: u64) {
+        if let Some(b) = self.detector.tick_idle() {
+            self.issue(now, b);
+        }
+    }
+
+    /// End of the address stream.
+    pub fn flush(&mut self, now: u64) {
+        if let Some(b) = self.detector.flush() {
+            self.issue(now, b);
+        }
+    }
+
+    fn issue(&mut self, now: u64, b: Burst) {
+        self.in_flight.push_back((now + self.timing.latency as u64, b));
+    }
+
+    /// Advance one cycle; data beats become readable respecting the
+    /// channel's sustained bandwidth.
+    pub fn advance(&mut self, now: u64) {
+        self.credit += self.timing.beats_per_cycle;
+        while self.credit >= 1.0 {
+            let Some(&mut (start, ref mut burst)) = self.in_flight.front_mut() else {
+                // No bursts pending; don't bank unbounded credit.
+                self.credit = self.credit.min(1.0);
+                break;
+            };
+            if start > now {
+                self.credit = self.credit.min(1.0);
+                break;
+            }
+            self.ready.push_back((now, burst.addr));
+            burst.addr += 1;
+            burst.len -= 1;
+            self.beats_returned += 1;
+            self.credit -= 1.0;
+            if burst.len == 0 {
+                self.in_flight.pop_front();
+            }
+        }
+    }
+
+    /// Pop one ready data beat (its address) if available.
+    pub fn pop_data(&mut self) -> Option<u64> {
+        self.ready.pop_front().map(|(_, a)| a)
+    }
+
+    /// Everything issued and returned?
+    pub fn is_drained(&self) -> bool {
+        self.in_flight.is_empty()
+            && self.ready.is_empty()
+            && self.detector.state().0.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::hbm::HbmTopology;
+
+    #[test]
+    fn ddr_timing_is_fixed() {
+        let t = port_timing(MemKind::Ddr, None, 0, 0);
+        assert_eq!(t.latency, DDR_LATENCY);
+        assert_eq!(t.beats_per_cycle, 1.0);
+    }
+
+    #[test]
+    fn hbm_intra_group_full_bandwidth() {
+        let h = HbmTopology::u280();
+        let t = port_timing(MemKind::Hbm, Some(&h), 4, 6);
+        assert_eq!(t.latency, h.intra_group_latency);
+        assert_eq!(t.beats_per_cycle, 1.0);
+    }
+
+    #[test]
+    fn hbm_inter_group_derated() {
+        let h = HbmTopology::u280();
+        let t = port_timing(MemKind::Hbm, Some(&h), 0, 31);
+        assert!(t.latency > h.intra_group_latency);
+        assert!(t.beats_per_cycle < 1.0);
+    }
+
+    #[test]
+    fn async_port_sequential_read_full_rate() {
+        // n sequential addresses → one burst → n beats at 1/cycle after
+        // the latency.
+        let n = 64u64;
+        let mut port = AsyncMmapReadPort::new(PortTiming { latency: 10, beats_per_cycle: 1.0 });
+        let mut got = Vec::new();
+        let mut cycle = 0u64;
+        for a in 0..n {
+            port.push_addr(cycle, a);
+            cycle += 1;
+        }
+        port.flush(cycle);
+        let deadline = cycle + 10 + n + 5;
+        while cycle < deadline {
+            port.advance(cycle);
+            while let Some(a) = port.pop_data() {
+                got.push(a);
+            }
+            cycle += 1;
+        }
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+        assert!(port.is_drained());
+    }
+
+    #[test]
+    fn derated_bandwidth_slows_return() {
+        let n = 50u64;
+        let run = |bw: f64| -> u64 {
+            let mut port =
+                AsyncMmapReadPort::new(PortTiming { latency: 5, beats_per_cycle: bw });
+            for a in 0..n {
+                port.push_addr(0, a);
+            }
+            port.flush(0);
+            let mut cycle = 0u64;
+            let mut count = 0u64;
+            while count < n && cycle < 10_000 {
+                port.advance(cycle);
+                while port.pop_data().is_some() {
+                    count += 1;
+                }
+                cycle += 1;
+            }
+            cycle
+        };
+        let fast = run(1.0);
+        let slow = run(0.5);
+        assert!(slow > fast + n / 3, "fast={fast} slow={slow}");
+    }
+}

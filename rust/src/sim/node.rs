@@ -1,0 +1,337 @@
+//! Task FSM execution model (§2.1, §5.1).
+//!
+//! Each task instance runs the FSM schedule produced by the HLS estimator:
+//! a pipelined main loop with initiation interval `ii` and datapath depth
+//! `pipeline_depth`. Per firing the node consumes one token from every
+//! input stream and (depth cycles later) produces one token into every
+//! output stream. Termination follows TAPA semantics: sources fire
+//! `trip_count` times then close their outputs with EoT; data-driven nodes
+//! run until all inputs are closed, then propagate EoT (§3.3.1).
+
+use super::fifo::{Fifo, Token};
+use crate::hls::FsmSchedule;
+use std::collections::VecDeque;
+
+/// Lifecycle of a node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Waiting out the FSM entry states.
+    Starting,
+    /// Main pipelined loop.
+    Running,
+    /// Loop exited; draining the datapath pipeline.
+    Draining,
+    /// EoT written; node finished.
+    Done,
+}
+
+/// A task instance executing a pipelined-loop FSM.
+#[derive(Clone, Debug)]
+pub struct PipelinedNode {
+    pub name: String,
+    pub schedule: FsmSchedule,
+    /// Global FIFO indices of input streams (consumer side).
+    pub inputs: Vec<usize>,
+    /// Input indices (into the FIFO pool) that are feedback edges of a
+    /// dependency cycle. They gate *firing* but not *termination*: the
+    /// node finishes when all non-feedback inputs reach EoT — the standard
+    /// way control loops shut down (the loop would otherwise deadlock at
+    /// drain time waiting for its own EoT).
+    pub feedback_inputs: Vec<usize>,
+    /// Global FIFO indices of output streams (producer side).
+    pub outputs: Vec<usize>,
+    /// Detached nodes never gate program termination (§3.3.3).
+    pub detached: bool,
+    state: NodeState,
+    /// Cycles remaining in the current state (startup/drain).
+    wait: u32,
+    /// II countdown: 0 ⇒ may fire this cycle.
+    ii_wait: u32,
+    /// Firings completed.
+    pub fired: u64,
+    /// Datapath delay line: results emerge `pipeline_depth` cycles after
+    /// the firing that produced them: (emit_cycle, token_value).
+    in_pipe: VecDeque<(u64, u64)>,
+    /// Stall statistics: cycles blocked on empty inputs / full outputs.
+    pub stall_in: u64,
+    pub stall_out: u64,
+}
+
+impl PipelinedNode {
+    pub fn new(
+        name: &str,
+        schedule: FsmSchedule,
+        inputs: Vec<usize>,
+        outputs: Vec<usize>,
+        detached: bool,
+    ) -> Self {
+        PipelinedNode {
+            name: name.to_string(),
+            wait: schedule.startup_cycles,
+            schedule,
+            inputs,
+            feedback_inputs: Vec::new(),
+            outputs,
+            detached,
+            state: NodeState::Starting,
+            ii_wait: 0,
+            fired: 0,
+            in_pipe: VecDeque::new(),
+            stall_in: 0,
+            stall_out: 0,
+        }
+    }
+
+    pub fn state(&self) -> NodeState {
+        self.state
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.state == NodeState::Done
+    }
+
+    /// Is this node a pure source (drives from `trip_count`, no inputs)?
+    fn is_source(&self) -> bool {
+        self.inputs.is_empty()
+    }
+
+    /// One simulation cycle. `fifos` is the global FIFO pool.
+    pub fn tick(&mut self, now: u64, fifos: &mut [Fifo]) {
+        // Emit any datapath results whose time has come (before new firing
+        // so a drained pipe can transition states this cycle).
+        self.emit_ready(now, fifos);
+
+        match self.state {
+            NodeState::Done => {}
+            NodeState::Starting => {
+                if self.wait > 0 {
+                    self.wait -= 1;
+                } else {
+                    self.state = NodeState::Running;
+                    self.try_fire(now, fifos);
+                }
+            }
+            NodeState::Running => {
+                self.try_fire(now, fifos);
+            }
+            NodeState::Draining => {
+                if self.in_pipe.is_empty() {
+                    if self.wait > 0 {
+                        self.wait -= 1;
+                    } else if self.close_outputs(now, fifos) {
+                        self.state = NodeState::Done;
+                    } else {
+                        self.stall_out += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn emit_ready(&mut self, now: u64, fifos: &mut [Fifo]) {
+        while let Some(&(emit, value)) = self.in_pipe.front() {
+            if emit > now {
+                break;
+            }
+            // All outputs must have room; almost-full FIFOs guarantee this
+            // when the producer respected `full()` at issue time, but with
+            // a shared delay line we re-check conservatively.
+            if self.outputs.iter().any(|&f| fifos[f].full()) {
+                self.stall_out += 1;
+                break;
+            }
+            for &f in &self.outputs {
+                let ok = fifos[f].push(now, Token::data(value));
+                debug_assert!(ok);
+            }
+            self.in_pipe.pop_front();
+        }
+    }
+
+    fn try_fire(&mut self, now: u64, fifos: &mut [Fifo]) {
+        if self.ii_wait > 0 {
+            self.ii_wait -= 1;
+            return;
+        }
+        // Termination check for data-driven nodes: all *gating* inputs at
+        // EoT (feedback inputs are drained, not awaited — see
+        // `feedback_inputs`).
+        if !self.is_source() {
+            let gating: Vec<usize> = self
+                .inputs
+                .iter()
+                .copied()
+                .filter(|f| !self.feedback_inputs.contains(f))
+                .collect();
+            let done = if gating.is_empty() {
+                self.inputs.iter().all(|&f| fifos[f].head_is_eot())
+            } else {
+                gating.iter().all(|&f| fifos[f].head_is_eot())
+            };
+            if done {
+                for &f in &self.inputs {
+                    // Consume the EoT tokens ("open"); feedback channels
+                    // are flushed wholesale.
+                    if self.feedback_inputs.contains(&f) {
+                        while fifos[f].pop().is_some() {}
+                    } else {
+                        fifos[f].pop();
+                    }
+                }
+                self.begin_drain();
+                return;
+            }
+        } else if self.fired >= self.schedule.trip_count {
+            self.begin_drain();
+            return;
+        }
+
+        // Inputs ready? An EoT-headed input that is not yet matched by EoT
+        // on every sibling blocks the firing (the task is mid-transaction
+        // on the other streams).
+        if !self.is_source()
+            && self
+                .inputs
+                .iter()
+                .any(|&f| fifos[f].empty() || fifos[f].head_is_eot())
+        {
+            self.stall_in += 1;
+            return;
+        }
+        // Output backpressure: almost-full check at issue time (Fig. 10).
+        if self.outputs.iter().any(|&f| fifos[f].full()) {
+            self.stall_out += 1;
+            return;
+        }
+        // Fire: consume one token per input; schedule the result.
+        let mut acc = self.fired;
+        for &f in &self.inputs {
+            let t = fifos[f].pop().expect("checked non-empty");
+            debug_assert!(!t.eot);
+            acc = acc.wrapping_add(t.value);
+        }
+        if !self.outputs.is_empty() {
+            self.in_pipe
+                .push_back((now + self.schedule.pipeline_depth as u64, acc));
+        }
+        self.fired += 1;
+        self.ii_wait = self.schedule.ii.saturating_sub(1);
+    }
+
+    fn begin_drain(&mut self) {
+        self.state = NodeState::Draining;
+        self.wait = self.schedule.drain_cycles;
+    }
+
+    fn close_outputs(&mut self, now: u64, fifos: &mut [Fifo]) -> bool {
+        if self.outputs.iter().any(|&f| fifos[f].full()) {
+            return false;
+        }
+        for &f in &self.outputs {
+            let ok = fifos[f].push(now, Token::eot());
+            debug_assert!(ok);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(trip: u64) -> FsmSchedule {
+        FsmSchedule {
+            ii: 1,
+            pipeline_depth: 4,
+            trip_count: trip,
+            startup_cycles: 2,
+            drain_cycles: 1,
+        }
+    }
+
+    #[test]
+    fn source_emits_trip_count_then_eot() {
+        let mut fifos = vec![Fifo::new(1024, 0, 0)];
+        let mut n = PipelinedNode::new("src", sched(10), vec![], vec![0], false);
+        for now in 0..64 {
+            fifos[0].advance(now);
+            n.tick(now, &mut fifos);
+        }
+        assert!(n.is_done());
+        let mut count = 0;
+        let mut eot = 0;
+        while let Some(t) = fifos[0].pop() {
+            if t.eot {
+                eot += 1;
+            } else {
+                count += 1;
+            }
+        }
+        assert_eq!(count, 10);
+        assert_eq!(eot, 1);
+    }
+
+    #[test]
+    fn sink_consumes_until_eot() {
+        let mut fifos = vec![Fifo::new(64, 0, 0)];
+        for i in 0..5 {
+            fifos[0].push(0, Token::data(i));
+        }
+        fifos[0].push(0, Token::eot());
+        let mut n = PipelinedNode::new("sink", sched(999), vec![0], vec![], false);
+        for now in 0..32 {
+            fifos[0].advance(now);
+            n.tick(now, &mut fifos);
+        }
+        assert!(n.is_done());
+        assert_eq!(n.fired, 5);
+        assert!(fifos[0].is_drained());
+    }
+
+    #[test]
+    fn ii_2_halves_firing_rate() {
+        let mut fifos = vec![Fifo::new(4096, 0, 0)];
+        let s = FsmSchedule { ii: 2, ..sched(100) };
+        let mut n = PipelinedNode::new("src", s, vec![], vec![0], false);
+        // Run exactly startup + 60 cycles: about 30 firings possible.
+        for now in 0..62 {
+            fifos[0].advance(now);
+            n.tick(now, &mut fifos);
+        }
+        assert!(n.fired >= 28 && n.fired <= 32, "fired={}", n.fired);
+    }
+
+    #[test]
+    fn backpressure_stalls_producer() {
+        let mut fifos = vec![Fifo::new(2, 0, 0)];
+        let mut n = PipelinedNode::new("src", sched(100), vec![], vec![0], false);
+        for now in 0..32 {
+            fifos[0].advance(now);
+            n.tick(now, &mut fifos);
+            // Never drain the FIFO.
+        }
+        assert!(!n.is_done());
+        assert!(n.stall_out > 0);
+        assert!(fifos[0].occupancy() <= 2);
+    }
+
+    #[test]
+    fn eot_propagates_through_middle_node() {
+        let mut fifos = vec![Fifo::new(64, 0, 0), Fifo::new(64, 0, 0)];
+        for i in 0..3 {
+            fifos[0].push(0, Token::data(i));
+        }
+        fifos[0].push(0, Token::eot());
+        let mut mid = PipelinedNode::new("mid", sched(999), vec![0], vec![1], false);
+        for now in 0..32 {
+            fifos[0].advance(now);
+            fifos[1].advance(now);
+            mid.tick(now, &mut fifos);
+        }
+        assert!(mid.is_done());
+        let tokens: Vec<Token> = std::iter::from_fn(|| fifos[1].pop()).collect();
+        assert_eq!(tokens.len(), 4);
+        assert!(tokens[3].eot);
+        assert!(tokens[..3].iter().all(|t| !t.eot));
+    }
+}

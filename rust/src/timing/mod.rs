@@ -1,0 +1,196 @@
+//! Static timing analysis — the post-route STA stand-in.
+//!
+//! Computes the critical path of a placed + routed design and thus the
+//! achievable frequency. The delay model is deliberately coarse-grained —
+//! exactly the granularity the paper argues HLS should reason at: logic
+//! delay inside a slot, wire delay proportional to placed distance,
+//! die-crossing (SLL) penalties that registers can hide, and a congestion
+//! multiplier from the routing report.
+
+pub mod model;
+
+use crate::device::Device;
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+use crate::place::Placement;
+use crate::route::RouteReport;
+use model::*;
+
+/// Timing analysis result.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Achieved frequency in MHz; `None` when place/route failed.
+    pub fmax_mhz: Option<f64>,
+    /// Critical-path delay in ns (even for failed designs, diagnostic).
+    pub critical_ns: f64,
+    /// Which edge (channel) is critical, if any; `None` ⇒ logic-limited.
+    pub critical_edge: Option<usize>,
+}
+
+/// Analyze a design. `edge_stages[e]` = pipeline registers inserted on
+/// edge `e` (0 for the baseline flow). Without per-task estimates the
+/// big-task internal-path correction is skipped ([`analyze_with_areas`]
+/// is the full entry point).
+pub fn analyze(
+    g: &TaskGraph,
+    device: &Device,
+    placement: &Placement,
+    route: &RouteReport,
+    edge_stages: &[u32],
+) -> TimingReport {
+    analyze_with_areas(g, device, placement, route, edge_stages, None)
+}
+
+/// Full analysis including task-size-dependent internal paths.
+pub fn analyze_with_areas(
+    g: &TaskGraph,
+    device: &Device,
+    placement: &Placement,
+    route: &RouteReport,
+    edge_stages: &[u32],
+    estimates: Option<&[TaskEstimate]>,
+) -> TimingReport {
+    let mut critical_ns = 0.0f64;
+    let mut critical_edge = None;
+
+    for (ei, e) in g.edges.iter().enumerate() {
+        let cong = local_congestion(route, placement, e);
+        let d = edge_delay_ns(
+            placement.distance(e.producer.0, e.consumer.0),
+            placement.slr_crossings(device, e.producer.0, e.consumer.0) as u32,
+            edge_stages[ei],
+            cong,
+        );
+        if d > critical_ns {
+            critical_ns = d;
+            critical_edge = Some(ei);
+        }
+    }
+
+    // Logic-limited paths inside tasks: congestion of the worst slot a
+    // task occupies stretches its intra-task nets; oversized tasks carry
+    // longer internal paths (§7.3).
+    for (v, s) in placement.slot.iter().enumerate() {
+        let cong = route.slot_congestion[s.0];
+        let d = match estimates {
+            Some(est) => {
+                let slot_lut = device.slots[s.0].capacity.lut.max(1);
+                let ratio = est[v].area.lut as f64 / slot_lut as f64;
+                task_logic_delay_ns(cong, ratio)
+            }
+            None => logic_delay_ns(cong),
+        };
+        if d > critical_ns {
+            critical_ns = d;
+            critical_edge = None;
+        }
+    }
+
+    // P&R jitter (same deterministic scheme as the router).
+    let jitter = crate::route::route_jitter(&g.name, 0x7 ^ placement.strategy as u8);
+    critical_ns *= jitter;
+
+    let fmax = if route.failed() {
+        None
+    } else {
+        Some((1000.0 / critical_ns).min(FMAX_CEILING_MHZ))
+    };
+    TimingReport { fmax_mhz: fmax, critical_ns, critical_edge }
+}
+
+/// Congestion seen by a net: the worse of its two endpoint slots.
+fn local_congestion(
+    route: &RouteReport,
+    placement: &Placement,
+    e: &crate::graph::Edge,
+) -> f64 {
+    let a = route.slot_congestion[placement.slot[e.producer.0].0];
+    let b = route.slot_congestion[placement.slot[e.consumer.0].0];
+    a.max(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+    use crate::place::{PlaceStrategy, Placement};
+    use crate::route::route;
+
+    fn two_task() -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("tt");
+        let p = b.proto("K", ComputeSpec::passthrough(16));
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.stream("s", 256, 2, a, c);
+        b.build().unwrap()
+    }
+
+    fn placement_at(d: &Device, s0: (usize, usize), s1: (usize, usize)) -> Placement {
+        Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: vec![d.slot_id(s0.0, s0.1), d.slot_id(s1.0, s1.1)],
+            xy: vec![
+                (s0.1 as f32 + 0.5, s0.0 as f32 + 0.5),
+                (s1.1 as f32 + 0.5, s1.0 as f32 + 0.5),
+            ],
+        }
+    }
+
+    use crate::device::Device;
+
+    #[test]
+    fn unregistered_die_crossing_kills_frequency() {
+        let g = two_task();
+        let d = u250();
+        let est = estimate_all(&g);
+        let pl = placement_at(&d, (0, 0), (3, 0)); // 3 SLR crossings
+        let rep = route(&g, &d, &est, &pl);
+        let t_unreg = analyze(&g, &d, &pl, &rep, &[0]);
+        let t_reg = analyze(&g, &d, &pl, &rep, &[6]); // 2 stages/crossing
+        assert!(t_unreg.critical_ns > t_reg.critical_ns * 1.8);
+        assert!(t_reg.fmax_mhz.unwrap() > 250.0, "{:?}", t_reg);
+        assert!(t_unreg.fmax_mhz.unwrap() < 160.0, "{:?}", t_unreg);
+    }
+
+    #[test]
+    fn same_slot_edge_is_logic_limited() {
+        let g = two_task();
+        let d = u250();
+        let est = estimate_all(&g);
+        let pl = placement_at(&d, (1, 0), (1, 0));
+        let rep = route(&g, &d, &est, &pl);
+        let t = analyze(&g, &d, &pl, &rep, &[0]);
+        // Short local wire: fmax near the logic ceiling.
+        assert!(t.fmax_mhz.unwrap() > 280.0, "{:?}", t);
+    }
+
+    #[test]
+    fn failed_route_reports_no_fmax() {
+        let g = two_task();
+        let d = u250();
+        let est = estimate_all(&g);
+        let pl = placement_at(&d, (0, 0), (1, 0));
+        let mut rep = route(&g, &d, &est, &pl);
+        rep.routing_failed = true;
+        let t = analyze(&g, &d, &pl, &rep, &[0]);
+        assert!(t.fmax_mhz.is_none());
+        assert!(t.critical_ns > 0.0);
+    }
+
+    #[test]
+    fn more_stages_monotonically_help() {
+        let g = two_task();
+        let d = u250();
+        let est = estimate_all(&g);
+        let pl = placement_at(&d, (0, 0), (3, 1));
+        let rep = route(&g, &d, &est, &pl);
+        let mut last = f64::INFINITY;
+        for stages in [0u32, 2, 4, 8] {
+            let t = analyze(&g, &d, &pl, &rep, &[stages]);
+            assert!(t.critical_ns <= last + 1e-9);
+            last = t.critical_ns;
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Delay-model constants and primitive delay functions.
+//!
+//! Calibration targets are the paper's *published* numbers (§7, our
+//! DESIGN.md §6): optimized designs land in the 270–340 MHz band, packed
+//! baselines in the 130–250 MHz band, and unregistered multi-die crossings
+//! at high congestion become unroutable or sub-100 MHz. Constants are in
+//! nanoseconds on a generic UltraScale+ -3 speed grade.
+
+/// Intra-slot logic path at zero congestion: ~2.8 ns ⇒ ~357 MHz ceiling —
+/// matches the best observed user clocks (Gaussian 335 MHz, CNN 328 MHz).
+pub const T_LOGIC_NS: f64 = 2.80;
+
+/// Hard frequency ceiling (kernel clock constraint in Vitis).
+pub const FMAX_CEILING_MHZ: f64 = 350.0;
+
+/// Base interconnect delay of any inter-task net (fanout buffering etc.).
+pub const T_NET_BASE_NS: f64 = 0.35;
+
+/// Wire delay per slot-grid unit of placed Manhattan distance.
+pub const T_PER_UNIT_NS: f64 = 0.95;
+
+/// Extra penalty per *unregistered* SLR (die-boundary) crossing — the
+/// dominant term the paper's co-optimization removes (§1: interconnects
+/// that cross die boundaries "carry a non-trivial delay penalty").
+pub const T_SLL_UNREG_NS: f64 = 1.65;
+
+/// Residual per-crossing cost when the crossing is properly registered on
+/// both sides (dedicated SLL flip-flops).
+pub const T_SLL_REG_NS: f64 = 0.55;
+
+/// Congestion multiplier: delays stretch once routing demand exceeds this
+/// fraction of supply…
+pub const CONG_KNEE: f64 = 0.48;
+/// …quadratically with this gain.
+pub const CONG_GAIN: f64 = 3.4;
+
+/// Congestion stretch factor for a routing-demand ratio `c`.
+pub fn congestion_factor(c: f64) -> f64 {
+    let over = (c - CONG_KNEE).max(0.0);
+    1.0 + CONG_GAIN * over * over
+}
+
+/// Delay of one inter-task connection.
+///
+/// `distance`: placed Manhattan distance in slot units; `crossings`: SLR
+/// boundaries on the path; `stages`: pipeline registers inserted on the
+/// connection; `congestion`: routing-demand ratio of the worse endpoint.
+///
+/// Registers split the route into `stages + 1` segments; the critical
+/// segment carries `ceil(crossings / (stages+1))` crossings and
+/// `distance / (stages+1)` wire. With ≥2 stages per crossing (the §7.1
+/// default), segments have at most one *registered* crossing each.
+pub fn edge_delay_ns(distance: f32, crossings: u32, stages: u32, congestion: f64) -> f64 {
+    let segs = (stages + 1) as f64;
+    let seg_dist = distance as f64 / segs;
+    let seg_cross = (crossings as f64 / segs).ceil();
+    let cross_cost = if stages >= crossings && crossings > 0 {
+        // Fully registered: every crossing isolated between FFs.
+        T_SLL_REG_NS * seg_cross
+    } else if crossings > 0 {
+        // Partially or un-registered crossings on the critical segment.
+        let unreg = (crossings.saturating_sub(stages)) as f64 / segs;
+        T_SLL_REG_NS * seg_cross + T_SLL_UNREG_NS * unreg.max(0.0).ceil()
+    } else {
+        0.0
+    };
+    let wire = T_NET_BASE_NS + T_PER_UNIT_NS * seg_dist + cross_cost;
+    // A registered segment still ends in logic (FIFO handshake); the path
+    // is wire + receiving logic when unpipelined, just wire+FF when piped.
+    let logic_share = if stages == 0 { T_LOGIC_NS * 0.55 } else { 0.45 };
+    (wire + logic_share) * congestion_factor(congestion)
+}
+
+/// Intra-task logic delay under congestion.
+pub fn logic_delay_ns(congestion: f64) -> f64 {
+    T_LOGIC_NS * congestion_factor(congestion)
+}
+
+/// Large monolithic tasks have longer internal (intra-FSM) paths: HLS's
+/// local timing estimate degrades with module size (§7.3 recommends
+/// splitting very large kernels for exactly this reason). `size_ratio` is
+/// task LUT / slot LUT.
+pub const BIG_TASK_ALPHA: f64 = 0.55;
+
+/// Logic delay of a task occupying `size_ratio` of its slot.
+pub fn task_logic_delay_ns(congestion: f64, size_ratio: f64) -> f64 {
+    T_LOGIC_NS * (1.0 + BIG_TASK_ALPHA * size_ratio.clamp(0.0, 1.5))
+        * congestion_factor(congestion)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn congestion_factor_is_one_below_knee() {
+        assert_eq!(congestion_factor(0.0), 1.0);
+        assert_eq!(congestion_factor(CONG_KNEE), 1.0);
+        assert!(congestion_factor(0.9) > 1.3);
+        assert!(congestion_factor(1.2) > congestion_factor(0.9));
+    }
+
+    #[test]
+    fn registered_crossing_cheaper_than_unregistered() {
+        let unreg = edge_delay_ns(1.0, 1, 0, 0.0);
+        let reg = edge_delay_ns(1.0, 1, 2, 0.0);
+        assert!(unreg > 1.8 * reg, "unreg={unreg} reg={reg}");
+    }
+
+    #[test]
+    fn fully_registered_three_crossings_meets_300mhz() {
+        // 3 crossings, 6 stages (2/crossing), distance 3, light congestion.
+        let d = edge_delay_ns(3.0, 3, 6, 0.4);
+        assert!(1000.0 / d > 290.0, "delay={d}");
+    }
+
+    #[test]
+    fn unregistered_three_crossings_is_slow() {
+        let d = edge_delay_ns(3.0, 3, 0, 0.6);
+        assert!(1000.0 / d < 130.0, "delay={d}");
+    }
+
+    #[test]
+    fn logic_ceiling_near_357() {
+        let f = 1000.0 / logic_delay_ns(0.0);
+        assert!((f - 357.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn delay_monotone_in_distance_and_congestion() {
+        let base = edge_delay_ns(1.0, 1, 2, 0.3);
+        assert!(edge_delay_ns(2.0, 1, 2, 0.3) > base);
+        assert!(edge_delay_ns(1.0, 1, 2, 0.9) > base);
+        assert!(edge_delay_ns(1.0, 2, 2, 0.3) >= base);
+    }
+}

@@ -1,0 +1,49 @@
+//! Small shared utilities: deterministic PRNG, statistics helpers, and a
+//! lightweight property-testing harness (the crates.io `proptest` crate is
+//! not available in this offline environment, so we provide the subset we
+//! need: seeded generators, many-case runners, and failure reporting with
+//! the offending seed).
+
+pub mod rng;
+pub mod prop;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Relative-tolerance float comparison used by numeric cross-checks
+/// (rust reference placer vs the XLA artifact).
+pub fn approx_eq(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    let diff = (a - b).abs();
+    diff <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Assert two float slices are elementwise close; panics with the first
+/// offending index on mismatch.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            approx_eq(x, y, rtol, atol),
+            "allclose failed at index {i}: {x} vs {y} (rtol={rtol}, atol={atol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basic() {
+        assert!(approx_eq(1.0, 1.0, 0.0, 0.0));
+        assert!(approx_eq(1.0, 1.0 + 1e-7, 1e-5, 0.0));
+        assert!(!approx_eq(1.0, 1.1, 1e-5, 0.0));
+        assert!(approx_eq(0.0, 1e-9, 0.0, 1e-8));
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_panics_on_mismatch() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 3.0], 1e-6, 1e-6);
+    }
+}

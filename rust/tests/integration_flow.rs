@@ -1,0 +1,153 @@
+//! Integration tests: the full flow over the real benchmark suite.
+//! These cross module boundaries (graph → hls → floorplan → pipeline →
+//! place → route → timing → sim) and check the paper's headline
+//! *invariants* rather than absolute numbers.
+
+use tapa::bench_suite::{self, experiments};
+use tapa::device::DeviceKind;
+use tapa::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+
+fn fast_cfg() -> FlowConfig {
+    FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn stencil_family_tapa_never_loses_to_baseline() {
+    let cfg = fast_cfg();
+    for k in [1usize, 3, 5] {
+        let d = bench_suite::stencil::stencil(k, DeviceKind::U250);
+        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let fo = orig.fmax_mhz.unwrap_or(0.0);
+        let ft = opt.fmax_mhz.unwrap_or(0.0);
+        assert!(ft >= fo, "{}: tapa {ft} < baseline {fo}", d.name);
+    }
+}
+
+#[test]
+fn cnn_cycle_counts_survive_pipelining() {
+    // Table 4's key claim: cycles change by only ~10 out of ~50k.
+    let cfg = FlowConfig::default();
+    let d = bench_suite::cnn::cnn(2, DeviceKind::U250);
+    let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+    let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+    let (co, ct) = (orig.cycles.expect("orig sims"), opt.cycles.expect("opt sims"));
+    let delta = (ct as i64 - co as i64).unsigned_abs();
+    assert!(
+        (delta as f64) < co as f64 * 0.01,
+        "cycle delta {delta} too large (orig {co}, opt {ct})"
+    );
+}
+
+#[test]
+fn gaussian_family_routes_with_tapa() {
+    let cfg = fast_cfg();
+    for n in [12usize, 24] {
+        let d = bench_suite::gaussian::gaussian(n, DeviceKind::U250);
+        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        assert!(opt.fmax_mhz.is_some(), "gauss {n} must route with tapa");
+        assert!(opt.fmax_mhz.unwrap() > 200.0);
+    }
+}
+
+#[test]
+fn bucket_sort_crossbars_benefit_from_pipelining() {
+    let cfg = fast_cfg();
+    let d = bench_suite::sort::bucket_sort();
+    let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+    let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+    let ft = opt.fmax_mhz.expect("bucket sort must route with tapa");
+    assert!(ft > orig.fmax_mhz.unwrap_or(0.0));
+    // The optimized flow must have pipelined the crossbar channels.
+    let plan = opt.pipeline.expect("tapa produces a plan");
+    let piped = plan.edge_lat.iter().filter(|&&l| l > 0).count();
+    assert!(piped > 0, "some crossbar channels must be pipelined");
+}
+
+#[test]
+fn pagerank_cycles_do_not_break_the_flow() {
+    let cfg = fast_cfg();
+    let d = bench_suite::pagerank::pagerank();
+    let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+    // Must complete with a plan (cycle edges unpipelined, §5.2 fallback).
+    let plan = opt.pipeline.expect("plan exists");
+    assert!(plan.cycle_feedback.is_empty());
+}
+
+#[test]
+fn hbm_pairs_reduce_bram_utilization() {
+    let cfg = fast_cfg();
+    for (orig_d, opt_d) in bench_suite::hbm_design_pairs() {
+        let orig = run_flow(&orig_d, FlowVariant::Baseline, &cfg);
+        let opt = run_flow(&opt_d, FlowVariant::Tapa, &cfg);
+        assert!(
+            opt.util_pct[2] < orig.util_pct[2],
+            "{}: BRAM% {} !< {}",
+            orig_d.name,
+            opt.util_pct[2],
+            orig.util_pct[2]
+        );
+    }
+}
+
+#[test]
+fn headline_shape_orig_vs_opt() {
+    // Run a representative subset (fast) and check the aggregate shape:
+    // opt average at least 1.5× orig average, no opt regression > 5%.
+    let cfg = fast_cfg();
+    let mut orig_sum = 0.0;
+    let mut opt_sum = 0.0;
+    let mut n = 0.0;
+    for d in [
+        bench_suite::stencil::stencil(4, DeviceKind::U250),
+        bench_suite::stencil::stencil(6, DeviceKind::U280),
+        bench_suite::cnn::cnn(4, DeviceKind::U250),
+        bench_suite::gaussian::gaussian(16, DeviceKind::U280),
+    ] {
+        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
+        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        orig_sum += orig.fmax_mhz.unwrap_or(0.0);
+        opt_sum += opt.fmax_mhz.unwrap_or(0.0);
+        n += 1.0;
+    }
+    let (ao, at) = (orig_sum / n, opt_sum / n);
+    assert!(at > 1.5 * ao, "opt avg {at} vs orig avg {ao}");
+}
+
+#[test]
+fn experiment_tables_have_expected_shapes() {
+    let cfg = fast_cfg();
+    let t1 = experiments::run_experiment("table1", &cfg).unwrap();
+    assert_eq!(t1.rows.len(), 8);
+    let t3 = experiments::run_experiment("table3", &cfg).unwrap();
+    assert_eq!(t3.rows.len(), 2);
+    let t2 = experiments::run_experiment("table2", &cfg).unwrap();
+    assert_eq!(t2.rows.len(), 8);
+}
+
+#[test]
+fn config_file_plumbs_through_flow() {
+    let toml = r#"
+[floorplan]
+max_util = 0.6
+stages_per_crossing = 3
+[sim]
+enabled = false
+"#;
+    let cfg = tapa::config::Config::parse(toml).unwrap().flow_config();
+    assert_eq!(cfg.floorplan.max_util, 0.6);
+    assert_eq!(cfg.floorplan.stages_per_crossing, 3);
+    let d = bench_suite::stencil::stencil(3, DeviceKind::U250);
+    let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+    // 3 stages per crossing must show up in the plan.
+    let plan = opt.pipeline.expect("plan");
+    let dev = d.device.device();
+    let fp = opt.floorplan.expect("fp");
+    for (e, edge) in d.graph.edges.iter().enumerate() {
+        let crossings = fp.crossings(&dev, edge.producer, edge.consumer) as u32;
+        assert_eq!(plan.edge_lat[e], 3 * crossings);
+    }
+}

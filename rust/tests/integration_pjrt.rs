@@ -1,0 +1,87 @@
+//! Integration test of the three-layer AOT bridge: the JAX/Pallas artifact
+//! executed through PJRT must agree with the pure-Rust reference step on a
+//! *real benchmark design*, across multiple placement iterations, and the
+//! full guided placement must produce identical slot-legal positions.
+//!
+//! Skips (with a message) when `artifacts/placer_step.hlo.txt` has not
+//! been built (`make artifacts`).
+
+use tapa::bench_suite::cnn::cnn;
+use tapa::device::DeviceKind;
+use tapa::floorplan::{floorplan, FloorplanConfig};
+use tapa::hls::estimate_all;
+use tapa::place::{
+    analytical::build_arrays, place_floorplan_guided, AnalyticalParams, RustStep,
+    StepExecutor,
+};
+use tapa::runtime::Engine;
+use tapa::util::assert_allclose;
+
+fn engine() -> Option<Engine> {
+    let e = Engine::load_default();
+    if e.is_none() {
+        eprintln!("skipping PJRT integration: artifact not built");
+    }
+    e
+}
+
+#[test]
+fn pjrt_matches_rust_over_iterations_on_cnn() {
+    let Some(engine) = engine() else { return };
+    let d = cnn(4, DeviceKind::U250);
+    let device = d.device.device();
+    let est = estimate_all(&d.graph);
+    let fp = floorplan(&d.graph, &device, &est, &FloorplanConfig::default()).unwrap();
+    let params = AnalyticalParams::default();
+
+    let mut arrays = build_arrays(&d.graph, &device, &fp);
+    for iter in 0..5 {
+        let x = engine.run_step(&arrays, &params).expect("pjrt step");
+        let r = RustStep.step(&arrays, &params);
+        assert_allclose(&x.pos, &r.pos, 2e-4, 1e-5);
+        assert_allclose(&x.congestion, &r.congestion, 2e-3, 1e-4);
+        assert!(
+            (x.wl - r.wl).abs() <= 2e-3 * r.wl.abs().max(1.0),
+            "iter {iter}: wl {} vs {}",
+            x.wl,
+            r.wl
+        );
+        arrays.pos = x.pos;
+    }
+}
+
+#[test]
+fn guided_placement_same_slots_either_executor() {
+    let Some(engine) = engine() else { return };
+    let d = cnn(2, DeviceKind::U250);
+    let device = d.device.device();
+    let est = estimate_all(&d.graph);
+    let fp = floorplan(&d.graph, &device, &est, &FloorplanConfig::default()).unwrap();
+    let params = AnalyticalParams::default();
+    let (p_x, cong_x) = place_floorplan_guided(&d.graph, &device, &fp, &params, &engine);
+    let (p_r, cong_r) = place_floorplan_guided(&d.graph, &device, &fp, &params, &RustStep);
+    assert_eq!(p_x.slot, p_r.slot, "slot assignment identical (clamped)");
+    for v in 0..d.graph.num_insts() {
+        let dx = (p_x.xy[v].0 - p_r.xy[v].0).abs();
+        let dy = (p_x.xy[v].1 - p_r.xy[v].1).abs();
+        assert!(dx < 1e-2 && dy < 1e-2, "v{v} drifted: {dx},{dy}");
+    }
+    assert_allclose(&cong_x, &cong_r, 5e-3, 1e-3);
+}
+
+#[test]
+fn engine_survives_many_invocations() {
+    // Hot-path stability: 100 back-to-back executions, no leaks/crashes.
+    let Some(engine) = engine() else { return };
+    let d = cnn(2, DeviceKind::U250);
+    let device = d.device.device();
+    let est = estimate_all(&d.graph);
+    let fp = floorplan(&d.graph, &device, &est, &FloorplanConfig::default()).unwrap();
+    let arrays = build_arrays(&d.graph, &device, &fp);
+    let params = AnalyticalParams::default();
+    let first = engine.run_step(&arrays, &params).unwrap();
+    for _ in 0..100 {
+        let out = engine.run_step(&arrays, &params).unwrap();
+        assert_eq!(out.wl, first.wl);
+    }
+}
