@@ -3,9 +3,15 @@
 //! mirror the published layout, regenerated from our flow. Used by both
 //! the `tapa` CLI (`tapa bench <id>`) and `cargo bench`.
 
+use std::sync::Arc;
+
 use super::{cnn, gaussian, hbm, pagerank, sort, stencil};
 use crate::device::DeviceKind;
-use crate::flow::{run_flow, Design, FlowConfig, FlowVariant, SimOptions};
+use crate::flow::{
+    run_flow, BatchRunner, Design, FlowConfig, FlowVariant, Session, SimOptions,
+    StageCache,
+};
+use crate::place::RustStep;
 use crate::report::{fmt_cycles, fmt_mhz, fmt_pct, Table};
 use crate::sim::BurstDetector;
 use crate::util::stats::mean;
@@ -14,11 +20,18 @@ use crate::util::stats::mean;
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig12", "fig13", "fig14",
-    "fig15", "headline",
+    "fig15", "headline", "43-designs",
 ];
 
-/// Dispatch by id.
+/// Dispatch by id, sequentially.
 pub fn run_experiment(id: &str, cfg: &FlowConfig) -> Option<Table> {
+    run_experiment_jobs(id, cfg, 1)
+}
+
+/// Dispatch by id with a worker count. `jobs` is honored by the
+/// batch-driven experiments (currently `43-designs`); the table-layout
+/// experiments are inherently ordered and ignore it.
+pub fn run_experiment_jobs(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Table> {
     Some(match id {
         "table1" => table1_burst_detector(),
         "table2" => table2_coordinates(),
@@ -36,6 +49,7 @@ pub fn run_experiment(id: &str, cfg: &FlowConfig) -> Option<Table> {
         "fig14" => fig14_gauss(cfg),
         "fig15" => fig15_controls(cfg),
         "headline" => headline_summary(cfg),
+        "43-designs" => designs43(cfg, jobs),
         _ => return None,
     })
 }
@@ -48,10 +62,51 @@ pub fn no_sim(cfg: &FlowConfig) -> FlowConfig {
     }
 }
 
+/// Baseline and Tapa runs of one design through staged sessions sharing a
+/// [`StageCache`], so the HLS estimates are computed once for the pair.
 fn orig_opt(design: &Design, cfg: &FlowConfig) -> (crate::flow::FlowResult, crate::flow::FlowResult) {
-    let orig = run_flow(design, FlowVariant::Baseline, cfg);
-    let opt = run_flow(design, FlowVariant::Tapa, cfg);
+    let cache = Arc::new(StageCache::default());
+    let mut run = |variant| {
+        Session::new(design.clone(), variant, cfg.clone())
+            .with_cache(cache.clone())
+            .run_all(&RustStep)
+            .expect("in-memory session cannot fail")
+    };
+    let orig = run(FlowVariant::Baseline);
+    let opt = run(FlowVariant::Tapa);
     (orig, opt)
+}
+
+/// The full 43-design AutoBridge suite, orig vs opt per design, executed
+/// by the parallel [`BatchRunner`]. Results (and the CSV) are identical
+/// for any `jobs` count — job order is preserved and sessions are
+/// deterministic.
+pub fn designs43(cfg: &FlowConfig, jobs: usize) -> Table {
+    let cfg = no_sim(cfg);
+    let designs = super::all_autobridge_designs();
+    let mut runner = BatchRunner::new(cfg).workers(jobs);
+    for d in &designs {
+        runner.push(d.clone(), FlowVariant::Baseline);
+        runner.push(d.clone(), FlowVariant::Tapa);
+    }
+    let results = runner.run();
+    let mut t = Table::new(
+        "43-design suite — per-design frequency and LUT utilization",
+        &["Design", "Device", "Orig(MHz)", "Opt(MHz)", "OrigLUT%", "OptLUT%"],
+    );
+    for (i, d) in designs.iter().enumerate() {
+        let orig = &results[2 * i];
+        let opt = &results[2 * i + 1];
+        t.row(vec![
+            d.name.clone(),
+            d.device.name().to_string(),
+            fmt_mhz(orig.fmax_mhz),
+            fmt_mhz(opt.fmax_mhz),
+            fmt_pct(orig.util_pct[0]),
+            fmt_pct(opt.util_pct[0]),
+        ]);
+    }
+    t
 }
 
 /// Table 1: burst-detector cycle trace for the published address sequence.
@@ -580,6 +635,34 @@ mod tests {
             assert!(run_experiment(id, &cfg).is_some(), "{id}");
         }
         assert!(run_experiment("nope", &cfg).is_none());
-        assert_eq!(ALL_EXPERIMENTS.len(), 16);
+        assert_eq!(ALL_EXPERIMENTS.len(), 17);
+    }
+
+    #[test]
+    fn designs43_csv_identical_across_job_counts() {
+        // The acceptance bar for the batch runner: parallel CSV output is
+        // byte-identical to the sequential run. Restricted here to a cheap
+        // sub-check (full suite runs in `tapa bench 43-designs`): stencil
+        // designs only, via the same BatchRunner path.
+        let cfg = no_sim(&FlowConfig::default());
+        let build = |jobs: usize| {
+            let mut runner = BatchRunner::new(cfg.clone()).workers(jobs);
+            for k in 1..=4 {
+                let d = stencil::stencil(k, DeviceKind::U250);
+                runner.push(d.clone(), FlowVariant::Baseline);
+                runner.push(d, FlowVariant::Tapa);
+            }
+            let results = runner.run();
+            let mut t = Table::new("sub-suite", &["Design", "Orig", "Opt"]);
+            for i in 0..4 {
+                t.row(vec![
+                    format!("stencil{}", i + 1),
+                    fmt_mhz(results[2 * i].fmax_mhz),
+                    fmt_mhz(results[2 * i + 1].fmax_mhz),
+                ]);
+            }
+            t.to_csv()
+        };
+        assert_eq!(build(1), build(4));
     }
 }

@@ -1,0 +1,159 @@
+//! Parallel batch driver: run many `(design, variant)` sessions across
+//! `std::thread` workers — the paper's 43-design suite on all cores.
+//!
+//! Jobs are pulled from a shared atomic cursor and results are re-ordered
+//! by job index before returning, so the output is identical to a
+//! sequential run regardless of worker count or scheduling (the
+//! `tapa bench 43-designs --jobs N` CSV is byte-identical to `--jobs 1`).
+//! All workers share one [`StageCache`], so the `Baseline` and `Tapa`
+//! variants of a design estimate HLS areas only once between them.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::place::RustStep;
+
+use super::session::{Session, StageCache};
+use super::{Design, FlowConfig, FlowResult, FlowVariant};
+
+/// One unit of batch work.
+#[derive(Clone, Debug)]
+pub struct BatchJob {
+    pub design: Design,
+    pub variant: FlowVariant,
+}
+
+/// Executes a list of jobs over a pool of worker threads.
+pub struct BatchRunner {
+    cfg: FlowConfig,
+    jobs: Vec<BatchJob>,
+    workers: usize,
+}
+
+impl BatchRunner {
+    pub fn new(cfg: FlowConfig) -> BatchRunner {
+        BatchRunner { cfg, jobs: Vec::new(), workers: 1 }
+    }
+
+    /// Worker thread count (clamped to at least 1; 1 = sequential).
+    pub fn workers(mut self, n: usize) -> BatchRunner {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Queue one `(design, variant)` session.
+    pub fn push(&mut self, design: Design, variant: FlowVariant) {
+        self.jobs.push(BatchJob { design, variant });
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Run all jobs; results are returned in job-submission order.
+    pub fn run(self) -> Vec<FlowResult> {
+        let n = self.jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let cache = Arc::new(StageCache::default());
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, FlowResult)>> = Mutex::new(Vec::with_capacity(n));
+        let workers = self.workers.min(n);
+        let jobs = &self.jobs;
+        let cfg = &self.cfg;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let next = &next;
+                let done = &done;
+                let cache = &cache;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let job = &jobs[i];
+                    let mut session =
+                        Session::new(job.design.clone(), job.variant, cfg.clone())
+                            .with_cache(cache.clone());
+                    let result = session
+                        .run_all(&RustStep)
+                        .expect("in-memory session cannot fail");
+                    done.lock().unwrap().push((i, result));
+                });
+            }
+        });
+        let mut out = done.into_inner().unwrap();
+        out.sort_by_key(|(i, _)| *i);
+        out.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_flow, SimOptions};
+    use super::*;
+    use crate::bench_suite::stencil::stencil;
+    use crate::device::DeviceKind;
+
+    fn fast_cfg() -> FlowConfig {
+        FlowConfig {
+            sim: SimOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    fn suite() -> Vec<(Design, FlowVariant)> {
+        let mut jobs = Vec::new();
+        for k in 1..=3 {
+            let d = stencil(k, DeviceKind::U250);
+            jobs.push((d.clone(), FlowVariant::Baseline));
+            jobs.push((d, FlowVariant::Tapa));
+        }
+        jobs
+    }
+
+    #[test]
+    fn parallel_matches_sequential_job_for_job() {
+        let cfg = fast_cfg();
+        let mut seq = BatchRunner::new(cfg.clone());
+        let mut par = BatchRunner::new(cfg.clone()).workers(4);
+        for (d, v) in suite() {
+            seq.push(d.clone(), v);
+            par.push(d, v);
+        }
+        let a = seq.run();
+        let b = par.run();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.variant, y.variant);
+            assert_eq!(x.fmax_mhz, y.fmax_mhz);
+            assert_eq!(x.cycles, y.cycles);
+            assert_eq!(x.util_pct, y.util_pct);
+        }
+    }
+
+    #[test]
+    fn batch_matches_monolithic_run_flow() {
+        let cfg = fast_cfg();
+        let mut runner = BatchRunner::new(cfg.clone()).workers(2);
+        for (d, v) in suite() {
+            runner.push(d, v);
+        }
+        let results = runner.run();
+        for ((d, v), got) in suite().into_iter().zip(results) {
+            let want = run_flow(&d, v, &cfg);
+            assert_eq!(got.fmax_mhz, want.fmax_mhz, "{} {}", d.name, v.name());
+            assert_eq!(got.util_pct, want.util_pct, "{} {}", d.name, v.name());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        assert!(BatchRunner::new(fast_cfg()).workers(8).run().is_empty());
+    }
+}

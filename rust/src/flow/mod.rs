@@ -1,24 +1,45 @@
-//! End-to-end flow orchestration: the `tapa compile` pipeline of Fig. 1
-//! plus the evaluation variants of §7.5.
+//! Staged flow orchestration: the `tapa compile` pipeline of Fig. 1
+//! decomposed into explicit, resumable stages, plus the evaluation
+//! variants of §7.5.
 //!
 //! ```text
-//! graph ── hls ──┬─ baseline:  pack-place → route → STA          (orig)
-//!                └─ tapa:      floorplan → pipeline → guided
-//!                              place → route → STA → sim          (opt)
+//! Session(design, variant)
+//!   Estimate → Floorplan → Pipeline → Place → Route → Sta → Sim
+//!      │           │           │         │       │      │     │
+//!      └───────────┴───── SessionContext (typed artifacts) ───┘
+//!                     │ checkpoint / resume (JSON in a workdir)
+//!                     │ StageCache shared across variants
+//!                     └ BatchRunner fans sessions over threads
 //! ```
+//!
+//! [`Session`] is the primary API: run `up_to(Stage::Floorplan)`, persist
+//! to a work directory, resume later, and completed stages are never
+//! recomputed. [`run_flow`] / [`run_flow_with_executor`] remain as thin
+//! one-shot wrappers. [`BatchRunner`] executes many `(design, variant)`
+//! sessions across worker threads with a shared [`StageCache`], so e.g.
+//! `Baseline` and `Tapa` on the same design reuse one set of HLS
+//! estimates.
+
+pub mod batch;
+pub mod persist;
+pub mod session;
+pub mod stage;
+
+pub use batch::{BatchJob, BatchRunner};
+pub use session::{
+    FloorplanArtifact, PipelineArtifact, Session, SessionContext, SessionError,
+    SimArtifact, StageCache,
+};
+pub use stage::Stage;
 
 use crate::device::{Device, DeviceKind};
-use crate::floorplan::{FloorplanConfig, Floorplan};
+use crate::floorplan::{Floorplan, FloorplanConfig};
 use crate::graph::TaskGraph;
-use crate::hls::{estimate_all, TaskEstimate};
-use crate::pipeline::{pipeline_with_feedback, PipelinePlan};
-use crate::place::{
-    place_baseline, place_floorplan_guided, AnalyticalParams, Placement, RustStep,
-    StepExecutor,
-};
-use crate::route::{route, RouteReport};
-use crate::sim::{simulate, SimConfig};
-use crate::timing::{analyze_with_areas, TimingReport};
+use crate::hls::TaskEstimate;
+use crate::pipeline::PipelinePlan;
+use crate::place::{AnalyticalParams, Placement, RustStep, StepExecutor};
+use crate::route::RouteReport;
+use crate::timing::TimingReport;
 
 /// Flow variants evaluated in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -38,6 +59,15 @@ pub enum FlowVariant {
 }
 
 impl FlowVariant {
+    /// Every variant, in a stable order.
+    pub const ALL: [FlowVariant; 5] = [
+        FlowVariant::Baseline,
+        FlowVariant::Tapa,
+        FlowVariant::PipelineOnlyNoConstraints,
+        FlowVariant::FloorplanOnlyNoPipeline,
+        FlowVariant::TapaCoarse4Slot,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             FlowVariant::Baseline => "baseline",
@@ -45,6 +75,23 @@ impl FlowVariant {
             FlowVariant::PipelineOnlyNoConstraints => "pipeline-only",
             FlowVariant::FloorplanOnlyNoPipeline => "floorplan-only",
             FlowVariant::TapaCoarse4Slot => "tapa-4slot",
+        }
+    }
+
+    /// Inverse of [`FlowVariant::name`] (CLI and checkpoint files).
+    pub fn parse(s: &str) -> Option<FlowVariant> {
+        FlowVariant::ALL.into_iter().find(|v| v.name() == s)
+    }
+
+    /// The tag a [`FlowResult`] carries: `TapaCoarse4Slot` runs the tapa
+    /// path on a merged device and reports as `Tapa`; every other variant
+    /// reports as itself — including when floorplanning degraded the run
+    /// to the baseline path, so ablation experiments stay correctly
+    /// labelled.
+    pub fn canonical(self) -> FlowVariant {
+        match self {
+            FlowVariant::TapaCoarse4Slot => FlowVariant::Tapa,
+            v => v,
         }
     }
 }
@@ -105,7 +152,7 @@ impl Default for SimOptions {
     }
 }
 
-/// Run one variant of the flow on a design.
+/// Run one variant of the flow on a design — a one-shot [`Session`].
 pub fn run_flow(design: &Design, variant: FlowVariant, cfg: &FlowConfig) -> FlowResult {
     run_flow_with_executor(design, variant, cfg, &RustStep)
 }
@@ -118,27 +165,13 @@ pub fn run_flow_with_executor(
     cfg: &FlowConfig,
     exec: &dyn StepExecutor,
 ) -> FlowResult {
-    let device = match variant {
-        FlowVariant::TapaCoarse4Slot => design.device.device().merged_columns(),
-        _ => design.device.device(),
-    };
-    let estimates = estimate_all(&design.graph);
-
-    match variant {
-        FlowVariant::Baseline => run_baseline(design, &device, &estimates, cfg),
-        FlowVariant::Tapa | FlowVariant::TapaCoarse4Slot => {
-            run_tapa(design, &device, &estimates, cfg, exec, true, true)
-        }
-        FlowVariant::FloorplanOnlyNoPipeline => {
-            run_tapa(design, &device, &estimates, cfg, exec, false, true)
-        }
-        FlowVariant::PipelineOnlyNoConstraints => {
-            run_tapa(design, &device, &estimates, cfg, exec, true, false)
-        }
-    }
+    Session::new(design.clone(), variant, cfg.clone())
+        .run_all(exec)
+        .expect("in-memory session cannot fail")
 }
 
-fn utilization_pct(
+/// Resource utilization of a (possibly pipelined) design on a device.
+pub(crate) fn utilization_pct(
     g: &TaskGraph,
     device: &Device,
     estimates: &[TaskEstimate],
@@ -162,140 +195,6 @@ fn utilization_pct(
         }
     };
     [pct(0), pct(1), pct(2), pct(3), pct(4)]
-}
-
-fn run_baseline(
-    design: &Design,
-    device: &Device,
-    estimates: &[TaskEstimate],
-    cfg: &FlowConfig,
-) -> FlowResult {
-    let g = &design.graph;
-    let placement = place_baseline(g, device, estimates);
-    let route_rep = route(g, device, estimates, &placement);
-    let stages = vec![0u32; g.num_edges()];
-    let timing = analyze_with_areas(g, device, &placement, &route_rep, &stages, Some(estimates));
-    let cycles = if cfg.sim.enabled && !route_rep.failed() {
-        simulate(
-            g,
-            estimates,
-            &stages,
-            &SimConfig { max_cycles: cfg.sim.max_cycles, mem_latency: cfg.sim.mem_latency },
-        )
-        .ok()
-        .map(|r| r.cycles)
-    } else {
-        None
-    };
-    FlowResult {
-        variant: FlowVariant::Baseline,
-        fmax_mhz: timing.fmax_mhz,
-        cycles,
-        util_pct: utilization_pct(g, device, estimates, None),
-        route: route_rep,
-        timing,
-        floorplan: None,
-        pipeline: None,
-        placement,
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn run_tapa(
-    design: &Design,
-    device: &Device,
-    estimates: &[TaskEstimate],
-    cfg: &FlowConfig,
-    exec: &dyn StepExecutor,
-    do_pipeline: bool,
-    pass_constraints: bool,
-) -> FlowResult {
-    let mut g = design.graph.clone();
-    let fp_cfg = cfg.floorplan.clone();
-    let (fp, mut plan) = match pipeline_with_feedback(&mut g, device, estimates, &fp_cfg, 3) {
-        Ok(x) => x,
-        Err(_) => {
-            // Cannot floorplan at all (design too big): degrade to the
-            // baseline flow but keep the variant tag.
-            let mut r = run_baseline(design, device, estimates, cfg);
-            r.variant = FlowVariant::Tapa;
-            return r;
-        }
-    };
-    if !do_pipeline {
-        plan.edge_lat.iter_mut().for_each(|l| *l = 0);
-        plan.edge_balance.iter_mut().for_each(|l| *l = 0);
-        plan.area_overhead = crate::device::AreaVector::ZERO;
-    }
-
-    // Placement: honoring constraints uses the floorplan-guided analytical
-    // placer; the Fig.-15 control drops the constraints (packer placement)
-    // while keeping the pipeline registers.
-    let placement = if pass_constraints {
-        let (p, _cong) =
-            place_floorplan_guided(&g, device, &fp, &cfg.analytical, exec);
-        p
-    } else {
-        place_baseline(&g, device, estimates)
-    };
-
-    // Effective register stages for timing: with constraints, registers
-    // align with real crossings; without, they are scattered — half of
-    // their benefit is lost on the actual critical crossing (§7.1:
-    // under-pipelined wires unseen during HLS).
-    let stages: Vec<u32> = (0..g.num_edges())
-        .map(|e| {
-            let total = plan.total_lat(e);
-            if pass_constraints {
-                total
-            } else {
-                total / 2
-            }
-        })
-        .collect();
-
-    let mut estimates_aug: Vec<TaskEstimate> = estimates.to_vec();
-    // Attribute pipeline-register area to the producer-side tasks so the
-    // router sees it.
-    if do_pipeline {
-        for (e, edge) in g.edges.iter().enumerate() {
-            let a = crate::hls::fifo::pipeline_stage_area(edge.width_bits, plan.total_lat(e));
-            estimates_aug[edge.producer.0].area += a;
-        }
-    }
-
-    let route_rep = route(&g, device, &estimates_aug, &placement);
-    let timing = analyze_with_areas(&g, device, &placement, &route_rep, &stages, Some(&estimates_aug));
-    let cycles = if cfg.sim.enabled && !route_rep.failed() {
-        let lat: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
-        simulate(
-            &g,
-            estimates,
-            &lat,
-            &SimConfig { max_cycles: cfg.sim.max_cycles, mem_latency: cfg.sim.mem_latency },
-        )
-        .ok()
-        .map(|r| r.cycles)
-    } else {
-        None
-    };
-    FlowResult {
-        variant: if pass_constraints && do_pipeline {
-            FlowVariant::Tapa
-        } else if do_pipeline {
-            FlowVariant::PipelineOnlyNoConstraints
-        } else {
-            FlowVariant::FloorplanOnlyNoPipeline
-        },
-        fmax_mhz: timing.fmax_mhz,
-        cycles,
-        util_pct: utilization_pct(&g, device, estimates, do_pipeline.then_some(&plan)),
-        route: route_rep,
-        timing,
-        floorplan: Some(fp),
-        pipeline: Some(plan),
-        placement,
-    }
 }
 
 #[cfg(test)]
@@ -352,19 +251,9 @@ mod tests {
     fn variants_produce_tagged_results() {
         let d = design(6, 1);
         let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
-        for v in [
-            FlowVariant::Baseline,
-            FlowVariant::Tapa,
-            FlowVariant::PipelineOnlyNoConstraints,
-            FlowVariant::FloorplanOnlyNoPipeline,
-            FlowVariant::TapaCoarse4Slot,
-        ] {
+        for v in FlowVariant::ALL {
             let r = run_flow(&d, v, &cfg);
-            if v == FlowVariant::TapaCoarse4Slot {
-                assert_eq!(r.variant, FlowVariant::Tapa); // merged device, tapa path
-            } else {
-                assert_eq!(r.variant, v);
-            }
+            assert_eq!(r.variant, v.canonical());
         }
     }
 
@@ -377,5 +266,32 @@ mod tests {
         let f_full = full.fmax_mhz.unwrap_or(0.0);
         let f_fp = fponly.fmax_mhz.unwrap_or(0.0);
         assert!(f_full > f_fp, "full={f_full} floorplan-only={f_fp}");
+    }
+
+    #[test]
+    fn variant_name_parse_roundtrip() {
+        for v in FlowVariant::ALL {
+            assert_eq!(FlowVariant::parse(v.name()), Some(v));
+        }
+        assert_eq!(FlowVariant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn degraded_fallback_keeps_requested_variant() {
+        // A design far too large for the device: floorplanning fails and the
+        // flow degrades to the baseline path. The result must still carry
+        // the *requested* variant tag (previously it was always mislabelled
+        // `Tapa`, silently corrupting ablation experiments).
+        let d = design(4, 100_000);
+        let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+        for v in [
+            FlowVariant::Tapa,
+            FlowVariant::FloorplanOnlyNoPipeline,
+            FlowVariant::PipelineOnlyNoConstraints,
+        ] {
+            let r = run_flow(&d, v, &cfg);
+            assert_eq!(r.variant, v.canonical(), "requested {}", v.name());
+            assert!(r.floorplan.is_none(), "degraded run has no floorplan");
+        }
     }
 }

@@ -1,0 +1,598 @@
+//! Checkpoint (de)serialization for [`super::SessionContext`] — hand-rolled
+//! JSON over [`crate::util::json`], no external crates.
+//!
+//! The writer is deterministic, so serialize → parse → serialize is a
+//! byte-level fixpoint (asserted by tests); resumed sessions therefore
+//! produce checkpoints identical to uninterrupted ones for the shared
+//! prefix of stages.
+
+use crate::device::{AreaVector, SlotId};
+use crate::floorplan::partition::{Axis, SolveMethod};
+use crate::floorplan::{Floorplan, PartitionStats};
+use crate::graph::InstId;
+use crate::hls::{FsmSchedule, TaskEstimate};
+use crate::pipeline::PipelinePlan;
+use crate::place::{PlaceStrategy, Placement};
+use crate::route::RouteReport;
+use crate::timing::TimingReport;
+use crate::util::json::Json;
+
+use super::session::{
+    FloorplanArtifact, PipelineArtifact, SessionContext, SessionError, SimArtifact,
+};
+use super::stage::Stage;
+use super::FlowVariant;
+
+const FORMAT_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+fn num(n: impl Into<f64>) -> Json {
+    Json::Num(n.into())
+}
+
+fn unum(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn opt<T>(v: &Option<T>, f: impl Fn(&T) -> Json) -> Json {
+    match v {
+        Some(x) => f(x),
+        None => Json::Null,
+    }
+}
+
+fn u32_arr(v: &[u32]) -> Json {
+    Json::Arr(v.iter().map(|&x| unum(x as u64)).collect())
+}
+
+fn f64_arr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| num(x)).collect())
+}
+
+fn pair_arr(v: &[(usize, usize)]) -> Json {
+    Json::Arr(
+        v.iter()
+            .map(|&(a, b)| Json::Arr(vec![unum(a as u64), unum(b as u64)]))
+            .collect(),
+    )
+}
+
+fn area_json(a: &AreaVector) -> Json {
+    Json::Obj(vec![
+        ("lut".into(), unum(a.lut)),
+        ("ff".into(), unum(a.ff)),
+        ("bram18".into(), unum(a.bram18)),
+        ("dsp".into(), unum(a.dsp)),
+        ("uram".into(), unum(a.uram)),
+        ("hbm_ch".into(), unum(a.hbm_ch)),
+    ])
+}
+
+fn estimate_json(e: &TaskEstimate) -> Json {
+    let s = &e.schedule;
+    Json::Obj(vec![
+        ("area".into(), area_json(&e.area)),
+        (
+            "schedule".into(),
+            Json::Obj(vec![
+                ("ii".into(), unum(s.ii as u64)),
+                ("pipeline_depth".into(), unum(s.pipeline_depth as u64)),
+                ("trip_count".into(), unum(s.trip_count)),
+                ("startup_cycles".into(), unum(s.startup_cycles as u64)),
+                ("drain_cycles".into(), unum(s.drain_cycles as u64)),
+            ]),
+        ),
+    ])
+}
+
+fn axis_name(a: Axis) -> &'static str {
+    match a {
+        Axis::Row => "row",
+        Axis::Col => "col",
+    }
+}
+
+fn method_name(m: SolveMethod) -> &'static str {
+    match m {
+        SolveMethod::Ilp => "ilp",
+        SolveMethod::LpFm => "lp-fm",
+        SolveMethod::GreedyFm => "greedy-fm",
+    }
+}
+
+fn floorplan_json(fp: &Floorplan) -> Json {
+    Json::Obj(vec![
+        (
+            "assignment".into(),
+            Json::Arr(fp.assignment.iter().map(|s| unum(s.0 as u64)).collect()),
+        ),
+        ("cost".into(), unum(fp.cost)),
+        ("util_ratio".into(), num(fp.util_ratio)),
+        (
+            "stats".into(),
+            Json::Arr(
+                fp.stats
+                    .iter()
+                    .map(|st| {
+                        Json::Obj(vec![
+                            ("iteration".into(), unum(st.iteration as u64)),
+                            ("axis".into(), Json::Str(axis_name(st.axis).into())),
+                            ("num_vertices".into(), unum(st.num_vertices as u64)),
+                            ("num_aux_vars".into(), unum(st.num_aux_vars as u64)),
+                            ("solve_seconds".into(), num(st.solve_seconds)),
+                            ("method".into(), Json::Str(method_name(st.method).into())),
+                            ("proved_optimal".into(), Json::Bool(st.proved_optimal)),
+                            ("bb_nodes".into(), unum(st.bb_nodes as u64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn plan_json(p: &PipelinePlan) -> Json {
+    Json::Obj(vec![
+        ("edge_lat".into(), u32_arr(&p.edge_lat)),
+        ("edge_balance".into(), u32_arr(&p.edge_balance)),
+        ("area_overhead".into(), area_json(&p.area_overhead)),
+        (
+            "cycle_feedback".into(),
+            pair_arr(
+                &p.cycle_feedback
+                    .iter()
+                    .map(|&(a, b)| (a.0, b.0))
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+}
+
+fn placement_json(p: &Placement) -> Json {
+    let strategy = match p.strategy {
+        PlaceStrategy::BaselinePack => "baseline-pack",
+        PlaceStrategy::FloorplanGuided => "floorplan-guided",
+    };
+    Json::Obj(vec![
+        ("strategy".into(), Json::Str(strategy.into())),
+        (
+            "slot".into(),
+            Json::Arr(p.slot.iter().map(|s| unum(s.0 as u64)).collect()),
+        ),
+        (
+            "xy".into(),
+            Json::Arr(
+                p.xy.iter()
+                    .map(|&(x, y)| Json::Arr(vec![num(x as f64), num(y as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn route_json(r: &RouteReport) -> Json {
+    Json::Obj(vec![
+        ("slot_congestion".into(), f64_arr(&r.slot_congestion)),
+        ("boundary_util".into(), f64_arr(&r.boundary_util)),
+        ("max_congestion".into(), num(r.max_congestion)),
+        ("max_boundary".into(), num(r.max_boundary)),
+        ("placement_failed".into(), Json::Bool(r.placement_failed)),
+        ("routing_failed".into(), Json::Bool(r.routing_failed)),
+    ])
+}
+
+fn timing_json(t: &TimingReport) -> Json {
+    Json::Obj(vec![
+        ("fmax_mhz".into(), opt(&t.fmax_mhz, |&f| num(f))),
+        ("critical_ns".into(), num(t.critical_ns)),
+        ("critical_edge".into(), opt(&t.critical_edge, |&e| unum(e as u64))),
+    ])
+}
+
+/// Serialize a session context to canonical JSON text.
+pub fn context_to_json_text(ctx: &SessionContext) -> String {
+    let fields = vec![
+        ("version".to_string(), unum(FORMAT_VERSION)),
+        ("design".to_string(), Json::Str(ctx.design_name.clone())),
+        ("variant".to_string(), Json::Str(ctx.variant.name().into())),
+        (
+            "completed".to_string(),
+            Json::Arr(
+                ctx.completed
+                    .iter()
+                    .map(|s| Json::Str(s.name().into()))
+                    .collect(),
+            ),
+        ),
+        (
+            "estimates".to_string(),
+            opt(&ctx.estimates, |es| {
+                Json::Arr(es.iter().map(estimate_json).collect())
+            }),
+        ),
+        (
+            "floorplan".to_string(),
+            opt(&ctx.floorplan, |fa| {
+                Json::Obj(vec![
+                    ("degraded".into(), Json::Bool(fa.degraded)),
+                    ("extra_same_slot".into(), pair_arr(&fa.extra_same_slot)),
+                    ("floorplan".into(), opt(&fa.floorplan, floorplan_json)),
+                    ("raw_plan".into(), opt(&fa.raw_plan, plan_json)),
+                ])
+            }),
+        ),
+        (
+            "pipeline".to_string(),
+            opt(&ctx.pipeline, |pa| {
+                Json::Obj(vec![
+                    ("plan".into(), opt(&pa.plan, plan_json)),
+                    ("stages".into(), u32_arr(&pa.stages)),
+                    ("sim_lat".into(), u32_arr(&pa.sim_lat)),
+                ])
+            }),
+        ),
+        ("placement".to_string(), opt(&ctx.placement, placement_json)),
+        ("route".to_string(), opt(&ctx.route, route_json)),
+        ("timing".to_string(), opt(&ctx.timing, timing_json)),
+        (
+            "sim".to_string(),
+            opt(&ctx.sim, |s| {
+                Json::Obj(vec![("cycles".into(), opt(&s.cycles, |&c| unum(c)))])
+            }),
+        ),
+    ];
+    let mut text = Json::Obj(fields).write();
+    text.push('\n');
+    text
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+type R<T> = Result<T, SessionError>;
+
+fn bad(msg: impl Into<String>) -> SessionError {
+    SessionError::Parse(msg.into())
+}
+
+fn field<'a>(o: &'a Json, key: &str) -> R<&'a Json> {
+    o.get(key).ok_or_else(|| bad(format!("missing field `{key}`")))
+}
+
+fn get_f64(o: &Json, key: &str) -> R<f64> {
+    field(o, key)?
+        .as_f64()
+        .ok_or_else(|| bad(format!("field `{key}` is not a number")))
+}
+
+fn get_u64(o: &Json, key: &str) -> R<u64> {
+    field(o, key)?
+        .as_u64()
+        .ok_or_else(|| bad(format!("field `{key}` is not a non-negative integer")))
+}
+
+fn get_u32(o: &Json, key: &str) -> R<u32> {
+    Ok(get_u64(o, key)? as u32)
+}
+
+fn get_usize(o: &Json, key: &str) -> R<usize> {
+    Ok(get_u64(o, key)? as usize)
+}
+
+fn get_bool(o: &Json, key: &str) -> R<bool> {
+    field(o, key)?
+        .as_bool()
+        .ok_or_else(|| bad(format!("field `{key}` is not a boolean")))
+}
+
+fn get_str<'a>(o: &'a Json, key: &str) -> R<&'a str> {
+    field(o, key)?
+        .as_str()
+        .ok_or_else(|| bad(format!("field `{key}` is not a string")))
+}
+
+fn get_arr<'a>(o: &'a Json, key: &str) -> R<&'a [Json]> {
+    field(o, key)?
+        .as_arr()
+        .ok_or_else(|| bad(format!("field `{key}` is not an array")))
+}
+
+fn get_opt<'a, T>(o: &'a Json, key: &str, f: impl Fn(&'a Json) -> R<T>) -> R<Option<T>> {
+    let v = field(o, key)?;
+    if v.is_null() {
+        Ok(None)
+    } else {
+        f(v).map(Some)
+    }
+}
+
+fn u32_vec(o: &Json, key: &str) -> R<Vec<u32>> {
+    get_arr(o, key)?
+        .iter()
+        .map(|v| {
+            v.as_u64()
+                .map(|n| n as u32)
+                .ok_or_else(|| bad(format!("`{key}` element is not an integer")))
+        })
+        .collect()
+}
+
+fn f64_vec(o: &Json, key: &str) -> R<Vec<f64>> {
+    get_arr(o, key)?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| bad(format!("`{key}` element is not a number"))))
+        .collect()
+}
+
+fn pair_vec(o: &Json, key: &str) -> R<Vec<(usize, usize)>> {
+    get_arr(o, key)?
+        .iter()
+        .map(|v| {
+            let arr = v.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                bad(format!("`{key}` element is not a 2-element array"))
+            })?;
+            let a = arr[0].as_usize().ok_or_else(|| bad(format!("`{key}` pair not ints")))?;
+            let b = arr[1].as_usize().ok_or_else(|| bad(format!("`{key}` pair not ints")))?;
+            Ok((a, b))
+        })
+        .collect()
+}
+
+fn parse_area(v: &Json) -> R<AreaVector> {
+    Ok(AreaVector {
+        lut: get_u64(v, "lut")?,
+        ff: get_u64(v, "ff")?,
+        bram18: get_u64(v, "bram18")?,
+        dsp: get_u64(v, "dsp")?,
+        uram: get_u64(v, "uram")?,
+        hbm_ch: get_u64(v, "hbm_ch")?,
+    })
+}
+
+fn parse_estimate(v: &Json) -> R<TaskEstimate> {
+    let s = field(v, "schedule")?;
+    Ok(TaskEstimate {
+        area: parse_area(field(v, "area")?)?,
+        schedule: FsmSchedule {
+            ii: get_u32(s, "ii")?,
+            pipeline_depth: get_u32(s, "pipeline_depth")?,
+            trip_count: get_u64(s, "trip_count")?,
+            startup_cycles: get_u32(s, "startup_cycles")?,
+            drain_cycles: get_u32(s, "drain_cycles")?,
+        },
+    })
+}
+
+fn parse_floorplan(v: &Json) -> R<Floorplan> {
+    let assignment = get_arr(v, "assignment")?
+        .iter()
+        .map(|s| s.as_usize().map(SlotId).ok_or_else(|| bad("bad slot id")))
+        .collect::<R<Vec<_>>>()?;
+    let stats = get_arr(v, "stats")?
+        .iter()
+        .map(|st| {
+            Ok(PartitionStats {
+                iteration: get_usize(st, "iteration")?,
+                axis: match get_str(st, "axis")? {
+                    "row" => Axis::Row,
+                    "col" => Axis::Col,
+                    other => return Err(bad(format!("unknown axis `{other}`"))),
+                },
+                num_vertices: get_usize(st, "num_vertices")?,
+                num_aux_vars: get_usize(st, "num_aux_vars")?,
+                solve_seconds: get_f64(st, "solve_seconds")?,
+                method: match get_str(st, "method")? {
+                    "ilp" => SolveMethod::Ilp,
+                    "lp-fm" => SolveMethod::LpFm,
+                    "greedy-fm" => SolveMethod::GreedyFm,
+                    other => return Err(bad(format!("unknown solve method `{other}`"))),
+                },
+                proved_optimal: get_bool(st, "proved_optimal")?,
+                bb_nodes: get_usize(st, "bb_nodes")?,
+            })
+        })
+        .collect::<R<Vec<_>>>()?;
+    Ok(Floorplan {
+        assignment,
+        cost: get_u64(v, "cost")?,
+        util_ratio: get_f64(v, "util_ratio")?,
+        stats,
+    })
+}
+
+fn parse_plan(v: &Json) -> R<PipelinePlan> {
+    Ok(PipelinePlan {
+        edge_lat: u32_vec(v, "edge_lat")?,
+        edge_balance: u32_vec(v, "edge_balance")?,
+        area_overhead: parse_area(field(v, "area_overhead")?)?,
+        cycle_feedback: pair_vec(v, "cycle_feedback")?
+            .into_iter()
+            .map(|(a, b)| (InstId(a), InstId(b)))
+            .collect(),
+    })
+}
+
+fn parse_placement(v: &Json) -> R<Placement> {
+    let strategy = match get_str(v, "strategy")? {
+        "baseline-pack" => PlaceStrategy::BaselinePack,
+        "floorplan-guided" => PlaceStrategy::FloorplanGuided,
+        other => return Err(bad(format!("unknown placement strategy `{other}`"))),
+    };
+    let slot = get_arr(v, "slot")?
+        .iter()
+        .map(|s| s.as_usize().map(SlotId).ok_or_else(|| bad("bad slot id")))
+        .collect::<R<Vec<_>>>()?;
+    let xy = get_arr(v, "xy")?
+        .iter()
+        .map(|p| {
+            let arr = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| bad("xy element is not a 2-element array"))?;
+            let x = arr[0].as_f64().ok_or_else(|| bad("xy not numbers"))? as f32;
+            let y = arr[1].as_f64().ok_or_else(|| bad("xy not numbers"))? as f32;
+            Ok((x, y))
+        })
+        .collect::<R<Vec<_>>>()?;
+    Ok(Placement { strategy, slot, xy })
+}
+
+fn parse_route(v: &Json) -> R<RouteReport> {
+    Ok(RouteReport {
+        slot_congestion: f64_vec(v, "slot_congestion")?,
+        boundary_util: f64_vec(v, "boundary_util")?,
+        max_congestion: get_f64(v, "max_congestion")?,
+        max_boundary: get_f64(v, "max_boundary")?,
+        placement_failed: get_bool(v, "placement_failed")?,
+        routing_failed: get_bool(v, "routing_failed")?,
+    })
+}
+
+fn parse_timing(v: &Json) -> R<TimingReport> {
+    Ok(TimingReport {
+        fmax_mhz: get_opt(v, "fmax_mhz", |x| {
+            x.as_f64().ok_or_else(|| bad("fmax_mhz not a number"))
+        })?,
+        critical_ns: get_f64(v, "critical_ns")?,
+        critical_edge: get_opt(v, "critical_edge", |x| {
+            x.as_usize().ok_or_else(|| bad("critical_edge not an integer"))
+        })?,
+    })
+}
+
+/// Parse a checkpoint produced by [`context_to_json_text`].
+pub fn context_from_json_text(text: &str) -> R<SessionContext> {
+    let root = Json::parse(text).map_err(|e| bad(e.to_string()))?;
+    let version = get_u64(&root, "version")?;
+    if version != FORMAT_VERSION {
+        return Err(bad(format!(
+            "unsupported checkpoint version {version} (expected {FORMAT_VERSION})"
+        )));
+    }
+    let variant_name = get_str(&root, "variant")?;
+    let variant = FlowVariant::parse(variant_name)
+        .ok_or_else(|| bad(format!("unknown variant `{variant_name}`")))?;
+    let completed = get_arr(&root, "completed")?
+        .iter()
+        .map(|s| {
+            s.as_str()
+                .and_then(Stage::parse)
+                .ok_or_else(|| bad("unknown stage in `completed`"))
+        })
+        .collect::<R<Vec<_>>>()?;
+    Ok(SessionContext {
+        design_name: get_str(&root, "design")?.to_string(),
+        variant,
+        completed,
+        estimates: get_opt(&root, "estimates", |v| {
+            v.as_arr()
+                .ok_or_else(|| bad("estimates is not an array"))?
+                .iter()
+                .map(parse_estimate)
+                .collect()
+        })?,
+        floorplan: get_opt(&root, "floorplan", |v| {
+            Ok(FloorplanArtifact {
+                degraded: get_bool(v, "degraded")?,
+                extra_same_slot: pair_vec(v, "extra_same_slot")?,
+                floorplan: get_opt(v, "floorplan", parse_floorplan)?,
+                raw_plan: get_opt(v, "raw_plan", parse_plan)?,
+            })
+        })?,
+        pipeline: get_opt(&root, "pipeline", |v| {
+            Ok(PipelineArtifact {
+                plan: get_opt(v, "plan", parse_plan)?,
+                stages: u32_vec(v, "stages")?,
+                sim_lat: u32_vec(v, "sim_lat")?,
+            })
+        })?,
+        placement: get_opt(&root, "placement", parse_placement)?,
+        route: get_opt(&root, "route", parse_route)?,
+        timing: get_opt(&root, "timing", parse_timing)?,
+        sim: get_opt(&root, "sim", |v| {
+            Ok(SimArtifact {
+                cycles: get_opt(v, "cycles", |c| {
+                    c.as_u64().ok_or_else(|| bad("cycles not an integer"))
+                })?,
+            })
+        })?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Design, FlowConfig, Session};
+    use super::*;
+    use crate::device::DeviceKind;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::place::RustStep;
+
+    fn small_design() -> Design {
+        let mut b = TaskGraphBuilder::new("persist_chain");
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 25,
+                alu_ops: 200,
+                bram_bytes: 48 * 1024,
+                uram_bytes: 0,
+                trip_count: 128,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", 6);
+        for i in 0..5 {
+            b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+        }
+        Design {
+            name: "persist_chain".into(),
+            graph: b.build().unwrap(),
+            device: DeviceKind::U250,
+        }
+    }
+
+    #[test]
+    fn empty_context_roundtrips() {
+        let ctx = SessionContext::new("d", super::super::FlowVariant::Baseline);
+        let text = context_to_json_text(&ctx);
+        let back = context_from_json_text(&text).unwrap();
+        assert_eq!(back.design_name, "d");
+        assert_eq!(back.variant, super::super::FlowVariant::Baseline);
+        assert!(back.completed.is_empty());
+        assert!(back.estimates.is_none());
+        // Canonical: serialize-parse-serialize is a fixpoint.
+        assert_eq!(context_to_json_text(&back), text);
+    }
+
+    #[test]
+    fn full_context_roundtrips_byte_identically() {
+        let mut s = Session::new(
+            small_design(),
+            super::super::FlowVariant::Tapa,
+            FlowConfig::default(),
+        );
+        let _ = s.run_all(&RustStep).unwrap();
+        let text = context_to_json_text(s.context());
+        let back = context_from_json_text(&text).unwrap();
+        assert_eq!(context_to_json_text(&back), text);
+        assert_eq!(back.completed, s.context().completed);
+        assert_eq!(
+            back.sim.as_ref().unwrap().cycles,
+            s.context().sim.as_ref().unwrap().cycles
+        );
+    }
+
+    #[test]
+    fn rejects_bad_checkpoints() {
+        assert!(context_from_json_text("not json").is_err());
+        assert!(context_from_json_text("{}").is_err());
+        let ctx = SessionContext::new("d", super::super::FlowVariant::Tapa);
+        let bumped = context_to_json_text(&ctx).replace("\"version\":1", "\"version\":99");
+        assert!(context_from_json_text(&bumped).is_err());
+    }
+}

@@ -1,0 +1,732 @@
+//! Staged compilation sessions — the public API the `tapa compile`
+//! pipeline is built on.
+//!
+//! A [`Session`] decomposes one `(design, variant)` compilation into the
+//! explicit stages of [`Stage::ALL`], each consuming the previous stage's
+//! artifact from a [`SessionContext`] and producing its own. The context
+//! can be checkpointed to a work directory as JSON after any prefix of the
+//! pipeline and resumed later, so expensive phases are never recomputed
+//! (mirroring rapidstream-tapa's `load_persistent_context` /
+//! `store_persistent_context` step protocol). A [`StageCache`] shares
+//! variant-independent artifacts — today the HLS estimates — across
+//! sessions on the same design, so running `Baseline` and `Tapa` back to
+//! back estimates only once.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::device::Device;
+use crate::floorplan::Floorplan;
+use crate::graph::{InstId, TaskGraph};
+use crate::hls::{estimate_all, TaskEstimate};
+use crate::pipeline::{pipeline_with_feedback, PipelinePlan};
+use crate::place::{place_baseline, place_floorplan_guided, Placement, StepExecutor};
+use crate::route::{route, RouteReport};
+use crate::sim::{simulate, SimConfig};
+use crate::timing::{analyze_with_areas, TimingReport};
+
+use super::stage::Stage;
+use super::{utilization_pct, Design, FlowConfig, FlowResult, FlowVariant};
+
+/// Session failures. Stage execution itself never fails (an infeasible
+/// floorplan degrades the session to the baseline path instead); errors
+/// come only from checkpoint persistence.
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    #[error("io error on {0}: {1}")]
+    Io(String, String),
+    #[error("checkpoint parse error: {0}")]
+    Parse(String),
+    #[error("checkpoint mismatch: {0}")]
+    Mismatch(String),
+    #[error("no checkpoint for design `{0}` in {1}")]
+    NotFound(String, String),
+}
+
+/// Artifact of [`Stage::Floorplan`].
+///
+/// The §5.2 feedback loop computes the floorplan and a trial pipelining
+/// plan jointly; the raw plan is carried here so [`Stage::Pipeline`] can
+/// specialize it per variant without re-solving.
+#[derive(Clone, Debug, Default)]
+pub struct FloorplanArtifact {
+    /// `None` for the `Baseline` variant and for degraded runs.
+    pub floorplan: Option<Floorplan>,
+    /// Joint product of the feedback loop, consumed by the Pipeline stage.
+    pub raw_plan: Option<PipelinePlan>,
+    /// `same_slot` pairs the feedback loop appended to the working graph
+    /// (instance indices) — re-applied when a checkpoint is resumed.
+    pub extra_same_slot: Vec<(usize, usize)>,
+    /// Floorplanning was infeasible; the rest of the session follows the
+    /// baseline path but keeps the requested variant tag.
+    pub degraded: bool,
+}
+
+/// Artifact of [`Stage::Pipeline`].
+#[derive(Clone, Debug, Default)]
+pub struct PipelineArtifact {
+    /// The variant-specialized plan; `None` on the baseline path.
+    pub plan: Option<PipelinePlan>,
+    /// Effective register stages per edge as seen by timing analysis
+    /// (halved when constraints are dropped — §7.1).
+    pub stages: Vec<u32>,
+    /// Inserted latency per edge as seen by the simulator.
+    pub sim_lat: Vec<u32>,
+}
+
+/// Artifact of [`Stage::Sim`]. Wrapped so "simulation ran and was skipped
+/// or failed" is distinguishable from "stage not executed yet".
+#[derive(Clone, Debug, Default)]
+pub struct SimArtifact {
+    pub cycles: Option<u64>,
+}
+
+/// Everything a session has computed so far — one slot per stage, plus
+/// identity for checkpoint validation.
+#[derive(Clone, Debug)]
+pub struct SessionContext {
+    pub design_name: String,
+    pub variant: FlowVariant,
+    /// Stages completed, in execution order.
+    pub completed: Vec<Stage>,
+    pub estimates: Option<Vec<TaskEstimate>>,
+    pub floorplan: Option<FloorplanArtifact>,
+    pub pipeline: Option<PipelineArtifact>,
+    pub placement: Option<Placement>,
+    pub route: Option<RouteReport>,
+    pub timing: Option<TimingReport>,
+    pub sim: Option<SimArtifact>,
+}
+
+impl SessionContext {
+    pub fn new(design_name: &str, variant: FlowVariant) -> Self {
+        SessionContext {
+            design_name: design_name.to_string(),
+            variant,
+            completed: Vec::new(),
+            estimates: None,
+            floorplan: None,
+            pipeline: None,
+            placement: None,
+            route: None,
+            timing: None,
+            sim: None,
+        }
+    }
+
+    pub fn is_complete(&self, stage: Stage) -> bool {
+        self.completed.contains(&stage)
+    }
+}
+
+/// Cross-session cache for variant-independent stage artifacts, shared by
+/// the batch runner and by experiment helpers that run several variants of
+/// one design. Keyed by design identity; thread-safe.
+#[derive(Default)]
+pub struct StageCache {
+    estimates: Mutex<HashMap<String, Arc<Vec<TaskEstimate>>>>,
+    computes: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl StageCache {
+    fn key(design: &Design) -> String {
+        // Name plus shape guards against two generators reusing a name.
+        format!(
+            "{}#{}v{}e",
+            design.name,
+            design.graph.num_insts(),
+            design.graph.num_edges()
+        )
+    }
+
+    /// HLS estimates for a design, computed at most once per design (two
+    /// racing cold misses may both estimate, but one result wins and the
+    /// lock is never held across the computation, so workers estimating
+    /// *different* designs do not serialize).
+    pub fn estimates_for(&self, design: &Design) -> Arc<Vec<TaskEstimate>> {
+        let key = Self::key(design);
+        if let Some(hit) = self.estimates.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        let est = Arc::new(estimate_all(&design.graph));
+        let mut map = self.estimates.lock().unwrap();
+        if let Some(winner) = map.get(&key) {
+            // Lost a race; the computation is deterministic, keep theirs.
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return winner.clone();
+        }
+        self.computes.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, est.clone());
+        est
+    }
+
+    /// `(computes, hits)` counters — tests assert estimate reuse with these.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.computes.load(Ordering::Relaxed), self.hits.load(Ordering::Relaxed))
+    }
+}
+
+/// One staged compilation of a design under a flow variant.
+pub struct Session {
+    design: Design,
+    variant: FlowVariant,
+    cfg: FlowConfig,
+    ctx: SessionContext,
+    /// Working graph: the design graph plus `same_slot` constraints added
+    /// by the floorplan feedback loop.
+    graph: TaskGraph,
+    workdir: Option<PathBuf>,
+    cache: Option<Arc<StageCache>>,
+    /// Stages actually executed by this process (checkpoint-loaded stages
+    /// are in `ctx.completed` but not here).
+    executed: Vec<Stage>,
+}
+
+impl Session {
+    pub fn new(design: Design, variant: FlowVariant, cfg: FlowConfig) -> Session {
+        let graph = design.graph.clone();
+        let ctx = SessionContext::new(&design.name, variant);
+        Session {
+            design,
+            variant,
+            cfg,
+            ctx,
+            graph,
+            workdir: None,
+            cache: None,
+            executed: Vec::new(),
+        }
+    }
+
+    /// Persist the context to `dir` after every `up_to` call.
+    pub fn with_workdir(mut self, dir: impl Into<PathBuf>) -> Session {
+        self.workdir = Some(dir.into());
+        self
+    }
+
+    /// Share variant-independent artifacts with other sessions.
+    pub fn with_cache(mut self, cache: Arc<StageCache>) -> Session {
+        self.cache = Some(cache);
+        self
+    }
+
+    pub fn design(&self) -> &Design {
+        &self.design
+    }
+
+    pub fn variant(&self) -> FlowVariant {
+        self.variant
+    }
+
+    pub fn context(&self) -> &SessionContext {
+        &self.ctx
+    }
+
+    /// The configured work directory, if any.
+    pub fn workdir_path(&self) -> Option<&Path> {
+        self.workdir.as_deref()
+    }
+
+    /// Stages executed by this process (not loaded from a checkpoint).
+    pub fn executed_stages(&self) -> &[Stage] {
+        &self.executed
+    }
+
+    /// Stages restored from a checkpoint rather than executed here.
+    pub fn resumed_stages(&self) -> Vec<Stage> {
+        self.ctx
+            .completed
+            .iter()
+            .copied()
+            .filter(|s| !self.executed.contains(s))
+            .collect()
+    }
+
+    /// Checkpoint file for a `(design, variant)` pair inside `workdir`.
+    pub fn checkpoint_path(workdir: &Path, design_name: &str, variant: FlowVariant) -> PathBuf {
+        workdir.join(format!("{design_name}__{}.ctx.json", variant.name()))
+    }
+
+    /// Reload a checkpointed session from `workdir`. With `variant: None`
+    /// the directory is scanned for the design's checkpoints; exactly one
+    /// must exist.
+    pub fn resume(
+        design: Design,
+        variant: Option<FlowVariant>,
+        cfg: FlowConfig,
+        workdir: &Path,
+    ) -> Result<Session, SessionError> {
+        let candidates: Vec<FlowVariant> = match variant {
+            Some(v) => vec![v],
+            None => FlowVariant::ALL.to_vec(),
+        };
+        let mut found: Option<(FlowVariant, PathBuf)> = None;
+        for v in candidates {
+            let path = Self::checkpoint_path(workdir, &design.name, v);
+            if path.exists() {
+                if found.is_some() {
+                    return Err(SessionError::Mismatch(format!(
+                        "multiple checkpoints for `{}` in {}; pass --variant",
+                        design.name,
+                        workdir.display()
+                    )));
+                }
+                found = Some((v, path));
+            }
+        }
+        let Some((v, path)) = found else {
+            return Err(SessionError::NotFound(
+                design.name.clone(),
+                workdir.display().to_string(),
+            ));
+        };
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| SessionError::Io(path.display().to_string(), e.to_string()))?;
+        let ctx = super::persist::context_from_json_text(&text)?;
+        if ctx.design_name != design.name {
+            return Err(SessionError::Mismatch(format!(
+                "checkpoint is for design `{}`, not `{}`",
+                ctx.design_name, design.name
+            )));
+        }
+        if ctx.variant != v {
+            return Err(SessionError::Mismatch(format!(
+                "checkpoint variant `{}` does not match file name `{}`",
+                ctx.variant.name(),
+                v.name()
+            )));
+        }
+        let n_insts = design.graph.num_insts();
+        let n_edges = design.graph.num_edges();
+        if let Some(est) = &ctx.estimates {
+            if est.len() != n_insts {
+                return Err(SessionError::Mismatch(format!(
+                    "checkpoint has {} estimates for a {}-instance design",
+                    est.len(),
+                    n_insts
+                )));
+            }
+        }
+        if let Some(pipe) = &ctx.pipeline {
+            if pipe.stages.len() != n_edges || pipe.sim_lat.len() != n_edges {
+                return Err(SessionError::Mismatch(format!(
+                    "checkpoint pipeline arrays do not match {n_edges} edges"
+                )));
+            }
+            if let Some(plan) = &pipe.plan {
+                Self::check_plan_shape(plan, n_edges)?;
+            }
+        }
+        if let Some(fa) = &ctx.floorplan {
+            if let Some(fp) = &fa.floorplan {
+                if fp.assignment.len() != n_insts {
+                    return Err(SessionError::Mismatch(format!(
+                        "checkpoint floorplan assigns {} of {} instances",
+                        fp.assignment.len(),
+                        n_insts
+                    )));
+                }
+            }
+            if let Some(plan) = &fa.raw_plan {
+                Self::check_plan_shape(plan, n_edges)?;
+            }
+        }
+        if let Some(p) = &ctx.placement {
+            if p.slot.len() != n_insts || p.xy.len() != n_insts {
+                return Err(SessionError::Mismatch(format!(
+                    "checkpoint placement does not match {n_insts} instances"
+                )));
+            }
+        }
+        let mut graph = design.graph.clone();
+        if let Some(fa) = &ctx.floorplan {
+            for &(a, b) in &fa.extra_same_slot {
+                if a >= n_insts || b >= n_insts {
+                    return Err(SessionError::Mismatch(format!(
+                        "checkpoint same-slot pair ({a}, {b}) out of range"
+                    )));
+                }
+                graph.same_slot.push((InstId(a), InstId(b)));
+            }
+        }
+        Ok(Session {
+            design,
+            variant: v,
+            cfg,
+            ctx,
+            graph,
+            workdir: Some(workdir.to_path_buf()),
+            cache: None,
+            executed: Vec::new(),
+        })
+    }
+
+    fn check_plan_shape(plan: &PipelinePlan, n_edges: usize) -> Result<(), SessionError> {
+        if plan.edge_lat.len() != n_edges || plan.edge_balance.len() != n_edges {
+            return Err(SessionError::Mismatch(format!(
+                "checkpoint pipeline plan does not match {n_edges} edges"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Write the context to the session's work directory.
+    pub fn checkpoint(&self) -> Result<PathBuf, SessionError> {
+        let Some(dir) = &self.workdir else {
+            return Err(SessionError::Mismatch(
+                "session has no work directory; use with_workdir".into(),
+            ));
+        };
+        std::fs::create_dir_all(dir)
+            .map_err(|e| SessionError::Io(dir.display().to_string(), e.to_string()))?;
+        let path = Self::checkpoint_path(dir, &self.design.name, self.variant);
+        let text = super::persist::context_to_json_text(&self.ctx);
+        std::fs::write(&path, text)
+            .map_err(|e| SessionError::Io(path.display().to_string(), e.to_string()))?;
+        Ok(path)
+    }
+
+    /// Run every incomplete stage up to and including `target`, then
+    /// checkpoint if a work directory is configured. Already-complete
+    /// stages (from earlier calls or a resumed checkpoint) are skipped.
+    pub fn up_to(
+        &mut self,
+        target: Stage,
+        exec: &dyn StepExecutor,
+    ) -> Result<&SessionContext, SessionError> {
+        for st in Stage::ALL {
+            if st > target {
+                break;
+            }
+            if self.ctx.is_complete(st) {
+                continue;
+            }
+            self.run_stage(st, exec);
+            self.ctx.completed.push(st);
+            self.executed.push(st);
+        }
+        if self.workdir.is_some() {
+            self.checkpoint()?;
+        }
+        Ok(&self.ctx)
+    }
+
+    /// Run the whole pipeline and assemble the [`FlowResult`].
+    pub fn run_all(&mut self, exec: &dyn StepExecutor) -> Result<FlowResult, SessionError> {
+        self.up_to(Stage::Sim, exec)?;
+        Ok(self.result().expect("all stages complete"))
+    }
+
+    /// Assemble the flow result once every stage has completed.
+    pub fn result(&self) -> Option<FlowResult> {
+        if !self.ctx.is_complete(Stage::Sim) {
+            return None;
+        }
+        let (do_pipeline, _) = self.flags();
+        let est = self.ctx.estimates.as_ref()?;
+        let fa = self.ctx.floorplan.as_ref()?;
+        let pipe = self.ctx.pipeline.as_ref()?;
+        let timing = self.ctx.timing.clone()?;
+        let device = self.device();
+        let include_plan = if !self.baseline_path() && do_pipeline {
+            pipe.plan.as_ref()
+        } else {
+            None
+        };
+        Some(FlowResult {
+            variant: self.variant.canonical(),
+            fmax_mhz: timing.fmax_mhz,
+            cycles: self.ctx.sim.as_ref()?.cycles,
+            util_pct: utilization_pct(&self.graph, &device, est, include_plan),
+            route: self.ctx.route.clone()?,
+            timing,
+            floorplan: fa.floorplan.clone(),
+            pipeline: pipe.plan.clone(),
+            placement: self.ctx.placement.clone()?,
+        })
+    }
+
+    fn device(&self) -> Device {
+        match self.variant {
+            FlowVariant::TapaCoarse4Slot => self.design.device.device().merged_columns(),
+            _ => self.design.device.device(),
+        }
+    }
+
+    /// `(do_pipeline, pass_constraints)` for the session's variant.
+    fn flags(&self) -> (bool, bool) {
+        match self.variant {
+            FlowVariant::Baseline => (false, false),
+            FlowVariant::Tapa | FlowVariant::TapaCoarse4Slot => (true, true),
+            FlowVariant::FloorplanOnlyNoPipeline => (false, true),
+            FlowVariant::PipelineOnlyNoConstraints => (true, false),
+        }
+    }
+
+    /// True when the session follows the baseline (unconstrained) path —
+    /// either by variant or because floorplanning degraded.
+    fn baseline_path(&self) -> bool {
+        self.variant == FlowVariant::Baseline
+            || self.ctx.floorplan.as_ref().map_or(false, |f| f.degraded)
+    }
+
+    /// Estimates with pipeline-register area attributed to producer-side
+    /// tasks, as the router and STA see them.
+    fn augmented_estimates(&self) -> Vec<TaskEstimate> {
+        let est = self.ctx.estimates.as_ref().expect("estimate stage done").clone();
+        let (do_pipeline, _) = self.flags();
+        if self.baseline_path() || !do_pipeline {
+            return est;
+        }
+        let Some(plan) = self.ctx.pipeline.as_ref().and_then(|p| p.plan.as_ref()) else {
+            return est;
+        };
+        let mut est = est;
+        for (e, edge) in self.graph.edges.iter().enumerate() {
+            let a = crate::hls::fifo::pipeline_stage_area(edge.width_bits, plan.total_lat(e));
+            est[edge.producer.0].area += a;
+        }
+        est
+    }
+
+    fn run_stage(&mut self, st: Stage, exec: &dyn StepExecutor) {
+        match st {
+            Stage::Estimate => {
+                let est: Vec<TaskEstimate> = match &self.cache {
+                    Some(c) => (*c.estimates_for(&self.design)).clone(),
+                    None => estimate_all(&self.design.graph),
+                };
+                self.ctx.estimates = Some(est);
+            }
+            Stage::Floorplan => {
+                let art = if self.variant == FlowVariant::Baseline {
+                    FloorplanArtifact::default()
+                } else {
+                    let est = self.ctx.estimates.as_ref().expect("estimate stage done");
+                    let device = self.device();
+                    let mut g = self.graph.clone();
+                    let base_len = g.same_slot.len();
+                    match pipeline_with_feedback(&mut g, &device, est, &self.cfg.floorplan, 3)
+                    {
+                        Ok((fp, plan)) => {
+                            let extra = g.same_slot[base_len..]
+                                .iter()
+                                .map(|&(a, b)| (a.0, b.0))
+                                .collect();
+                            self.graph = g;
+                            FloorplanArtifact {
+                                floorplan: Some(fp),
+                                raw_plan: Some(plan),
+                                extra_same_slot: extra,
+                                degraded: false,
+                            }
+                        }
+                        // Cannot floorplan at all (design too big): the rest
+                        // of the session degrades to the baseline path but
+                        // keeps the requested variant tag.
+                        Err(_) => FloorplanArtifact { degraded: true, ..Default::default() },
+                    }
+                };
+                self.ctx.floorplan = Some(art);
+            }
+            Stage::Pipeline => {
+                let ne = self.graph.num_edges();
+                let (do_pipeline, pass_constraints) = self.flags();
+                let fa = self.ctx.floorplan.as_ref().expect("floorplan stage done");
+                let art = if self.variant == FlowVariant::Baseline || fa.degraded {
+                    PipelineArtifact {
+                        plan: None,
+                        stages: vec![0; ne],
+                        sim_lat: vec![0; ne],
+                    }
+                } else {
+                    let mut plan = fa
+                        .raw_plan
+                        .clone()
+                        .expect("non-degraded floorplan carries a raw plan");
+                    if !do_pipeline {
+                        plan.edge_lat.iter_mut().for_each(|l| *l = 0);
+                        plan.edge_balance.iter_mut().for_each(|l| *l = 0);
+                        plan.area_overhead = crate::device::AreaVector::ZERO;
+                    }
+                    // Effective register stages for timing: with constraints,
+                    // registers align with real crossings; without, they are
+                    // scattered — half their benefit is lost on the actual
+                    // critical crossing (§7.1).
+                    let stages = (0..ne)
+                        .map(|e| {
+                            let total = plan.total_lat(e);
+                            if pass_constraints {
+                                total
+                            } else {
+                                total / 2
+                            }
+                        })
+                        .collect();
+                    let sim_lat = (0..ne).map(|e| plan.total_lat(e)).collect();
+                    PipelineArtifact { plan: Some(plan), stages, sim_lat }
+                };
+                self.ctx.pipeline = Some(art);
+            }
+            Stage::Place => {
+                let device = self.device();
+                let (_, pass_constraints) = self.flags();
+                let placement = if self.baseline_path() || !pass_constraints {
+                    let est = self.ctx.estimates.as_ref().expect("estimate stage done");
+                    place_baseline(&self.graph, &device, est)
+                } else {
+                    let fp = self
+                        .ctx
+                        .floorplan
+                        .as_ref()
+                        .and_then(|f| f.floorplan.as_ref())
+                        .expect("constrained placement needs a floorplan");
+                    place_floorplan_guided(&self.graph, &device, fp, &self.cfg.analytical, exec)
+                        .0
+                };
+                self.ctx.placement = Some(placement);
+            }
+            Stage::Route => {
+                let device = self.device();
+                let aug = self.augmented_estimates();
+                let rep = route(
+                    &self.graph,
+                    &device,
+                    &aug,
+                    self.ctx.placement.as_ref().expect("place stage done"),
+                );
+                self.ctx.route = Some(rep);
+            }
+            Stage::Sta => {
+                let device = self.device();
+                let aug = self.augmented_estimates();
+                let timing = analyze_with_areas(
+                    &self.graph,
+                    &device,
+                    self.ctx.placement.as_ref().expect("place stage done"),
+                    self.ctx.route.as_ref().expect("route stage done"),
+                    &self.ctx.pipeline.as_ref().expect("pipeline stage done").stages,
+                    Some(&aug),
+                );
+                self.ctx.timing = Some(timing);
+            }
+            Stage::Sim => {
+                let rep = self.ctx.route.as_ref().expect("route stage done");
+                let cycles = if self.cfg.sim.enabled && !rep.failed() {
+                    let est = self.ctx.estimates.as_ref().expect("estimate stage done");
+                    let lat = &self.ctx.pipeline.as_ref().expect("pipeline stage done").sim_lat;
+                    simulate(
+                        &self.graph,
+                        est,
+                        lat,
+                        &SimConfig {
+                            max_cycles: self.cfg.sim.max_cycles,
+                            mem_latency: self.cfg.sim.mem_latency,
+                        },
+                    )
+                    .ok()
+                    .map(|r| r.cycles)
+                } else {
+                    None
+                };
+                self.ctx.sim = Some(SimArtifact { cycles });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::place::RustStep;
+
+    fn chain_design(n: usize) -> Design {
+        let mut b = TaskGraphBuilder::new(&format!("session_chain_{n}"));
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 25,
+                alu_ops: 200,
+                bram_bytes: 48 * 1024,
+                uram_bytes: 0,
+                trip_count: 256,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+        }
+        Design {
+            name: format!("session_chain_{n}"),
+            graph: b.build().unwrap(),
+            device: DeviceKind::U250,
+        }
+    }
+
+    #[test]
+    fn stages_execute_in_order_exactly_once() {
+        let mut s = Session::new(chain_design(6), FlowVariant::Tapa, FlowConfig::default());
+        s.up_to(Stage::Pipeline, &RustStep).unwrap();
+        assert_eq!(
+            s.executed_stages(),
+            &[Stage::Estimate, Stage::Floorplan, Stage::Pipeline]
+        );
+        // Continuing does not re-run completed stages.
+        s.up_to(Stage::Sim, &RustStep).unwrap();
+        assert_eq!(s.executed_stages().len(), Stage::ALL.len());
+        assert_eq!(s.executed_stages(), &Stage::ALL);
+        let again = s.executed_stages().len();
+        s.up_to(Stage::Sim, &RustStep).unwrap();
+        assert_eq!(s.executed_stages().len(), again);
+    }
+
+    #[test]
+    fn result_requires_full_pipeline() {
+        let mut s = Session::new(chain_design(4), FlowVariant::Baseline, FlowConfig::default());
+        s.up_to(Stage::Sta, &RustStep).unwrap();
+        assert!(s.result().is_none());
+        s.up_to(Stage::Sim, &RustStep).unwrap();
+        let r = s.result().unwrap();
+        assert_eq!(r.variant, FlowVariant::Baseline);
+        assert!(r.floorplan.is_none());
+        assert!(r.pipeline.is_none());
+    }
+
+    #[test]
+    fn session_matches_monolithic_flow() {
+        let d = chain_design(8);
+        let cfg = FlowConfig::default();
+        for variant in FlowVariant::ALL {
+            let via_flow = super::super::run_flow(&d, variant, &cfg);
+            let mut s = Session::new(d.clone(), variant, cfg.clone());
+            let via_session = s.run_all(&RustStep).unwrap();
+            assert_eq!(via_session.variant, via_flow.variant, "{}", variant.name());
+            assert_eq!(via_session.fmax_mhz, via_flow.fmax_mhz, "{}", variant.name());
+            assert_eq!(via_session.cycles, via_flow.cycles, "{}", variant.name());
+            assert_eq!(via_session.util_pct, via_flow.util_pct, "{}", variant.name());
+        }
+    }
+
+    #[test]
+    fn cache_shares_estimates_across_variants() {
+        let d = chain_design(6);
+        let cfg = FlowConfig::default();
+        let cache = Arc::new(StageCache::default());
+        for variant in [FlowVariant::Baseline, FlowVariant::Tapa] {
+            let mut s =
+                Session::new(d.clone(), variant, cfg.clone()).with_cache(cache.clone());
+            s.run_all(&RustStep).unwrap();
+        }
+        let (computes, hits) = cache.stats();
+        assert_eq!(computes, 1);
+        assert_eq!(hits, 1);
+    }
+}

@@ -1,0 +1,91 @@
+//! The seven explicit stages of the staged compilation pipeline.
+//!
+//! Declared in pipeline order so the derived `Ord` matches execution
+//! order: `Estimate < Floorplan < … < Sim`. [`crate::flow::Session`]
+//! walks this sequence, persisting one typed artifact per stage.
+
+/// One step of the `tapa compile` pipeline (Fig. 1, decomposed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Stage {
+    /// HLS area/schedule estimation per task (stands in for Vitis HLS).
+    Estimate,
+    /// Coarse-grained floorplanning, including the §5.2 feedback loop
+    /// with trial pipelining.
+    Floorplan,
+    /// Derive the effective pipelining plan for the session's variant:
+    /// register stages for timing and latencies for simulation.
+    Pipeline,
+    /// Placement (baseline packing or floorplan-guided analytical).
+    Place,
+    /// Congestion-aware routing model.
+    Route,
+    /// Static timing analysis (Fmax).
+    Sta,
+    /// Cycle-accurate dataflow simulation.
+    Sim,
+}
+
+impl Stage {
+    /// All stages, in execution order.
+    pub const ALL: [Stage; 7] = [
+        Stage::Estimate,
+        Stage::Floorplan,
+        Stage::Pipeline,
+        Stage::Place,
+        Stage::Route,
+        Stage::Sta,
+        Stage::Sim,
+    ];
+
+    /// Position in the pipeline (0-based).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// CLI / checkpoint identifier.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Estimate => "estimate",
+            Stage::Floorplan => "floorplan",
+            Stage::Pipeline => "pipeline",
+            Stage::Place => "place",
+            Stage::Route => "route",
+            Stage::Sta => "sta",
+            Stage::Sim => "sim",
+        }
+    }
+
+    /// Inverse of [`Stage::name`] (for `tapa compile --to STAGE` and
+    /// checkpoint files).
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::ALL.into_iter().find(|st| st.name() == s)
+    }
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_matches_pipeline() {
+        assert!(Stage::Estimate < Stage::Floorplan);
+        assert!(Stage::Route < Stage::Sim);
+        for (i, st) in Stage::ALL.into_iter().enumerate() {
+            assert_eq!(st.index(), i);
+        }
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for st in Stage::ALL {
+            assert_eq!(Stage::parse(st.name()), Some(st));
+        }
+        assert_eq!(Stage::parse("synth"), None);
+    }
+}

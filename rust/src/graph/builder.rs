@@ -22,6 +22,13 @@ use super::validate::{validate, GraphError};
 use super::*;
 
 /// Incremental builder for a [`TaskGraph`].
+///
+/// Malformed references (an `invoke` of an undeclared prototype, a channel
+/// or port naming an out-of-range instance) do not panic at the call site:
+/// they surface as the [`GraphError`] returned by
+/// [`TaskGraphBuilder::build`], so programmatically generated graphs fail
+/// with a diagnostic instead of aborting the process. Forward references
+/// are allowed — only the finished graph is checked.
 #[derive(Debug, Default)]
 pub struct TaskGraphBuilder {
     graph: TaskGraph,
@@ -41,9 +48,9 @@ impl TaskGraphBuilder {
         ProtoId(self.graph.protos.len() - 1)
     }
 
-    /// `task().invoke(f, ...)` — instantiate a prototype.
+    /// `task().invoke(f, ...)` — instantiate a prototype. An unknown
+    /// prototype is reported by [`TaskGraphBuilder::build`].
     pub fn invoke(&mut self, proto: ProtoId, name: &str) -> InstId {
-        assert!(proto.0 < self.graph.protos.len(), "unknown proto");
         self.graph.insts.push(TaskInst {
             name: name.to_string(),
             proto,
@@ -152,7 +159,9 @@ impl TaskGraphBuilder {
         self.graph.same_slot.push((a, b));
     }
 
-    /// Finish and validate the graph.
+    /// Finish and validate the graph. Reference integrity (unknown
+    /// prototype / out-of-range instance) is checked first, then the
+    /// structural invariants.
     pub fn build(self) -> Result<TaskGraph, GraphError> {
         validate(&self.graph)?;
         Ok(self.graph)
@@ -188,10 +197,53 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "unknown proto")]
-    fn invoke_unknown_proto_panics() {
+    fn invoke_unknown_proto_surfaces_at_build() {
         let mut b = TaskGraphBuilder::new("t");
         b.invoke(ProtoId(3), "x");
+        assert_eq!(b.build().unwrap_err(), GraphError::UnknownProto(3, "x".into()));
+    }
+
+    #[test]
+    fn stream_with_out_of_range_inst_surfaces_at_build() {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("PE", ComputeSpec::passthrough(8));
+        let a = b.invoke(p, "a");
+        b.stream("s", 32, 2, a, InstId(7));
+        assert_eq!(
+            b.build().unwrap_err(),
+            GraphError::UnknownInst("channel s".into(), 7)
+        );
+    }
+
+    #[test]
+    fn mmap_port_with_out_of_range_owner_surfaces_at_build() {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("PE", ComputeSpec::passthrough(8));
+        let _ = b.invoke(p, "a");
+        b.mmap_port("m", PortStyle::Mmap, MemKind::Ddr, 512, InstId(9), None);
+        assert!(matches!(b.build(), Err(GraphError::UnknownInst(_, 9))));
+    }
+
+    #[test]
+    fn same_slot_with_out_of_range_inst_surfaces_at_build() {
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("PE", ComputeSpec::passthrough(8));
+        let a = b.invoke(p, "a");
+        b.same_slot(a, InstId(5));
+        assert!(matches!(b.build(), Err(GraphError::UnknownInst(_, 5))));
+    }
+
+    #[test]
+    fn forward_references_resolved_by_build_time_are_fine() {
+        // Ids may be referenced before the instance exists; only the
+        // finished graph is judged.
+        let mut b = TaskGraphBuilder::new("t");
+        let p = b.proto("PE", ComputeSpec::passthrough(8));
+        let a = b.invoke(p, "a");
+        b.stream("s", 32, 2, a, InstId(1)); // instance 1 comes next
+        let later = b.invoke(p, "b");
+        assert_eq!(later, InstId(1));
+        assert!(b.build().is_ok());
     }
 
     #[test]

@@ -22,12 +22,22 @@ pub enum GraphError {
     DuplicateName(String),
     #[error("external port {0} has zero width")]
     ZeroPortWidth(String),
+    #[error("instance {1} references unknown prototype {0}")]
+    UnknownProto(usize, String),
+    #[error("{0} references out-of-range instance {1}")]
+    UnknownInst(String, usize),
 }
 
 /// Validate structural invariants (§3.2: "Each stream must be connected to
 /// exactly two tasks ... one producer and one consumer" is enforced by
 /// construction — edges store exactly one of each; here we check the rest).
+///
+/// Reference integrity (every `ProtoId`/`InstId` in range) is checked
+/// first, so malformed ids from a programmatic builder surface as a
+/// [`GraphError`] instead of an index panic. Forward references during
+/// construction are fine — only the finished graph is judged.
 pub fn validate(g: &TaskGraph) -> Result<(), GraphError> {
+    check_references(g)?;
     if g.insts.is_empty() {
         return Err(GraphError::Empty);
     }
@@ -67,6 +77,37 @@ pub fn validate(g: &TaskGraph) -> Result<(), GraphError> {
         for (i, t) in touched.iter().enumerate() {
             if !t {
                 return Err(GraphError::Dangling(i, g.insts[i].name.clone()));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Every id stored in the graph must point inside its table.
+fn check_references(g: &TaskGraph) -> Result<(), GraphError> {
+    let n_protos = g.protos.len();
+    let n_insts = g.insts.len();
+    for inst in &g.insts {
+        if inst.proto.0 >= n_protos {
+            return Err(GraphError::UnknownProto(inst.proto.0, inst.name.clone()));
+        }
+    }
+    for e in &g.edges {
+        for id in [e.producer, e.consumer] {
+            if id.0 >= n_insts {
+                return Err(GraphError::UnknownInst(format!("channel {}", e.name), id.0));
+            }
+        }
+    }
+    for p in &g.ext_ports {
+        if p.owner.0 >= n_insts {
+            return Err(GraphError::UnknownInst(format!("port {}", p.name), p.owner.0));
+        }
+    }
+    for &(a, b) in &g.same_slot {
+        for id in [a, b] {
+            if id.0 >= n_insts {
+                return Err(GraphError::UnknownInst("same-slot constraint".into(), id.0));
             }
         }
     }

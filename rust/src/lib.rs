@@ -26,6 +26,32 @@
 //! - device models for the Xilinx Alveo U250 / U280 — [`device`];
 //! - benchmark generators for all designs evaluated in the paper —
 //!   [`bench_suite`].
+//!
+//! All of the above is orchestrated by the **staged compilation API** in
+//! [`flow`]: a [`flow::Session`] walks the explicit stage pipeline
+//! `Estimate → Floorplan → Pipeline → Place → Route → Sta → Sim`, storing
+//! one typed artifact per stage in a [`flow::SessionContext`]. Sessions
+//! checkpoint/resume through JSON work directories (`tapa compile --to
+//! floorplan --workdir W`, then `--resume` skips completed stages), share
+//! variant-independent artifacts through a [`flow::StageCache`], and fan
+//! out across threads with the [`flow::BatchRunner`] (`tapa bench
+//! 43-designs --jobs N`). The one-shot [`flow::run_flow`] remains as a
+//! thin wrapper.
+//!
+//! ```
+//! use tapa::bench_suite::stencil::stencil;
+//! use tapa::device::DeviceKind;
+//! use tapa::flow::{FlowConfig, FlowVariant, Session, Stage};
+//! use tapa::place::RustStep;
+//!
+//! let design = stencil(1, DeviceKind::U250);
+//! let mut session = Session::new(design, FlowVariant::Tapa, FlowConfig::default());
+//! // Run the front half, inspect the floorplan artifact, then finish.
+//! let ctx = session.up_to(Stage::Floorplan, &RustStep).unwrap();
+//! assert!(ctx.floorplan.is_some());
+//! let result = session.run_all(&RustStep).unwrap();
+//! assert_eq!(result.variant, FlowVariant::Tapa);
+//! ```
 
 pub mod config;
 pub mod device;

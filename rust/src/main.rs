@@ -2,11 +2,15 @@
 //!
 //! ```text
 //! tapa list                         list benchmark designs
-//! tapa compile --design NAME        run the TAPA flow on one design
+//! tapa compile --design NAME        run the staged TAPA flow on one design
 //!       [--variant V] [--config F]  (variants: baseline, tapa,
-//!                                    pipeline-only, floorplan-only,
-//!                                    tapa-4slot)
+//!       [--no-sim]                   pipeline-only, floorplan-only,
+//!       [--workdir DIR]              tapa-4slot)
+//!       [--to STAGE]                stop after STAGE (estimate, floorplan,
+//!                                    pipeline, place, route, sta, sim)
+//!       [--resume]                  continue from the workdir checkpoint
 //! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
+//!       [--jobs N]                  parallel sessions (43-designs suite)
 //! tapa bench --list                 list experiment ids
 //! tapa engine-info                  check the PJRT artifact
 //! ```
@@ -18,7 +22,7 @@ use std::process::ExitCode;
 
 use tapa::bench_suite::{all_autobridge_designs, experiments};
 use tapa::config::Config;
-use tapa::flow::{run_flow_with_executor, FlowConfig, FlowVariant};
+use tapa::flow::{FlowConfig, FlowVariant, Session, Stage};
 use tapa::place::{RustStep, StepExecutor};
 use tapa::report::fmt_mhz;
 
@@ -46,8 +50,10 @@ fn print_help() {
         "tapa — task-parallel dataflow flow with HLS/physical-design \
          co-optimization\n\n\
          USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
-         [--config FILE] [--no-sim]\n  tapa bench ID [--csv] [--config FILE]\n  \
-         tapa bench --list\n  tapa engine-info"
+         [--config FILE] [--no-sim]\n               [--workdir DIR] [--to STAGE] \
+         [--resume]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n  \
+         tapa bench --list\n  tapa engine-info\n\n\
+         STAGES (for --to): estimate floorplan pipeline place route sta sim"
     );
 }
 
@@ -101,15 +107,12 @@ fn cmd_list() -> ExitCode {
     ExitCode::SUCCESS
 }
 
-fn parse_variant(s: &str) -> Option<FlowVariant> {
-    Some(match s {
-        "baseline" => FlowVariant::Baseline,
-        "tapa" => FlowVariant::Tapa,
-        "pipeline-only" => FlowVariant::PipelineOnlyNoConstraints,
-        "floorplan-only" => FlowVariant::FloorplanOnlyNoPipeline,
-        "tapa-4slot" => FlowVariant::TapaCoarse4Slot,
-        _ => return None,
-    })
+fn stage_list(stages: &[Stage]) -> String {
+    if stages.is_empty() {
+        "(none)".to_string()
+    } else {
+        stages.iter().map(|s| s.name()).collect::<Vec<_>>().join(" → ")
+    }
 }
 
 fn cmd_compile(args: &[String]) -> ExitCode {
@@ -117,16 +120,31 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         eprintln!("compile requires --design NAME (see `tapa list`)");
         return ExitCode::FAILURE;
     };
-    let variant = match flag_value(args, "--variant") {
-        Some(v) => match parse_variant(&v) {
-            Some(v) => v,
+    let variant_flag = match flag_value(args, "--variant") {
+        Some(v) => match FlowVariant::parse(&v) {
+            Some(v) => Some(v),
             None => {
                 eprintln!("unknown variant {v}");
                 return ExitCode::FAILURE;
             }
         },
-        None => FlowVariant::Tapa,
+        None => None,
     };
+    let target = match flag_value(args, "--to") {
+        Some(s) => match Stage::parse(&s) {
+            Some(st) => st,
+            None => {
+                eprintln!(
+                    "unknown stage {s} (stages: estimate floorplan pipeline place \
+                     route sta sim)"
+                );
+                return ExitCode::FAILURE;
+            }
+        },
+        None => Stage::Sim,
+    };
+    let workdir = flag_value(args, "--workdir").map(PathBuf::from);
+    let resume = has_flag(args, "--resume");
     let mut cfg = load_config(args);
     if has_flag(args, "--no-sim") {
         cfg.sim.enabled = false;
@@ -145,6 +163,27 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         return ExitCode::FAILURE;
     };
 
+    let mut session = if resume {
+        let Some(dir) = &workdir else {
+            eprintln!("--resume requires --workdir DIR");
+            return ExitCode::FAILURE;
+        };
+        match Session::resume(design, variant_flag, cfg, dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot resume: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        let variant = variant_flag.unwrap_or(FlowVariant::Tapa);
+        let mut s = Session::new(design, variant, cfg);
+        if let Some(dir) = &workdir {
+            s = s.with_workdir(dir);
+        }
+        s
+    };
+
     // Prefer the PJRT artifact; fall back to the rust reference step.
     let engine = tapa::runtime::Engine::load_default();
     let exec: &dyn StepExecutor = match &engine {
@@ -152,16 +191,58 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         None => &RustStep,
     };
     println!(
-        "compiling {} [{}] on {} (placer step: {})",
-        design.name,
-        variant.name(),
-        design.device.name(),
-        exec.name()
+        "compiling {} [{}] on {} (placer step: {}, up to stage: {})",
+        session.design().name,
+        session.variant().name(),
+        session.design().device.name(),
+        exec.name(),
+        target.name()
     );
     let t0 = std::time::Instant::now();
-    let r = run_flow_with_executor(&design, variant, &cfg, exec);
+    if let Err(e) = session.up_to(target, exec) {
+        eprintln!("session failed: {e}");
+        return ExitCode::FAILURE;
+    }
     let dt = t0.elapsed().as_secs_f64();
-    println!("flow completed in {dt:.2}s");
+    let resumed = session.resumed_stages();
+    if !resumed.is_empty() {
+        println!("  from ckpt   : {}", stage_list(&resumed));
+    }
+    println!("  ran         : {} in {dt:.2}s", stage_list(session.executed_stages()));
+    if let Some(dir) = session.workdir_path() {
+        let path =
+            Session::checkpoint_path(dir, &session.design().name, session.variant());
+        println!("  checkpoint  : {}", path.display());
+    }
+
+    let Some(r) = session.result() else {
+        // Stopped before the end of the pipeline — report what exists.
+        let ctx = session.context();
+        if let Some(fa) = &ctx.floorplan {
+            match &fa.floorplan {
+                Some(fp) => println!(
+                    "  floorplan   : cost {} @ util ratio {:.2}",
+                    fp.cost, fp.util_ratio
+                ),
+                None if fa.degraded => println!("  floorplan   : DEGRADED (infeasible)"),
+                None => {}
+            }
+        }
+        if let Some(t) = &ctx.timing {
+            println!("  fmax        : {} MHz", fmt_mhz(t.fmax_mhz));
+        }
+        match session.workdir_path() {
+            Some(dir) => println!(
+                "  resume with : tapa compile --design {name} --resume --workdir {}",
+                dir.display()
+            ),
+            None => println!(
+                "  note        : no --workdir given; nothing was persisted and \
+                 these stages will re-run next time"
+            ),
+        }
+        return ExitCode::SUCCESS;
+    };
     println!("  fmax        : {} MHz", fmt_mhz(r.fmax_mhz));
     println!(
         "  place/route : {}",
@@ -198,8 +279,18 @@ fn cmd_bench(args: &[String]) -> ExitCode {
         eprintln!("bench requires an experiment id (try `tapa bench --list`)");
         return ExitCode::FAILURE;
     };
+    let jobs = match flag_value(args, "--jobs") {
+        Some(n) => match n.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("--jobs requires a positive integer, got {n}");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => 1,
+    };
     let cfg = load_config(args);
-    match experiments::run_experiment(id, &cfg) {
+    match experiments::run_experiment_jobs(id, &cfg, jobs) {
         Some(table) => {
             if has_flag(args, "--csv") {
                 print!("{}", table.to_csv());

@@ -1,0 +1,418 @@
+//! Minimal JSON value, parser and writer — no external crates, in the
+//! same spirit as the hand-rolled TOML subset in [`crate::config`].
+//!
+//! Used by the staged-session checkpoint files ([`crate::flow::Session`]).
+//! The writer is deterministic (object keys keep insertion order, numbers
+//! use Rust's shortest round-trip formatting), so serializing the same
+//! context twice yields byte-identical text — which the resume tests rely
+//! on.
+
+/// A JSON document. Numbers are stored as `f64`; every integer we persist
+/// (cycle counts, areas, ids) is far below 2^53, so the round-trip is
+/// exact.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object (deterministic output).
+    Obj(Vec<(String, Json)>),
+}
+
+/// Parse failures, with byte offset for diagnostics.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum JsonError {
+    #[error("offset {0}: unexpected end of input")]
+    Eof(usize),
+    #[error("offset {0}: unexpected character `{1}`")]
+    Unexpected(usize, char),
+    #[error("offset {0}: bad number")]
+    BadNumber(usize),
+    #[error("offset {0}: bad escape sequence")]
+    BadEscape(usize),
+    #[error("trailing data at offset {0}")]
+    Trailing(usize),
+}
+
+impl Json {
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|n| n as usize)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Serialize compactly (no whitespace). Deterministic.
+    pub fn write(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    // JSON has no NaN/inf; encode as null (we never persist
+                    // non-finite values — `Option` carries absence instead).
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_string(k, out);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(JsonError::Trailing(pos));
+        }
+        Ok(value)
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return Err(JsonError::Eof(*pos));
+    };
+    match c {
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'"' => parse_string(b, pos).map(Json::Str),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    Some(&c) => return Err(JsonError::Unexpected(*pos, c as char)),
+                    None => return Err(JsonError::Eof(*pos)),
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b':') => *pos += 1,
+                    Some(&c) => return Err(JsonError::Unexpected(*pos, c as char)),
+                    None => return Err(JsonError::Eof(*pos)),
+                }
+                fields.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    Some(&c) => return Err(JsonError::Unexpected(*pos, c as char)),
+                    None => return Err(JsonError::Eof(*pos)),
+                }
+            }
+        }
+        b'-' | b'0'..=b'9' => parse_number(b, pos),
+        c => Err(JsonError::Unexpected(*pos, c as char)),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json, JsonError> {
+    if b.len() - *pos >= lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes() {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        Err(JsonError::Unexpected(*pos, b[*pos] as char))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, JsonError> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or(JsonError::BadNumber(start))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, JsonError> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(JsonError::Unexpected(
+            *pos,
+            b.get(*pos).map(|&c| c as char).unwrap_or('\0'),
+        ));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    let mut buf = Vec::new(); // raw utf-8 run between escapes
+    loop {
+        let Some(&c) = b.get(*pos) else {
+            return Err(JsonError::Eof(*pos));
+        };
+        match c {
+            b'"' => {
+                flush_utf8(&mut buf, &mut out, *pos)?;
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                flush_utf8(&mut buf, &mut out, *pos)?;
+                *pos += 1;
+                let Some(&esc) = b.get(*pos) else {
+                    return Err(JsonError::Eof(*pos));
+                };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000c}'),
+                    b'u' => {
+                        let hi = parse_hex4(b, pos)?;
+                        let code = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair.
+                            if b.get(*pos) == Some(&b'\\') && b.get(*pos + 1) == Some(&b'u') {
+                                *pos += 2;
+                                let lo = parse_hex4(b, pos)?;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                return Err(JsonError::BadEscape(*pos));
+                            }
+                        } else {
+                            hi
+                        };
+                        out.push(
+                            char::from_u32(code).ok_or(JsonError::BadEscape(*pos))?,
+                        );
+                    }
+                    _ => return Err(JsonError::BadEscape(*pos - 1)),
+                }
+            }
+            _ => {
+                buf.push(c);
+                *pos += 1;
+            }
+        }
+    }
+}
+
+fn flush_utf8(buf: &mut Vec<u8>, out: &mut String, pos: usize) -> Result<(), JsonError> {
+    if !buf.is_empty() {
+        out.push_str(
+            std::str::from_utf8(buf).map_err(|_| JsonError::BadEscape(pos))?,
+        );
+        buf.clear();
+    }
+    Ok(())
+}
+
+fn parse_hex4(b: &[u8], pos: &mut usize) -> Result<u32, JsonError> {
+    if b.len() - *pos < 4 {
+        return Err(JsonError::Eof(*pos));
+    }
+    let s = std::str::from_utf8(&b[*pos..*pos + 4])
+        .map_err(|_| JsonError::BadEscape(*pos))?;
+    let v = u32::from_str_radix(s, 16).map_err(|_| JsonError::BadEscape(*pos))?;
+    *pos += 4;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for text in ["null", "true", "false", "0", "-3", "2.5", "\"hi\""] {
+            let v = Json::parse(text).unwrap();
+            assert_eq!(v.write(), text, "{text}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let text = r#"{"a":[1,2,{"b":null}],"c":"x\ny","d":-0.25}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.write(), text);
+        // Parse the writer's own output again — fixpoint.
+        assert_eq!(Json::parse(&v.write()).unwrap(), v);
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse(r#"{"n":7,"s":"x","b":true,"a":[1],"z":null}"#).unwrap();
+        assert_eq!(v.get("n").and_then(Json::as_u64), Some(7));
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(v.get("b").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("a").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        assert!(v.get("z").unwrap().is_null());
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn floats_roundtrip_exactly() {
+        for f in [0.1f64, 1.0 / 3.0, 123456.789, 1e-12, -2.5e10] {
+            let text = Json::Num(f).write();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back, f, "{f}");
+        }
+    }
+
+    #[test]
+    fn f32_through_f64_is_exact() {
+        for f in [0.1f32, 3.14159f32, -7.25e-3f32] {
+            let text = Json::Num(f as f64).write();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let s = "line1\nline2\t\"quoted\" \\ \u{0007} é 中";
+        let text = Json::Str(s.to_string()).write();
+        assert_eq!(Json::parse(&text).unwrap().as_str(), Some(s));
+        // Explicit \u escapes (incl. a surrogate pair) parse too.
+        assert_eq!(
+            Json::parse("\"\\u00e9\\ud83d\\ude00\"").unwrap().as_str(),
+            Some("é\u{1F600}")
+        );
+    }
+
+    #[test]
+    fn errors_reported() {
+        assert!(matches!(Json::parse(""), Err(JsonError::Eof(_))));
+        assert!(matches!(Json::parse("[1,"), Err(JsonError::Eof(_))));
+        assert!(matches!(Json::parse("{\"a\" 1}"), Err(JsonError::Unexpected(..))));
+        assert!(matches!(Json::parse("1 2"), Err(JsonError::Trailing(_))));
+        assert!(matches!(Json::parse("nulx"), Err(JsonError::Unexpected(..))));
+    }
+
+    #[test]
+    fn u64_guard() {
+        assert_eq!(Json::parse("2.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("42").unwrap().as_u64(), Some(42));
+    }
+}

@@ -4,6 +4,7 @@
 //! need: seeded generators, many-case runners, and failure reporting with
 //! the offending seed).
 
+pub mod json;
 pub mod rng;
 pub mod prop;
 pub mod stats;

@@ -1,0 +1,177 @@
+//! Integration tests for the staged `Session` API: checkpoint/resume
+//! round-trips through a real work directory, stage-execution accounting
+//! (the acceptance bar: a resumed flow must not re-run completed stages),
+//! and batch-vs-sequential equivalence down to the CSV bytes.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tapa::bench_suite::stencil::stencil;
+use tapa::device::DeviceKind;
+use tapa::flow::{
+    persist, run_flow, BatchRunner, Design, FlowConfig, FlowVariant, Session,
+    SimOptions, Stage, StageCache,
+};
+use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+use tapa::place::RustStep;
+use tapa::report::{fmt_mhz, Table};
+
+fn chain_design(name: &str, n: usize) -> Design {
+    let mut b = TaskGraphBuilder::new(name);
+    let p = b.proto(
+        "K",
+        ComputeSpec {
+            mac_ops: 25,
+            alu_ops: 200,
+            bram_bytes: 48 * 1024,
+            uram_bytes: 0,
+            trip_count: 256,
+            ii: 1,
+            pipeline_depth: 6,
+        },
+    );
+    let ids = b.invoke_n(p, "k", n);
+    for i in 0..n - 1 {
+        b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+    }
+    Design { name: name.to_string(), graph: b.build().unwrap(), device: DeviceKind::U250 }
+}
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate
+/// offline).
+fn workdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tapa_session_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn context_json_roundtrips_through_disk() {
+    let dir = workdir("roundtrip");
+    let d = chain_design("rt_chain", 6);
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, FlowConfig::default())
+        .with_workdir(&dir);
+    s.up_to(Stage::Route, &RustStep).unwrap();
+    let path = Session::checkpoint_path(&dir, &d.name, FlowVariant::Tapa);
+    assert!(path.exists(), "up_to persists a checkpoint");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let ctx = persist::context_from_json_text(&text).unwrap();
+    assert_eq!(ctx.design_name, d.name);
+    assert_eq!(ctx.variant, FlowVariant::Tapa);
+    assert_eq!(
+        ctx.completed,
+        vec![Stage::Estimate, Stage::Floorplan, Stage::Pipeline, Stage::Place, Stage::Route]
+    );
+    // Canonical writer: re-serializing the parsed context is byte-identical.
+    assert_eq!(persist::context_to_json_text(&ctx), text);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn up_to_then_resume_equals_one_shot_run_flow() {
+    let dir = workdir("resume");
+    let cfg = FlowConfig::default();
+    let d = chain_design("resume_chain", 8);
+
+    // `tapa compile --design resume_chain --to floorplan --workdir W`
+    let mut first = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone())
+        .with_workdir(&dir);
+    first.up_to(Stage::Floorplan, &RustStep).unwrap();
+    assert_eq!(first.executed_stages(), &[Stage::Estimate, Stage::Floorplan]);
+    drop(first);
+
+    // `tapa compile --design resume_chain --resume --workdir W`
+    let mut resumed = Session::resume(d.clone(), None, cfg.clone(), &dir).unwrap();
+    let r = resumed.run_all(&RustStep).unwrap();
+
+    // The stage-execution counter: estimate/floorplan came from the
+    // checkpoint and were NOT re-executed.
+    assert_eq!(
+        resumed.executed_stages(),
+        &[Stage::Pipeline, Stage::Place, Stage::Route, Stage::Sta, Stage::Sim]
+    );
+    assert_eq!(
+        resumed.resumed_stages(),
+        vec![Stage::Estimate, Stage::Floorplan]
+    );
+
+    // …and the final result is identical to the uninterrupted flow.
+    let want = run_flow(&d, FlowVariant::Tapa, &cfg);
+    assert_eq!(r.variant, want.variant);
+    assert_eq!(r.fmax_mhz, want.fmax_mhz);
+    assert_eq!(r.cycles, want.cycles);
+    assert_eq!(r.util_pct, want.util_pct);
+    assert_eq!(r.route.max_congestion, want.route.max_congestion);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_explicit_variant_and_error_paths() {
+    let dir = workdir("variants");
+    let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+    let d = chain_design("var_chain", 6);
+
+    // No checkpoint yet.
+    assert!(Session::resume(d.clone(), None, cfg.clone(), &dir).is_err());
+
+    // Two checkpoints for the same design → ambiguous without a variant.
+    for v in [FlowVariant::Baseline, FlowVariant::Tapa] {
+        let mut s = Session::new(d.clone(), v, cfg.clone()).with_workdir(&dir);
+        s.up_to(Stage::Estimate, &RustStep).unwrap();
+    }
+    assert!(Session::resume(d.clone(), None, cfg.clone(), &dir).is_err());
+
+    // Explicit variant resolves it and continues to completion.
+    let mut s =
+        Session::resume(d.clone(), Some(FlowVariant::Baseline), cfg.clone(), &dir).unwrap();
+    assert_eq!(s.variant(), FlowVariant::Baseline);
+    let r = s.run_all(&RustStep).unwrap();
+    assert_eq!(r.variant, FlowVariant::Baseline);
+    assert!(!s.executed_stages().contains(&Stage::Estimate));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_runner_csv_is_byte_identical_to_sequential() {
+    let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+    let designs: Vec<Design> = (1..=4).map(|k| stencil(k, DeviceKind::U250)).collect();
+    let csv = |jobs: usize| {
+        let mut runner = BatchRunner::new(cfg.clone()).workers(jobs);
+        for d in &designs {
+            runner.push(d.clone(), FlowVariant::Baseline);
+            runner.push(d.clone(), FlowVariant::Tapa);
+        }
+        let results = runner.run();
+        let mut t = Table::new("suite", &["Design", "Orig(MHz)", "Opt(MHz)"]);
+        for (i, d) in designs.iter().enumerate() {
+            t.row(vec![
+                d.name.clone(),
+                fmt_mhz(results[2 * i].fmax_mhz),
+                fmt_mhz(results[2 * i + 1].fmax_mhz),
+            ]);
+        }
+        t.to_csv()
+    };
+    let sequential = csv(1);
+    assert_eq!(sequential, csv(3));
+    assert_eq!(sequential, csv(8));
+}
+
+#[test]
+fn shared_cache_estimates_once_per_design_across_variants() {
+    let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+    let cache = Arc::new(StageCache::default());
+    let d = chain_design("cache_chain", 6);
+    for v in [
+        FlowVariant::Baseline,
+        FlowVariant::Tapa,
+        FlowVariant::FloorplanOnlyNoPipeline,
+    ] {
+        let mut s = Session::new(d.clone(), v, cfg.clone()).with_cache(cache.clone());
+        s.run_all(&RustStep).unwrap();
+    }
+    let (computes, hits) = cache.stats();
+    assert_eq!(computes, 1, "one design → one HLS estimation");
+    assert_eq!(hits, 2, "the two other variants hit the cache");
+}
