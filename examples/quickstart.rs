@@ -6,7 +6,9 @@
 //! flow sharing the same stage cache. The paper's headline experiment in
 //! miniature.
 //!
-//! Run with: `cargo run --release --example quickstart`
+//! Run with: `cargo run --release --example quickstart [-- u250|u280]`
+//! (default device: U250; on U280 the external ports bind to HBM
+//! pseudo-channels instead of DDR controllers, §6.2).
 
 use std::sync::Arc;
 
@@ -16,7 +18,7 @@ use tapa::graph::{ComputeSpec, MemKind, PortStyle, TaskGraphBuilder};
 use tapa::place::{RustStep, StepExecutor};
 use tapa::report::fmt_mhz;
 
-fn build_vecadd_design(pe_num: usize) -> Design {
+fn build_vecadd_design(pe_num: usize, device: DeviceKind) -> Design {
     // Listing 1 of the paper, scaled out: PE_NUM lanes of
     // Load ×2 → Add → Filter ×2 → Store, giving the floorplanner
     // something worth spreading across dies.
@@ -38,6 +40,12 @@ fn build_vecadd_design(pe_num: usize) -> Design {
         mac_ops: 0, alu_ops: 300, bram_bytes: 16 * 2304, uram_bytes: 0,
         trip_count: n, ii: 1, pipeline_depth: 4,
     });
+    // U250 exposes DDR controllers; U280's external bandwidth comes from
+    // HBM pseudo-channels bound per slot (§6.2).
+    let (mem, style) = match device {
+        DeviceKind::U250 => (MemKind::Ddr, PortStyle::Mmap),
+        DeviceKind::U280 => (MemKind::Hbm, PortStyle::AsyncMmap),
+    };
     for i in 0..pe_num {
         let la = b.invoke(load, &format!("load_a{i}"));
         let lb = b.invoke(load, &format!("load_b{i}"));
@@ -50,19 +58,24 @@ fn build_vecadd_design(pe_num: usize) -> Design {
         b.stream(&format!("c{i}"), 512, 2, ad, f1);
         b.stream(&format!("d{i}"), 512, 2, f1, f2);
         b.stream(&format!("e{i}"), 512, 2, f2, st);
-        b.mmap_port(&format!("m_a{i}"), PortStyle::Mmap, MemKind::Ddr, 512, la, None);
-        b.mmap_port(&format!("m_b{i}"), PortStyle::Mmap, MemKind::Ddr, 512, lb, None);
-        b.mmap_port(&format!("m_c{i}"), PortStyle::Mmap, MemKind::Ddr, 512, st, None);
+        b.mmap_port(&format!("m_a{i}"), style, mem, 512, la, None);
+        b.mmap_port(&format!("m_b{i}"), style, mem, 512, lb, None);
+        b.mmap_port(&format!("m_c{i}"), style, mem, 512, st, None);
     }
     Design {
         name: "quickstart_vecadd".into(),
         graph: b.build().expect("valid graph"),
-        device: DeviceKind::U250,
+        device,
     }
 }
 
 fn main() {
-    let design = build_vecadd_design(3);
+    let device = match std::env::args().nth(1) {
+        Some(arg) => DeviceKind::parse(&arg)
+            .unwrap_or_else(|| panic!("unknown device `{arg}` (u250, u280)")),
+        None => DeviceKind::U250,
+    };
+    let design = build_vecadd_design(3, device);
     println!(
         "design: {} — {} tasks, {} streams on {}",
         design.name,
@@ -141,5 +154,28 @@ fn main() {
     }
     if let Some(fp) = &opt.floorplan {
         println!("floorplan: Eq.1 cost {} at utilization ratio {:.2}", fp.cost, fp.util_ratio);
+    }
+
+    // §6.3 in miniature: the multi-floorplan sweep as a first-class
+    // pipeline stage — every unique candidate implemented, the best
+    // routed result adopted. Shares the cached estimates from above.
+    let mut sweep_cfg = cfg.clone();
+    sweep_cfg.sweep.enabled = true;
+    sweep_cfg.sweep.ratios = vec![0.6, 0.7, 0.8];
+    sweep_cfg.sim.enabled = false;
+    let mut sw = Session::new(design, FlowVariant::Tapa, sweep_cfg).with_cache(cache);
+    sw.up_to(Stage::Sweep, exec).expect("sweep stages");
+    if let Some(art) = &sw.context().sweep {
+        println!("\nmulti-floorplan sweep ({} points):", art.points.len());
+        for p in art.points.iter().filter(|p| p.duplicate_of.is_none()) {
+            println!("  util {:.2} → {} MHz", p.util_ratio, fmt_mhz(p.fmax_mhz));
+        }
+        if let Some(b) = art.best {
+            println!(
+                "  best routed result: util {:.2} ({} MHz)",
+                art.points[b].util_ratio,
+                fmt_mhz(art.points[b].fmax_mhz)
+            );
+        }
     }
 }

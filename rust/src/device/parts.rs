@@ -22,6 +22,10 @@ pub enum DeviceKind {
 }
 
 impl DeviceKind {
+    /// Every supported part, in a stable order (multi-device sessions and
+    /// `tapa compile --device u250,u280` iterate this).
+    pub const ALL: [DeviceKind; 2] = [DeviceKind::U250, DeviceKind::U280];
+
     /// Instantiate the device model.
     pub fn device(&self) -> Device {
         match self {
@@ -35,6 +39,14 @@ impl DeviceKind {
             DeviceKind::U250 => "U250",
             DeviceKind::U280 => "U280",
         }
+    }
+
+    /// Inverse of [`DeviceKind::name`], case-insensitive (CLI `--device`
+    /// lists and checkpoint files).
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        DeviceKind::ALL
+            .into_iter()
+            .find(|d| d.name().eq_ignore_ascii_case(s))
     }
 }
 
@@ -160,6 +172,15 @@ mod tests {
         assert_eq!(DeviceKind::U250.device().name, "xcu250");
         assert_eq!(DeviceKind::U280.device().name, "xcu280");
         assert_eq!(DeviceKind::U280.name(), "U280");
+    }
+
+    #[test]
+    fn device_kind_parse_roundtrip() {
+        for d in DeviceKind::ALL {
+            assert_eq!(DeviceKind::parse(d.name()), Some(d));
+            assert_eq!(DeviceKind::parse(&d.name().to_ascii_lowercase()), Some(d));
+        }
+        assert_eq!(DeviceKind::parse("u999"), None);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod partition;
 
 pub use cost::slot_crossing_cost;
 pub use hbm_bind::{bind_hbm_channels, HbmBinding};
-pub use multi::generate_candidates;
+pub use multi::{generate_candidates, sweep_points, SweepPoint};
 pub use partition::{partition_device, PartitionStats};
 
 use crate::device::{AreaVector, Device, SlotId};

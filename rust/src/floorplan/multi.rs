@@ -17,6 +17,21 @@ pub struct Candidate {
     pub plan: Floorplan,
 }
 
+/// One sweep point: the knob value and the solver's outcome at exactly
+/// that ratio. Unlike [`Candidate`], failures ("Failed" rows of
+/// Table 10) and duplicate solutions are represented explicitly, so the
+/// returned vector always has one entry per sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub util_ratio: f64,
+    /// `None` when partitioning is infeasible at this ratio.
+    pub plan: Option<Floorplan>,
+    /// `Some(i)` when this plan's slot assignment is identical to the
+    /// (earlier, unique) point `i`'s — duplicates are solved but only
+    /// reported once by [`generate_with_failures`].
+    pub duplicate_of: Option<usize>,
+}
+
 /// Default utilization-ratio sweep (§6.3: "we sweep through a range of
 /// this parameter").
 pub const DEFAULT_SWEEP: [f64; 7] = [0.55, 0.60, 0.65, 0.70, 0.75, 0.80, 0.85];
@@ -39,7 +54,9 @@ pub fn generate_candidates(
 }
 
 /// Like [`generate_candidates`] but keeps failed sweep points as `None`
-/// (Table 10 reports "Failed" rows explicitly).
+/// (Table 10 reports "Failed" rows explicitly). Duplicate solutions are
+/// dropped (first occurrence kept), so the output may be shorter than
+/// the sweep; [`sweep_points`] is the lossless variant.
 pub fn generate_with_failures(
     g: &TaskGraph,
     device: &Device,
@@ -47,28 +64,64 @@ pub fn generate_with_failures(
     base: &FloorplanConfig,
     sweep: &[f64],
 ) -> Vec<(f64, Option<Floorplan>)> {
-    let mut out: Vec<(f64, Option<Floorplan>)> = Vec::new();
+    sweep_points(g, device, estimates, base, sweep)
+        .into_iter()
+        .filter(|p| p.duplicate_of.is_none())
+        .map(|p| (p.util_ratio, p.plan))
+        .collect()
+}
+
+/// Solve a single sweep point at exactly `ratio` — no automatic ratio
+/// relaxation: the point must reflect *this* ratio or be a failure.
+/// This is the unit the [`crate::flow::StageCache`] keys by
+/// `(design, device, util_ratio)`.
+pub fn solve_point(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+    ratio: f64,
+) -> Option<Floorplan> {
+    let cfg = FloorplanConfig { max_util: ratio, ..base.clone() };
+    match super::partition::partition_device(g, device, estimates, ratio, &cfg) {
+        Ok((assignment, stats)) => {
+            let cost = super::cost::slot_crossing_cost(g, device, &assignment);
+            Some(Floorplan { assignment, cost, util_ratio: ratio, stats })
+        }
+        Err(_) => None,
+    }
+}
+
+/// One [`SweepPoint`] per sweep ratio, in sweep order, with duplicate
+/// slot assignments marked rather than dropped (keep-first policy).
+pub fn sweep_points(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+    sweep: &[f64],
+) -> Vec<SweepPoint> {
+    sweep_points_with(sweep, |ratio| solve_point(g, device, estimates, base, ratio))
+}
+
+/// [`sweep_points`] with a caller-supplied per-ratio solver — the single
+/// source of truth for the keep-first duplicate-marking policy, so the
+/// cache-backed sweep in [`crate::flow::Session`] cannot diverge from
+/// [`generate_with_failures`].
+pub fn sweep_points_with(
+    sweep: &[f64],
+    mut solve: impl FnMut(f64) -> Option<Floorplan>,
+) -> Vec<SweepPoint> {
+    let mut out: Vec<SweepPoint> = Vec::with_capacity(sweep.len());
     for &ratio in sweep {
-        let cfg = FloorplanConfig { max_util: ratio, ..base.clone() };
-        // Use partition directly (no automatic ratio relaxation): the sweep
-        // point must reflect *this* ratio or be a failure.
-        let plan = match super::partition::partition_device(g, device, estimates, ratio, &cfg)
-        {
-            Ok((assignment, stats)) => {
-                let cost = super::cost::slot_crossing_cost(g, device, &assignment);
-                Some(Floorplan { assignment, cost, util_ratio: ratio, stats })
-            }
-            Err(_) => None,
-        };
-        // De-duplicate identical assignments (keep first occurrence).
-        let dup = plan.as_ref().is_some_and(|p| {
-            out.iter().any(|(_, q)| {
-                q.as_ref().is_some_and(|q| q.assignment == p.assignment)
+        let plan = solve(ratio);
+        let duplicate_of = plan.as_ref().and_then(|p| {
+            out.iter().position(|q: &SweepPoint| {
+                q.duplicate_of.is_none()
+                    && q.plan.as_ref().is_some_and(|qp| qp.assignment == p.assignment)
             })
         });
-        if !dup {
-            out.push((ratio, plan));
-        }
+        out.push(SweepPoint { util_ratio: ratio, plan, duplicate_of });
     }
     out
 }
@@ -156,5 +209,35 @@ mod tests {
         let rows = generate_with_failures(&g, &d, &est, &FloorplanConfig::default(), &[0.6, 0.8]);
         assert!(!rows.is_empty());
         assert!(rows.len() <= 2);
+    }
+
+    #[test]
+    fn sweep_points_is_lossless_and_marks_duplicates() {
+        let g = graph(10);
+        let d = u250();
+        let est = estimate_all(&g);
+        let sweep = [0.6, 0.7, 0.8];
+        let points = sweep_points(&g, &d, &est, &FloorplanConfig::default(), &sweep);
+        assert_eq!(points.len(), sweep.len(), "one entry per sweep point");
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.util_ratio, sweep[i]);
+            if let Some(di) = p.duplicate_of {
+                assert!(di < i, "duplicates reference an earlier point");
+                assert!(points[di].duplicate_of.is_none());
+                assert_eq!(
+                    points[di].plan.as_ref().unwrap().assignment,
+                    p.plan.as_ref().unwrap().assignment
+                );
+            }
+        }
+        // Dropping marked duplicates reproduces generate_with_failures.
+        let rows = generate_with_failures(&g, &d, &est, &FloorplanConfig::default(), &sweep);
+        let unique: Vec<&SweepPoint> =
+            points.iter().filter(|p| p.duplicate_of.is_none()).collect();
+        assert_eq!(rows.len(), unique.len());
+        for (row, p) in rows.iter().zip(unique) {
+            assert_eq!(row.0, p.util_ratio);
+            assert_eq!(row.1.is_some(), p.plan.is_some());
+        }
     }
 }

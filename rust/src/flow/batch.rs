@@ -6,7 +6,10 @@
 //! sequential run regardless of worker count or scheduling (the
 //! `tapa bench 43-designs --jobs N` CSV is byte-identical to `--jobs 1`).
 //! All workers share one [`StageCache`], so the `Baseline` and `Tapa`
-//! variants of a design estimate HLS areas only once between them.
+//! variants of a design estimate HLS areas only once between them, and
+//! §6.3 sweep candidates are solved once per `(design, device, ratio)`.
+//! The same worker pool ([`run_indexed`]) also implements the sweep's
+//! per-candidate fan-out inside a session.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -15,6 +18,44 @@ use crate::place::RustStep;
 
 use super::session::{Session, StageCache};
 use super::{Design, FlowConfig, FlowResult, FlowVariant};
+
+/// Run `f(0..n)` over a pool of `workers` threads, returning the results
+/// in index (submission) order — the scheduling-independent primitive
+/// behind [`BatchRunner`] and the sweep's candidate fan-out. With one
+/// worker (or one item) everything runs inline on the caller's thread.
+pub fn run_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = if workers == 0 { 1 } else { workers.min(n) };
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let done = &done;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut out = done.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
 
 /// One unit of batch work.
 #[derive(Clone, Debug)]
@@ -28,16 +69,24 @@ pub struct BatchRunner {
     cfg: FlowConfig,
     jobs: Vec<BatchJob>,
     workers: usize,
+    cache: Option<Arc<StageCache>>,
 }
 
 impl BatchRunner {
     pub fn new(cfg: FlowConfig) -> BatchRunner {
-        BatchRunner { cfg, jobs: Vec::new(), workers: 1 }
+        BatchRunner { cfg, jobs: Vec::new(), workers: 1, cache: None }
     }
 
     /// Worker thread count (clamped to at least 1; 1 = sequential).
     pub fn workers(mut self, n: usize) -> BatchRunner {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Share (and expose, e.g. for cache-accounting assertions) a stage
+    /// cache instead of the run-private default.
+    pub fn with_cache(mut self, cache: Arc<StageCache>) -> BatchRunner {
+        self.cache = Some(cache);
         self
     }
 
@@ -56,40 +105,20 @@ impl BatchRunner {
 
     /// Run all jobs; results are returned in job-submission order.
     pub fn run(self) -> Vec<FlowResult> {
-        let n = self.jobs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let cache = Arc::new(StageCache::default());
-        let next = AtomicUsize::new(0);
-        let done: Mutex<Vec<(usize, FlowResult)>> = Mutex::new(Vec::with_capacity(n));
-        let workers = self.workers.min(n);
+        let cache = self
+            .cache
+            .clone()
+            .unwrap_or_else(|| Arc::new(StageCache::default()));
         let jobs = &self.jobs;
         let cfg = &self.cfg;
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let next = &next;
-                let done = &done;
-                let cache = &cache;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    if i >= n {
-                        break;
-                    }
-                    let job = &jobs[i];
-                    let mut session =
-                        Session::new(job.design.clone(), job.variant, cfg.clone())
-                            .with_cache(cache.clone());
-                    let result = session
-                        .run_all(&RustStep)
-                        .expect("in-memory session cannot fail");
-                    done.lock().unwrap().push((i, result));
-                });
-            }
-        });
-        let mut out = done.into_inner().unwrap();
-        out.sort_by_key(|(i, _)| *i);
-        out.into_iter().map(|(_, r)| r).collect()
+        run_indexed(self.jobs.len(), self.workers, |i| {
+            let job = &jobs[i];
+            let mut session = Session::new(job.design.clone(), job.variant, cfg.clone())
+                .with_cache(cache.clone());
+            session
+                .run_all(&RustStep)
+                .expect("in-memory session cannot fail")
+        })
     }
 }
 
@@ -155,5 +184,14 @@ mod tests {
     #[test]
     fn empty_batch_is_fine() {
         assert!(BatchRunner::new(fast_cfg()).workers(8).run().is_empty());
+    }
+
+    #[test]
+    fn run_indexed_preserves_submission_order() {
+        for workers in [1usize, 3, 8] {
+            let out = run_indexed(17, workers, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "{workers} workers");
+        }
+        assert!(run_indexed(0, 4, |i| i).is_empty());
     }
 }

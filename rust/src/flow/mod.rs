@@ -4,11 +4,11 @@
 //!
 //! ```text
 //! Session(design, variant)
-//!   Estimate → Floorplan → Pipeline → Place → Route → Sta → Sim
-//!      │           │           │         │       │      │     │
-//!      └───────────┴───── SessionContext (typed artifacts) ───┘
+//!   Estimate → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim
+//!      │           │         │         │         │       │      │     │
+//!      └───────────┴──────── SessionContext (typed artifacts) ────────┘
 //!                     │ checkpoint / resume (JSON in a workdir)
-//!                     │ StageCache shared across variants
+//!                     │ StageCache shared across variants + devices
 //!                     └ BatchRunner fans sessions over threads
 //! ```
 //!
@@ -25,10 +25,10 @@ pub mod persist;
 pub mod session;
 pub mod stage;
 
-pub use batch::{BatchJob, BatchRunner};
+pub use batch::{run_indexed, BatchJob, BatchRunner};
 pub use session::{
     FloorplanArtifact, PipelineArtifact, Session, SessionContext, SessionError,
-    SimArtifact, StageCache,
+    SessionSet, SimArtifact, StageCache, SweepArtifact, SweepCandidate,
 };
 pub use stage::Stage;
 
@@ -135,6 +135,57 @@ pub struct FlowConfig {
     pub floorplan: FloorplanConfig,
     pub analytical: AnalyticalParams,
     pub sim: SimOptions,
+    pub sweep: SweepOptions,
+}
+
+/// Best-candidate selection policy for the §6.3 multi-floorplan sweep
+/// (`tapa compile --select fmax|cost`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectPolicy {
+    /// Keep the candidate with the highest post-route Fmax (the paper's
+    /// "best routed result"). Ties go to the lowest sweep ratio.
+    BestFmax,
+    /// Keep the lowest Eq. 1 crossing-cost candidate regardless of
+    /// timing (the pre-route heuristic of [`crate::floorplan::multi::best_candidate`]).
+    MinCost,
+}
+
+impl SelectPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectPolicy::BestFmax => "fmax",
+            SelectPolicy::MinCost => "cost",
+        }
+    }
+
+    /// Inverse of [`SelectPolicy::name`] (CLI `--select`).
+    pub fn parse(s: &str) -> Option<SelectPolicy> {
+        [SelectPolicy::BestFmax, SelectPolicy::MinCost]
+            .into_iter()
+            .find(|p| p.name() == s)
+    }
+}
+
+/// Multi-floorplan sweep options (§6.3). Off by default — `tapa compile
+/// --sweep` (or setting `enabled`) turns [`Stage::Sweep`] from a no-op
+/// into the full candidate sweep.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    pub enabled: bool,
+    /// Per-slot maximum-utilization ratios to sweep.
+    pub ratios: Vec<f64>,
+    /// How the winning candidate is chosen.
+    pub select: SelectPolicy,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            enabled: false,
+            ratios: crate::floorplan::multi::DEFAULT_SWEEP.to_vec(),
+            select: SelectPolicy::BestFmax,
+        }
+    }
 }
 
 /// Simulation options for the flow.

@@ -5,8 +5,16 @@
 //! byte-level fixpoint (asserted by tests); resumed sessions therefore
 //! produce checkpoints identical to uninterrupted ones for the shared
 //! prefix of stages.
+//!
+//! **Format stability.** The on-disk layout is versioned
+//! ([`FORMAT_VERSION`], currently 2: v1 plus the `device` identity field
+//! and the §6.3 `sweep` artifact). Within a version the byte layout is
+//! frozen — `rust/tests/data/golden_sweep_ctx.json` is a committed golden
+//! checkpoint that must keep round-tripping byte-identically, so resume
+//! compatibility cannot silently break; any layout change must bump the
+//! version and refresh the golden.
 
-use crate::device::{AreaVector, SlotId};
+use crate::device::{AreaVector, DeviceKind, SlotId};
 use crate::floorplan::partition::{Axis, SolveMethod};
 use crate::floorplan::{Floorplan, PartitionStats};
 use crate::graph::InstId;
@@ -19,11 +27,14 @@ use crate::util::json::Json;
 
 use super::session::{
     FloorplanArtifact, PipelineArtifact, SessionContext, SessionError, SimArtifact,
+    SweepArtifact, SweepCandidate,
 };
 use super::stage::Stage;
 use super::FlowVariant;
 
-const FORMAT_VERSION: u64 = 1;
+/// On-disk checkpoint format version (see the module docs for the
+/// stability guarantee). v2 = v1 + `device` + `sweep`.
+pub const FORMAT_VERSION: u64 = 2;
 
 // ---------------------------------------------------------------------------
 // Writing
@@ -192,11 +203,34 @@ fn timing_json(t: &TimingReport) -> Json {
     ])
 }
 
+fn sweep_json(sw: &SweepArtifact) -> Json {
+    Json::Obj(vec![
+        ("best".into(), opt(&sw.best, |&b| unum(b as u64))),
+        (
+            "points".into(),
+            Json::Arr(
+                sw.points
+                    .iter()
+                    .map(|p| {
+                        Json::Obj(vec![
+                            ("util_ratio".into(), num(p.util_ratio)),
+                            ("duplicate_of".into(), opt(&p.duplicate_of, |&i| unum(i as u64))),
+                            ("fmax_mhz".into(), opt(&p.fmax_mhz, |&f| num(f))),
+                            ("plan".into(), opt(&p.plan, floorplan_json)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// Serialize a session context to canonical JSON text.
 pub fn context_to_json_text(ctx: &SessionContext) -> String {
     let fields = vec![
         ("version".to_string(), unum(FORMAT_VERSION)),
         ("design".to_string(), Json::Str(ctx.design_name.clone())),
+        ("device".to_string(), Json::Str(ctx.device.name().into())),
         ("variant".to_string(), Json::Str(ctx.variant.name().into())),
         (
             "completed".to_string(),
@@ -224,6 +258,7 @@ pub fn context_to_json_text(ctx: &SessionContext) -> String {
                 ])
             }),
         ),
+        ("sweep".to_string(), opt(&ctx.sweep, sweep_json)),
         (
             "pipeline".to_string(),
             opt(&ctx.pipeline, |pa| {
@@ -464,6 +499,30 @@ fn parse_timing(v: &Json) -> R<TimingReport> {
     })
 }
 
+fn parse_sweep(v: &Json) -> R<SweepArtifact> {
+    let points = get_arr(v, "points")?
+        .iter()
+        .map(|p| {
+            Ok(SweepCandidate {
+                util_ratio: get_f64(p, "util_ratio")?,
+                duplicate_of: get_opt(p, "duplicate_of", |x| {
+                    x.as_usize().ok_or_else(|| bad("duplicate_of not an integer"))
+                })?,
+                fmax_mhz: get_opt(p, "fmax_mhz", |x| {
+                    x.as_f64().ok_or_else(|| bad("fmax_mhz not a number"))
+                })?,
+                plan: get_opt(p, "plan", parse_floorplan)?,
+            })
+        })
+        .collect::<R<Vec<_>>>()?;
+    Ok(SweepArtifact {
+        best: get_opt(v, "best", |x| {
+            x.as_usize().ok_or_else(|| bad("best not an integer"))
+        })?,
+        points,
+    })
+}
+
 /// Parse a checkpoint produced by [`context_to_json_text`].
 pub fn context_from_json_text(text: &str) -> R<SessionContext> {
     let root = Json::parse(text).map_err(|e| bad(e.to_string()))?;
@@ -473,6 +532,9 @@ pub fn context_from_json_text(text: &str) -> R<SessionContext> {
             "unsupported checkpoint version {version} (expected {FORMAT_VERSION})"
         )));
     }
+    let device_name = get_str(&root, "device")?;
+    let device = DeviceKind::parse(device_name)
+        .ok_or_else(|| bad(format!("unknown device `{device_name}`")))?;
     let variant_name = get_str(&root, "variant")?;
     let variant = FlowVariant::parse(variant_name)
         .ok_or_else(|| bad(format!("unknown variant `{variant_name}`")))?;
@@ -486,6 +548,7 @@ pub fn context_from_json_text(text: &str) -> R<SessionContext> {
         .collect::<R<Vec<_>>>()?;
     Ok(SessionContext {
         design_name: get_str(&root, "design")?.to_string(),
+        device,
         variant,
         completed,
         estimates: get_opt(&root, "estimates", |v| {
@@ -503,6 +566,7 @@ pub fn context_from_json_text(text: &str) -> R<SessionContext> {
                 raw_plan: get_opt(v, "raw_plan", parse_plan)?,
             })
         })?,
+        sweep: get_opt(&root, "sweep", parse_sweep)?,
         pipeline: get_opt(&root, "pipeline", |v| {
             Ok(PipelineArtifact {
                 plan: get_opt(v, "plan", parse_plan)?,
@@ -558,13 +622,16 @@ mod tests {
 
     #[test]
     fn empty_context_roundtrips() {
-        let ctx = SessionContext::new("d", super::super::FlowVariant::Baseline);
+        let ctx =
+            SessionContext::new("d", DeviceKind::U250, super::super::FlowVariant::Baseline);
         let text = context_to_json_text(&ctx);
         let back = context_from_json_text(&text).unwrap();
         assert_eq!(back.design_name, "d");
+        assert_eq!(back.device, DeviceKind::U250);
         assert_eq!(back.variant, super::super::FlowVariant::Baseline);
         assert!(back.completed.is_empty());
         assert!(back.estimates.is_none());
+        assert!(back.sweep.is_none());
         // Canonical: serialize-parse-serialize is a fixpoint.
         assert_eq!(context_to_json_text(&back), text);
     }
@@ -588,11 +655,40 @@ mod tests {
     }
 
     #[test]
+    fn sweep_context_roundtrips_byte_identically() {
+        let mut cfg = FlowConfig::default();
+        cfg.sim.enabled = false;
+        cfg.sweep.enabled = true;
+        cfg.sweep.ratios = vec![0.6, 0.75];
+        let mut s = Session::new(small_design(), super::super::FlowVariant::Tapa, cfg);
+        let _ = s.run_all(&RustStep).unwrap();
+        let sw = s.context().sweep.as_ref().expect("sweep artifact present");
+        assert_eq!(sw.points.len(), 2);
+        let text = context_to_json_text(s.context());
+        let back = context_from_json_text(&text).unwrap();
+        assert_eq!(context_to_json_text(&back), text);
+        let back_sw = back.sweep.as_ref().unwrap();
+        assert_eq!(back_sw.best, sw.best);
+        assert_eq!(back_sw.points.len(), sw.points.len());
+        for (a, b) in back_sw.points.iter().zip(&sw.points) {
+            assert_eq!(a.util_ratio, b.util_ratio);
+            assert_eq!(a.duplicate_of, b.duplicate_of);
+            assert_eq!(a.fmax_mhz, b.fmax_mhz);
+            assert_eq!(a.plan.is_some(), b.plan.is_some());
+        }
+    }
+
+    #[test]
     fn rejects_bad_checkpoints() {
         assert!(context_from_json_text("not json").is_err());
         assert!(context_from_json_text("{}").is_err());
-        let ctx = SessionContext::new("d", super::super::FlowVariant::Tapa);
-        let bumped = context_to_json_text(&ctx).replace("\"version\":1", "\"version\":99");
+        let ctx =
+            SessionContext::new("d", DeviceKind::U250, super::super::FlowVariant::Tapa);
+        let bumped = context_to_json_text(&ctx)
+            .replace("\"version\":2", "\"version\":99");
         assert!(context_from_json_text(&bumped).is_err());
+        let wrong_dev =
+            context_to_json_text(&ctx).replace("\"device\":\"U250\"", "\"device\":\"U999\"");
+        assert!(context_from_json_text(&wrong_dev).is_err());
     }
 }

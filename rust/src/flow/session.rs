@@ -8,27 +8,30 @@
 //! pipeline and resumed later, so expensive phases are never recomputed
 //! (mirroring rapidstream-tapa's `load_persistent_context` /
 //! `store_persistent_context` step protocol). A [`StageCache`] shares
-//! variant-independent artifacts — today the HLS estimates — across
-//! sessions on the same design, so running `Baseline` and `Tapa` back to
-//! back estimates only once.
+//! variant-independent artifacts — the HLS estimates (per design, shared
+//! across variants *and* devices) and §6.3 sweep candidates (per
+//! `(design, device, util_ratio)`) — across sessions, so running
+//! `Baseline` and `Tapa` back to back estimates only once and a sweep is
+//! never re-solved. [`SessionSet`] lifts this to multi-device sessions:
+//! one design against U250 and U280 with a single Estimate artifact.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::device::Device;
-use crate::floorplan::Floorplan;
+use crate::device::{Device, DeviceKind};
+use crate::floorplan::{multi, Floorplan, FloorplanConfig};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::{estimate_all, TaskEstimate};
-use crate::pipeline::{pipeline_with_feedback, PipelinePlan};
-use crate::place::{place_baseline, place_floorplan_guided, Placement, StepExecutor};
+use crate::pipeline::{pipeline_edges, pipeline_with_feedback, PipelinePlan};
+use crate::place::{place_baseline, place_floorplan_guided, Placement, RustStep, StepExecutor};
 use crate::route::{route, RouteReport};
 use crate::sim::{simulate, SimConfig};
-use crate::timing::{analyze_with_areas, TimingReport};
+use crate::timing::{analyze, analyze_with_areas, TimingReport};
 
 use super::stage::Stage;
-use super::{utilization_pct, Design, FlowConfig, FlowResult, FlowVariant};
+use super::{utilization_pct, Design, FlowConfig, FlowResult, FlowVariant, SelectPolicy};
 
 /// Session failures. Stage execution itself never fails (an infeasible
 /// floorplan degrades the session to the baseline path instead); errors
@@ -76,6 +79,35 @@ pub struct PipelineArtifact {
     pub sim_lat: Vec<u32>,
 }
 
+/// Artifact of [`Stage::Sweep`] — the §6.3 multi-floorplan sweep.
+///
+/// One row per sweep ratio, *including* failed points (the "Failed" rows
+/// of Table 10) and duplicate solutions (marked, not dropped, so the
+/// artifact is lossless). Every unique successful candidate is fully
+/// implemented (pipeline → place → route → STA) and the winner, chosen
+/// by the session's [`SelectPolicy`], is adopted as the session's
+/// floorplan for the remaining stages. Empty when the sweep is disabled.
+#[derive(Clone, Debug, Default)]
+pub struct SweepArtifact {
+    pub points: Vec<SweepCandidate>,
+    /// Index into `points` of the adopted candidate; `None` when the
+    /// sweep is disabled or no point produced a usable floorplan.
+    pub best: Option<usize>,
+}
+
+/// One evaluated sweep point inside a [`SweepArtifact`].
+#[derive(Clone, Debug)]
+pub struct SweepCandidate {
+    pub util_ratio: f64,
+    /// `None` when partitioning was infeasible at this ratio.
+    pub plan: Option<Floorplan>,
+    /// `Some(i)` when the slot assignment duplicates point `i`'s.
+    pub duplicate_of: Option<usize>,
+    /// Post-route Fmax of the implemented candidate; `None` for failed
+    /// or duplicate points and for candidates that did not route.
+    pub fmax_mhz: Option<f64>,
+}
+
 /// Artifact of [`Stage::Sim`]. Wrapped so "simulation ran and was skipped
 /// or failed" is distinguishable from "stage not executed yet".
 #[derive(Clone, Debug, Default)]
@@ -88,11 +120,16 @@ pub struct SimArtifact {
 #[derive(Clone, Debug)]
 pub struct SessionContext {
     pub design_name: String,
+    /// Device the session targets — part of checkpoint identity, so one
+    /// work directory can hold per-device checkpoints of the same design
+    /// (multi-device sessions, [`SessionSet`]).
+    pub device: DeviceKind,
     pub variant: FlowVariant,
     /// Stages completed, in execution order.
     pub completed: Vec<Stage>,
     pub estimates: Option<Vec<TaskEstimate>>,
     pub floorplan: Option<FloorplanArtifact>,
+    pub sweep: Option<SweepArtifact>,
     pub pipeline: Option<PipelineArtifact>,
     pub placement: Option<Placement>,
     pub route: Option<RouteReport>,
@@ -101,13 +138,15 @@ pub struct SessionContext {
 }
 
 impl SessionContext {
-    pub fn new(design_name: &str, variant: FlowVariant) -> Self {
+    pub fn new(design_name: &str, device: DeviceKind, variant: FlowVariant) -> Self {
         SessionContext {
             design_name: design_name.to_string(),
+            device,
             variant,
             completed: Vec::new(),
             estimates: None,
             floorplan: None,
+            sweep: None,
             pipeline: None,
             placement: None,
             route: None,
@@ -123,22 +162,45 @@ impl SessionContext {
 
 /// Cross-session cache for variant-independent stage artifacts, shared by
 /// the batch runner and by experiment helpers that run several variants of
-/// one design. Keyed by design identity; thread-safe.
+/// one design. Estimates are keyed by design identity (they are
+/// device-independent, so multi-device sessions share one Estimate
+/// artifact); §6.3 sweep candidates are keyed by
+/// `(design, device, util_ratio)` so later sessions and the Table 10
+/// experiment reuse solved partitions instead of re-solving them.
+/// Thread-safe.
 #[derive(Default)]
 pub struct StageCache {
     estimates: Mutex<HashMap<String, Arc<Vec<TaskEstimate>>>>,
     computes: AtomicU64,
     hits: AtomicU64,
+    sweeps: Mutex<HashMap<String, Arc<Option<Floorplan>>>>,
+    sweep_computes: AtomicU64,
+    sweep_hits: AtomicU64,
 }
 
 impl StageCache {
     fn key(design: &Design) -> String {
-        // Name plus shape guards against two generators reusing a name.
+        // Name plus shape plus an external-port fingerprint: estimates
+        // depend on per-port interface area (Table 3: mmap vs async_mmap)
+        // and memory kind, so two same-shaped graphs reusing a name but
+        // differing in ports must not share estimates. (Identically named
+        // graphs differing only in ComputeSpecs are not distinguished —
+        // generators in this repo never produce that.)
+        let port_fp: u64 = design
+            .graph
+            .ext_ports
+            .iter()
+            .fold(0u64, |acc, p| {
+                let tag = (p.style as u64) << 1 | (p.mem as u64 & 1);
+                acc.wrapping_mul(31).wrapping_add(tag << 32 | p.width_bits as u64)
+            });
         format!(
-            "{}#{}v{}e",
+            "{}#{}v{}e{}p@{:016x}",
             design.name,
             design.graph.num_insts(),
-            design.graph.num_edges()
+            design.graph.num_edges(),
+            design.graph.ext_ports.len(),
+            port_fp
         )
     }
 
@@ -168,6 +230,59 @@ impl StageCache {
     pub fn stats(&self) -> (u64, u64) {
         (self.computes.load(Ordering::Relaxed), self.hits.load(Ordering::Relaxed))
     }
+
+    /// Cache key of one sweep point: design identity, device identity and
+    /// the exact ratio bits, plus the floorplanner knobs that change the
+    /// partition (`max_util` itself is overridden by the ratio).
+    fn sweep_key(design: &Design, device: &Device, base: &FloorplanConfig, ratio: f64) -> String {
+        format!(
+            "{}@{}#{}s/{}:{}:{}@{:016x}",
+            Self::key(design),
+            device.name,
+            device.num_slots(),
+            base.seed,
+            base.ilp_vertex_threshold,
+            base.max_bb_nodes,
+            ratio.to_bits()
+        )
+    }
+
+    /// The §6.3 floorplan candidate of one design at one sweep ratio on
+    /// one device, solved at most once per cache (same race discipline as
+    /// [`StageCache::estimates_for`]). `None` inside the `Arc` records an
+    /// infeasible sweep point, so failures are cached too.
+    pub fn sweep_plan_for(
+        &self,
+        design: &Design,
+        device: &Device,
+        estimates: &[TaskEstimate],
+        base: &FloorplanConfig,
+        ratio: f64,
+    ) -> Arc<Option<Floorplan>> {
+        let key = Self::sweep_key(design, device, base, ratio);
+        if let Some(hit) = self.sweeps.lock().unwrap().get(&key) {
+            self.sweep_hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        let plan = Arc::new(multi::solve_point(&design.graph, device, estimates, base, ratio));
+        let mut map = self.sweeps.lock().unwrap();
+        if let Some(winner) = map.get(&key) {
+            self.sweep_hits.fetch_add(1, Ordering::Relaxed);
+            return winner.clone();
+        }
+        self.sweep_computes.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, plan.clone());
+        plan
+    }
+
+    /// `(computes, hits)` counters for sweep points — the resume and
+    /// determinism tests assert candidate reuse with these.
+    pub fn sweep_stats(&self) -> (u64, u64) {
+        (
+            self.sweep_computes.load(Ordering::Relaxed),
+            self.sweep_hits.load(Ordering::Relaxed),
+        )
+    }
 }
 
 /// One staged compilation of a design under a flow variant.
@@ -181,6 +296,8 @@ pub struct Session {
     graph: TaskGraph,
     workdir: Option<PathBuf>,
     cache: Option<Arc<StageCache>>,
+    /// Worker threads for the §6.3 sweep's candidate implementations.
+    jobs: usize,
     /// Stages actually executed by this process (checkpoint-loaded stages
     /// are in `ctx.completed` but not here).
     executed: Vec<Stage>,
@@ -189,7 +306,7 @@ pub struct Session {
 impl Session {
     pub fn new(design: Design, variant: FlowVariant, cfg: FlowConfig) -> Session {
         let graph = design.graph.clone();
-        let ctx = SessionContext::new(&design.name, variant);
+        let ctx = SessionContext::new(&design.name, design.device, variant);
         Session {
             design,
             variant,
@@ -198,6 +315,7 @@ impl Session {
             graph,
             workdir: None,
             cache: None,
+            jobs: 1,
             executed: Vec::new(),
         }
     }
@@ -211,6 +329,16 @@ impl Session {
     /// Share variant-independent artifacts with other sessions.
     pub fn with_cache(mut self, cache: Arc<StageCache>) -> Session {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Implement sweep candidates over `n` worker threads. Candidate
+    /// scoring always runs on the deterministic Rust reference step
+    /// (like [`super::BatchRunner`] workers) and results are collected
+    /// in submission order, so the sweep artifact is byte-identical for
+    /// any worker count and any session executor.
+    pub fn with_jobs(mut self, n: usize) -> Session {
+        self.jobs = n.max(1);
         self
     }
 
@@ -246,9 +374,20 @@ impl Session {
             .collect()
     }
 
-    /// Checkpoint file for a `(design, variant)` pair inside `workdir`.
-    pub fn checkpoint_path(workdir: &Path, design_name: &str, variant: FlowVariant) -> PathBuf {
-        workdir.join(format!("{design_name}__{}.ctx.json", variant.name()))
+    /// Checkpoint file for a `(design, device, variant)` triple inside
+    /// `workdir` — device-qualified so multi-device sessions of one
+    /// design can share a work directory.
+    pub fn checkpoint_path(
+        workdir: &Path,
+        design_name: &str,
+        device: DeviceKind,
+        variant: FlowVariant,
+    ) -> PathBuf {
+        workdir.join(format!(
+            "{design_name}__{}__{}.ctx.json",
+            device.name().to_ascii_lowercase(),
+            variant.name()
+        ))
     }
 
     /// Reload a checkpointed session from `workdir`. With `variant: None`
@@ -266,7 +405,7 @@ impl Session {
         };
         let mut found: Option<(FlowVariant, PathBuf)> = None;
         for v in candidates {
-            let path = Self::checkpoint_path(workdir, &design.name, v);
+            let path = Self::checkpoint_path(workdir, &design.name, design.device, v);
             if path.exists() {
                 if found.is_some() {
                     return Err(SessionError::Mismatch(format!(
@@ -299,6 +438,33 @@ impl Session {
                 ctx.variant.name(),
                 v.name()
             )));
+        }
+        if ctx.device != design.device {
+            return Err(SessionError::Mismatch(format!(
+                "checkpoint is for device {}, not {}",
+                ctx.device.name(),
+                design.device.name()
+            )));
+        }
+        // Every stage claimed complete must carry its artifact — a
+        // truncated or hand-edited checkpoint fails here with a Mismatch
+        // instead of panicking later inside run_stage.
+        for st in &ctx.completed {
+            let present = match st {
+                Stage::Estimate => ctx.estimates.is_some(),
+                Stage::Floorplan => ctx.floorplan.is_some(),
+                Stage::Sweep => ctx.sweep.is_some(),
+                Stage::Pipeline => ctx.pipeline.is_some(),
+                Stage::Place => ctx.placement.is_some(),
+                Stage::Route => ctx.route.is_some(),
+                Stage::Sta => ctx.timing.is_some(),
+                Stage::Sim => ctx.sim.is_some(),
+            };
+            if !present {
+                return Err(SessionError::Mismatch(format!(
+                    "checkpoint marks stage `{st}` complete but its artifact is missing"
+                )));
+            }
         }
         let n_insts = design.graph.num_insts();
         let n_edges = design.graph.num_edges();
@@ -342,6 +508,75 @@ impl Session {
                 )));
             }
         }
+        if let Some(sw) = &ctx.sweep {
+            if let Some(b) = sw.best {
+                if b >= sw.points.len() {
+                    return Err(SessionError::Mismatch(format!(
+                        "checkpoint sweep best index {b} out of {} points",
+                        sw.points.len()
+                    )));
+                }
+            }
+            for pt in &sw.points {
+                if let Some(fp) = &pt.plan {
+                    if fp.assignment.len() != n_insts {
+                        return Err(SessionError::Mismatch(format!(
+                            "checkpoint sweep candidate assigns {} of {} instances",
+                            fp.assignment.len(),
+                            n_insts
+                        )));
+                    }
+                }
+            }
+        }
+        // Config-vs-checkpoint mismatches around the sweep. (a) The
+        // checkpoint completed Sweep as a disabled no-op (empty artifact)
+        // but this session asks for the sweep: invalidate Sweep and
+        // everything after it, so `--resume --sweep` actually runs the
+        // §6.3 sweep (reusing the checkpointed estimates and floorplan)
+        // instead of silently skipping it. (b) The checkpoint's Floorplan
+        // is a sweep placeholder (the sweep was meant to choose the plan)
+        // but this session has the sweep disabled: invalidate Floorplan
+        // and everything after it, so the §5.2 feedback solve runs.
+        //
+        // Only the enabled/disabled transitions are special-cased —
+        // without them a resume would panic or silently skip a requested
+        // sweep. Other config changes (sweep ratios, --select policy,
+        // floorplan knobs, …) follow the checkpoint-API's general rule:
+        // a workdir records results under the config that produced them,
+        // and resuming never invalidates completed work; start a fresh
+        // workdir to re-run under a different configuration.
+        let mut ctx = ctx;
+        if ctx.variant != FlowVariant::Baseline {
+            if cfg.sweep.enabled
+                && ctx.is_complete(Stage::Sweep)
+                && ctx.sweep.as_ref().is_some_and(|s| s.points.is_empty())
+            {
+                ctx.completed.retain(|&s| s < Stage::Sweep);
+                ctx.sweep = None;
+                ctx.pipeline = None;
+                ctx.placement = None;
+                ctx.route = None;
+                ctx.timing = None;
+                ctx.sim = None;
+            }
+            if !cfg.sweep.enabled
+                && ctx.is_complete(Stage::Floorplan)
+                && ctx
+                    .floorplan
+                    .as_ref()
+                    .is_some_and(|fa| fa.floorplan.is_none() && !fa.degraded)
+            {
+                ctx.completed.retain(|&s| s < Stage::Floorplan);
+                ctx.floorplan = None;
+                ctx.sweep = None;
+                ctx.pipeline = None;
+                ctx.placement = None;
+                ctx.route = None;
+                ctx.timing = None;
+                ctx.sim = None;
+            }
+        }
         let mut graph = design.graph.clone();
         if let Some(fa) = &ctx.floorplan {
             for &(a, b) in &fa.extra_same_slot {
@@ -361,6 +596,7 @@ impl Session {
             graph,
             workdir: Some(workdir.to_path_buf()),
             cache: None,
+            jobs: 1,
             executed: Vec::new(),
         })
     }
@@ -383,7 +619,8 @@ impl Session {
         };
         std::fs::create_dir_all(dir)
             .map_err(|e| SessionError::Io(dir.display().to_string(), e.to_string()))?;
-        let path = Self::checkpoint_path(dir, &self.design.name, self.variant);
+        let path =
+            Self::checkpoint_path(dir, &self.design.name, self.design.device, self.variant);
         let text = super::persist::context_to_json_text(&self.ctx);
         std::fs::write(&path, text)
             .map_err(|e| SessionError::Io(path.display().to_string(), e.to_string()))?;
@@ -493,6 +730,120 @@ impl Session {
         est
     }
 
+    /// The §5.2 joint floorplan + trial-pipelining feedback solve — the
+    /// Floorplan stage body for non-sweep sessions, and the sweep's
+    /// fallback when no candidate succeeds. Appends the loop's `same_slot`
+    /// pairs to the working graph. On infeasibility the artifact is
+    /// `degraded` and the rest of the session follows the baseline path
+    /// but keeps the requested variant tag.
+    fn solve_feedback_floorplan(&mut self) -> FloorplanArtifact {
+        let est = self.ctx.estimates.clone().expect("estimate stage done");
+        let device = self.device();
+        let mut g = self.graph.clone();
+        let base_len = g.same_slot.len();
+        match pipeline_with_feedback(&mut g, &device, &est, &self.cfg.floorplan, 3) {
+            Ok((fp, plan)) => {
+                let extra = g.same_slot[base_len..]
+                    .iter()
+                    .map(|&(a, b)| (a.0, b.0))
+                    .collect();
+                self.graph = g;
+                FloorplanArtifact {
+                    floorplan: Some(fp),
+                    raw_plan: Some(plan),
+                    extra_same_slot: extra,
+                    degraded: false,
+                }
+            }
+            Err(_) => FloorplanArtifact { degraded: true, ..Default::default() },
+        }
+    }
+
+    /// The §6.3 sweep: one candidate per configured ratio (solved through
+    /// the [`StageCache`] when present, so sweep points are shared with
+    /// later sessions on the same design/device), every unique successful
+    /// candidate implemented end to end, and the winner adopted as the
+    /// session's floorplan. Operates on the raw design graph — candidates
+    /// deliberately bypass the §5.2 feedback loop, and candidate scoring
+    /// always uses the deterministic Rust reference step (exactly the
+    /// Table 10 evaluation), so the artifact is identical for any worker
+    /// count and any session executor; the adopted winner is then
+    /// implemented by the session's executor in the later stages.
+    fn run_sweep(&mut self) -> SweepArtifact {
+        let est = self.ctx.estimates.clone().expect("estimate stage done");
+        let device = self.device();
+        let cfg = self.cfg.clone();
+        let jobs = self.jobs;
+
+        // 1. Candidate generation, cached per (design, device, ratio);
+        //    duplicate marking shared with `floorplan::multi`.
+        let mut points: Vec<SweepCandidate> =
+            multi::sweep_points_with(&cfg.sweep.ratios, |ratio| match &self.cache {
+                Some(c) => {
+                    (*c.sweep_plan_for(&self.design, &device, &est, &cfg.floorplan, ratio))
+                        .clone()
+                }
+                None => {
+                    multi::solve_point(&self.design.graph, &device, &est, &cfg.floorplan, ratio)
+                }
+            })
+            .into_iter()
+            .map(|p| SweepCandidate {
+                util_ratio: p.util_ratio,
+                plan: p.plan,
+                duplicate_of: p.duplicate_of,
+                fmax_mhz: None,
+            })
+            .collect();
+
+        // 2. Implement every unique successful candidate ("implement all
+        //    Pareto candidates in parallel, keep the best routed result").
+        //    Results come back in submission order regardless of workers.
+        let g = &self.design.graph;
+        let fmax: Vec<Option<f64>> =
+            super::batch::run_indexed(points.len(), jobs, |i| {
+                let p = &points[i];
+                if p.duplicate_of.is_some() {
+                    return None;
+                }
+                let fp = p.plan.as_ref()?;
+                evaluate_candidate(g, &device, &est, fp, &cfg, &RustStep)
+            });
+        for (p, f) in points.iter_mut().zip(fmax) {
+            p.fmax_mhz = f;
+        }
+
+        // 3. Select and adopt: the winner becomes the session's floorplan
+        //    for the remaining stages (and the working graph is reset to
+        //    the raw design graph so resumed sessions see the same
+        //    state). With no winner, fall back to the §5.2 feedback solve
+        //    the Floorplan stage skipped for this sweep-enabled session —
+        //    unless it already carries a usable (or degraded) artifact
+        //    from a non-sweep checkpoint.
+        let best = select_best(&points, cfg.sweep.select);
+        if let Some(bi) = best {
+            let fp = points[bi].plan.clone().expect("selected candidate has a plan");
+            let raw =
+                pipeline_edges(&self.design.graph, &device, &fp, cfg.floorplan.stages_per_crossing);
+            self.graph = self.design.graph.clone();
+            self.ctx.floorplan = Some(FloorplanArtifact {
+                floorplan: Some(fp),
+                raw_plan: Some(raw),
+                extra_same_slot: Vec::new(),
+                degraded: false,
+            });
+        } else if self
+            .ctx
+            .floorplan
+            .as_ref()
+            .map_or(true, |fa| fa.floorplan.is_none() && !fa.degraded)
+        {
+            let art = self.solve_feedback_floorplan();
+            self.ctx.floorplan = Some(art);
+        }
+        SweepArtifact { points, best }
+    }
+
     fn run_stage(&mut self, st: Stage, exec: &dyn StepExecutor) {
         match st {
             Stage::Estimate => {
@@ -505,33 +856,25 @@ impl Session {
             Stage::Floorplan => {
                 let art = if self.variant == FlowVariant::Baseline {
                     FloorplanArtifact::default()
+                } else if self.cfg.sweep.enabled {
+                    // The sweep picks the floorplan — don't pay the §5.2
+                    // feedback loop for a plan the winner would overwrite
+                    // (the pre-stage Table 10 path never ran it either).
+                    // If no sweep candidate succeeds, run_sweep falls back
+                    // to the feedback solve.
+                    FloorplanArtifact::default()
                 } else {
-                    let est = self.ctx.estimates.as_ref().expect("estimate stage done");
-                    let device = self.device();
-                    let mut g = self.graph.clone();
-                    let base_len = g.same_slot.len();
-                    match pipeline_with_feedback(&mut g, &device, est, &self.cfg.floorplan, 3)
-                    {
-                        Ok((fp, plan)) => {
-                            let extra = g.same_slot[base_len..]
-                                .iter()
-                                .map(|&(a, b)| (a.0, b.0))
-                                .collect();
-                            self.graph = g;
-                            FloorplanArtifact {
-                                floorplan: Some(fp),
-                                raw_plan: Some(plan),
-                                extra_same_slot: extra,
-                                degraded: false,
-                            }
-                        }
-                        // Cannot floorplan at all (design too big): the rest
-                        // of the session degrades to the baseline path but
-                        // keeps the requested variant tag.
-                        Err(_) => FloorplanArtifact { degraded: true, ..Default::default() },
-                    }
+                    self.solve_feedback_floorplan()
                 };
                 self.ctx.floorplan = Some(art);
+            }
+            Stage::Sweep => {
+                let art = if !self.cfg.sweep.enabled || self.variant == FlowVariant::Baseline {
+                    SweepArtifact::default()
+                } else {
+                    self.run_sweep()
+                };
+                self.ctx.sweep = Some(art);
             }
             Stage::Pipeline => {
                 let ne = self.graph.num_edges();
@@ -639,6 +982,181 @@ impl Session {
     }
 }
 
+/// Implement one §6.3 sweep candidate end to end — floorplan-aware
+/// pipelining, guided placement, routing, STA — and report its Fmax.
+/// This is byte-for-byte the per-candidate evaluation Table 10 performs
+/// (post-route [`analyze`], no internal-path area correction).
+fn evaluate_candidate(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    fp: &Floorplan,
+    cfg: &FlowConfig,
+    exec: &dyn StepExecutor,
+) -> Option<f64> {
+    let plan = pipeline_edges(g, device, fp, cfg.floorplan.stages_per_crossing);
+    let (pl, _) = place_floorplan_guided(g, device, fp, &cfg.analytical, exec);
+    let rep = route(g, device, estimates, &pl);
+    let stages: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
+    analyze(g, device, &pl, &rep, &stages).fmax_mhz
+}
+
+/// Pick the winning sweep point under a [`SelectPolicy`]. Ties go to the
+/// earliest point, so selection is deterministic.
+fn select_best(points: &[SweepCandidate], policy: SelectPolicy) -> Option<usize> {
+    match policy {
+        SelectPolicy::BestFmax => points
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.fmax_mhz.map(|f| (i, f)))
+            .fold(None, |acc: Option<(usize, f64)>, (i, f)| match acc {
+                Some((_, bf)) if bf >= f => acc,
+                _ => Some((i, f)),
+            })
+            .map(|(i, _)| i),
+        SelectPolicy::MinCost => points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.duplicate_of.is_none())
+            .filter_map(|(i, p)| p.plan.as_ref().map(|fp| (i, fp.cost)))
+            .fold(None, |acc: Option<(usize, u64)>, (i, c)| match acc {
+                Some((_, bc)) if bc <= c => acc,
+                _ => Some((i, c)),
+            })
+            .map(|(i, _)| i),
+    }
+}
+
+/// One design compiled for several devices at once — e.g. U250 *and*
+/// U280 (§2.3/§7.1) — as a set of per-device [`Session`]s sharing a
+/// single [`StageCache`], so the HLS Estimate artifact is computed once
+/// and shared across the whole set while floorplans, sweeps and
+/// placements stay per-device. Checkpoints are device-qualified, so one
+/// work directory holds the entire set.
+pub struct SessionSet {
+    sessions: Vec<Session>,
+    cache: Arc<StageCache>,
+}
+
+impl SessionSet {
+    /// Fresh sessions for `design` retargeted to each device in order.
+    pub fn for_devices(
+        design: &Design,
+        devices: &[DeviceKind],
+        variant: FlowVariant,
+        cfg: FlowConfig,
+    ) -> SessionSet {
+        let cache = Arc::new(StageCache::default());
+        let sessions = devices
+            .iter()
+            .map(|&dev| {
+                let mut d = design.clone();
+                d.device = dev;
+                Session::new(d, variant, cfg.clone()).with_cache(cache.clone())
+            })
+            .collect();
+        SessionSet { sessions, cache }
+    }
+
+    /// Strict resume: every device must have a checkpoint in `workdir`,
+    /// mirroring the single-device `--resume` behaviour — a typo'd
+    /// directory errors instead of silently recomputing an expensive
+    /// multi-device sweep from scratch. This is what
+    /// `tapa compile --device a,b --resume` runs: completed stages —
+    /// sweep points included — are never re-executed.
+    pub fn resume(
+        design: &Design,
+        devices: &[DeviceKind],
+        variant: FlowVariant,
+        cfg: FlowConfig,
+        workdir: &Path,
+    ) -> Result<SessionSet, SessionError> {
+        let cache = Arc::new(StageCache::default());
+        let mut sessions = Vec::with_capacity(devices.len());
+        for &dev in devices {
+            let mut d = design.clone();
+            d.device = dev;
+            let s = Session::resume(d, Some(variant), cfg.clone(), workdir)?;
+            sessions.push(s.with_cache(cache.clone()));
+        }
+        Ok(SessionSet { sessions, cache })
+    }
+
+    /// Lenient variant of [`SessionSet::resume`]: sessions with a
+    /// checkpoint in `workdir` resume from it, the rest start fresh
+    /// (persisting to the same directory) — for incrementally growing a
+    /// work directory across device lists.
+    pub fn open(
+        design: &Design,
+        devices: &[DeviceKind],
+        variant: FlowVariant,
+        cfg: FlowConfig,
+        workdir: &Path,
+    ) -> Result<SessionSet, SessionError> {
+        let cache = Arc::new(StageCache::default());
+        let mut sessions = Vec::with_capacity(devices.len());
+        for &dev in devices {
+            let mut d = design.clone();
+            d.device = dev;
+            let path = Session::checkpoint_path(workdir, &d.name, dev, variant);
+            let s = if path.exists() {
+                Session::resume(d, Some(variant), cfg.clone(), workdir)?
+            } else {
+                Session::new(d, variant, cfg.clone()).with_workdir(workdir)
+            };
+            sessions.push(s.with_cache(cache.clone()));
+        }
+        Ok(SessionSet { sessions, cache })
+    }
+
+    /// Persist every session's context to `dir` after each `up_to` call.
+    pub fn with_workdir(mut self, dir: impl Into<PathBuf>) -> SessionSet {
+        let dir = dir.into();
+        self.sessions = self
+            .sessions
+            .into_iter()
+            .map(|s| s.with_workdir(dir.clone()))
+            .collect();
+        self
+    }
+
+    /// Sweep-candidate worker threads per session.
+    pub fn with_jobs(mut self, n: usize) -> SessionSet {
+        self.sessions = self.sessions.into_iter().map(|s| s.with_jobs(n)).collect();
+        self
+    }
+
+    /// The shared cache (estimate and sweep-point accounting).
+    pub fn cache(&self) -> &StageCache {
+        &self.cache
+    }
+
+    pub fn sessions(&self) -> &[Session] {
+        &self.sessions
+    }
+
+    pub fn sessions_mut(&mut self) -> &mut [Session] {
+        &mut self.sessions
+    }
+
+    /// Run every session up to and including `target`, in device order.
+    pub fn up_to(&mut self, target: Stage, exec: &dyn StepExecutor) -> Result<(), SessionError> {
+        for s in &mut self.sessions {
+            s.up_to(target, exec)?;
+        }
+        Ok(())
+    }
+
+    /// Run every session to completion; results come back in device order.
+    pub fn run_all(&mut self, exec: &dyn StepExecutor) -> Result<Vec<FlowResult>, SessionError> {
+        let mut out = Vec::with_capacity(self.sessions.len());
+        for s in &mut self.sessions {
+            out.push(s.run_all(exec)?);
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -677,7 +1195,7 @@ mod tests {
         s.up_to(Stage::Pipeline, &RustStep).unwrap();
         assert_eq!(
             s.executed_stages(),
-            &[Stage::Estimate, Stage::Floorplan, Stage::Pipeline]
+            &[Stage::Estimate, Stage::Floorplan, Stage::Sweep, Stage::Pipeline]
         );
         // Continuing does not re-run completed stages.
         s.up_to(Stage::Sim, &RustStep).unwrap();
@@ -713,6 +1231,60 @@ mod tests {
             assert_eq!(via_session.cycles, via_flow.cycles, "{}", variant.name());
             assert_eq!(via_session.util_pct, via_flow.util_pct, "{}", variant.name());
         }
+    }
+
+    #[test]
+    fn sweep_disabled_yields_empty_artifact() {
+        let mut s = Session::new(chain_design(6), FlowVariant::Tapa, FlowConfig::default());
+        s.up_to(Stage::Sweep, &RustStep).unwrap();
+        let sw = s.context().sweep.as_ref().expect("sweep stage ran");
+        assert!(sw.points.is_empty());
+        assert!(sw.best.is_none());
+    }
+
+    #[test]
+    fn sweep_enabled_adopts_selected_candidate() {
+        let mut cfg = FlowConfig::default();
+        cfg.sweep.enabled = true;
+        cfg.sweep.ratios = vec![0.6, 0.75, 0.9];
+        let mut s = Session::new(chain_design(8), FlowVariant::Tapa, cfg);
+        s.up_to(Stage::Sweep, &RustStep).unwrap();
+        {
+            let ctx = s.context();
+            let sw = ctx.sweep.as_ref().expect("sweep stage ran");
+            assert_eq!(sw.points.len(), 3, "one point per configured ratio");
+            let b = sw.best.expect("a small chain floorplans at some ratio");
+            let fp = ctx
+                .floorplan
+                .as_ref()
+                .and_then(|f| f.floorplan.as_ref())
+                .expect("winner adopted");
+            assert_eq!(fp.assignment, sw.points[b].plan.as_ref().unwrap().assignment);
+        }
+        // The session still completes downstream of the adopted plan.
+        let r = s.run_all(&RustStep).unwrap();
+        assert!(r.fmax_mhz.is_some());
+    }
+
+    #[test]
+    fn sweep_results_identical_for_any_job_count() {
+        let mut cfg = FlowConfig::default();
+        cfg.sim.enabled = false;
+        cfg.sweep.enabled = true;
+        cfg.sweep.ratios = vec![0.6, 0.75];
+        let d = chain_design(8);
+        let run = |jobs: usize| {
+            let mut s =
+                Session::new(d.clone(), FlowVariant::Tapa, cfg.clone()).with_jobs(jobs);
+            s.up_to(Stage::Sweep, &RustStep).unwrap();
+            s.context().sweep.clone().unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.best, b.best);
+        let fa: Vec<Option<f64>> = a.points.iter().map(|p| p.fmax_mhz).collect();
+        let fb: Vec<Option<f64>> = b.points.iter().map(|p| p.fmax_mhz).collect();
+        assert_eq!(fa, fb);
     }
 
     #[test]

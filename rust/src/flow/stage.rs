@@ -1,4 +1,4 @@
-//! The seven explicit stages of the staged compilation pipeline.
+//! The eight explicit stages of the staged compilation pipeline.
 //!
 //! Declared in pipeline order so the derived `Ord` matches execution
 //! order: `Estimate < Floorplan < … < Sim`. [`crate::flow::Session`]
@@ -12,6 +12,11 @@ pub enum Stage {
     /// Coarse-grained floorplanning, including the §5.2 feedback loop
     /// with trial pipelining.
     Floorplan,
+    /// §6.3 multi-floorplan sweep: solve one candidate per
+    /// utilization-ratio sweep point, implement every unique successful
+    /// candidate, and adopt the best one. A no-op (empty artifact)
+    /// unless the sweep is enabled in the flow config.
+    Sweep,
     /// Derive the effective pipelining plan for the session's variant:
     /// register stages for timing and latencies for simulation.
     Pipeline,
@@ -27,9 +32,10 @@ pub enum Stage {
 
 impl Stage {
     /// All stages, in execution order.
-    pub const ALL: [Stage; 7] = [
+    pub const ALL: [Stage; 8] = [
         Stage::Estimate,
         Stage::Floorplan,
+        Stage::Sweep,
         Stage::Pipeline,
         Stage::Place,
         Stage::Route,
@@ -47,6 +53,7 @@ impl Stage {
         match self {
             Stage::Estimate => "estimate",
             Stage::Floorplan => "floorplan",
+            Stage::Sweep => "sweep",
             Stage::Pipeline => "pipeline",
             Stage::Place => "place",
             Stage::Route => "route",
@@ -75,6 +82,8 @@ mod tests {
     #[test]
     fn order_matches_pipeline() {
         assert!(Stage::Estimate < Stage::Floorplan);
+        assert!(Stage::Floorplan < Stage::Sweep);
+        assert!(Stage::Sweep < Stage::Pipeline);
         assert!(Stage::Route < Stage::Sim);
         for (i, st) in Stage::ALL.into_iter().enumerate() {
             assert_eq!(st.index(), i);

@@ -29,14 +29,17 @@
 //!
 //! All of the above is orchestrated by the **staged compilation API** in
 //! [`flow`]: a [`flow::Session`] walks the explicit stage pipeline
-//! `Estimate → Floorplan → Pipeline → Place → Route → Sta → Sim`, storing
-//! one typed artifact per stage in a [`flow::SessionContext`]. Sessions
-//! checkpoint/resume through JSON work directories (`tapa compile --to
-//! floorplan --workdir W`, then `--resume` skips completed stages), share
-//! variant-independent artifacts through a [`flow::StageCache`], and fan
-//! out across threads with the [`flow::BatchRunner`] (`tapa bench
-//! 43-designs --jobs N`). The one-shot [`flow::run_flow`] remains as a
-//! thin wrapper.
+//! `Estimate → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim`,
+//! storing one typed artifact per stage in a [`flow::SessionContext`].
+//! Sessions checkpoint/resume through JSON work directories (`tapa
+//! compile --to floorplan --workdir W`, then `--resume` skips completed
+//! stages — §6.3 sweep points included), share variant-independent
+//! artifacts through a [`flow::StageCache`] (HLS estimates per design,
+//! sweep candidates per `(design, device, util_ratio)`), compile one
+//! design for several parts at once with [`flow::SessionSet`] (`tapa
+//! compile --device u250,u280 --sweep`), and fan out across threads with
+//! the [`flow::BatchRunner`] (`tapa bench 43-designs --jobs N`). The
+//! one-shot [`flow::run_flow`] remains as a thin wrapper.
 //!
 //! ```
 //! use tapa::bench_suite::stencil::stencil;

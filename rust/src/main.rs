@@ -5,15 +5,25 @@
 //! tapa compile --design NAME        run the staged TAPA flow on one design
 //!       [--variant V] [--config F]  (variants: baseline, tapa,
 //!       [--no-sim]                   pipeline-only, floorplan-only,
-//!       [--workdir DIR]              tapa-4slot)
+//!       [--device D[,D..]]           tapa-4slot)
+//!       [--sweep] [--select P]      §6.3 multi-floorplan sweep; P picks
+//!       [--jobs N]                   the winner (fmax | cost)
+//!       [--workdir DIR]
 //!       [--to STAGE]                stop after STAGE (estimate, floorplan,
-//!                                    pipeline, place, route, sta, sim)
+//!                                    sweep, pipeline, place, route, sta, sim)
 //!       [--resume]                  continue from the workdir checkpoint
 //! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
 //!       [--jobs N]                  parallel sessions (43-designs suite)
 //! tapa bench --list                 list experiment ids
 //! tapa engine-info                  check the PJRT artifact
 //! ```
+//!
+//! `--device u250,u280` compiles the design for both parts as a
+//! multi-device session set sharing one HLS Estimate artifact; checkpoint
+//! files are device-qualified, so one `--workdir` holds the whole set.
+//! Checkpoints use the versioned `flow::persist` format — byte layout is
+//! frozen within a version (see `rust/tests/data/golden_sweep_ctx.json`),
+//! so `--resume` keeps working across releases of the same version.
 //!
 //! Arguments are parsed by hand (no clap offline); unknown flags error.
 
@@ -22,7 +32,8 @@ use std::process::ExitCode;
 
 use tapa::bench_suite::{all_autobridge_designs, experiments};
 use tapa::config::Config;
-use tapa::flow::{FlowConfig, FlowVariant, Session, Stage};
+use tapa::device::DeviceKind;
+use tapa::flow::{FlowConfig, FlowVariant, SelectPolicy, Session, SessionSet, Stage};
 use tapa::place::{RustStep, StepExecutor};
 use tapa::report::fmt_mhz;
 
@@ -50,10 +61,22 @@ fn print_help() {
         "tapa — task-parallel dataflow flow with HLS/physical-design \
          co-optimization\n\n\
          USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
-         [--config FILE] [--no-sim]\n               [--workdir DIR] [--to STAGE] \
+         [--config FILE] [--no-sim]\n               [--device D[,D...]] [--sweep] \
+         [--select fmax|cost] [--jobs N]\n               [--workdir DIR] [--to STAGE] \
          [--resume]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n  \
          tapa bench --list\n  tapa engine-info\n\n\
-         STAGES (for --to): estimate floorplan pipeline place route sta sim"
+         STAGES (for --to): estimate floorplan sweep pipeline place route sta sim\n\
+         DEVICES (for --device): u250 u280 — a comma-separated list compiles the\n  \
+         design for every part as one session set sharing a single HLS Estimate\n  \
+         artifact (checkpoints in --workdir are device-qualified).\n\
+         SWEEP: --sweep runs the multi-floorplan utilization-ratio sweep (§6.3) as\n  \
+         a pipeline stage; candidates are cached per (design, device, ratio) and\n  \
+         --resume never re-solves completed sweep points. --select picks the\n  \
+         winner: `fmax` (best routed result, default) or `cost` (min crossing\n  \
+         cost). --jobs N implements candidates over N worker threads with\n  \
+         deterministic, submission-ordered results.\n\
+         CHECKPOINTS: versioned JSON (flow::persist); the byte layout is frozen\n  \
+         within a format version, so old workdirs keep resuming."
     );
 }
 
@@ -67,6 +90,21 @@ fn flag_value(args: &[String], key: &str) -> Option<String> {
 
 fn has_flag(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
+}
+
+/// Parse `--jobs N` (default 1); `Err` means the error was already
+/// reported and the command should fail.
+fn parse_jobs(args: &[String]) -> Result<usize, ()> {
+    match flag_value(args, "--jobs") {
+        Some(n) => match n.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => {
+                eprintln!("--jobs requires a positive integer, got {n}");
+                Err(())
+            }
+        },
+        None => Ok(1),
+    }
 }
 
 fn load_config(args: &[String]) -> FlowConfig {
@@ -135,8 +173,8 @@ fn cmd_compile(args: &[String]) -> ExitCode {
             Some(st) => st,
             None => {
                 eprintln!(
-                    "unknown stage {s} (stages: estimate floorplan pipeline place \
-                     route sta sim)"
+                    "unknown stage {s} (stages: estimate floorplan sweep pipeline \
+                     place route sta sim)"
                 );
                 return ExitCode::FAILURE;
             }
@@ -149,6 +187,42 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if has_flag(args, "--no-sim") {
         cfg.sim.enabled = false;
     }
+    let sweep_flag = has_flag(args, "--sweep");
+    if sweep_flag {
+        cfg.sweep.enabled = true;
+    }
+    if let Some(sel) = flag_value(args, "--select") {
+        match SelectPolicy::parse(&sel) {
+            Some(p) => cfg.sweep.select = p,
+            None => {
+                eprintln!("unknown selection policy {sel} (policies: fmax cost)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let Ok(jobs) = parse_jobs(args) else {
+        return ExitCode::FAILURE;
+    };
+    let devices: Vec<DeviceKind> = match flag_value(args, "--device") {
+        Some(spec) => {
+            let mut v = Vec::new();
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                match DeviceKind::parse(part) {
+                    Some(d) => v.push(d),
+                    None => {
+                        eprintln!("unknown device {part} (devices: u250 u280)");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            if v.is_empty() {
+                eprintln!("--device requires at least one of: u250 u280");
+                return ExitCode::FAILURE;
+            }
+            v
+        }
+        None => Vec::new(),
+    };
 
     let all: Vec<_> = all_autobridge_designs()
         .into_iter()
@@ -158,10 +232,19 @@ fn cmd_compile(args: &[String]) -> ExitCode {
                 .flat_map(|(a, b)| [a, b]),
         )
         .collect();
-    let Some(design) = all.into_iter().find(|d| d.name == name) else {
+    let Some(mut design) = all.into_iter().find(|d| d.name == name) else {
         eprintln!("unknown design {name} (see `tapa list`)");
         return ExitCode::FAILURE;
     };
+
+    if devices.len() > 1 {
+        return compile_multi_device(
+            design, &devices, variant_flag, target, workdir, resume, cfg, jobs,
+        );
+    }
+    if let Some(&dev) = devices.first() {
+        design.device = dev;
+    }
 
     let mut session = if resume {
         let Some(dir) = &workdir else {
@@ -169,7 +252,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
             return ExitCode::FAILURE;
         };
         match Session::resume(design, variant_flag, cfg, dir) {
-            Ok(s) => s,
+            Ok(s) => s.with_jobs(jobs),
             Err(e) => {
                 eprintln!("cannot resume: {e}");
                 return ExitCode::FAILURE;
@@ -177,7 +260,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         }
     } else {
         let variant = variant_flag.unwrap_or(FlowVariant::Tapa);
-        let mut s = Session::new(design, variant, cfg);
+        let mut s = Session::new(design, variant, cfg).with_jobs(jobs);
         if let Some(dir) = &workdir {
             s = s.with_workdir(dir);
         }
@@ -210,8 +293,12 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     }
     println!("  ran         : {} in {dt:.2}s", stage_list(session.executed_stages()));
     if let Some(dir) = session.workdir_path() {
-        let path =
-            Session::checkpoint_path(dir, &session.design().name, session.variant());
+        let path = Session::checkpoint_path(
+            dir,
+            &session.design().name,
+            session.design().device,
+            session.variant(),
+        );
         println!("  checkpoint  : {}", path.display());
     }
 
@@ -228,12 +315,19 @@ fn cmd_compile(args: &[String]) -> ExitCode {
                 None => {}
             }
         }
+        print_sweep(ctx);
         if let Some(t) = &ctx.timing {
             println!("  fmax        : {} MHz", fmt_mhz(t.fmax_mhz));
         }
         match session.workdir_path() {
+            // Repeat the flags that select this checkpoint and config —
+            // a hint without --device/--sweep would miss the checkpoint
+            // or re-solve work the sweep config change invalidates.
             Some(dir) => println!(
-                "  resume with : tapa compile --design {name} --resume --workdir {}",
+                "  resume with : tapa compile --design {name} --device {} {}--resume \
+                 --workdir {}",
+                session.design().device.name().to_ascii_lowercase(),
+                if sweep_flag { "--sweep " } else { "" },
                 dir.display()
             ),
             None => println!(
@@ -262,9 +356,171 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if let Some(fp) = &r.floorplan {
         println!("  floorplan   : cost {} @ util ratio {:.2}", fp.cost, fp.util_ratio);
     }
+    print_sweep(session.context());
     if let Some(c) = r.cycles {
         println!("  sim cycles  : {c}");
     }
+    ExitCode::SUCCESS
+}
+
+/// Render the §6.3 sweep artifact (one cell per unique sweep point).
+fn print_sweep(ctx: &tapa::flow::SessionContext) {
+    let Some(art) = &ctx.sweep else { return };
+    if art.points.is_empty() {
+        return;
+    }
+    let cells: Vec<String> = art
+        .points
+        .iter()
+        .filter(|p| p.duplicate_of.is_none())
+        .map(|p| format!("{:.2}→{}", p.util_ratio, fmt_mhz(p.fmax_mhz)))
+        .collect();
+    println!("  sweep       : {}", cells.join("  "));
+    if let Some(b) = art.best {
+        println!(
+            "  best cand   : util ratio {:.2} ({} MHz)",
+            art.points[b].util_ratio,
+            fmt_mhz(art.points[b].fmax_mhz)
+        );
+    }
+}
+
+/// `tapa compile --device a,b[,…]`: one design compiled for several parts
+/// as a [`SessionSet`] sharing a single HLS Estimate artifact. Checkpoints
+/// are device-qualified inside `--workdir`, and `--resume` picks every
+/// per-device session back up without re-running completed stages (sweep
+/// points included).
+#[allow(clippy::too_many_arguments)]
+fn compile_multi_device(
+    design: tapa::flow::Design,
+    devices: &[DeviceKind],
+    variant_flag: Option<FlowVariant>,
+    target: Stage,
+    workdir: Option<PathBuf>,
+    resume: bool,
+    cfg: FlowConfig,
+    jobs: usize,
+) -> ExitCode {
+    // Resolve the variant first: explicit flag wins; on --resume without a
+    // flag, detect it from the checkpoints (mirroring the single-device
+    // scan) — exactly one variant must be present.
+    let variant = match (variant_flag, resume) {
+        (Some(v), _) => v,
+        (None, false) => FlowVariant::Tapa,
+        (None, true) => {
+            let Some(dir) = &workdir else {
+                eprintln!("--resume requires --workdir DIR");
+                return ExitCode::FAILURE;
+            };
+            let found: Vec<FlowVariant> = FlowVariant::ALL
+                .into_iter()
+                .filter(|&v| {
+                    devices.iter().any(|&dev| {
+                        Session::checkpoint_path(dir, &design.name, dev, v).exists()
+                    })
+                })
+                .collect();
+            match found.as_slice() {
+                [v] => *v,
+                [] => {
+                    eprintln!(
+                        "cannot resume: no checkpoint for design `{}` in {}",
+                        design.name,
+                        dir.display()
+                    );
+                    return ExitCode::FAILURE;
+                }
+                _ => {
+                    eprintln!(
+                        "cannot resume: multiple checkpoint variants for `{}` in {}; \
+                         pass --variant",
+                        design.name,
+                        dir.display()
+                    );
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+    };
+    let mut set = if resume {
+        let Some(dir) = &workdir else {
+            eprintln!("--resume requires --workdir DIR");
+            return ExitCode::FAILURE;
+        };
+        match SessionSet::resume(&design, devices, variant, cfg, dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot resume: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        let mut s = SessionSet::for_devices(&design, devices, variant, cfg);
+        if let Some(dir) = &workdir {
+            s = s.with_workdir(dir);
+        }
+        s
+    };
+    set = set.with_jobs(jobs);
+
+    let engine = tapa::runtime::Engine::load_default();
+    let exec: &dyn StepExecutor = match &engine {
+        Some(e) => e,
+        None => &RustStep,
+    };
+    let dev_names: Vec<&str> = devices.iter().map(|d| d.name()).collect();
+    println!(
+        "compiling {} [{}] on {} (placer step: {}, up to stage: {})",
+        design.name,
+        variant.name(),
+        dev_names.join(", "),
+        exec.name(),
+        target.name()
+    );
+    let t0 = std::time::Instant::now();
+    for session in set.sessions_mut() {
+        let device = session.design().device;
+        if let Err(e) = session.up_to(target, exec) {
+            eprintln!("session for {} failed: {e}", device.name());
+            return ExitCode::FAILURE;
+        }
+        println!("[{}]", device.name());
+        let resumed = session.resumed_stages();
+        if !resumed.is_empty() {
+            println!("  from ckpt   : {}", stage_list(&resumed));
+        }
+        println!("  ran         : {}", stage_list(session.executed_stages()));
+        if let Some(dir) = session.workdir_path() {
+            let path = Session::checkpoint_path(dir, &design.name, device, variant);
+            println!("  checkpoint  : {}", path.display());
+        }
+        match session.result() {
+            Some(r) => {
+                println!("  fmax        : {} MHz", fmt_mhz(r.fmax_mhz));
+                if let Some(fp) = &r.floorplan {
+                    println!(
+                        "  floorplan   : cost {} @ util ratio {:.2}",
+                        fp.cost, fp.util_ratio
+                    );
+                }
+            }
+            None => {
+                if let Some(t) = &session.context().timing {
+                    println!("  fmax        : {} MHz", fmt_mhz(t.fmax_mhz));
+                }
+            }
+        }
+        print_sweep(session.context());
+    }
+    let (est_computes, est_hits) = set.cache().stats();
+    let (sw_computes, sw_hits) = set.cache().sweep_stats();
+    println!(
+        "{} devices in {:.2}s — estimates computed {est_computes}× (shared, {est_hits} \
+         hit{}), sweep points solved {sw_computes}× ({sw_hits} from cache)",
+        devices.len(),
+        t0.elapsed().as_secs_f64(),
+        if est_hits == 1 { "" } else { "s" },
+    );
     ExitCode::SUCCESS
 }
 
@@ -279,15 +535,8 @@ fn cmd_bench(args: &[String]) -> ExitCode {
         eprintln!("bench requires an experiment id (try `tapa bench --list`)");
         return ExitCode::FAILURE;
     };
-    let jobs = match flag_value(args, "--jobs") {
-        Some(n) => match n.parse::<usize>() {
-            Ok(n) if n >= 1 => n,
-            _ => {
-                eprintln!("--jobs requires a positive integer, got {n}");
-                return ExitCode::FAILURE;
-            }
-        },
-        None => 1,
+    let Ok(jobs) = parse_jobs(args) else {
+        return ExitCode::FAILURE;
     };
     let cfg = load_config(args);
     match experiments::run_experiment_jobs(id, &cfg, jobs) {

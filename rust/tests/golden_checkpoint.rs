@@ -1,0 +1,67 @@
+//! Golden checkpoint: locks the versioned `flow::persist` on-disk format.
+//!
+//! `data/golden_sweep_ctx.json` is a committed, known-good serialized
+//! [`SessionContext`] (format v2, with a §6.3 `SweepArtifact`). The
+//! parser must accept it and the writer must reproduce it byte for byte
+//! — so a future PR cannot silently change the layout and break
+//! `--resume` compatibility. Any intentional layout change must bump
+//! `flow::persist::FORMAT_VERSION` and refresh this golden.
+
+use tapa::device::DeviceKind;
+use tapa::flow::{persist, FlowVariant, Stage};
+
+const GOLDEN: &str = include_str!("data/golden_sweep_ctx.json");
+
+#[test]
+fn golden_v2_checkpoint_roundtrips_byte_identically() {
+    let ctx = persist::context_from_json_text(GOLDEN).expect("golden checkpoint parses");
+    assert_eq!(
+        persist::context_to_json_text(&ctx),
+        GOLDEN,
+        "writer drifted from the committed v2 checkpoint format — resume \
+         compatibility would break; bump FORMAT_VERSION and refresh the golden \
+         instead of changing the layout in place"
+    );
+}
+
+#[test]
+fn golden_checkpoint_carries_the_expected_artifacts() {
+    let ctx = persist::context_from_json_text(GOLDEN).unwrap();
+    assert_eq!(ctx.design_name, "golden");
+    assert_eq!(ctx.device, DeviceKind::U280);
+    assert_eq!(ctx.variant, FlowVariant::Tapa);
+    assert_eq!(
+        ctx.completed,
+        vec![Stage::Estimate, Stage::Floorplan, Stage::Sweep]
+    );
+    assert_eq!(ctx.estimates.as_ref().map(|e| e.len()), Some(2));
+
+    let fa = ctx.floorplan.as_ref().expect("floorplan artifact");
+    assert!(!fa.degraded);
+    let fp = fa.floorplan.as_ref().expect("adopted floorplan");
+    assert_eq!(fp.assignment.len(), 2);
+    assert_eq!(fp.cost, 32);
+
+    let sw = ctx.sweep.as_ref().expect("sweep artifact");
+    assert_eq!(sw.best, Some(0));
+    assert_eq!(sw.points.len(), 3);
+    // Point 0: the winner, fully implemented.
+    assert_eq!(sw.points[0].util_ratio, 0.5);
+    assert_eq!(sw.points[0].fmax_mhz, Some(300.5));
+    // Point 1: a "Failed" row (Table 10).
+    assert!(sw.points[1].plan.is_none());
+    assert!(sw.points[1].fmax_mhz.is_none());
+    // Point 2: a duplicate of point 0, solved but not re-implemented.
+    assert_eq!(sw.points[2].duplicate_of, Some(0));
+    assert_eq!(
+        sw.points[2].plan.as_ref().unwrap().assignment,
+        sw.points[0].plan.as_ref().unwrap().assignment
+    );
+
+    // Later stages have not run yet.
+    assert!(ctx.pipeline.is_none());
+    assert!(ctx.placement.is_none());
+    assert!(ctx.route.is_none());
+    assert!(ctx.timing.is_none());
+    assert!(ctx.sim.is_none());
+}

@@ -4,6 +4,7 @@
 //! see `tapa::util::prop` for the harness).
 
 use tapa::device::{u250, AreaVector};
+use tapa::floorplan::multi::{generate_with_failures, sweep_points};
 use tapa::floorplan::{bind_hbm_channels, floorplan, FloorplanConfig};
 use tapa::graph::{ComputeSpec, MemKind, PortStyle, TaskGraph, TaskGraphBuilder};
 use tapa::hls::estimate_all;
@@ -136,6 +137,79 @@ fn pipelining_always_balances_reconvergent_paths() {
                         }
                     }
                 }
+            }
+        }
+    });
+}
+
+#[test]
+fn sweep_candidates_respect_ratio_capacity_and_dedup() {
+    let d = u250();
+    let sweep = [0.55, 0.7, 0.85];
+    forall(Config::default().cases(12).seed(0x5EE9), |rng| {
+        let g = random_dag(rng);
+        let est = estimate_all(&g);
+        let points = sweep_points(&g, &d, &est, &FloorplanConfig::default(), &sweep);
+
+        // Lossless: exactly one entry per sweep point, in sweep order.
+        assert_eq!(points.len(), sweep.len());
+        for (i, pt) in points.iter().enumerate() {
+            assert_eq!(pt.util_ratio, sweep[i]);
+            if let Some(di) = pt.duplicate_of {
+                assert!(di < i, "duplicate references an earlier point");
+                assert!(points[di].duplicate_of.is_none());
+                assert_eq!(
+                    points[di].plan.as_ref().unwrap().assignment,
+                    pt.plan.as_ref().unwrap().assignment
+                );
+            }
+            let Some(fp) = &pt.plan else { continue };
+            // Every task is assigned to exactly one valid slot.
+            assert_eq!(fp.assignment.len(), g.num_insts());
+            let mut per_slot = vec![AreaVector::ZERO; d.num_slots()];
+            for (v, s) in fp.assignment.iter().enumerate() {
+                assert!(s.0 < d.num_slots(), "slot id {} out of range", s.0);
+                per_slot[s.0] += est[v].area;
+            }
+            // …and the task load per slot honours this point's ratio:
+            // fabric capacity scaled by `util_ratio`, HBM channels as hard
+            // counts (§6.2, mirroring the partitioner's own bound).
+            for (si, load) in per_slot.iter().enumerate() {
+                let mut cap = d.slots[si].capacity.scaled(pt.util_ratio);
+                cap.hbm_ch = d.slots[si].capacity.hbm_ch;
+                assert!(
+                    load.fits_within(&cap),
+                    "slot {si} over the {} bound: [{load}]",
+                    pt.util_ratio
+                );
+            }
+        }
+
+        // De-duplication: the unique plans are pairwise distinct…
+        let unique: Vec<_> = points
+            .iter()
+            .filter(|p| p.duplicate_of.is_none() && p.plan.is_some())
+            .collect();
+        for i in 0..unique.len() {
+            for j in i + 1..unique.len() {
+                assert_ne!(
+                    unique[i].plan.as_ref().unwrap().assignment,
+                    unique[j].plan.as_ref().unwrap().assignment
+                );
+            }
+        }
+
+        // …and generate_with_failures is exactly the dup-filtered view.
+        let rows = generate_with_failures(&g, &d, &est, &FloorplanConfig::default(), &sweep);
+        let expect: Vec<_> =
+            points.iter().filter(|p| p.duplicate_of.is_none()).collect();
+        assert_eq!(rows.len(), expect.len());
+        for (row, p) in rows.iter().zip(expect) {
+            assert_eq!(row.0, p.util_ratio);
+            match (&row.1, &p.plan) {
+                (Some(a), Some(b)) => assert_eq!(a.assignment, b.assignment),
+                (None, None) => {}
+                _ => panic!("success/failure mismatch at ratio {}", row.0),
             }
         }
     });

@@ -53,15 +53,23 @@ fn context_json_roundtrips_through_disk() {
     let mut s = Session::new(d.clone(), FlowVariant::Tapa, FlowConfig::default())
         .with_workdir(&dir);
     s.up_to(Stage::Route, &RustStep).unwrap();
-    let path = Session::checkpoint_path(&dir, &d.name, FlowVariant::Tapa);
+    let path = Session::checkpoint_path(&dir, &d.name, DeviceKind::U250, FlowVariant::Tapa);
     assert!(path.exists(), "up_to persists a checkpoint");
     let text = std::fs::read_to_string(&path).unwrap();
     let ctx = persist::context_from_json_text(&text).unwrap();
     assert_eq!(ctx.design_name, d.name);
+    assert_eq!(ctx.device, DeviceKind::U250);
     assert_eq!(ctx.variant, FlowVariant::Tapa);
     assert_eq!(
         ctx.completed,
-        vec![Stage::Estimate, Stage::Floorplan, Stage::Pipeline, Stage::Place, Stage::Route]
+        vec![
+            Stage::Estimate,
+            Stage::Floorplan,
+            Stage::Sweep,
+            Stage::Pipeline,
+            Stage::Place,
+            Stage::Route
+        ]
     );
     // Canonical writer: re-serializing the parsed context is byte-identical.
     assert_eq!(persist::context_to_json_text(&ctx), text);
@@ -89,7 +97,7 @@ fn up_to_then_resume_equals_one_shot_run_flow() {
     // checkpoint and were NOT re-executed.
     assert_eq!(
         resumed.executed_stages(),
-        &[Stage::Pipeline, Stage::Place, Stage::Route, Stage::Sta, Stage::Sim]
+        &[Stage::Sweep, Stage::Pipeline, Stage::Place, Stage::Route, Stage::Sta, Stage::Sim]
     );
     assert_eq!(
         resumed.resumed_stages(),
@@ -129,6 +137,25 @@ fn resume_with_explicit_variant_and_error_paths() {
     let r = s.run_all(&RustStep).unwrap();
     assert_eq!(r.variant, FlowVariant::Baseline);
     assert!(!s.executed_stages().contains(&Stage::Estimate));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_rejects_checkpoint_with_missing_artifact() {
+    // A checkpoint claiming `estimate` complete but carrying no
+    // estimates artifact (truncated / hand-edited) must fail resume with
+    // a Mismatch instead of panicking later inside run_stage.
+    let dir = workdir("inconsistent");
+    let d = chain_design("bad_ctx_chain", 4);
+    let mut ctx =
+        tapa::flow::SessionContext::new(&d.name, DeviceKind::U250, FlowVariant::Tapa);
+    ctx.completed.push(Stage::Estimate);
+    let path = Session::checkpoint_path(&dir, &d.name, DeviceKind::U250, FlowVariant::Tapa);
+    std::fs::write(&path, persist::context_to_json_text(&ctx)).unwrap();
+    assert!(
+        Session::resume(d, Some(FlowVariant::Tapa), FlowConfig::default(), &dir).is_err(),
+        "inconsistent checkpoint must be rejected at resume"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -1,0 +1,348 @@
+//! Integration tests for the §6.3 multi-floorplan sweep as a first-class
+//! [`Stage::Sweep`] plus multi-device [`SessionSet`]s: a single shared
+//! Estimate artifact across devices, sweep candidates cached per
+//! `(design, device, util_ratio)`, checkpoint/resume that never re-solves
+//! completed sweep points, batch determinism down to the CSV bytes, and
+//! Table 10 equivalence with the pre-stage side-path.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tapa::bench_suite::stencil::stencil;
+use tapa::device::DeviceKind;
+use tapa::flow::{
+    BatchRunner, Design, FlowConfig, FlowVariant, Session, SessionSet, SimOptions,
+    Stage, StageCache,
+};
+use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+use tapa::place::RustStep;
+use tapa::report::{fmt_mhz, Table};
+
+/// Sweep-enabled config, simulation off, with a short ratio list so the
+/// tests stay fast. `StageCache` keys include the exact ratios, so any
+/// list exercises the same machinery as the default §6.3 sweep.
+fn sweep_cfg() -> FlowConfig {
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.sweep.enabled = true;
+    cfg.sweep.ratios = vec![0.6, 0.7, 0.85];
+    cfg
+}
+
+fn chain_design(name: &str, n: usize) -> Design {
+    let mut b = TaskGraphBuilder::new(name);
+    let p = b.proto(
+        "K",
+        ComputeSpec {
+            mac_ops: 25,
+            alu_ops: 200,
+            bram_bytes: 48 * 1024,
+            uram_bytes: 0,
+            trip_count: 256,
+            ii: 1,
+            pipeline_depth: 6,
+        },
+    );
+    let ids = b.invoke_n(p, "k", n);
+    for i in 0..n - 1 {
+        b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+    }
+    Design { name: name.to_string(), graph: b.build().unwrap(), device: DeviceKind::U250 }
+}
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate
+/// offline).
+fn workdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tapa_sweep_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn multi_device_set_shares_one_estimate_artifact() {
+    let d = chain_design("md_est_chain", 8);
+    let devices = [DeviceKind::U250, DeviceKind::U280];
+    let mut set =
+        SessionSet::for_devices(&d, &devices, FlowVariant::Tapa, sweep_cfg());
+    set.up_to(Stage::Sweep, &RustStep).unwrap();
+
+    // One design, two devices: HLS estimation ran once, the second
+    // session hit the shared cache — a single shared Estimate artifact.
+    let (computes, hits) = set.cache().stats();
+    assert_eq!(computes, 1, "estimates are device-independent");
+    assert_eq!(hits, 1, "second device reuses the artifact");
+
+    // The sweep ran once per device: candidates are keyed by device, so
+    // nothing is shared across parts, and every point is accounted for.
+    let n_ratios = 3u64;
+    let (sw_computes, sw_hits) = set.cache().sweep_stats();
+    assert_eq!(sw_computes, n_ratios * devices.len() as u64);
+    assert_eq!(sw_hits, 0);
+
+    for (s, dev) in set.sessions().iter().zip(devices) {
+        assert_eq!(s.design().device, dev);
+        let art = s.context().sweep.as_ref().expect("sweep artifact per device");
+        assert_eq!(art.points.len(), n_ratios as usize);
+    }
+}
+
+#[test]
+fn second_session_reuses_cached_sweep_points() {
+    let d = chain_design("cache_sweep_chain", 8);
+    let cfg = sweep_cfg();
+    let cache = Arc::new(StageCache::default());
+    for _ in 0..2 {
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone())
+            .with_cache(cache.clone());
+        s.up_to(Stage::Sweep, &RustStep).unwrap();
+    }
+    let (sw_computes, sw_hits) = cache.sweep_stats();
+    assert_eq!(sw_computes, 3, "each ratio solved exactly once");
+    assert_eq!(sw_hits, 3, "the second session hit every point");
+}
+
+#[test]
+fn resume_skips_completed_sweep_points() {
+    let dir = workdir("resume");
+    let cfg = sweep_cfg();
+    let d = chain_design("sw_resume_chain", 8);
+    let devices = [DeviceKind::U250, DeviceKind::U280];
+
+    // `tapa compile --device u250,u280 --sweep --to sweep --workdir W`
+    let mut first = SessionSet::for_devices(&d, &devices, FlowVariant::Tapa, cfg.clone())
+        .with_workdir(&dir);
+    first.up_to(Stage::Sweep, &RustStep).unwrap();
+    let first_arts: Vec<_> = first
+        .sessions()
+        .iter()
+        .map(|s| s.context().sweep.clone().unwrap())
+        .collect();
+    drop(first);
+
+    // `… --resume` is strict: a wrong directory errors instead of
+    // silently recomputing the sweep…
+    let empty = workdir("resume_empty");
+    assert!(
+        SessionSet::resume(&d, &devices, FlowVariant::Tapa, cfg.clone(), &empty).is_err(),
+        "resume without checkpoints must fail loudly"
+    );
+    let _ = std::fs::remove_dir_all(&empty);
+
+    // …while with the real workdir estimate/floorplan/sweep come from
+    // the checkpoints: no sweep point is re-solved (StageCache
+    // accounting) and only the post-sweep stages execute.
+    let mut resumed =
+        SessionSet::resume(&d, &devices, FlowVariant::Tapa, cfg.clone(), &dir).unwrap();
+    let results = resumed.run_all(&RustStep).unwrap();
+    assert_eq!(results.len(), devices.len());
+    for s in resumed.sessions() {
+        assert_eq!(
+            s.executed_stages(),
+            &[Stage::Pipeline, Stage::Place, Stage::Route, Stage::Sta, Stage::Sim],
+            "{}",
+            s.design().device.name()
+        );
+        assert_eq!(
+            s.resumed_stages(),
+            vec![Stage::Estimate, Stage::Floorplan, Stage::Sweep]
+        );
+    }
+    assert_eq!(resumed.cache().sweep_stats(), (0, 0), "no sweep point re-solved");
+    assert_eq!(resumed.cache().stats(), (0, 0), "no estimate recomputed");
+
+    // The checkpointed artifacts round-tripped losslessly.
+    for (s, want) in resumed.sessions().iter().zip(&first_arts) {
+        let got = s.context().sweep.as_ref().unwrap();
+        assert_eq!(got.best, want.best);
+        let gf: Vec<Option<f64>> = got.points.iter().map(|p| p.fmax_mhz).collect();
+        let wf: Vec<Option<f64>> = want.points.iter().map(|p| p.fmax_mhz).collect();
+        assert_eq!(gf, wf);
+    }
+
+    // …and the resumed runs match a fresh uninterrupted multi-device run.
+    let mut fresh = SessionSet::for_devices(&d, &devices, FlowVariant::Tapa, cfg);
+    let want = fresh.run_all(&RustStep).unwrap();
+    for (a, b) in results.iter().zip(&want) {
+        assert_eq!(a.fmax_mhz, b.fmax_mhz);
+        assert_eq!(a.util_pct, b.util_pct);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_newly_enabled_sweep_reruns_it() {
+    let dir = workdir("enable_sweep");
+    let d = chain_design("sw_enable_chain", 6);
+    // First run WITHOUT the sweep, to completion: Stage::Sweep completes
+    // as a disabled no-op (empty artifact).
+    let nosweep = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let mut s =
+        Session::new(d.clone(), FlowVariant::Tapa, nosweep).with_workdir(&dir);
+    s.run_all(&RustStep).unwrap();
+    drop(s);
+
+    // `--resume --sweep`: the empty-sweep checkpoint is invalidated from
+    // Sweep onward, so the §6.3 sweep actually runs; the checkpointed
+    // estimates and floorplan are still reused.
+    let mut s = Session::resume(d, Some(FlowVariant::Tapa), sweep_cfg(), &dir).unwrap();
+    let r = s.run_all(&RustStep).unwrap();
+    assert_eq!(s.resumed_stages(), vec![Stage::Estimate, Stage::Floorplan]);
+    assert_eq!(
+        s.executed_stages(),
+        &[Stage::Sweep, Stage::Pipeline, Stage::Place, Stage::Route, Stage::Sta, Stage::Sim]
+    );
+    let art = s.context().sweep.as_ref().unwrap();
+    assert_eq!(art.points.len(), 3, "the sweep ran on resume");
+    assert!(r.fmax_mhz.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sweep_placeholder_checkpoint_resumed_without_sweep_resolves_floorplan() {
+    let dir = workdir("disable_sweep");
+    let d = chain_design("sw_disable_chain", 6);
+    // `--sweep --to floorplan` leaves a placeholder Floorplan artifact
+    // (the sweep was meant to pick the plan).
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, sweep_cfg()).with_workdir(&dir);
+    s.up_to(Stage::Floorplan, &RustStep).unwrap();
+    drop(s);
+
+    // Resuming WITHOUT the sweep must re-run the §5.2 feedback solve
+    // rather than treating the placeholder as a real floorplan.
+    let nosweep = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let mut s = Session::resume(d, Some(FlowVariant::Tapa), nosweep, &dir).unwrap();
+    let r = s.run_all(&RustStep).unwrap();
+    assert!(s.executed_stages().contains(&Stage::Floorplan));
+    assert!(r.floorplan.is_some(), "a real floorplan was solved");
+    assert!(r.fmax_mhz.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rerun_of_same_workdir_has_stable_cache_stats() {
+    let dir = workdir("stable_stats");
+    let cfg = sweep_cfg();
+    let d = chain_design("sw_stats_chain", 6);
+    let devices = [DeviceKind::U250, DeviceKind::U280];
+    let run = || {
+        let mut set =
+            SessionSet::open(&d, &devices, FlowVariant::Tapa, cfg.clone(), &dir).unwrap();
+        set.run_all(&RustStep).unwrap();
+        (set.cache().stats(), set.cache().sweep_stats())
+    };
+    let cold = run();
+    // Every later rerun of the same workdir resumes everything: the hit
+    // counts are stable run over run.
+    let warm1 = run();
+    let warm2 = run();
+    assert_eq!(warm1, warm2, "cache accounting is reproducible");
+    assert_eq!(warm1, ((0, 0), (0, 0)), "fully checkpointed workdir");
+    assert_ne!(cold.1, warm1.1, "the cold run actually solved the sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_sweep_csv_byte_identical_for_1_4_8_jobs() {
+    let cfg = sweep_cfg();
+    // The multi-device sweep suite: each design compiled for both parts.
+    let designs: Vec<Design> = [DeviceKind::U250, DeviceKind::U280]
+        .into_iter()
+        .flat_map(|dev| (1..=2).map(move |k| stencil(k, dev)))
+        .collect();
+    let run = |jobs: usize| {
+        let cache = Arc::new(StageCache::default());
+        let mut runner = BatchRunner::new(cfg.clone()).workers(jobs).with_cache(cache.clone());
+        for d in &designs {
+            runner.push(d.clone(), FlowVariant::Tapa);
+        }
+        let results = runner.run();
+        let mut t = Table::new("multi-device sweep suite", &["Design", "Device", "Opt(MHz)"]);
+        for (d, r) in designs.iter().zip(&results) {
+            t.row(vec![d.name.clone(), d.device.name().to_string(), fmt_mhz(r.fmax_mhz)]);
+        }
+        (t.to_csv(), cache.stats(), cache.sweep_stats())
+    };
+    let (csv1, est1, sw1) = run(1);
+    let (csv4, est4, sw4) = run(4);
+    let (csv8, est8, sw8) = run(8);
+    assert_eq!(csv1, csv4, "--jobs 4 CSV identical to --jobs 1");
+    assert_eq!(csv1, csv8, "--jobs 8 CSV identical to --jobs 1");
+    // StageCache accounting is scheduling-independent and stable across
+    // reruns of the same workload.
+    assert_eq!(est1, est4);
+    assert_eq!(est1, est8);
+    assert_eq!(sw1, sw4);
+    assert_eq!(sw1, sw8);
+    let (csv1b, est1b, sw1b) = run(1);
+    assert_eq!(csv1, csv1b);
+    assert_eq!(est1, est1b);
+    assert_eq!(sw1, sw1b);
+}
+
+#[test]
+fn sweep_stage_matches_pre_refactor_table10_path_on_u250() {
+    use tapa::floorplan::multi::{generate_with_failures, DEFAULT_SWEEP};
+    use tapa::hls::estimate_all;
+    use tapa::pipeline::pipeline_edges;
+    use tapa::place::place_floorplan_guided;
+    use tapa::route::route;
+    use tapa::timing::analyze;
+
+    let d = stencil(1, DeviceKind::U250);
+    let nscfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+
+    // The pre-refactor Table 10 side-path, reproduced literally: sweep →
+    // de-duplicated candidates → pipeline/place/route/analyze each.
+    let device = d.device.device();
+    let est = estimate_all(&d.graph);
+    let mut want: Vec<(f64, Option<f64>)> = Vec::new();
+    for (ratio, plan) in
+        generate_with_failures(&d.graph, &device, &est, &nscfg.floorplan, &DEFAULT_SWEEP)
+    {
+        match plan {
+            None => want.push((ratio, None)),
+            Some(fp) => {
+                let plan =
+                    pipeline_edges(&d.graph, &device, &fp, nscfg.floorplan.stages_per_crossing);
+                let (pl, _) = place_floorplan_guided(
+                    &d.graph,
+                    &device,
+                    &fp,
+                    &nscfg.analytical,
+                    &RustStep,
+                );
+                let rep = route(&d.graph, &device, &est, &pl);
+                let stages: Vec<u32> =
+                    (0..d.graph.num_edges()).map(|e| plan.total_lat(e)).collect();
+                want.push((ratio, analyze(&d.graph, &device, &pl, &rep, &stages).fmax_mhz));
+            }
+        }
+    }
+
+    // The new path: Stage::Sweep with the default ratios.
+    let mut cfg = nscfg.clone();
+    cfg.sweep.enabled = true;
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg);
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.as_ref().unwrap();
+    let got: Vec<(f64, Option<f64>)> = art
+        .points
+        .iter()
+        .filter(|p| p.duplicate_of.is_none())
+        .map(|p| (p.util_ratio, p.fmax_mhz))
+        .collect();
+    assert_eq!(got, want, "Table 10 rows unchanged by the Sweep stage");
+}
