@@ -1,11 +1,22 @@
+use tapa::device::u250;
+use tapa::floorplan::{floorplan, FloorplanConfig};
 use tapa::graph::{ComputeSpec, TaskGraphBuilder};
 use tapa::hls::estimate_all;
-use tapa::floorplan::{floorplan, FloorplanConfig};
-use tapa::device::u250;
 
 fn main() {
     let mut b = TaskGraphBuilder::new("shared");
-    let p = b.proto("Fat", ComputeSpec { mac_ops: 200, alu_ops: 400, bram_bytes: 256*1024, uram_bytes: 0, trip_count: 64, ii: 1, pipeline_depth: 4 });
+    let p = b.proto(
+        "Fat",
+        ComputeSpec {
+            mac_ops: 200,
+            alu_ops: 400,
+            bram_bytes: 256 * 1024,
+            uram_bytes: 0,
+            trip_count: 64,
+            ii: 1,
+            pipeline_depth: 4,
+        },
+    );
     let a = b.invoke(p, "a");
     let c = b.invoke(p, "b");
     b.shared_mem("m", 512, 1024, a, c);

@@ -34,7 +34,9 @@ fn main() {
         let r = simulate(&g, &est, &lat, &cfg).unwrap();
         println!("  {name:<18} {:>8} cycles", r.cycles);
     }
-    println!("balanced pipelining adds only fill latency; unbalanced throttles on the shallow FIFO.\n");
+    println!(
+        "balanced pipelining adds only fill latency; unbalanced throttles on the shallow FIFO.\n"
+    );
 
     // 2. Burst detector trace (Table 1).
     println!("burst detector on 64,65,66,67,128,129,130,256:");
@@ -45,7 +47,10 @@ fn main() {
         let out_s = out
             .map(|b| format!("burst(addr={}, len={})", b.addr, b.len))
             .unwrap_or_default();
-        println!("  cycle {cycle}: in={addr:<4} state=(base={:?}, len={len}) {out_s}", base.unwrap());
+        println!(
+            "  cycle {cycle}: in={addr:<4} state=(base={:?}, len={len}) {out_s}",
+            base.unwrap()
+        );
     }
     if let Some(b) = d.flush() {
         println!("  flush:   burst(addr={}, len={})", b.addr, b.len);

@@ -22,8 +22,16 @@ fn main() {
     let orig = run_flow(&orig_d, FlowVariant::Baseline, &cfg);
     let opt = run_flow(&opt_d, FlowVariant::Tapa, &cfg);
     println!("SpMV A24, 28 HBM channels:");
-    println!("  orig (mmap):       {:>7} MHz   BRAM {:.2}%", fmt_mhz(orig.fmax_mhz), orig.util_pct[2]);
-    println!("  opt (async_mmap):  {:>7} MHz   BRAM {:.2}%", fmt_mhz(opt.fmax_mhz), opt.util_pct[2]);
+    println!(
+        "  orig (mmap):       {:>7} MHz   BRAM {:.2}%",
+        fmt_mhz(orig.fmax_mhz),
+        orig.util_pct[2]
+    );
+    println!(
+        "  opt (async_mmap):  {:>7} MHz   BRAM {:.2}%",
+        fmt_mhz(opt.fmax_mhz),
+        opt.util_pct[2]
+    );
 
     // Automatic HBM channel binding (§6.2).
     let device = opt_d.device.device();
@@ -42,9 +50,13 @@ fn main() {
 
     // Multi-floorplan generation (§6.3 / Table 10).
     println!("\nmulti-floorplan sweep (utilization ratio → Eq.1 cost):");
-    for (ratio, plan) in
-        generate_with_failures(&opt_d.graph, &device, &est, &FloorplanConfig::default(), &DEFAULT_SWEEP)
-    {
+    for (ratio, plan) in generate_with_failures(
+        &opt_d.graph,
+        &device,
+        &est,
+        &FloorplanConfig::default(),
+        &DEFAULT_SWEEP,
+    ) {
         match plan {
             Some(p) => println!("  ratio {ratio:.2} → cost {}", p.cost),
             None => println!("  ratio {ratio:.2} → Failed"),

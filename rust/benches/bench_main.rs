@@ -29,7 +29,8 @@ fn main() {
     let args: Vec<String> = std::env::args().collect();
     // `cargo bench -- table4` runs a single experiment; `-- perf` runs
     // only the micro-benchmarks.
-    let filter: Option<&str> = args.iter().skip(1).find(|a| !a.starts_with('-')).map(|s| s.as_str());
+    let filter: Option<&str> =
+        args.iter().skip(1).find(|a| !a.starts_with('-')).map(|s| s.as_str());
 
     let cfg = FlowConfig::default();
     let t_all = Instant::now();

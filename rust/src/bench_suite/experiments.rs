@@ -2,14 +2,27 @@
 //! evaluation (§7). Each returns a [`crate::report::Table`] whose rows
 //! mirror the published layout, regenerated from our flow. Used by both
 //! the `tapa` CLI (`tapa bench <id>`) and `cargo bench`.
+//!
+//! The batch-shaped experiments (`43-designs`, `fast-suite`, Tables
+//! 8–10) also exist as *sharding suites*: [`suite_units`] flattens each
+//! into a deterministic list of [`WorkUnit`]s, [`execute_unit`] runs one
+//! unit anywhere, and [`suite_table`] reassembles the table from
+//! per-unit results — so `tapa bench <suite> --shard k/N` workers on
+//! different machines plus `tapa merge` reproduce the single-machine
+//! output byte for byte (see [`crate::flow::manifest`]).
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use super::{cnn, gaussian, hbm, pagerank, sort, stencil};
 use crate::device::DeviceKind;
+use crate::floorplan::multi::DEFAULT_SWEEP;
+use crate::flow::manifest::{Manifest, UnitResult, UnitStatus, WorkUnit};
 use crate::flow::{
-    run_flow, BatchRunner, Design, FlowConfig, FlowVariant, Session, SimOptions,
-    Stage, StageCache,
+    run_flow, run_indexed, BatchRunner, Design, FlowConfig, FlowVariant, Session,
+    SessionError, SimOptions, Stage, StageCache,
 };
 use crate::place::RustStep;
 use crate::report::{fmt_cycles, fmt_mhz, fmt_pct, Table};
@@ -20,8 +33,13 @@ use crate::util::stats::mean;
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig12", "fig13", "fig14",
-    "fig15", "headline", "43-designs",
+    "fig15", "headline", "43-designs", "fast-suite",
 ];
+
+/// Experiments that decompose into manifest work units and therefore
+/// accept `tapa bench <id> --shard k/N` (see [`suite_units`]).
+pub const SHARDED_SUITES: &[&str] =
+    &["fast-suite", "43-designs", "table8", "table9", "table10"];
 
 /// Dispatch by id, sequentially.
 pub fn run_experiment(id: &str, cfg: &FlowConfig) -> Option<Table> {
@@ -29,8 +47,8 @@ pub fn run_experiment(id: &str, cfg: &FlowConfig) -> Option<Table> {
 }
 
 /// Dispatch by id with a worker count. `jobs` is honored by the
-/// batch-driven experiments (currently `43-designs`); the table-layout
-/// experiments are inherently ordered and ignore it.
+/// batch-driven experiments (`43-designs`, `fast-suite`, Tables 8–10);
+/// the table-layout experiments are inherently ordered and ignore it.
 pub fn run_experiment_jobs(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Table> {
     Some(match id {
         "table1" => table1_burst_detector(),
@@ -40,9 +58,9 @@ pub fn run_experiment_jobs(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Ta
         "table5" => table5_gauss_u250(cfg),
         "table6" => table6_bucket_sort(cfg),
         "table7" => table7_pagerank(cfg),
-        "table8" => table8_spmm_spmv(cfg),
-        "table9" => table9_sasa(cfg),
-        "table10" => table10_multi_floorplan(cfg),
+        "table8" => manifest_table("table8", cfg, jobs).expect("table8 suite"),
+        "table9" => manifest_table("table9", cfg, jobs).expect("table9 suite"),
+        "table10" => manifest_table("table10", cfg, jobs).expect("table10 suite"),
         "table11" => table11_scalability(cfg),
         "fig12" => fig12_stencil(cfg),
         "fig13" => fig13_cnn(cfg),
@@ -50,6 +68,7 @@ pub fn run_experiment_jobs(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Ta
         "fig15" => fig15_controls(cfg),
         "headline" => headline_summary(cfg),
         "43-designs" => designs43(cfg, jobs),
+        "fast-suite" => fast_suite(cfg, jobs),
         _ => return None,
     })
 }
@@ -64,7 +83,10 @@ pub fn no_sim(cfg: &FlowConfig) -> FlowConfig {
 
 /// Baseline and Tapa runs of one design through staged sessions sharing a
 /// [`StageCache`], so the HLS estimates are computed once for the pair.
-fn orig_opt(design: &Design, cfg: &FlowConfig) -> (crate::flow::FlowResult, crate::flow::FlowResult) {
+fn orig_opt(
+    design: &Design,
+    cfg: &FlowConfig,
+) -> (crate::flow::FlowResult, crate::flow::FlowResult) {
     let cache = Arc::new(StageCache::default());
     let mut run = |variant| {
         Session::new(design.clone(), variant, cfg.clone())
@@ -77,21 +99,408 @@ fn orig_opt(design: &Design, cfg: &FlowConfig) -> (crate::flow::FlowResult, crat
     (orig, opt)
 }
 
-/// The full 43-design AutoBridge suite, orig vs opt per design, executed
-/// by the parallel [`BatchRunner`]. Results (and the CSV) are identical
-/// for any `jobs` count — job order is preserved and sessions are
-/// deterministic.
-pub fn designs43(cfg: &FlowConfig, jobs: usize) -> Table {
-    let cfg = no_sim(cfg);
-    let designs = super::all_autobridge_designs();
-    let mut runner = BatchRunner::new(cfg).workers(jobs);
-    for d in &designs {
-        runner.push(d.clone(), FlowVariant::Baseline);
-        runner.push(d.clone(), FlowVariant::Tapa);
+// ---------------------------------------------------------------------------
+// Sharding suites: unit lists, per-unit execution, table reassembly
+// ---------------------------------------------------------------------------
+
+/// The cheap end-to-end suite the CI `shard-merge` job (and the
+/// `shard_api` tests) runs as three worker processes: small stencil
+/// chains on both devices, orig vs opt per design.
+fn fast_designs() -> Vec<Design> {
+    let mut out = Vec::new();
+    for dev in [DeviceKind::U250, DeviceKind::U280] {
+        for k in 1..=3 {
+            out.push(stencil::stencil(k, dev));
+        }
     }
-    let results = runner.run();
+    out
+}
+
+/// Orig + opt full-session units for a design list, in design order.
+fn full_units(designs: &[Design]) -> Vec<WorkUnit> {
+    designs
+        .iter()
+        .flat_map(|d| {
+            [FlowVariant::Baseline, FlowVariant::Tapa].into_iter().map(move |v| WorkUnit {
+                design: d.name.clone(),
+                device: d.device,
+                variant: v,
+                util_ratio: None,
+            })
+        })
+        .collect()
+}
+
+/// Units for a list of labelled §7.4 HBM pairs: one Baseline session on
+/// the orig design, optionally one Tapa session on the opt design
+/// (Tables 8/9 need its utilization row; Table 10 does not), then one
+/// sweep-point unit per [`DEFAULT_SWEEP`] ratio on the opt design.
+fn hbm_units(pairs: &[(&str, (Design, Design))], opt_full: bool) -> Vec<WorkUnit> {
+    let mut out = Vec::new();
+    for (_, (orig, opt)) in pairs {
+        out.push(WorkUnit {
+            design: orig.name.clone(),
+            device: orig.device,
+            variant: FlowVariant::Baseline,
+            util_ratio: None,
+        });
+        if opt_full {
+            out.push(WorkUnit {
+                design: opt.name.clone(),
+                device: opt.device,
+                variant: FlowVariant::Tapa,
+                util_ratio: None,
+            });
+        }
+        for &r in DEFAULT_SWEEP.iter() {
+            out.push(WorkUnit {
+                design: opt.name.clone(),
+                device: opt.device,
+                variant: FlowVariant::Tapa,
+                util_ratio: Some(r),
+            });
+        }
+    }
+    out
+}
+
+fn table8_pairs() -> Vec<(&'static str, (Design, Design))> {
+    vec![
+        ("SpMM", hbm::spmm()),
+        ("SpMV_A16", hbm::spmv(16)),
+        ("SpMV_A24", hbm::spmv(24)),
+    ]
+}
+
+fn table9_pairs() -> Vec<(&'static str, (Design, Design))> {
+    vec![("SASA-1", hbm::sasa(1)), ("SASA-2", hbm::sasa(2))]
+}
+
+fn table10_pairs() -> Vec<(&'static str, (Design, Design))> {
+    vec![
+        ("SASA", hbm::sasa(1)),
+        ("SpMM", hbm::spmm()),
+        ("SpMV-24", hbm::spmv(24)),
+        ("SpMV-16", hbm::spmv(16)),
+    ]
+}
+
+/// The flat, deterministically ordered work-unit list of a sharding
+/// suite — the partitioning domain of `tapa bench <id> --shard k/N`.
+/// `None` for experiment ids that do not decompose (see
+/// [`SHARDED_SUITES`]).
+pub fn suite_units(id: &str) -> Option<Vec<WorkUnit>> {
+    Some(match id {
+        "fast-suite" => full_units(&fast_designs()),
+        "43-designs" => full_units(&super::all_autobridge_designs()),
+        "table8" => hbm_units(&table8_pairs(), true),
+        "table9" => hbm_units(&table9_pairs(), true),
+        "table10" => hbm_units(&table10_pairs(), false),
+        _ => return None,
+    })
+}
+
+/// The effective flow config a suite runs under. Every sharding suite is
+/// frequency/area-shaped, so simulation is off; shard workers and the
+/// single-machine reference must be launched with the same base config
+/// for the merged CSV to be byte-identical.
+pub fn suite_cfg(id: &str, cfg: &FlowConfig) -> FlowConfig {
+    let _ = id;
+    no_sim(cfg)
+}
+
+/// Execute one manifest work unit ([`execute_unit_cached`] without a
+/// shared cache — what a unit costs when it lands alone on a machine).
+pub fn execute_unit(unit: &WorkUnit, cfg: &FlowConfig) -> Result<UnitResult, String> {
+    execute_unit_cached(unit, cfg, None)
+}
+
+/// Execute one manifest work unit. `cfg` must already be the suite's
+/// effective config ([`suite_cfg`]). Deterministic: a unit yields the
+/// same [`UnitResult`] on any machine, any `--jobs` count, any shard
+/// layout, with or without a cache. Failures are reported, not
+/// propagated: panics are caught and the env var `TAPA_BENCH_FAIL`
+/// (comma-separated substrings matched against [`WorkUnit::key`])
+/// injects failures for the re-queueing tests.
+///
+/// `cache` shares the variant/ratio-independent artifacts across units
+/// that land in the same process — HLS estimates once per design (orig
+/// and opt sessions, every sweep point) and solved sweep candidates per
+/// `(design, device, ratio)` — restoring the single-machine economics
+/// the pre-manifest Tables 8–10 had, without affecting results.
+pub fn execute_unit_cached(
+    unit: &WorkUnit,
+    cfg: &FlowConfig,
+    cache: Option<&Arc<StageCache>>,
+) -> Result<UnitResult, String> {
+    let mut design = super::find_design(&unit.design)
+        .ok_or_else(|| format!("unknown design `{}`", unit.design))?;
+    design.device = unit.device;
+    execute_resolved_unit(design, unit, cfg, cache)
+}
+
+/// [`execute_unit_cached`] with the design already resolved — the batch
+/// paths ([`run_manifest`], [`manifest_table`]) look units up in a
+/// catalogue built once instead of regenerating every design per unit.
+/// `design.device` must already equal `unit.device`.
+fn execute_resolved_unit(
+    design: Design,
+    unit: &WorkUnit,
+    cfg: &FlowConfig,
+    cache: Option<&Arc<StageCache>>,
+) -> Result<UnitResult, String> {
+    if let Ok(pat) = std::env::var("TAPA_BENCH_FAIL") {
+        let key = unit.key();
+        if pat.split(',').filter(|p| !p.is_empty()).any(|p| key.contains(p)) {
+            return Err(format!("injected failure (TAPA_BENCH_FAIL matched `{key}`)"));
+        }
+    }
+    let key = unit.key();
+    let unit = unit.clone();
+    let cfg = cfg.clone();
+    let cache = cache.cloned();
+    catch_unwind(AssertUnwindSafe(move || match unit.util_ratio {
+        None => {
+            let mut s = Session::new(design, unit.variant, cfg);
+            if let Some(c) = cache {
+                s = s.with_cache(c);
+            }
+            let r = s.run_all(&RustStep).expect("in-memory session cannot fail");
+            UnitResult {
+                fmax_mhz: r.fmax_mhz,
+                cycles: r.cycles,
+                util_pct: r.util_pct,
+                assignment: None,
+            }
+        }
+        Some(ratio) => {
+            // One §6.3 sweep point, scored exactly as Stage::Sweep does
+            // (same solver, same candidate evaluation, same device view).
+            let device = match unit.variant {
+                FlowVariant::TapaCoarse4Slot => design.device.device().merged_columns(),
+                _ => design.device.device(),
+            };
+            let est = match &cache {
+                Some(c) => (*c.estimates_for(&design)).clone(),
+                None => crate::hls::estimate_all(&design.graph),
+            };
+            let plan = match &cache {
+                Some(c) => {
+                    (*c.sweep_plan_for(&design, &device, &est, &cfg.floorplan, ratio))
+                        .clone()
+                }
+                None => crate::floorplan::multi::solve_point(
+                    &design.graph,
+                    &device,
+                    &est,
+                    &cfg.floorplan,
+                    ratio,
+                ),
+            };
+            match plan {
+                None => UnitResult {
+                    fmax_mhz: None,
+                    cycles: None,
+                    util_pct: [0.0; 5],
+                    assignment: None,
+                },
+                Some(fp) => {
+                    let fmax = crate::flow::evaluate_sweep_candidate(
+                        &design.graph,
+                        &device,
+                        &est,
+                        &fp,
+                        &cfg,
+                    );
+                    UnitResult {
+                        fmax_mhz: fmax,
+                        cycles: None,
+                        util_pct: [0.0; 5],
+                        assignment: Some(fp.assignment.iter().map(|s| s.0).collect()),
+                    }
+                }
+            }
+        }
+    }))
+    .map_err(|_| format!("unit `{key}` panicked"))
+}
+
+/// Execute every not-yet-done unit of a shard manifest over `jobs`
+/// worker threads, recording status/attempts/result per unit. The
+/// manifest is re-saved to `save_path` after every unit completion, so
+/// a killed worker resumes where it stopped (done units are never
+/// re-run; failed units are retried with `attempts` incremented).
+/// Returns the shard's final `(done, failed)` counts.
+pub fn run_manifest(
+    m: &mut Manifest,
+    cfg: &FlowConfig,
+    jobs: usize,
+    save_path: Option<&Path>,
+) -> Result<(usize, usize), SessionError> {
+    let todo: Vec<usize> = m
+        .units
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.status != UnitStatus::Done)
+        .map(|(i, _)| i)
+        .collect();
+    let shared = Mutex::new(m.clone());
+    // One cache per shard run: units of the same design landing in this
+    // process estimate HLS areas (and solve sweep candidates) once. One
+    // catalogue too — resolving designs per unit would rebuild every
+    // task graph in the repo per unit.
+    let cache = Arc::new(StageCache::default());
+    let catalogue: HashMap<String, Design> = super::design_catalogue()
+        .into_iter()
+        .map(|d| (d.name.clone(), d))
+        .collect();
+    run_indexed(todo.len(), jobs, |i| {
+        let idx = todo[i];
+        let unit = shared.lock().unwrap().units[idx].unit.clone();
+        let res = match catalogue.get(&unit.design) {
+            Some(d) => {
+                let mut d = d.clone();
+                d.device = unit.device;
+                execute_resolved_unit(d, &unit, cfg, Some(&cache))
+            }
+            None => Err(format!("unknown design `{}`", unit.design)),
+        };
+        let mut g = shared.lock().unwrap();
+        let e = &mut g.units[idx];
+        e.attempts += 1;
+        match res {
+            Ok(r) => {
+                e.status = UnitStatus::Done;
+                e.result = Some(r);
+                e.error = None;
+            }
+            Err(msg) => {
+                e.status = UnitStatus::Failed;
+                e.result = None;
+                e.error = Some(msg);
+            }
+        }
+        // Incremental checkpoint: snapshot under the lock, write outside
+        // it so workers never queue behind filesystem I/O. Out-of-order
+        // writes between racing snapshots only risk a slightly stale
+        // file (a crash then re-runs the lost unit); the final save
+        // below is authoritative and its failure is surfaced.
+        let snapshot = save_path.map(|_| (*g).clone());
+        drop(g);
+        if let (Some(p), Some(snap)) = (save_path, snapshot) {
+            let _ = snap.save(p);
+        }
+    });
+    *m = shared.into_inner().unwrap();
+    if let Some(p) = save_path {
+        m.save(p)?;
+    }
+    let (_, done, failed) = m.counts();
+    Ok((done, failed))
+}
+
+/// Reassemble a suite's result table from per-unit results indexed as in
+/// [`suite_units`] — the merge half of the determinism contract: fed
+/// with results from any shard layout, the output is byte-identical to
+/// the single-machine run.
+pub fn suite_table(id: &str, results: &[UnitResult]) -> Option<Table> {
+    // Arity guard: manifests merged by a binary whose definition of the
+    // suite differs must not panic mid-assembly.
+    if results.len() != suite_units(id)?.len() {
+        return None;
+    }
+    Some(match id {
+        "fast-suite" => designs_table(
+            "fast suite — per-design frequency and LUT utilization",
+            &fast_designs(),
+            results,
+        ),
+        "43-designs" => designs_table(
+            "43-design suite — per-design frequency and LUT utilization",
+            &super::all_autobridge_designs(),
+            results,
+        ),
+        "table8" => hbm_table(
+            "Table 8 — SpMM / SpMV frequency + area (U280)",
+            &table8_pairs(),
+            results,
+        ),
+        "table9" => hbm_table(
+            "Table 9 — SASA frequency + area (U280)",
+            &table9_pairs(),
+            results,
+        ),
+        "table10" => table10_table(&table10_pairs(), results),
+        _ => return None,
+    })
+}
+
+/// Run a whole sharding suite inside this process through the same unit
+/// executor the shard workers use. In-memory units cannot fail, so a
+/// unit error (only possible via `TAPA_BENCH_FAIL`) panics.
+pub fn manifest_table(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Table> {
+    let units = suite_units(id)?;
+    let cfg = suite_cfg(id, cfg);
+    // All units share one process here, so share one cache (estimates
+    // once per design, sweep candidates once per (design, device, ratio)
+    // — the same economics the pre-manifest Tables 8–10 had) and one
+    // design catalogue.
+    let cache = Arc::new(StageCache::default());
+    let catalogue: HashMap<String, Design> = super::design_catalogue()
+        .into_iter()
+        .map(|d| (d.name.clone(), d))
+        .collect();
+    let results: Vec<UnitResult> = run_indexed(units.len(), jobs, |i| {
+        let u = &units[i];
+        let mut d = catalogue
+            .get(&u.design)
+            .unwrap_or_else(|| panic!("unknown design `{}`", u.design))
+            .clone();
+        d.device = u.device;
+        execute_resolved_unit(d, u, &cfg, Some(&cache))
+            .unwrap_or_else(|e| panic!("unit `{}` failed: {e}", u.key()))
+    });
+    suite_table(id, &results)
+}
+
+/// Single-machine reference run of a full-session suite (`fast-suite`,
+/// `43-designs`) through the parallel [`BatchRunner`] — the baseline the
+/// sharded CSV is byte-compared against. `None` for suites with
+/// sweep-point units (those go through [`manifest_table`]).
+pub fn batch_suite_table(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Table> {
+    let units = suite_units(id)?;
+    if units.iter().any(|u| u.util_ratio.is_some()) {
+        return None;
+    }
+    let cfg = suite_cfg(id, cfg);
+    let mut runner = BatchRunner::new(cfg).workers(jobs);
+    // Materialize the design catalogue once, not once per unit.
+    let catalogue: HashMap<String, Design> = super::design_catalogue()
+        .into_iter()
+        .map(|d| (d.name.clone(), d))
+        .collect();
+    for u in &units {
+        let mut d = catalogue.get(&u.design)?.clone();
+        d.device = u.device;
+        runner.push(d, u.variant);
+    }
+    let results: Vec<UnitResult> = runner
+        .run()
+        .into_iter()
+        .map(|r| UnitResult {
+            fmax_mhz: r.fmax_mhz,
+            cycles: r.cycles,
+            util_pct: r.util_pct,
+            assignment: None,
+        })
+        .collect();
+    suite_table(id, &results)
+}
+
+/// Shared row builder for the orig/opt-per-design suites.
+fn designs_table(title: &str, designs: &[Design], results: &[UnitResult]) -> Table {
     let mut t = Table::new(
-        "43-design suite — per-design frequency and LUT utilization",
+        title,
         &["Design", "Device", "Orig(MHz)", "Opt(MHz)", "OrigLUT%", "OptLUT%"],
     );
     for (i, d) in designs.iter().enumerate() {
@@ -107,6 +516,20 @@ pub fn designs43(cfg: &FlowConfig, jobs: usize) -> Table {
         ]);
     }
     t
+}
+
+/// The full 43-design AutoBridge suite, orig vs opt per design, executed
+/// by the parallel [`BatchRunner`]. Results (and the CSV) are identical
+/// for any `jobs` count — job order is preserved and sessions are
+/// deterministic — and byte-identical to a sharded run merged by
+/// `tapa merge`.
+pub fn designs43(cfg: &FlowConfig, jobs: usize) -> Table {
+    batch_suite_table("43-designs", cfg, jobs).expect("43-designs suite")
+}
+
+/// The CI-sized sibling of [`designs43`] (see [`fast_designs`]).
+pub fn fast_suite(cfg: &FlowConfig, jobs: usize) -> Table {
+    batch_suite_table("fast-suite", cfg, jobs).expect("fast suite")
 }
 
 /// Table 1: burst-detector cycle trace for the published address sequence.
@@ -328,109 +751,118 @@ pub fn tapa_multi_fmax_cached(
         .fold(None, |best: Option<f64>, f| Some(best.map_or(f, |b| b.max(f))))
 }
 
-fn hbm_pair_rows(
-    t: &mut Table,
-    label: &str,
-    pair: (Design, Design),
-    cfg: &FlowConfig,
-    cache: &Arc<StageCache>,
-) {
-    let cfg = no_sim(cfg);
-    let orig = run_flow(&pair.0, FlowVariant::Baseline, &cfg);
-    let mut opt = run_flow(&pair.1, FlowVariant::Tapa, &cfg);
-    // §7.4: the optimized HBM designs are implemented from the full
-    // multi-floorplan sweep; keep the best routed candidate.
-    let multi = tapa_multi_fmax_cached(&pair.1, &cfg, Some(cache.clone()));
-    opt.fmax_mhz = match (opt.fmax_mhz, multi) {
-        (Some(a), Some(b)) => Some(a.max(b)),
-        (a, b) => a.or(b),
-    };
-    for (tag, r) in [("Orig", &orig), ("Opt", &opt)] {
-        t.row(vec![
-            format!("{tag}, {label}"),
-            fmt_mhz(r.fmax_mhz),
-            fmt_pct(r.util_pct[0]),
-            fmt_pct(r.util_pct[1]),
-            fmt_pct(r.util_pct[2]),
-            fmt_pct(r.util_pct[4]),
-            fmt_pct(r.util_pct[3]),
-        ]);
+/// Keep-first duplicate marks over a design's ratio-unit results — the
+/// merge-side reconstruction of the sweep's duplicate policy
+/// ([`crate::floorplan::multi::sweep_points_with`]): a point is a
+/// duplicate when an earlier ratio solved to the identical slot
+/// assignment. Assignment equality is transitive, so "any earlier equal"
+/// and "earlier *unique* equal" mark the same set.
+fn duplicate_marks(points: &[UnitResult]) -> Vec<bool> {
+    (0..points.len())
+        .map(|j| {
+            points[j].assignment.as_ref().is_some_and(|a| {
+                points[..j].iter().any(|q| q.assignment.as_ref() == Some(a))
+            })
+        })
+        .collect()
+}
+
+/// Tables 8/9 row pairs from unit results: per pair, one Baseline
+/// session on the orig design, one Tapa session on the opt design, and
+/// [`DEFAULT_SWEEP`] sweep-point units (§7.4: the optimized HBM designs
+/// are implemented from the full multi-floorplan sweep; keep the best
+/// routed candidate).
+fn hbm_table(
+    title: &str,
+    pairs: &[(&str, (Design, Design))],
+    results: &[UnitResult],
+) -> Table {
+    let mut t = Table::new(
+        title,
+        &["Design", "Fuser(MHz)", "LUT%", "FF%", "BRAM%", "URAM%", "DSP%"],
+    );
+    let stride = 2 + DEFAULT_SWEEP.len();
+    for (pi, (label, _)) in pairs.iter().enumerate() {
+        let base = pi * stride;
+        let orig = &results[base];
+        let opt = &results[base + 1];
+        let sweep_best = results[base + 2..base + stride]
+            .iter()
+            .filter_map(|r| r.fmax_mhz)
+            .reduce(f64::max);
+        let opt_fmax = match (opt.fmax_mhz, sweep_best) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
+        for (tag, fmax, r) in [("Orig", orig.fmax_mhz, orig), ("Opt", opt_fmax, opt)] {
+            t.row(vec![
+                format!("{tag}, {label}"),
+                fmt_mhz(fmax),
+                fmt_pct(r.util_pct[0]),
+                fmt_pct(r.util_pct[1]),
+                fmt_pct(r.util_pct[2]),
+                fmt_pct(r.util_pct[4]),
+                fmt_pct(r.util_pct[3]),
+            ]);
+        }
     }
+    t
 }
 
-/// Table 8: SpMM + SpMV on U280.
+/// Table 8: SpMM + SpMV on U280 (unit-driven; see [`suite_units`]).
 pub fn table8_spmm_spmv(cfg: &FlowConfig) -> Table {
-    let mut t = Table::new(
-        "Table 8 — SpMM / SpMV frequency + area (U280)",
-        &["Design", "Fuser(MHz)", "LUT%", "FF%", "BRAM%", "URAM%", "DSP%"],
-    );
-    let cache = Arc::new(StageCache::default());
-    hbm_pair_rows(&mut t, "SpMM", hbm::spmm(), cfg, &cache);
-    hbm_pair_rows(&mut t, "SpMV_A16", hbm::spmv(16), cfg, &cache);
-    hbm_pair_rows(&mut t, "SpMV_A24", hbm::spmv(24), cfg, &cache);
-    t
+    manifest_table("table8", cfg, 1).expect("table8 suite")
 }
 
-/// Table 9: SASA stencils on U280.
+/// Table 9: SASA stencils on U280 (unit-driven; see [`suite_units`]).
 pub fn table9_sasa(cfg: &FlowConfig) -> Table {
-    let mut t = Table::new(
-        "Table 9 — SASA frequency + area (U280)",
-        &["Design", "Fuser(MHz)", "LUT%", "FF%", "BRAM%", "URAM%", "DSP%"],
-    );
-    let cache = Arc::new(StageCache::default());
-    hbm_pair_rows(&mut t, "SASA-1", hbm::sasa(1), cfg, &cache);
-    hbm_pair_rows(&mut t, "SASA-2", hbm::sasa(2), cfg, &cache);
-    t
+    manifest_table("table9", cfg, 1).expect("table9 suite")
 }
 
-/// Table 10: multi-floorplan candidate generation (§6.3), driven by the
-/// first-class [`Stage::Sweep`] of the session pipeline. One shared
-/// [`StageCache`] spans all four designs, so every candidate partition is
-/// solved exactly once for the whole experiment; the rendered rows are
-/// identical to the pre-stage side-path (duplicate solutions are marked
-/// in the artifact and skipped here, exactly as they were dropped
-/// before).
-pub fn table10_multi_floorplan(cfg: &FlowConfig) -> Table {
+/// Table 10 rows from unit results: per design, one Baseline session on
+/// the orig design and one sweep-point unit per [`DEFAULT_SWEEP`] ratio
+/// on the opt design. Duplicate candidates are reconstructed from the
+/// units' slot assignments and skipped, exactly as the [`Stage::Sweep`]
+/// artifact rendering drops them.
+fn table10_table(pairs: &[(&str, (Design, Design))], results: &[UnitResult]) -> Table {
     let mut t = Table::new(
         "Table 10 — multi-floorplan candidates: achieved Fmax per sweep point",
         &["Design", "Baseline", "Candidates (MHz)", "Max", "Min"],
     );
-    let designs: Vec<(&str, (Design, Design))> = vec![
-        ("SASA", hbm::sasa(1)),
-        ("SpMM", hbm::spmm()),
-        ("SpMV-24", hbm::spmv(24)),
-        ("SpMV-16", hbm::spmv(16)),
-    ];
-    let nscfg = no_sim(cfg);
-    let cache = Arc::new(StageCache::default());
-    for (label, (orig_d, opt_d)) in designs {
-        let base = run_flow(&orig_d, FlowVariant::Baseline, &nscfg);
-        let art = run_sweep_stage(&opt_d, &nscfg, Some(cache.clone()))
-            .expect("in-memory sweep session cannot fail");
-        let mhz: Vec<Option<f64>> = art
-            .points
+    let stride = 1 + DEFAULT_SWEEP.len();
+    for (pi, (label, _)) in pairs.iter().enumerate() {
+        let base = pi * stride;
+        let orig = &results[base];
+        let points = &results[base + 1..base + stride];
+        let dup = duplicate_marks(points);
+        let mhz: Vec<Option<f64>> = points
             .iter()
-            .filter(|p| p.duplicate_of.is_none())
-            .map(|p| p.fmax_mhz)
+            .zip(&dup)
+            .filter(|(_, &d)| !d)
+            .map(|(p, _)| p.fmax_mhz)
             .collect();
         let ok: Vec<f64> = mhz.iter().filter_map(|m| *m).collect();
         t.row(vec![
             label.to_string(),
-            fmt_mhz(base.fmax_mhz),
+            fmt_mhz(orig.fmax_mhz),
             mhz.iter().map(|m| fmt_mhz(*m)).collect::<Vec<_>>().join(" / "),
-            fmt_mhz(ok.iter().cloned().fold(None, |a: Option<f64>, v| {
-                Some(a.map_or(v, |x| x.max(v)))
-            })),
+            fmt_mhz(ok.iter().cloned().reduce(f64::max)),
             if ok.len() < mhz.len() {
                 "Failed".to_string()
             } else {
-                fmt_mhz(ok.iter().cloned().fold(None, |a: Option<f64>, v| {
-                    Some(a.map_or(v, |x| x.min(v)))
-                }))
+                fmt_mhz(ok.iter().cloned().reduce(f64::min))
             },
         ]);
     }
     t
+}
+
+/// Table 10: multi-floorplan candidate generation (§6.3), unit-driven
+/// through the same work units a sharded run executes (the sweep points
+/// score candidates exactly as [`Stage::Sweep`] does, so rows are
+/// unchanged).
+pub fn table10_multi_floorplan(cfg: &FlowConfig) -> Table {
+    manifest_table("table10", cfg, 1).expect("table10 suite")
 }
 
 /// Table 11: floorplanner scalability on the CNN family.
@@ -640,7 +1072,46 @@ mod tests {
             assert!(run_experiment(id, &cfg).is_some(), "{id}");
         }
         assert!(run_experiment("nope", &cfg).is_none());
-        assert_eq!(ALL_EXPERIMENTS.len(), 17);
+        assert_eq!(ALL_EXPERIMENTS.len(), 18);
+    }
+
+    #[test]
+    fn sharded_suites_define_units_and_nothing_else_does() {
+        for &id in SHARDED_SUITES {
+            let units = suite_units(id).expect(id);
+            assert!(!units.is_empty(), "{id}");
+            assert!(ALL_EXPERIMENTS.contains(&id), "{id} must be runnable");
+        }
+        assert!(suite_units("table1").is_none());
+        assert!(suite_units("nope").is_none());
+        // fast-suite / 43-designs are pure full-session suites; the HBM
+        // tables carry one sweep-point unit per DEFAULT_SWEEP ratio.
+        assert!(suite_units("fast-suite")
+            .unwrap()
+            .iter()
+            .all(|u| u.util_ratio.is_none()));
+        let t10 = suite_units("table10").unwrap();
+        assert_eq!(t10.len(), 4 * (1 + DEFAULT_SWEEP.len()));
+        assert_eq!(
+            t10.iter().filter(|u| u.util_ratio.is_some()).count(),
+            4 * DEFAULT_SWEEP.len()
+        );
+    }
+
+    #[test]
+    fn every_suite_unit_resolves_to_a_design() {
+        let catalogue: HashMap<String, Design> = super::super::design_catalogue()
+            .into_iter()
+            .map(|d| (d.name.clone(), d))
+            .collect();
+        for &id in SHARDED_SUITES {
+            for u in suite_units(id).unwrap() {
+                let d = catalogue
+                    .get(&u.design)
+                    .unwrap_or_else(|| panic!("{id}: unknown design {}", u.design));
+                assert_eq!(d.device, u.device, "{id}: {}", u.design);
+            }
+        }
     }
 
     #[test]

@@ -19,8 +19,8 @@ use crate::device::area::NUM_RESOURCE_KINDS;
 use crate::device::{AreaVector, Device, SlotId};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::TaskEstimate;
-use crate::ilp::{solve_milp, Constraint, MilpResult, Problem, SolveParams};
 use crate::ilp::{solve_lp, LpOutcome};
+use crate::ilp::{solve_milp, Constraint, MilpResult, Problem, SolveParams};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -527,7 +527,8 @@ fn partition_iteration(
                     g, device, demands, regions, &new_regions, &children, vert_region,
                     axis, util, seed, &var_of, false,
                 ) {
-                    let cost = decision_cost(g, &new_regions, &children, vert_region, axis, &var_of, &d);
+                    let cost =
+                        decision_cost(g, &new_regions, &children, vert_region, axis, &var_of, &d);
                     if best.as_ref().map_or(true, |(c, _)| cost < *c) {
                         best = Some((cost, d));
                     }

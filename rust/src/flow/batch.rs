@@ -31,6 +31,8 @@ where
     if n == 0 {
         return Vec::new();
     }
+    // Clamp to the item count: a shard of 2 units under `--jobs 8` must
+    // spawn 2 workers, not 8 idle threads (regression-asserted in tests).
     let workers = if workers == 0 { 1 } else { workers.min(n) };
     if workers == 1 {
         return (0..n).map(f).collect();
@@ -193,5 +195,22 @@ mod tests {
             assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "{workers} workers");
         }
         assert!(run_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_indexed_clamps_workers_to_item_count() {
+        // Tiny shards must not burn idle threads: with 2 items and 8
+        // requested workers, at most 2 distinct threads may execute `f`.
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        let ids: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        let out = run_indexed(2, 8, |i| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            i * 7
+        });
+        assert_eq!(out, vec![0, 7]);
+        let distinct = ids.lock().unwrap().len();
+        assert!(distinct <= 2, "spawned {distinct} workers for 2 items");
     }
 }

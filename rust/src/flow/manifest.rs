@@ -1,0 +1,830 @@
+//! Run manifests for distributed (sharded) bench execution.
+//!
+//! The paper's headline experiment is a 43-design batch (§8, Tables
+//! 8–10); a manifest is what lets that batch leave one machine. A suite
+//! (a named, deterministically ordered list of [`WorkUnit`]s — see
+//! `bench_suite::experiments::suite_units`) is partitioned round-robin
+//! into `N` shards. Each worker (`tapa bench <suite> --shard k/N
+//! --workdir W`) owns one shard, executes its units, and records
+//! per-unit status into `W/manifest.json`; `tapa merge W1 W2 …`
+//! validates the shard manifests against each other, re-queues failures
+//! into a residual manifest, and reassembles the suite's result table —
+//! byte-identical to a single-machine [`super::BatchRunner`] run.
+//!
+//! ## Work units
+//!
+//! A unit is `(design, device, variant, util_ratio)`:
+//!
+//! * `util_ratio: None` — one full staged session
+//!   ([`super::run_flow`]); the result carries Fmax, cycles and the
+//!   five utilization percentages.
+//! * `util_ratio: Some(r)` — one §6.3 multi-floorplan sweep point:
+//!   solve the candidate floorplan at exactly ratio `r` and implement
+//!   it end to end ([`super::evaluate_sweep_candidate`]). The result
+//!   carries the candidate's post-route Fmax and its slot `assignment`,
+//!   so the merge step can reconstruct the sweep's keep-first duplicate
+//!   marking (identical assignments at different ratios) without any
+//!   cross-shard communication at run time.
+//!
+//! ## On-disk format
+//!
+//! Hand-rolled JSON over [`crate::util::json`] (same discipline as the
+//! [`super::persist`] checkpoints): versioned ([`MANIFEST_VERSION`]),
+//! deterministic writer (serialize → parse → serialize is a byte-level
+//! fixpoint), byte layout frozen within a version and locked by the
+//! committed golden `rust/tests/data/golden_manifest.json`. Fields:
+//!
+//! * `suite` — the suite id the units were derived from.
+//! * `suite_hash` — FNV-1a over the suite id and every unit
+//!   (ratio compared bit-exactly), printed as 16 hex digits. Two
+//!   manifests merge only if their hashes match, so a worker built from
+//!   a different suite definition (different binary, edited ratios)
+//!   cannot silently contribute rows to the wrong experiment.
+//! * `total_units` — size of the *full* suite; merge coverage is
+//!   checked against this, not against the shard's own entry count.
+//! * `shard` — `[index, count]`; unit `i` belongs to shard
+//!   `i % count`.
+//! * `units` — this shard's entries only, each carrying its global
+//!   `index`, the unit identity, `status` (pending/done/failed),
+//!   `attempts`, the last `error` (failed units) and the `result`
+//!   (done units).
+//!
+//! ## Merge rules
+//!
+//! * All manifests must agree on suite id, suite hash and total size.
+//! * Entries for the same global index must describe the same unit.
+//! * At most one manifest may report an index `done` (a done overlap
+//!   means two workers ran the same unit — shard specs were wrong).
+//! * Every index in `0..total_units` must appear in at least one
+//!   manifest (a gap means a shard is missing from the merge).
+//! * Indices with no `done` entry are *unresolved*: [`Merged::residual`]
+//!   re-queues exactly those units (attempts preserved, status reset to
+//!   pending) into a manifest a fresh worker can pick up with
+//!   `tapa bench <suite> --workdir <residual-dir>`.
+
+use std::path::{Path, PathBuf};
+
+use crate::device::DeviceKind;
+use crate::util::json::Json;
+
+use super::persist::{
+    bad, f64_vec, get_arr, get_opt, get_str, get_u64, get_usize, num, opt, unum, R,
+};
+use super::{FlowVariant, SessionError};
+
+/// On-disk manifest format version (see the module docs for the
+/// stability guarantee).
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Name of the manifest file inside a shard's work directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// One schedulable unit of suite work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkUnit {
+    /// Benchmark design name (resolved via `bench_suite::find_design`).
+    pub design: String,
+    pub device: DeviceKind,
+    pub variant: FlowVariant,
+    /// `None`: full staged session. `Some(r)`: §6.3 sweep candidate at
+    /// exactly ratio `r` (compared bit-exactly for suite identity).
+    pub util_ratio: Option<f64>,
+}
+
+impl WorkUnit {
+    /// Human-readable unit identity — used in logs, error messages and
+    /// the `TAPA_BENCH_FAIL` failure-injection matcher.
+    pub fn key(&self) -> String {
+        let mut k = format!(
+            "{}:{}:{}",
+            self.design,
+            self.device.name(),
+            self.variant.name()
+        );
+        if let Some(r) = self.util_ratio {
+            k.push_str(&format!("@{r}"));
+        }
+        k
+    }
+}
+
+/// Lifecycle of a unit inside one shard manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitStatus {
+    Pending,
+    Done,
+    Failed,
+}
+
+impl UnitStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            UnitStatus::Pending => "pending",
+            UnitStatus::Done => "done",
+            UnitStatus::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UnitStatus> {
+        [UnitStatus::Pending, UnitStatus::Done, UnitStatus::Failed]
+            .into_iter()
+            .find(|st| st.name() == s)
+    }
+}
+
+/// Everything the merge step needs from one executed unit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitResult {
+    pub fmax_mhz: Option<f64>,
+    pub cycles: Option<u64>,
+    /// LUT, FF, BRAM, DSP, URAM (% of device) — all zero for sweep-point
+    /// units, which only contribute a candidate Fmax.
+    pub util_pct: [f64; 5],
+    /// Slot assignment of the solved sweep candidate (`util_ratio`
+    /// units only; `None` for infeasible points and full sessions) —
+    /// lets the merge reconstruct duplicate marking across ratios.
+    pub assignment: Option<Vec<usize>>,
+}
+
+/// One unit inside a shard manifest.
+#[derive(Clone, Debug)]
+pub struct UnitEntry {
+    /// Index into the full suite's unit list (global, not per-shard).
+    pub index: usize,
+    pub unit: WorkUnit,
+    pub status: UnitStatus,
+    /// Times any worker has attempted this unit (survives re-queueing).
+    pub attempts: u32,
+    /// Last failure message, for diagnostics (`None` once done).
+    pub error: Option<String>,
+    pub result: Option<UnitResult>,
+}
+
+/// `k/N` shard coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// Parse the CLI `--shard k/N` spec (`0 <= k < N`).
+    pub fn parse(s: &str) -> Option<Shard> {
+        let (k, n) = s.split_once('/')?;
+        let index: usize = k.trim().parse().ok()?;
+        let count: usize = n.trim().parse().ok()?;
+        if count == 0 || index >= count {
+            return None;
+        }
+        Some(Shard { index, count })
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// FNV-1a over the suite id and every unit — the identity two shard
+/// manifests must share to be mergeable.
+pub fn suite_hash(suite: &str, units: &[WorkUnit]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(suite.as_bytes());
+    eat(&[0x1f]);
+    for u in units {
+        eat(u.design.as_bytes());
+        eat(&[0x1f]);
+        eat(u.device.name().as_bytes());
+        eat(&[0x1f]);
+        eat(u.variant.name().as_bytes());
+        eat(&[0x1f]);
+        match u.util_ratio {
+            Some(r) => eat(&r.to_bits().to_le_bytes()),
+            None => eat(&[0xff]),
+        }
+        eat(&[0x1e]);
+    }
+    h
+}
+
+/// One shard's view of a suite run.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub suite: String,
+    pub suite_hash: u64,
+    /// Unit count of the full suite (not just this shard).
+    pub total_units: usize,
+    pub shard: Shard,
+    /// This shard's entries, in global-index order.
+    pub units: Vec<UnitEntry>,
+}
+
+impl Manifest {
+    /// Partition `units` and keep shard `shard`'s slice: unit `i`
+    /// belongs to shard `i % shard.count` (round-robin, so shards stay
+    /// balanced even when a suite interleaves cheap and expensive
+    /// units).
+    pub fn plan(suite: &str, units: &[WorkUnit], shard: Shard) -> Manifest {
+        let entries = units
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % shard.count == shard.index)
+            .map(|(i, u)| UnitEntry {
+                index: i,
+                unit: u.clone(),
+                status: UnitStatus::Pending,
+                attempts: 0,
+                error: None,
+                result: None,
+            })
+            .collect();
+        Manifest {
+            suite: suite.to_string(),
+            suite_hash: suite_hash(suite, units),
+            total_units: units.len(),
+            shard,
+            units: entries,
+        }
+    }
+
+    /// The manifest file inside a shard's work directory.
+    pub fn file_path(workdir: &Path) -> PathBuf {
+        workdir.join(MANIFEST_FILE)
+    }
+
+    /// `(pending, done, failed)` entry counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for e in &self.units {
+            match e.status {
+                UnitStatus::Pending => c.0 += 1,
+                UnitStatus::Done => c.1 += 1,
+                UnitStatus::Failed => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Check this manifest against the suite definition the worker was
+    /// launched with — a stale or foreign manifest errors instead of
+    /// contributing wrong rows.
+    pub fn validate_against(&self, suite: &str, units: &[WorkUnit]) -> Result<(), SessionError> {
+        if self.suite != suite {
+            return Err(SessionError::Mismatch(format!(
+                "manifest is for suite `{}`, not `{suite}`",
+                self.suite
+            )));
+        }
+        let hash = suite_hash(suite, units);
+        if self.suite_hash != hash {
+            return Err(SessionError::Mismatch(format!(
+                "manifest suite hash {:016x} does not match this binary's \
+                 definition of `{suite}` ({hash:016x})",
+                self.suite_hash
+            )));
+        }
+        if self.total_units != units.len() {
+            return Err(SessionError::Mismatch(format!(
+                "manifest says suite `{suite}` has {} units, this binary says {}",
+                self.total_units,
+                units.len()
+            )));
+        }
+        for e in &self.units {
+            let Some(want) = units.get(e.index) else {
+                return Err(SessionError::Mismatch(format!(
+                    "manifest entry index {} out of range for suite `{suite}`",
+                    e.index
+                )));
+            };
+            if &e.unit != want {
+                return Err(SessionError::Mismatch(format!(
+                    "manifest entry {} is `{}`, suite `{suite}` defines `{}` there",
+                    e.index,
+                    e.unit.key(),
+                    want.key()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Write the manifest to `path` (creating parent directories).
+    pub fn save(&self, path: &Path) -> Result<(), SessionError> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| SessionError::Io(dir.display().to_string(), e.to_string()))?;
+        }
+        std::fs::write(path, manifest_to_json_text(self))
+            .map_err(|e| SessionError::Io(path.display().to_string(), e.to_string()))
+    }
+
+    /// Read a manifest back from `path`.
+    pub fn load(path: &Path) -> Result<Manifest, SessionError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| SessionError::Io(path.display().to_string(), e.to_string()))?;
+        manifest_from_json_text(&text)
+    }
+}
+
+/// Outcome of merging a set of shard manifests.
+#[derive(Clone, Debug)]
+pub struct Merged {
+    pub suite: String,
+    pub suite_hash: u64,
+    pub total_units: usize,
+    /// Per-unit resolved results, indexed by global unit index; `None`
+    /// where no shard reports the unit done.
+    pub results: Vec<Option<UnitResult>>,
+    /// Units no shard completed (failed or never attempted), in
+    /// global-index order with attempts preserved.
+    pub unresolved: Vec<UnitEntry>,
+}
+
+impl Merged {
+    pub fn is_complete(&self) -> bool {
+        self.unresolved.is_empty()
+    }
+
+    /// The completed per-unit results; `None` unless every unit is done.
+    pub fn complete_results(&self) -> Option<Vec<UnitResult>> {
+        if !self.is_complete() {
+            return None;
+        }
+        Some(self.results.iter().map(|r| r.clone().expect("complete")).collect())
+    }
+
+    /// Re-queue every unresolved unit into a fresh single-shard manifest
+    /// (status reset to pending, attempts preserved) that
+    /// `tapa bench <suite> --workdir DIR` can execute as-is.
+    pub fn residual(&self) -> Manifest {
+        Manifest {
+            suite: self.suite.clone(),
+            suite_hash: self.suite_hash,
+            total_units: self.total_units,
+            shard: Shard { index: 0, count: 1 },
+            units: self
+                .unresolved
+                .iter()
+                .map(|e| UnitEntry {
+                    status: UnitStatus::Pending,
+                    result: None,
+                    ..e.clone()
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Merge shard manifests under the rules in the module docs.
+pub fn merge(manifests: &[Manifest]) -> Result<Merged, SessionError> {
+    let first = manifests
+        .first()
+        .ok_or_else(|| SessionError::Mismatch("merge needs at least one manifest".into()))?;
+    for m in &manifests[1..] {
+        if m.suite != first.suite {
+            return Err(SessionError::Mismatch(format!(
+                "cannot merge suites `{}` and `{}`",
+                first.suite, m.suite
+            )));
+        }
+        if m.suite_hash != first.suite_hash {
+            return Err(SessionError::Mismatch(format!(
+                "suite `{}` hash mismatch ({:016x} vs {:016x}) — shards were \
+                 built from different suite definitions",
+                first.suite, first.suite_hash, m.suite_hash
+            )));
+        }
+        if m.total_units != first.total_units {
+            return Err(SessionError::Mismatch(format!(
+                "suite `{}` size mismatch ({} vs {} units)",
+                first.suite, first.total_units, m.total_units
+            )));
+        }
+    }
+    let total = first.total_units;
+    let mut results: Vec<Option<UnitResult>> = vec![None; total];
+    let mut seen: Vec<Option<&WorkUnit>> = vec![None; total];
+    let mut done_in: Vec<Option<usize>> = vec![None; total];
+    let mut candidate: Vec<Option<&UnitEntry>> = vec![None; total];
+    for (mi, m) in manifests.iter().enumerate() {
+        for e in &m.units {
+            if e.index >= total {
+                return Err(SessionError::Mismatch(format!(
+                    "unit index {} out of range for a {total}-unit suite",
+                    e.index
+                )));
+            }
+            match seen[e.index] {
+                None => seen[e.index] = Some(&e.unit),
+                Some(prev) if prev != &e.unit => {
+                    return Err(SessionError::Mismatch(format!(
+                        "unit {} is `{}` in one manifest and `{}` in another",
+                        e.index,
+                        prev.key(),
+                        e.unit.key()
+                    )));
+                }
+                Some(_) => {}
+            }
+            match e.status {
+                UnitStatus::Done => {
+                    if let Some(owner) = done_in[e.index] {
+                        return Err(SessionError::Mismatch(format!(
+                            "unit {} (`{}`) is done in manifests #{owner} and \
+                             #{mi} — overlapping shards",
+                            e.index,
+                            e.unit.key()
+                        )));
+                    }
+                    let Some(r) = &e.result else {
+                        return Err(SessionError::Mismatch(format!(
+                            "unit {} is marked done but has no result",
+                            e.index
+                        )));
+                    };
+                    done_in[e.index] = Some(mi);
+                    results[e.index] = Some(r.clone());
+                }
+                UnitStatus::Failed | UnitStatus::Pending => {
+                    // Keep the most-attempted view of an unresolved unit.
+                    let better = match candidate[e.index] {
+                        None => true,
+                        Some(prev) => e.attempts > prev.attempts,
+                    };
+                    if better {
+                        candidate[e.index] = Some(e);
+                    }
+                }
+            }
+        }
+    }
+    let gaps: Vec<usize> = (0..total).filter(|&i| seen[i].is_none()).collect();
+    if !gaps.is_empty() {
+        return Err(SessionError::Mismatch(format!(
+            "suite `{}` has {} unit(s) missing from every manifest (first \
+             missing index {}) — a shard is absent from the merge",
+            first.suite,
+            gaps.len(),
+            gaps[0]
+        )));
+    }
+    let unresolved: Vec<UnitEntry> = (0..total)
+        .filter(|&i| results[i].is_none())
+        .map(|i| candidate[i].expect("covered but not done").clone())
+        .collect();
+    Ok(Merged {
+        suite: first.suite.clone(),
+        suite_hash: first.suite_hash,
+        total_units: total,
+        results,
+        unresolved,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Serialization (same discipline as `flow::persist`: deterministic
+// writer, strict reader, versioned layout)
+// ---------------------------------------------------------------------------
+
+fn result_json(r: &UnitResult) -> Json {
+    Json::Obj(vec![
+        ("fmax_mhz".into(), opt(&r.fmax_mhz, |&f| num(f))),
+        ("cycles".into(), opt(&r.cycles, |&c| unum(c))),
+        (
+            "util_pct".into(),
+            Json::Arr(r.util_pct.iter().map(|&p| num(p)).collect()),
+        ),
+        (
+            "assignment".into(),
+            opt(&r.assignment, |a| {
+                Json::Arr(a.iter().map(|&s| unum(s as u64)).collect())
+            }),
+        ),
+    ])
+}
+
+fn entry_json(e: &UnitEntry) -> Json {
+    Json::Obj(vec![
+        ("index".into(), unum(e.index as u64)),
+        ("design".into(), Json::Str(e.unit.design.clone())),
+        ("device".into(), Json::Str(e.unit.device.name().into())),
+        ("variant".into(), Json::Str(e.unit.variant.name().into())),
+        ("util_ratio".into(), opt(&e.unit.util_ratio, |&r| num(r))),
+        ("status".into(), Json::Str(e.status.name().into())),
+        ("attempts".into(), unum(e.attempts as u64)),
+        ("error".into(), opt(&e.error, |s| Json::Str(s.clone()))),
+        ("result".into(), opt(&e.result, result_json)),
+    ])
+}
+
+/// Serialize a manifest to canonical JSON text.
+pub fn manifest_to_json_text(m: &Manifest) -> String {
+    let fields = vec![
+        ("version".to_string(), unum(MANIFEST_VERSION)),
+        ("suite".to_string(), Json::Str(m.suite.clone())),
+        (
+            "suite_hash".to_string(),
+            Json::Str(format!("{:016x}", m.suite_hash)),
+        ),
+        ("total_units".to_string(), unum(m.total_units as u64)),
+        (
+            "shard".to_string(),
+            Json::Arr(vec![unum(m.shard.index as u64), unum(m.shard.count as u64)]),
+        ),
+        (
+            "units".to_string(),
+            Json::Arr(m.units.iter().map(entry_json).collect()),
+        ),
+    ];
+    let mut text = Json::Obj(fields).write();
+    text.push('\n');
+    text
+}
+
+fn parse_result(v: &Json) -> R<UnitResult> {
+    let pct = f64_vec(v, "util_pct")?;
+    if pct.len() != 5 {
+        return Err(bad(format!("util_pct has {} entries, expected 5", pct.len())));
+    }
+    Ok(UnitResult {
+        fmax_mhz: get_opt(v, "fmax_mhz", |x| {
+            x.as_f64().ok_or_else(|| bad("fmax_mhz not a number"))
+        })?,
+        cycles: get_opt(v, "cycles", |x| {
+            x.as_u64().ok_or_else(|| bad("cycles not an integer"))
+        })?,
+        util_pct: [pct[0], pct[1], pct[2], pct[3], pct[4]],
+        assignment: get_opt(v, "assignment", |x| {
+            x.as_arr()
+                .ok_or_else(|| bad("assignment is not an array"))?
+                .iter()
+                .map(|s| s.as_usize().ok_or_else(|| bad("bad slot id in assignment")))
+                .collect()
+        })?,
+    })
+}
+
+fn parse_entry(v: &Json) -> R<UnitEntry> {
+    let device_name = get_str(v, "device")?;
+    let device = DeviceKind::parse(device_name)
+        .ok_or_else(|| bad(format!("unknown device `{device_name}`")))?;
+    let variant_name = get_str(v, "variant")?;
+    let variant = FlowVariant::parse(variant_name)
+        .ok_or_else(|| bad(format!("unknown variant `{variant_name}`")))?;
+    let status_name = get_str(v, "status")?;
+    let status = UnitStatus::parse(status_name)
+        .ok_or_else(|| bad(format!("unknown unit status `{status_name}`")))?;
+    let entry = UnitEntry {
+        index: get_usize(v, "index")?,
+        unit: WorkUnit {
+            design: get_str(v, "design")?.to_string(),
+            device,
+            variant,
+            util_ratio: get_opt(v, "util_ratio", |x| {
+                x.as_f64().ok_or_else(|| bad("util_ratio not a number"))
+            })?,
+        },
+        status,
+        attempts: get_u64(v, "attempts")? as u32,
+        error: get_opt(v, "error", |x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| bad("error not a string"))
+        })?,
+        result: get_opt(v, "result", parse_result)?,
+    };
+    if entry.status == UnitStatus::Done && entry.result.is_none() {
+        return Err(bad(format!(
+            "unit {} is marked done but carries no result",
+            entry.index
+        )));
+    }
+    Ok(entry)
+}
+
+/// Parse a manifest produced by [`manifest_to_json_text`].
+pub fn manifest_from_json_text(text: &str) -> R<Manifest> {
+    let root = Json::parse(text).map_err(|e| bad(e.to_string()))?;
+    let version = get_u64(&root, "version")?;
+    if version != MANIFEST_VERSION {
+        return Err(bad(format!(
+            "unsupported manifest version {version} (expected {MANIFEST_VERSION})"
+        )));
+    }
+    let hash_text = get_str(&root, "suite_hash")?;
+    let suite_hash = u64::from_str_radix(hash_text, 16)
+        .map_err(|_| bad(format!("bad suite hash `{hash_text}`")))?;
+    let shard_arr = get_arr(&root, "shard")?;
+    if shard_arr.len() != 2 {
+        return Err(bad("shard is not a [index, count] pair"));
+    }
+    let shard = Shard {
+        index: shard_arr[0].as_usize().ok_or_else(|| bad("bad shard index"))?,
+        count: shard_arr[1].as_usize().ok_or_else(|| bad("bad shard count"))?,
+    };
+    if shard.count == 0 || shard.index >= shard.count {
+        return Err(bad(format!("invalid shard {}/{}", shard.index, shard.count)));
+    }
+    let total_units = get_usize(&root, "total_units")?;
+    let units = get_arr(&root, "units")?
+        .iter()
+        .map(parse_entry)
+        .collect::<R<Vec<_>>>()?;
+    for e in &units {
+        if e.index >= total_units {
+            return Err(bad(format!(
+                "unit index {} out of range for a {total_units}-unit suite",
+                e.index
+            )));
+        }
+    }
+    Ok(Manifest {
+        suite: get_str(&root, "suite")?.to_string(),
+        suite_hash,
+        total_units,
+        shard,
+        units,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(design: &str, ratio: Option<f64>) -> WorkUnit {
+        WorkUnit {
+            design: design.to_string(),
+            device: DeviceKind::U250,
+            variant: FlowVariant::Tapa,
+            util_ratio: ratio,
+        }
+    }
+
+    fn suite() -> Vec<WorkUnit> {
+        vec![
+            unit("a", None),
+            unit("b", None),
+            unit("b", Some(0.6)),
+            unit("b", Some(0.75)),
+            unit("c", None),
+        ]
+    }
+
+    fn done(mut e: UnitEntry) -> UnitEntry {
+        e.status = UnitStatus::Done;
+        e.attempts = 1;
+        e.result = Some(UnitResult {
+            fmax_mhz: Some(287.5),
+            cycles: None,
+            util_pct: [1.5, 2.25, 0.0, 0.0, 0.0],
+            assignment: e.unit.util_ratio.map(|_| vec![0, 1]),
+        });
+        e
+    }
+
+    #[test]
+    fn shards_partition_the_suite() {
+        let units = suite();
+        let shards: Vec<Manifest> = (0..3)
+            .map(|k| Manifest::plan("s", &units, Shard { index: k, count: 3 }))
+            .collect();
+        let mut covered: Vec<usize> = shards
+            .iter()
+            .flat_map(|m| m.units.iter().map(|e| e.index))
+            .collect();
+        covered.sort_unstable();
+        assert_eq!(covered, vec![0, 1, 2, 3, 4]);
+        for m in &shards {
+            assert_eq!(m.total_units, 5);
+            m.validate_against("s", &units).unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_spec_parses() {
+        assert_eq!(Shard::parse("0/3"), Some(Shard { index: 0, count: 3 }));
+        assert_eq!(Shard::parse("2/3").unwrap().to_string(), "2/3");
+        assert_eq!(Shard::parse("3/3"), None);
+        assert_eq!(Shard::parse("1/0"), None);
+        assert_eq!(Shard::parse("x/y"), None);
+        assert_eq!(Shard::parse("2"), None);
+    }
+
+    #[test]
+    fn suite_hash_sees_every_field() {
+        let units = suite();
+        let h = suite_hash("s", &units);
+        assert_ne!(h, suite_hash("t", &units));
+        let mut fewer = units.clone();
+        fewer.pop();
+        assert_ne!(h, suite_hash("s", &fewer));
+        let mut ratio = units.clone();
+        ratio[2].util_ratio = Some(0.61);
+        assert_ne!(h, suite_hash("s", &ratio));
+        let mut variant = units.clone();
+        variant[0].variant = FlowVariant::Baseline;
+        assert_ne!(h, suite_hash("s", &variant));
+    }
+
+    #[test]
+    fn manifest_roundtrips_byte_identically() {
+        let units = suite();
+        let mut m = Manifest::plan("s", &units, Shard { index: 1, count: 2 });
+        m.units[0] = done(m.units[0].clone());
+        m.units[1].status = UnitStatus::Failed;
+        m.units[1].attempts = 2;
+        m.units[1].error = Some("injected \"failure\"\n".to_string());
+        let text = manifest_to_json_text(&m);
+        let back = manifest_from_json_text(&text).unwrap();
+        assert_eq!(manifest_to_json_text(&back), text);
+        assert_eq!(back.suite_hash, m.suite_hash);
+        assert_eq!(back.units.len(), m.units.len());
+        assert_eq!(back.units[0].result, m.units[0].result);
+        assert_eq!(back.units[1].error, m.units[1].error);
+    }
+
+    #[test]
+    fn merge_completes_and_requeues() {
+        let units = suite();
+        let mut shards: Vec<Manifest> = (0..2)
+            .map(|k| Manifest::plan("s", &units, Shard { index: k, count: 2 }))
+            .collect();
+        for m in &mut shards {
+            for i in 0..m.units.len() {
+                m.units[i] = done(m.units[i].clone());
+            }
+        }
+        // Fail one unit in shard 1.
+        shards[1].units[0].status = UnitStatus::Failed;
+        shards[1].units[0].result = None;
+        let merged = merge(&shards).unwrap();
+        assert!(!merged.is_complete());
+        assert_eq!(merged.unresolved.len(), 1);
+        assert_eq!(merged.unresolved[0].index, shards[1].units[0].index);
+
+        // The residual re-queues exactly the failed unit, pending again.
+        let residual = merged.residual();
+        residual.validate_against("s", &units).unwrap();
+        assert_eq!(residual.units.len(), 1);
+        assert_eq!(residual.units[0].status, UnitStatus::Pending);
+        assert_eq!(residual.units[0].attempts, 1);
+
+        // Completing the residual completes the merge.
+        let mut fixed = residual.clone();
+        fixed.units[0] = done(fixed.units[0].clone());
+        let merged = merge(&[shards[0].clone(), shards[1].clone(), fixed]).unwrap();
+        assert!(merged.is_complete());
+        assert_eq!(merged.complete_results().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn merge_rejects_gaps_overlaps_and_mismatches() {
+        let units = suite();
+        let mk = |k: usize, n: usize| Manifest::plan("s", &units, Shard { index: k, count: n });
+
+        // Gap: shard 2/3 missing entirely.
+        let err = merge(&[mk(0, 3), mk(1, 3)]).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+
+        // Overlap: the same unit done twice.
+        let mut a = mk(0, 2);
+        let mut b = mk(0, 2);
+        a.units[0] = done(a.units[0].clone());
+        b.units[0] = done(b.units[0].clone());
+        let c = mk(1, 2);
+        let err = merge(&[a, b, c]).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+
+        // Suite hash mismatch.
+        let mut other = units.clone();
+        other[0].design = "z".into();
+        let err = merge(&[mk(0, 2), Manifest::plan("s", &other, Shard { index: 1, count: 2 })])
+            .unwrap_err();
+        assert!(err.to_string().contains("hash"), "{err}");
+
+        // Different suite ids.
+        let err =
+            merge(&[mk(0, 2), Manifest::plan("t", &units, Shard { index: 1, count: 2 })])
+                .unwrap_err();
+        assert!(err.to_string().contains("suites"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_foreign_manifests() {
+        let units = suite();
+        let m = Manifest::plan("s", &units, Shard { index: 0, count: 1 });
+        assert!(m.validate_against("t", &units).is_err());
+        let mut fewer = units.clone();
+        fewer.pop();
+        assert!(m.validate_against("s", &fewer).is_err());
+        m.validate_against("s", &units).unwrap();
+    }
+}

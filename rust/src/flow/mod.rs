@@ -21,6 +21,7 @@
 //! estimates.
 
 pub mod batch;
+pub mod manifest;
 pub mod persist;
 pub mod session;
 pub mod stage;
@@ -208,6 +209,22 @@ pub fn run_flow(design: &Design, variant: FlowVariant, cfg: &FlowConfig) -> Flow
     run_flow_with_executor(design, variant, cfg, &RustStep)
 }
 
+/// Implement one §6.3 floorplan candidate end to end and report its
+/// post-route Fmax — byte-for-byte the per-candidate evaluation
+/// [`Stage::Sweep`] (and Table 10) performs, on the deterministic Rust
+/// reference step. This is the execution body of a ratio-carrying
+/// [`manifest::WorkUnit`], so a sharded sweep scores candidates exactly
+/// as a single-machine session would.
+pub fn evaluate_sweep_candidate(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    fp: &Floorplan,
+    cfg: &FlowConfig,
+) -> Option<f64> {
+    session::evaluate_candidate(g, device, estimates, fp, cfg, &RustStep)
+}
+
 /// Run one variant with an explicit analytical-step executor (the PJRT
 /// engine from [`crate::runtime`] or the Rust fallback).
 pub fn run_flow_with_executor(
@@ -271,7 +288,11 @@ mod tests {
         for i in 0..n - 1 {
             b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
         }
-        Design { name: format!("flow_test_{n}x{fat}"), graph: b.build().unwrap(), device: DeviceKind::U250 }
+        Design {
+            name: format!("flow_test_{n}x{fat}"),
+            graph: b.build().unwrap(),
+            device: DeviceKind::U250,
+        }
     }
 
     #[test]
@@ -301,7 +322,10 @@ mod tests {
     #[test]
     fn variants_produce_tagged_results() {
         let d = design(6, 1);
-        let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+        let cfg = FlowConfig {
+            sim: SimOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        };
         for v in FlowVariant::ALL {
             let r = run_flow(&d, v, &cfg);
             assert_eq!(r.variant, v.canonical());
@@ -311,7 +335,10 @@ mod tests {
     #[test]
     fn floorplan_only_is_worst_for_spread_designs() {
         let d = design(20, 4);
-        let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+        let cfg = FlowConfig {
+            sim: SimOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        };
         let full = run_flow(&d, FlowVariant::Tapa, &cfg);
         let fponly = run_flow(&d, FlowVariant::FloorplanOnlyNoPipeline, &cfg);
         let f_full = full.fmax_mhz.unwrap_or(0.0);
@@ -334,7 +361,10 @@ mod tests {
         // the *requested* variant tag (previously it was always mislabelled
         // `Tapa`, silently corrupting ablation experiments).
         let d = design(4, 100_000);
-        let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+        let cfg = FlowConfig {
+            sim: SimOptions { enabled: false, ..Default::default() },
+            ..Default::default()
+        };
         for v in [
             FlowVariant::Tapa,
             FlowVariant::FloorplanOnlyNoPipeline,

@@ -40,15 +40,15 @@ pub const FORMAT_VERSION: u64 = 2;
 // Writing
 // ---------------------------------------------------------------------------
 
-fn num(n: impl Into<f64>) -> Json {
+pub(crate) fn num(n: impl Into<f64>) -> Json {
     Json::Num(n.into())
 }
 
-fn unum(n: u64) -> Json {
+pub(crate) fn unum(n: u64) -> Json {
     Json::Num(n as f64)
 }
 
-fn opt<T>(v: &Option<T>, f: impl Fn(&T) -> Json) -> Json {
+pub(crate) fn opt<T>(v: &Option<T>, f: impl Fn(&T) -> Json) -> Json {
     match v {
         Some(x) => f(x),
         None => Json::Null,
@@ -288,23 +288,23 @@ pub fn context_to_json_text(ctx: &SessionContext) -> String {
 // Reading
 // ---------------------------------------------------------------------------
 
-type R<T> = Result<T, SessionError>;
+pub(crate) type R<T> = Result<T, SessionError>;
 
-fn bad(msg: impl Into<String>) -> SessionError {
+pub(crate) fn bad(msg: impl Into<String>) -> SessionError {
     SessionError::Parse(msg.into())
 }
 
-fn field<'a>(o: &'a Json, key: &str) -> R<&'a Json> {
+pub(crate) fn field<'a>(o: &'a Json, key: &str) -> R<&'a Json> {
     o.get(key).ok_or_else(|| bad(format!("missing field `{key}`")))
 }
 
-fn get_f64(o: &Json, key: &str) -> R<f64> {
+pub(crate) fn get_f64(o: &Json, key: &str) -> R<f64> {
     field(o, key)?
         .as_f64()
         .ok_or_else(|| bad(format!("field `{key}` is not a number")))
 }
 
-fn get_u64(o: &Json, key: &str) -> R<u64> {
+pub(crate) fn get_u64(o: &Json, key: &str) -> R<u64> {
     field(o, key)?
         .as_u64()
         .ok_or_else(|| bad(format!("field `{key}` is not a non-negative integer")))
@@ -314,7 +314,7 @@ fn get_u32(o: &Json, key: &str) -> R<u32> {
     Ok(get_u64(o, key)? as u32)
 }
 
-fn get_usize(o: &Json, key: &str) -> R<usize> {
+pub(crate) fn get_usize(o: &Json, key: &str) -> R<usize> {
     Ok(get_u64(o, key)? as usize)
 }
 
@@ -324,19 +324,19 @@ fn get_bool(o: &Json, key: &str) -> R<bool> {
         .ok_or_else(|| bad(format!("field `{key}` is not a boolean")))
 }
 
-fn get_str<'a>(o: &'a Json, key: &str) -> R<&'a str> {
+pub(crate) fn get_str<'a>(o: &'a Json, key: &str) -> R<&'a str> {
     field(o, key)?
         .as_str()
         .ok_or_else(|| bad(format!("field `{key}` is not a string")))
 }
 
-fn get_arr<'a>(o: &'a Json, key: &str) -> R<&'a [Json]> {
+pub(crate) fn get_arr<'a>(o: &'a Json, key: &str) -> R<&'a [Json]> {
     field(o, key)?
         .as_arr()
         .ok_or_else(|| bad(format!("field `{key}` is not an array")))
 }
 
-fn get_opt<'a, T>(o: &'a Json, key: &str, f: impl Fn(&'a Json) -> R<T>) -> R<Option<T>> {
+pub(crate) fn get_opt<'a, T>(o: &'a Json, key: &str, f: impl Fn(&'a Json) -> R<T>) -> R<Option<T>> {
     let v = field(o, key)?;
     if v.is_null() {
         Ok(None)
@@ -356,7 +356,7 @@ fn u32_vec(o: &Json, key: &str) -> R<Vec<u32>> {
         .collect()
 }
 
-fn f64_vec(o: &Json, key: &str) -> R<Vec<f64>> {
+pub(crate) fn f64_vec(o: &Json, key: &str) -> R<Vec<f64>> {
     get_arr(o, key)?
         .iter()
         .map(|v| v.as_f64().ok_or_else(|| bad(format!("`{key}` element is not a number"))))

@@ -985,8 +985,10 @@ impl Session {
 /// Implement one §6.3 sweep candidate end to end — floorplan-aware
 /// pipelining, guided placement, routing, STA — and report its Fmax.
 /// This is byte-for-byte the per-candidate evaluation Table 10 performs
-/// (post-route [`analyze`], no internal-path area correction).
-fn evaluate_candidate(
+/// (post-route [`analyze`], no internal-path area correction). Exposed
+/// through [`super::evaluate_sweep_candidate`] so sharded sweep-point
+/// work units score candidates identically.
+pub(crate) fn evaluate_candidate(
     g: &TaskGraph,
     device: &Device,
     estimates: &[TaskEstimate],

@@ -14,9 +14,21 @@
 //!       [--resume]                  continue from the workdir checkpoint
 //! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
 //!       [--jobs N]                  parallel sessions (43-designs suite)
+//!       [--shard k/N --workdir W]   distributed worker: run shard k of N
+//!                                    into W/manifest.json (resumable)
 //! tapa bench --list                 list experiment ids
+//! tapa merge W1 W2 ... [--csv]      validate + merge shard manifests into
+//!       [--out F] [--residual DIR]   the suite table; failures re-queue
 //! tapa engine-info                  check the PJRT artifact
 //! ```
+//!
+//! Sharded execution: `suite_units` flattens a batch experiment into a
+//! deterministic work-unit list; `--shard k/N` workers own the units
+//! with `index % N == k` and record status into a versioned
+//! `manifest.json` (`flow::manifest`). `tapa merge` checks the shard
+//! manifests against each other (same suite hash, no done-overlaps, no
+//! gaps), re-queues failed units into a `--residual` manifest, and emits
+//! a table byte-identical to the single-machine `tapa bench` run.
 //!
 //! `--device u250,u280` compiles the design for both parts as a
 //! multi-device session set sharing one HLS Estimate artifact; checkpoint
@@ -43,6 +55,7 @@ fn main() -> ExitCode {
         Some("list") => cmd_list(),
         Some("compile") => cmd_compile(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
+        Some("merge") => cmd_merge(&args[1..]),
         Some("engine-info") => cmd_engine_info(),
         Some("help") | Some("--help") | None => {
             print_help();
@@ -63,8 +76,10 @@ fn print_help() {
          USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
          [--config FILE] [--no-sim]\n               [--device D[,D...]] [--sweep] \
          [--select fmax|cost] [--jobs N]\n               [--workdir DIR] [--to STAGE] \
-         [--resume]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n  \
-         tapa bench --list\n  tapa engine-info\n\n\
+         [--resume]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n               \
+         [--shard k/N --workdir DIR]\n  tapa bench --list\n  \
+         tapa merge DIR... [--csv] [--out FILE] [--residual DIR]\n  \
+         tapa engine-info\n\n\
          STAGES (for --to): estimate floorplan sweep pipeline place route sta sim\n\
          DEVICES (for --device): u250 u280 — a comma-separated list compiles the\n  \
          design for every part as one session set sharing a single HLS Estimate\n  \
@@ -76,7 +91,15 @@ fn print_help() {
          cost). --jobs N implements candidates over N worker threads with\n  \
          deterministic, submission-ordered results.\n\
          CHECKPOINTS: versioned JSON (flow::persist); the byte layout is frozen\n  \
-         within a format version, so old workdirs keep resuming."
+         within a format version, so old workdirs keep resuming.\n\
+         SHARDING: `bench ID --shard k/N --workdir W` runs only the suite units\n  \
+         with index % N == k, recording per-unit done/failed/attempts into\n  \
+         W/manifest.json (versioned, resumable: done units are never re-run).\n  \
+         `merge W1 W2 ...` validates the shard manifests (same suite hash, no\n  \
+         overlaps or gaps), re-queues failed units into --residual DIR (finish\n  \
+         them with `bench ID --workdir DIR`), and emits the suite table\n  \
+         byte-identical to a single-machine `bench ID` run. Shardable suites:\n  \
+         fast-suite 43-designs table8 table9 table10."
     );
 }
 
@@ -224,15 +247,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         None => Vec::new(),
     };
 
-    let all: Vec<_> = all_autobridge_designs()
-        .into_iter()
-        .chain(
-            tapa::bench_suite::hbm_design_pairs()
-                .into_iter()
-                .flat_map(|(a, b)| [a, b]),
-        )
-        .collect();
-    let Some(mut design) = all.into_iter().find(|d| d.name == name) else {
+    let Some(mut design) = tapa::bench_suite::find_design(&name) else {
         eprintln!("unknown design {name} (see `tapa list`)");
         return ExitCode::FAILURE;
     };
@@ -539,6 +554,11 @@ fn cmd_bench(args: &[String]) -> ExitCode {
         return ExitCode::FAILURE;
     };
     let cfg = load_config(args);
+    let shard = flag_value(args, "--shard");
+    let workdir = flag_value(args, "--workdir").map(PathBuf::from);
+    if shard.is_some() || workdir.is_some() {
+        return cmd_bench_shard(id, shard.as_deref(), workdir, &cfg, jobs);
+    }
     match experiments::run_experiment_jobs(id, &cfg, jobs) {
         Some(table) => {
             if has_flag(args, "--csv") {
@@ -553,6 +573,255 @@ fn cmd_bench(args: &[String]) -> ExitCode {
             ExitCode::FAILURE
         }
     }
+}
+
+/// `tapa bench <suite> --shard k/N --workdir W`: the distributed worker
+/// mode. Creates (or resumes) `W/manifest.json` for shard `k/N` of the
+/// suite's unit list and executes every unit not already done, recording
+/// status/attempts per unit. Without `--shard`, an existing manifest in
+/// `--workdir` is resumed as-is — this is how a `tapa merge --residual`
+/// re-queue manifest is finished.
+fn cmd_bench_shard(
+    id: &str,
+    shard: Option<&str>,
+    workdir: Option<PathBuf>,
+    cfg: &FlowConfig,
+    jobs: usize,
+) -> ExitCode {
+    use tapa::flow::manifest::{Manifest, Shard, UnitStatus};
+
+    let Some(dir) = workdir else {
+        eprintln!("--shard requires --workdir DIR");
+        return ExitCode::FAILURE;
+    };
+    let Some(units) = experiments::suite_units(id) else {
+        eprintln!(
+            "experiment {id} is not shardable (shardable suites: {})",
+            experiments::SHARDED_SUITES.join(" ")
+        );
+        return ExitCode::FAILURE;
+    };
+    let scfg = experiments::suite_cfg(id, cfg);
+    let path = Manifest::file_path(&dir);
+    let mut m = if path.exists() {
+        let m = match Manifest::load(&path) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("cannot load {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        if let Err(e) = m.validate_against(id, &units) {
+            eprintln!("stale manifest in {}: {e}", dir.display());
+            return ExitCode::FAILURE;
+        }
+        if let Some(spec) = shard {
+            match Shard::parse(spec) {
+                Some(s) if s == m.shard => {}
+                Some(s) => {
+                    eprintln!(
+                        "manifest in {} is shard {}, not {s} — use a fresh --workdir \
+                         per shard",
+                        dir.display(),
+                        m.shard
+                    );
+                    return ExitCode::FAILURE;
+                }
+                None => {
+                    eprintln!("bad --shard spec `{spec}` (expected k/N with k < N)");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        m
+    } else {
+        let Some(spec) = shard else {
+            eprintln!(
+                "no manifest in {}; pass --shard k/N to create one",
+                dir.display()
+            );
+            return ExitCode::FAILURE;
+        };
+        let Some(s) = Shard::parse(spec) else {
+            eprintln!("bad --shard spec `{spec}` (expected k/N with k < N)");
+            return ExitCode::FAILURE;
+        };
+        Manifest::plan(id, &units, s)
+    };
+    let (pending, done0, failed0) = m.counts();
+    println!(
+        "suite {id} shard {}: {} unit(s) of {} ({done0} done, {failed0} failed, \
+         {pending} to run; suite hash {:016x})",
+        m.shard,
+        m.units.len(),
+        m.total_units,
+        m.suite_hash
+    );
+    let t0 = std::time::Instant::now();
+    let run = experiments::run_manifest(&mut m, &scfg, jobs, Some(path.as_path()));
+    let (done, failed) = match run {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("shard run failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "  {done}/{} done, {failed} failed in {:.2}s — manifest: {}",
+        m.units.len(),
+        t0.elapsed().as_secs_f64(),
+        path.display()
+    );
+    for e in m.units.iter().filter(|e| e.status == UnitStatus::Failed) {
+        eprintln!(
+            "  FAILED {} ({} attempt{}): {}",
+            e.unit.key(),
+            e.attempts,
+            if e.attempts == 1 { "" } else { "s" },
+            e.error.as_deref().unwrap_or("unknown error")
+        );
+    }
+    if failed > 0 {
+        eprintln!("  `tapa merge` will re-queue the failed unit(s) into a residual manifest");
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+/// `tapa merge W1 W2 … [--csv] [--out FILE] [--residual DIR]`: validate
+/// shard manifests against each other, re-queue failures, and emit the
+/// suite's result table — byte-identical to the single-machine
+/// `tapa bench` run. Status goes to stderr so `--csv` piping stays
+/// clean.
+fn cmd_merge(args: &[String]) -> ExitCode {
+    use tapa::flow::manifest::{merge, suite_hash, Manifest};
+
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--csv" => {}
+            "--out" | "--residual" => i += 1,
+            a if a.starts_with("--") => {
+                eprintln!("unknown merge flag {a}");
+                return ExitCode::FAILURE;
+            }
+            a => dirs.push(PathBuf::from(a)),
+        }
+        i += 1;
+    }
+    if dirs.is_empty() {
+        eprintln!(
+            "merge requires at least one shard work directory \
+             (usage: tapa merge W1 W2 ... [--csv] [--out FILE] [--residual DIR])"
+        );
+        return ExitCode::FAILURE;
+    }
+    let mut manifests = Vec::with_capacity(dirs.len());
+    for d in &dirs {
+        let path = Manifest::file_path(d);
+        match Manifest::load(&path) {
+            Ok(m) => manifests.push(m),
+            Err(e) => {
+                eprintln!("cannot load {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let merged = match merge(&manifests) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("merge failed: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    // The workers validated their manifests against *their* binary; the
+    // merge side emits the rows, so it must also check the manifests
+    // were built from THIS binary's definition of the suite — a
+    // same-length but different suite (edited ratios, reordered
+    // designs) would otherwise be silently mislabelled.
+    if let Some(units) = experiments::suite_units(&merged.suite) {
+        let want = suite_hash(&merged.suite, &units);
+        if merged.suite_hash != want {
+            eprintln!(
+                "merge failed: manifests carry suite hash {:016x}, but this \
+                 binary defines `{}` as {want:016x} — the shards were run by a \
+                 different suite definition",
+                merged.suite_hash, merged.suite
+            );
+            return ExitCode::FAILURE;
+        }
+    }
+    eprintln!(
+        "suite {} ({} shard manifest(s), {} unit(s), hash {:016x})",
+        merged.suite,
+        manifests.len(),
+        merged.total_units,
+        merged.suite_hash
+    );
+    if !merged.is_complete() {
+        for e in &merged.unresolved {
+            eprintln!(
+                "  unresolved: {} [{}] ({} attempt{}){}",
+                e.unit.key(),
+                e.status.name(),
+                e.attempts,
+                if e.attempts == 1 { "" } else { "s" },
+                e.error.as_deref().map(|m| format!(": {m}")).unwrap_or_default()
+            );
+        }
+        match flag_value(args, "--residual") {
+            Some(rdir) => {
+                let rdir = PathBuf::from(rdir);
+                let rpath = Manifest::file_path(&rdir);
+                let residual = merged.residual();
+                if let Err(e) = residual.save(&rpath) {
+                    eprintln!("cannot write residual manifest: {e}");
+                    return ExitCode::FAILURE;
+                }
+                eprintln!(
+                    "  re-queued {} unit(s) into {}; finish with `tapa bench {} \
+                     --workdir {}`, then merge again including that directory",
+                    residual.units.len(),
+                    rpath.display(),
+                    merged.suite,
+                    rdir.display()
+                );
+            }
+            None => eprintln!(
+                "  {} unit(s) unresolved; pass --residual DIR to write a re-queue \
+                 manifest",
+                merged.unresolved.len()
+            ),
+        }
+        return ExitCode::FAILURE;
+    }
+    let results = merged.complete_results().expect("merge is complete");
+    let Some(table) = experiments::suite_table(&merged.suite, &results) else {
+        eprintln!(
+            "manifests name suite `{}`, which this binary does not define",
+            merged.suite
+        );
+        return ExitCode::FAILURE;
+    };
+    let text = if has_flag(args, "--csv") {
+        table.to_csv()
+    } else {
+        table.render()
+    };
+    match flag_value(args, "--out") {
+        Some(out) => {
+            let out = PathBuf::from(out);
+            if let Err(e) = std::fs::write(&out, &text) {
+                eprintln!("cannot write {}: {e}", out.display());
+                return ExitCode::FAILURE;
+            }
+            eprintln!("  wrote {}", out.display());
+        }
+        None => print!("{text}"),
+    }
+    ExitCode::SUCCESS
 }
 
 fn cmd_engine_info() -> ExitCode {

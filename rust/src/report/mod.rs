@@ -40,7 +40,12 @@ impl Table {
         let line = |out: &mut String, cells: &[String]| {
             let mut s = String::from("|");
             for i in 0..ncol {
-                let _ = write!(s, " {:<w$} |", cells.get(i).map(String::as_str).unwrap_or(""), w = widths[i]);
+                let _ = write!(
+                    s,
+                    " {:<w$} |",
+                    cells.get(i).map(String::as_str).unwrap_or(""),
+                    w = widths[i]
+                );
             }
             let _ = writeln!(out, "{s}");
         };

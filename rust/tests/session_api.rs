@@ -117,7 +117,10 @@ fn up_to_then_resume_equals_one_shot_run_flow() {
 #[test]
 fn resume_with_explicit_variant_and_error_paths() {
     let dir = workdir("variants");
-    let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+    let cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
     let d = chain_design("var_chain", 6);
 
     // No checkpoint yet.
@@ -161,7 +164,10 @@ fn resume_rejects_checkpoint_with_missing_artifact() {
 
 #[test]
 fn batch_runner_csv_is_byte_identical_to_sequential() {
-    let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+    let cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
     let designs: Vec<Design> = (1..=4).map(|k| stencil(k, DeviceKind::U250)).collect();
     let csv = |jobs: usize| {
         let mut runner = BatchRunner::new(cfg.clone()).workers(jobs);
@@ -187,7 +193,10 @@ fn batch_runner_csv_is_byte_identical_to_sequential() {
 
 #[test]
 fn shared_cache_estimates_once_per_design_across_variants() {
-    let cfg = FlowConfig { sim: SimOptions { enabled: false, ..Default::default() }, ..Default::default() };
+    let cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
     let cache = Arc::new(StageCache::default());
     let d = chain_design("cache_chain", 6);
     for v in [

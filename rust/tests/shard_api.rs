@@ -1,0 +1,398 @@
+//! Integration tests for distributed sharded bench execution
+//! (`flow::manifest` + `tapa bench --shard` + `tapa merge`).
+//!
+//! The determinism contract under test: partition a suite into N shard
+//! manifests, execute each shard independently (different processes,
+//! different `--jobs` counts, JSON round-trips through disk in between),
+//! merge, and the reassembled CSV is **byte-identical** to the
+//! single-machine [`BatchRunner`] run. Plus the failure path: a unit
+//! that dies mid-shard is recorded `failed`, `tapa merge` re-queues
+//! exactly the failed units into a residual manifest, and finishing the
+//! residual completes the identical CSV. The CI `shard-merge` job runs
+//! the same three-worker scenario against the release binary on every
+//! PR.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use tapa::bench_suite::experiments::{
+    self, batch_suite_table, execute_unit, run_manifest, suite_cfg, suite_table,
+    suite_units,
+};
+use tapa::device::DeviceKind;
+use tapa::flow::manifest::{
+    self, manifest_from_json_text, manifest_to_json_text, Manifest, Shard, UnitStatus,
+};
+use tapa::flow::{FlowConfig, FlowVariant, Session, SimOptions, Stage};
+use tapa::place::RustStep;
+
+const SUITE: &str = "fast-suite";
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate
+/// offline).
+fn workdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tapa_shard_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tapa_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_tapa"))
+}
+
+#[test]
+fn golden_v1_manifest_roundtrips_byte_identically() {
+    // Locks the on-disk manifest layout, like the checkpoint golden: any
+    // intentional change must bump MANIFEST_VERSION and refresh this file.
+    const GOLDEN: &str = include_str!("data/golden_manifest.json");
+    let m = manifest_from_json_text(GOLDEN).expect("golden manifest parses");
+    assert_eq!(
+        manifest_to_json_text(&m),
+        GOLDEN,
+        "writer drifted from the committed v1 manifest format — merge \
+         compatibility across workers would break; bump MANIFEST_VERSION and \
+         refresh the golden instead of changing the layout in place"
+    );
+    assert_eq!(m.suite, "golden-suite");
+    assert_eq!(m.suite_hash, 0x00c0_ffee_00c0_ffee);
+    assert_eq!(m.total_units, 4);
+    assert_eq!(m.shard, Shard { index: 1, count: 2 });
+    assert_eq!(m.units.len(), 2);
+    assert_eq!(m.units[0].status, UnitStatus::Done);
+    assert_eq!(m.units[0].unit.device, DeviceKind::U280);
+    assert_eq!(m.units[0].unit.util_ratio, Some(0.75));
+    let r = m.units[0].result.as_ref().expect("done unit carries a result");
+    assert_eq!(r.fmax_mhz, Some(287.5));
+    assert_eq!(r.assignment.as_deref(), Some(&[0usize, 1, 2][..]));
+    assert_eq!(m.units[1].status, UnitStatus::Failed);
+    assert_eq!(m.units[1].unit.variant, FlowVariant::Baseline);
+    assert_eq!(m.units[1].attempts, 2);
+    assert_eq!(m.units[1].error.as_deref(), Some("routing failed"));
+}
+
+/// The acceptance bar: 3 shards, each executed separately with its
+/// manifest round-tripping through disk, merged back — CSV bytes equal
+/// to the single-machine BatchRunner run.
+#[test]
+fn three_shard_merge_csv_matches_single_machine_batchrunner() {
+    let units = suite_units(SUITE).expect("fast-suite is shardable");
+    let cfg = suite_cfg(SUITE, &FlowConfig::default());
+    let dir = workdir("merge3");
+
+    let mut manifests = Vec::new();
+    for k in 0..3 {
+        let mut m = Manifest::plan(SUITE, &units, Shard { index: k, count: 3 });
+        // Each "worker" uses a different jobs count; determinism must hold.
+        let (done, failed) = run_manifest(&mut m, &cfg, k + 1, None).unwrap();
+        assert_eq!(failed, 0);
+        assert_eq!(done, m.units.len());
+        // Round-trip through disk, as real workers do.
+        let path = dir.join(format!("w{k}")).join("manifest.json");
+        m.save(&path).unwrap();
+        manifests.push(Manifest::load(&path).unwrap());
+    }
+
+    let merged = manifest::merge(&manifests).unwrap();
+    assert!(merged.is_complete());
+    let results = merged.complete_results().unwrap();
+    let merged_csv = suite_table(SUITE, &results).unwrap().to_csv();
+
+    let single_csv = batch_suite_table(SUITE, &FlowConfig::default(), 4)
+        .expect("fast-suite runs through BatchRunner")
+        .to_csv();
+    assert_eq!(
+        merged_csv, single_csv,
+        "sharded+merged CSV must be byte-identical to the single-machine run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Same contract through the real binary: three `tapa bench --shard`
+/// worker processes, `tapa merge --csv`, `diff` against
+/// `tapa bench fast-suite --jobs 4 --csv` — exactly what the CI
+/// `shard-merge` job runs.
+#[test]
+fn shard_worker_and_merge_cli_reproduce_single_machine_csv() {
+    let dir = workdir("cli");
+    for k in 0..3 {
+        let spec = format!("{k}/3");
+        let wdir = dir.join(format!("w{k}"));
+        let out = tapa_bin()
+            .args([
+                "bench",
+                SUITE,
+                "--shard",
+                spec.as_str(),
+                "--workdir",
+                wdir.to_str().unwrap(),
+                "--jobs",
+                "2",
+            ])
+            .output()
+            .expect("spawn tapa bench --shard");
+        assert!(
+            out.status.success(),
+            "shard {k} failed:\n{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+    let merged = tapa_bin()
+        .args([
+            "merge",
+            dir.join("w0").to_str().unwrap(),
+            dir.join("w1").to_str().unwrap(),
+            dir.join("w2").to_str().unwrap(),
+            "--csv",
+        ])
+        .output()
+        .expect("spawn tapa merge");
+    assert!(
+        merged.status.success(),
+        "merge failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+    let single = tapa_bin()
+        .args(["bench", SUITE, "--jobs", "4", "--csv"])
+        .output()
+        .expect("spawn tapa bench");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "CLI merge CSV must be byte-identical to the single-machine CLI run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Failure re-queueing end to end: a unit "dies" mid-shard (injected via
+/// TAPA_BENCH_FAIL), the shard records it failed, `tapa merge` refuses
+/// to emit a CSV and re-queues exactly the failed units into a residual
+/// manifest, `tapa bench --workdir <residual>` finishes them, and the
+/// final merge completes the byte-identical CSV.
+#[test]
+fn failed_units_requeue_through_residual_manifest() {
+    let dir = workdir("requeue");
+    let fail_key = "stencil_k2_u250";
+    for k in 0..2 {
+        let spec = format!("{k}/2");
+        let wdir = dir.join(format!("w{k}"));
+        let out = tapa_bin()
+            .args([
+                "bench",
+                SUITE,
+                "--shard",
+                spec.as_str(),
+                "--workdir",
+                wdir.to_str().unwrap(),
+            ])
+            .env("TAPA_BENCH_FAIL", fail_key)
+            .output()
+            .expect("spawn tapa bench --shard");
+        // The shard holding the poisoned units exits non-zero; the other
+        // succeeds. Both must still write their manifest.
+        assert!(
+            Manifest::file_path(&dir.join(format!("w{k}"))).exists(),
+            "shard {k} wrote no manifest:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+
+    // Which units should have failed? Exactly the fast-suite units whose
+    // key contains the injected substring (orig + opt of that design).
+    let units = suite_units(SUITE).unwrap();
+    let expect_failed: Vec<usize> = units
+        .iter()
+        .enumerate()
+        .filter(|(_, u)| u.key().contains(fail_key))
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(expect_failed.len(), 2, "orig + opt of the poisoned design");
+
+    // Merge refuses and writes the residual.
+    let rdir = dir.join("residual");
+    let merged = tapa_bin()
+        .args([
+            "merge",
+            dir.join("w0").to_str().unwrap(),
+            dir.join("w1").to_str().unwrap(),
+            "--csv",
+            "--residual",
+            rdir.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn tapa merge");
+    assert!(!merged.status.success(), "merge must fail while units are unresolved");
+    assert!(merged.stdout.is_empty(), "no CSV may be emitted on a failed merge");
+
+    let residual = Manifest::load(&Manifest::file_path(&rdir)).unwrap();
+    let mut requeued: Vec<usize> = residual.units.iter().map(|e| e.index).collect();
+    requeued.sort_unstable();
+    assert_eq!(
+        requeued, expect_failed,
+        "residual must contain exactly the failed units"
+    );
+    for e in &residual.units {
+        assert_eq!(e.status, UnitStatus::Pending, "re-queued as pending");
+        assert_eq!(e.attempts, 1, "attempt history preserved");
+        assert!(e.result.is_none());
+    }
+
+    // Finish the residual (no injection this time) and merge all three.
+    let finish = tapa_bin()
+        .args(["bench", SUITE, "--workdir", rdir.to_str().unwrap()])
+        .output()
+        .expect("spawn tapa bench --workdir residual");
+    assert!(
+        finish.status.success(),
+        "residual run failed:\n{}",
+        String::from_utf8_lossy(&finish.stderr)
+    );
+    let final_merge = tapa_bin()
+        .args([
+            "merge",
+            dir.join("w0").to_str().unwrap(),
+            dir.join("w1").to_str().unwrap(),
+            rdir.to_str().unwrap(),
+            "--csv",
+        ])
+        .output()
+        .expect("spawn final tapa merge");
+    assert!(
+        final_merge.status.success(),
+        "final merge failed: {}",
+        String::from_utf8_lossy(&final_merge.stderr)
+    );
+    let single_csv = batch_suite_table(SUITE, &FlowConfig::default(), 2)
+        .unwrap()
+        .to_csv();
+    assert_eq!(
+        String::from_utf8_lossy(&final_merge.stdout),
+        single_csv,
+        "re-queued run must complete the byte-identical CSV"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard worker is resumable: re-running a completed shard executes
+/// nothing (attempts stay at 1), and a half-done manifest picks up only
+/// the missing units.
+#[test]
+fn shard_worker_is_resumable() {
+    let units = suite_units(SUITE).unwrap();
+    let cfg = suite_cfg(SUITE, &FlowConfig::default());
+    let dir = workdir("resume");
+    let path = Manifest::file_path(&dir);
+
+    let mut m = Manifest::plan(SUITE, &units, Shard { index: 0, count: 4 });
+    run_manifest(&mut m, &cfg, 2, Some(path.as_path())).unwrap();
+    let first = Manifest::load(&path).unwrap();
+    assert!(first.units.iter().all(|e| e.status == UnitStatus::Done && e.attempts == 1));
+
+    // Re-running the saved manifest is a no-op (byte-identical file).
+    let before = std::fs::read_to_string(&path).unwrap();
+    let mut again = Manifest::load(&path).unwrap();
+    run_manifest(&mut again, &cfg, 2, Some(path.as_path())).unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+
+    // Knock one unit back to pending: only it re-runs.
+    let mut half = Manifest::load(&path).unwrap();
+    half.units[0].status = UnitStatus::Pending;
+    half.units[0].result = None;
+    run_manifest(&mut half, &cfg, 2, Some(path.as_path())).unwrap();
+    assert_eq!(half.units[0].status, UnitStatus::Done);
+    assert_eq!(half.units[0].attempts, 2, "re-run increments attempts");
+    assert!(half.units[1..].iter().all(|e| e.attempts == 1), "done units untouched");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The sweep-point work units score candidates exactly as the
+/// first-class `Stage::Sweep` does, and the merge-side duplicate
+/// reconstruction (by slot assignment) matches the artifact's keep-first
+/// marking — the equivalence Tables 8–10 rely on when they run through
+/// manifests.
+#[test]
+fn ratio_units_match_stage_sweep_artifact() {
+    use tapa::bench_suite::stencil::stencil;
+    use tapa::flow::manifest::WorkUnit;
+
+    let d = stencil(1, DeviceKind::U250);
+    let ratios = [0.55, 0.6, 0.75, 0.85];
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.sweep.enabled = true;
+    cfg.sweep.ratios = ratios.to_vec();
+
+    // Reference: the session's Sweep stage artifact.
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone());
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.clone().expect("sweep artifact");
+    assert_eq!(art.points.len(), ratios.len());
+
+    // Sharded view: one ratio unit per sweep point, executed independently.
+    let results: Vec<_> = ratios
+        .iter()
+        .map(|&r| {
+            execute_unit(
+                &WorkUnit {
+                    design: d.name.clone(),
+                    device: d.device,
+                    variant: FlowVariant::Tapa,
+                    util_ratio: Some(r),
+                },
+                &cfg,
+            )
+            .unwrap()
+        })
+        .collect();
+
+    for (p, u) in art.points.iter().zip(&results) {
+        match &p.plan {
+            None => assert!(u.assignment.is_none(), "failed point at {}", p.util_ratio),
+            Some(fp) => {
+                let got = u.assignment.as_ref().expect("solved point carries assignment");
+                let want: Vec<usize> = fp.assignment.iter().map(|s| s.0).collect();
+                assert_eq!(got, &want, "assignment at ratio {}", p.util_ratio);
+                if p.duplicate_of.is_none() {
+                    assert_eq!(u.fmax_mhz, p.fmax_mhz, "fmax at ratio {}", p.util_ratio);
+                }
+            }
+        }
+    }
+    // Merge-side duplicate reconstruction == artifact marking.
+    let dup_from_units: Vec<bool> = (0..results.len())
+        .map(|j| {
+            results[j].assignment.as_ref().is_some_and(|a| {
+                results[..j].iter().any(|q| q.assignment.as_ref() == Some(a))
+            })
+        })
+        .collect();
+    let dup_from_art: Vec<bool> =
+        art.points.iter().map(|p| p.duplicate_of.is_some()).collect();
+    assert_eq!(dup_from_units, dup_from_art);
+}
+
+/// Unknown suites and malformed shard specs are rejected by the CLI
+/// without touching the work directory.
+#[test]
+fn cli_rejects_bad_shard_requests() {
+    let dir = workdir("badcli");
+    let unshardable = tapa_bin()
+        .args(["bench", "table1", "--shard", "0/2", "--workdir", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!unshardable.status.success());
+    let bad_spec = tapa_bin()
+        .args(["bench", SUITE, "--shard", "3/3", "--workdir", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!bad_spec.status.success());
+    assert!(!Manifest::file_path(&dir).exists());
+    // experiments stay reachable by the normal path
+    assert!(experiments::run_experiment("table1", &FlowConfig::default()).is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
