@@ -1,0 +1,105 @@
+//! Inspect the pluggable solver engine's telemetry: warm-started
+//! incremental sweep solves vs cold per-ratio solves, per-iteration
+//! Table-11 stats (method / nodes / proved gap), and the deterministic
+//! `--solver-budget` node cap.
+//!
+//! Run with: `cargo run --release --example solver_stats`
+
+use tapa::bench_suite::stencil::stencil;
+use tapa::device::DeviceKind;
+use tapa::flow::{FlowConfig, FlowVariant, Session, SimOptions, Stage};
+use tapa::floorplan::multi::solve_point_in;
+use tapa::hls::estimate_all;
+use tapa::place::RustStep;
+use tapa::report::fmt_gap;
+use tapa::solver::{SolveBudget, SolverContext};
+
+const RATIOS: [f64; 4] = [0.6, 0.7, 0.8, 0.85];
+
+fn main() {
+    let design = stencil(2, DeviceKind::U250);
+    let device = design.device.device();
+    let est = estimate_all(&design.graph);
+    let base = FlowConfig::default().floorplan;
+
+    // Cold path: every ratio solved from scratch on its own context —
+    // what a sharded bench worker pays for one isolated sweep point.
+    let mut cold_nodes = 0u64;
+    let mut cold_plans = Vec::new();
+    for &r in &RATIOS {
+        let mut ctx = SolverContext::new();
+        let plan = solve_point_in(&design.graph, &device, &est, &base, r, None, &mut ctx);
+        cold_nodes += ctx.total_nodes;
+        cold_plans.push(plan);
+    }
+
+    // Warm path: one incremental context chains the ratios, each
+    // warm-started from the previous plan; identical problems are
+    // answered from the context memo.
+    let mut ctx = SolverContext::new();
+    let mut last = None;
+    let mut warm_plans = Vec::new();
+    for &r in &RATIOS {
+        let plan = solve_point_in(&design.graph, &device, &est, &base, r, last.as_ref(), &mut ctx);
+        if let Some(p) = &plan {
+            last = Some(p.clone());
+        }
+        warm_plans.push(plan);
+    }
+
+    println!("== warm-started sweep vs cold per-ratio solves ({}) ==", design.name);
+    println!(
+        "cold: {cold_nodes} B&B nodes total; warm: {} nodes, {} warm hit(s) over {} solves",
+        ctx.total_nodes, ctx.warm_hits, ctx.solves
+    );
+    for (i, (c, w)) in cold_plans.iter().zip(&warm_plans).enumerate() {
+        let same = match (c, w) {
+            (Some(a), Some(b)) => a.assignment == b.assignment,
+            (None, None) => true,
+            _ => false,
+        };
+        println!(
+            "  ratio {:.2}: {} (warm == cold: {same})",
+            RATIOS[i],
+            if c.is_some() { "solved" } else { "failed" },
+        );
+    }
+
+    // Per-iteration Table-11 stats of one plan, gap column included.
+    if let Some(plan) = warm_plans.iter().flatten().next() {
+        println!("\n== per-iteration solver stats (ratio {:.2}) ==", plan.util_ratio);
+        for s in &plan.stats {
+            println!(
+                "  div-{} [{:?}]: method {:?}, {} node(s), proved={}, gap {}",
+                s.iteration,
+                s.axis,
+                s.method,
+                s.bb_nodes,
+                s.proved_optimal,
+                fmt_gap(s.gap),
+            );
+        }
+    }
+
+    // The Session-level view: Stage::Sweep records the same accounting in
+    // its artifact, and a node budget caps the exact search
+    // deterministically (500ms is converted to nodes once, up front).
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.sweep.enabled = true;
+    cfg.sweep.ratios = RATIOS.to_vec();
+    cfg.floorplan.solver_budget = SolveBudget::parse("500ms");
+    let mut session = Session::new(design, FlowVariant::Tapa, cfg);
+    session.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = session.context().sweep.as_ref().expect("sweep artifact");
+    println!(
+        "\n== Stage::Sweep artifact telemetry (budget {:?}) ==",
+        SolveBudget::parse("500ms").map(|b| b.node_cap())
+    );
+    println!(
+        "  {} solve(s), {} warm hit(s), {} B&B node(s); winner: {:?}",
+        art.solver.solves, art.solver.warm_hits, art.solver.bb_nodes, art.best
+    );
+}

@@ -19,13 +19,13 @@ use std::sync::{Arc, Mutex};
 use super::{cnn, gaussian, hbm, pagerank, sort, stencil};
 use crate::device::DeviceKind;
 use crate::floorplan::multi::DEFAULT_SWEEP;
-use crate::flow::manifest::{Manifest, UnitResult, UnitStatus, WorkUnit};
+use crate::flow::manifest::{Manifest, SolveSummary, UnitResult, UnitStatus, WorkUnit};
 use crate::flow::{
     run_flow, run_indexed, BatchRunner, Design, FlowConfig, FlowVariant, Session,
     SessionError, SimOptions, Stage, StageCache,
 };
 use crate::place::RustStep;
-use crate::report::{fmt_cycles, fmt_mhz, fmt_pct, Table};
+use crate::report::{fmt_cycles, fmt_gap, fmt_mhz, fmt_pct, Table};
 use crate::sim::BurstDetector;
 use crate::util::stats::mean;
 
@@ -271,6 +271,7 @@ fn execute_resolved_unit(
                 cycles: r.cycles,
                 util_pct: r.util_pct,
                 assignment: None,
+                solve: SolveSummary::from_floorplan(r.floorplan.as_ref()),
             }
         }
         Some(ratio) => {
@@ -303,8 +304,10 @@ fn execute_resolved_unit(
                     cycles: None,
                     util_pct: [0.0; 5],
                     assignment: None,
+                    solve: None,
                 },
                 Some(fp) => {
+                    let solve = SolveSummary::from_floorplan(Some(&fp));
                     let fmax = crate::flow::evaluate_sweep_candidate(
                         &design.graph,
                         &device,
@@ -317,6 +320,7 @@ fn execute_resolved_unit(
                         cycles: None,
                         util_pct: [0.0; 5],
                         assignment: Some(fp.assignment.iter().map(|s| s.0).collect()),
+                        solve,
                     }
                 }
             }
@@ -492,20 +496,41 @@ pub fn batch_suite_table(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Tabl
             cycles: r.cycles,
             util_pct: r.util_pct,
             assignment: None,
+            solve: SolveSummary::from_floorplan(r.floorplan.as_ref()),
         })
         .collect();
     suite_table(id, &results)
 }
 
-/// Shared row builder for the orig/opt-per-design suites.
+/// Shared row builder for the orig/opt-per-design suites. The last three
+/// columns are the opt session's Table-11-style solver telemetry
+/// (escalation method, total branch-and-bound nodes, proved gap) — fully
+/// deterministic, so they survive the byte-identity contract between the
+/// single-machine and sharded+merged CSVs, and the method/gap columns are
+/// what the CI solver-regression job diffs against its committed
+/// baseline.
 fn designs_table(title: &str, designs: &[Design], results: &[UnitResult]) -> Table {
     let mut t = Table::new(
         title,
-        &["Design", "Device", "Orig(MHz)", "Opt(MHz)", "OrigLUT%", "OptLUT%"],
+        &[
+            "Design", "Device", "Orig(MHz)", "Opt(MHz)", "OrigLUT%", "OptLUT%", "Solve",
+            "BBNodes", "Gap",
+        ],
     );
     for (i, d) in designs.iter().enumerate() {
         let orig = &results[2 * i];
         let opt = &results[2 * i + 1];
+        // Unproven solves mark the gap cell with `*`: even a gap that
+        // rounds to 0.00 then still changes the column text, so the CI
+        // baseline diff catches every lost optimality proof.
+        let (method, nodes, gap) = match &opt.solve {
+            Some(s) => (
+                s.method.clone(),
+                s.nodes.to_string(),
+                if s.proved { fmt_gap(s.gap) } else { format!("{}*", fmt_gap(s.gap)) },
+            ),
+            None => ("-".to_string(), "-".to_string(), "-".to_string()),
+        };
         t.row(vec![
             d.name.clone(),
             d.device.name().to_string(),
@@ -513,6 +538,9 @@ fn designs_table(title: &str, designs: &[Design], results: &[UnitResult]) -> Tab
             fmt_mhz(opt.fmax_mhz),
             fmt_pct(orig.util_pct[0]),
             fmt_pct(opt.util_pct[0]),
+            method,
+            nodes,
+            gap,
         ]);
     }
     t
@@ -873,7 +901,7 @@ pub fn table11_scalability(cfg: &FlowConfig) -> Table {
 
     let mut t = Table::new(
         "Table 11 — partitioning + balancing compute time (CNN, U250)",
-        &["Size", "#V", "#E", "Div-1", "Div-2", "Div-3", "Re-balance"],
+        &["Size", "#V", "#E", "Div-1", "Div-2", "Div-3", "Method", "Gap", "Re-balance"],
     );
     for c in [2usize, 4, 6, 8, 10, 12, 14, 16] {
         let d = cnn::cnn(c, DeviceKind::U250);
@@ -902,6 +930,14 @@ pub fn table11_scalability(cfg: &FlowConfig) -> Table {
                 .map(|s| format!("{:.2} s", s.solve_seconds))
                 .unwrap_or_else(|| "-".into())
         };
+        let summary = SolveSummary::from_floorplan(Some(&fp));
+        let (method, gap) = summary
+            .map(|s| {
+                let gap =
+                    if s.proved { fmt_gap(s.gap) } else { format!("{}*", fmt_gap(s.gap)) };
+                (s.method, gap)
+            })
+            .unwrap_or_else(|| ("-".into(), "-".into()));
         t.row(vec![
             format!("13x{c}"),
             d.graph.num_insts().to_string(),
@@ -909,6 +945,8 @@ pub fn table11_scalability(cfg: &FlowConfig) -> Table {
             div(0),
             div(1),
             div(2),
+            method,
+            gap,
             format!("{bal_s:.3} s"),
         ]);
     }

@@ -137,6 +137,17 @@ impl Config {
             as usize;
         fc.floorplan.max_bb_nodes =
             self.i64_or("floorplan", "max_bb_nodes", fc.floorplan.max_bb_nodes as i64) as usize;
+        if let Some(spec) = self.get("floorplan", "solver_budget").and_then(Value::as_str) {
+            fc.floorplan.solver_budget = crate::solver::SolveBudget::parse(spec);
+            if fc.floorplan.solver_budget.is_none() {
+                // Don't silently run unbudgeted when the user asked for a
+                // cap — warn, mirroring the loader's bad-file behaviour.
+                eprintln!(
+                    "warning: bad [floorplan] solver_budget `{spec}` (expected <N>nodes \
+                     or <N>ms); running without a budget"
+                );
+            }
+        }
         fc.analytical.lr = self.f64_or("placer", "lr", fc.analytical.lr as f64) as f32;
         fc.analytical.alpha = self.f64_or("placer", "alpha", fc.analytical.alpha as f64) as f32;
         fc.analytical.iters =
@@ -225,6 +236,18 @@ lr = 0.01
         assert_eq!(fc.floorplan.max_util, 0.7);
         assert_eq!(fc.analytical.lr, 0.01);
         assert_eq!(fc.sim.max_cycles, 1_000_000);
+        assert_eq!(fc.floorplan.solver_budget, None);
+    }
+
+    #[test]
+    fn solver_budget_parses_from_config() {
+        use crate::solver::SolveBudget;
+        let c = Config::parse("[floorplan]\nsolver_budget = \"2000nodes\"").unwrap();
+        assert_eq!(c.flow_config().floorplan.solver_budget, Some(SolveBudget::Nodes(2000)));
+        let c = Config::parse("[floorplan]\nsolver_budget = \"500ms\"").unwrap();
+        assert_eq!(c.flow_config().floorplan.solver_budget, Some(SolveBudget::Millis(500)));
+        let c = Config::parse("[floorplan]\nsolver_budget = \"bogus\"").unwrap();
+        assert_eq!(c.flow_config().floorplan.solver_budget, None);
     }
 
     #[test]

@@ -14,11 +14,12 @@ pub mod partition;
 pub use cost::slot_crossing_cost;
 pub use hbm_bind::{bind_hbm_channels, HbmBinding};
 pub use multi::{generate_candidates, sweep_points, SweepPoint};
-pub use partition::{partition_device, PartitionStats};
+pub use partition::{partition_device, partition_device_in, PartitionStats};
 
 use crate::device::{AreaVector, Device, SlotId};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::TaskEstimate;
+use crate::solver::{SolveBudget, SolverContext};
 
 /// Floorplanner configuration.
 #[derive(Clone, Debug)]
@@ -34,6 +35,10 @@ pub struct FloorplanConfig {
     pub ilp_vertex_threshold: usize,
     /// Branch-and-bound node cap per partitioning iteration.
     pub max_bb_nodes: usize,
+    /// Optional `--solver-budget` override for the node cap: enforced in
+    /// deterministic node counts (milliseconds are converted through a
+    /// fixed calibration), so budgeted runs reproduce across machines.
+    pub solver_budget: Option<SolveBudget>,
     /// Levels of pipelining added per slot-boundary crossing (§7.1: two).
     pub stages_per_crossing: u32,
     /// Random seed for tie-breaking in the refinement heuristic.
@@ -46,6 +51,7 @@ impl Default for FloorplanConfig {
             max_util: 0.75,
             ilp_vertex_threshold: 70,
             max_bb_nodes: 150,
+            solver_budget: None,
             stages_per_crossing: 2,
             seed: 0xF10,
         }
@@ -132,12 +138,28 @@ impl Floorplan {
 
 /// Run the full coarse-grained floorplanning flow (Fig. 1 "AutoBridge"
 /// box): feasibility pre-checks, then iterative 2-way partitioning, with
-/// automatic utilization-ratio relaxation on infeasibility.
+/// automatic utilization-ratio relaxation on infeasibility. One-shot
+/// (cold) wrapper over [`floorplan_in`].
 pub fn floorplan(
     g: &TaskGraph,
     device: &Device,
     estimates: &[TaskEstimate],
     cfg: &FloorplanConfig,
+) -> Result<Floorplan, FloorplanError> {
+    let mut ctx = SolverContext::new();
+    floorplan_in(g, device, estimates, cfg, None, &mut ctx)
+}
+
+/// [`floorplan`] with an incremental [`SolverContext`] and an optional
+/// warm-start assignment — the entry point the §5.2 feedback loop and the
+/// §6.3 ratio sweep chain their consecutive solves through.
+pub fn floorplan_in(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    cfg: &FloorplanConfig,
+    warm: Option<&[SlotId]>,
+    ctx: &mut SolverContext,
 ) -> Result<Floorplan, FloorplanError> {
     // Pre-check: port counts first (most specific diagnostic), then area.
     let hbm_need = g.hbm_ports();
@@ -221,7 +243,7 @@ pub fn floorplan(
     // (§6.3 notes the ratio is the main floorplan-space knob).
     let mut ratio = cfg.max_util;
     loop {
-        match partition_device(g, device, estimates, ratio, cfg) {
+        match partition_device_in(g, device, estimates, ratio, cfg, warm, ctx) {
             Ok((assignment, stats)) => {
                 let cost = cost::slot_crossing_cost(g, device, &assignment);
                 return Ok(Floorplan { assignment, cost, util_ratio: ratio, stats });

@@ -9,6 +9,7 @@ use super::{floorplan, Floorplan, FloorplanConfig};
 use crate::device::Device;
 use crate::graph::TaskGraph;
 use crate::hls::TaskEstimate;
+use crate::solver::SolverContext;
 
 /// A candidate floorplan tagged with the knob that produced it.
 #[derive(Clone, Debug)]
@@ -74,7 +75,10 @@ pub fn generate_with_failures(
 /// Solve a single sweep point at exactly `ratio` — no automatic ratio
 /// relaxation: the point must reflect *this* ratio or be a failure.
 /// This is the unit the [`crate::flow::StageCache`] keys by
-/// `(design, device, util_ratio)`.
+/// `(design, device, util_ratio)`. Cold wrapper over [`solve_point_in`];
+/// thanks to the solver's canonical-extraction contract the cold result
+/// is identical to a warm-chained one, so cached and chained sweep paths
+/// agree byte for byte.
 pub fn solve_point(
     g: &TaskGraph,
     device: &Device,
@@ -82,8 +86,26 @@ pub fn solve_point(
     base: &FloorplanConfig,
     ratio: f64,
 ) -> Option<Floorplan> {
+    let mut ctx = SolverContext::new();
+    solve_point_in(g, device, estimates, base, ratio, None, &mut ctx)
+}
+
+/// [`solve_point`] with an incremental [`SolverContext`] and an optional
+/// warm-start plan (typically the previous sweep ratio's floorplan):
+/// consecutive ratios re-solve near-identical problems, so the context's
+/// memo and warm hints turn most of the chain into cache hits.
+pub fn solve_point_in(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+    ratio: f64,
+    warm: Option<&Floorplan>,
+    ctx: &mut SolverContext,
+) -> Option<Floorplan> {
     let cfg = FloorplanConfig { max_util: ratio, ..base.clone() };
-    match super::partition::partition_device(g, device, estimates, ratio, &cfg) {
+    let warm = warm.map(|f| f.assignment.as_slice());
+    match super::partition::partition_device_in(g, device, estimates, ratio, &cfg, warm, ctx) {
         Ok((assignment, stats)) => {
             let cost = super::cost::slot_crossing_cost(g, device, &assignment);
             Some(Floorplan { assignment, cost, util_ratio: ratio, stats })
@@ -94,6 +116,10 @@ pub fn solve_point(
 
 /// One [`SweepPoint`] per sweep ratio, in sweep order, with duplicate
 /// slot assignments marked rather than dropped (keep-first policy).
+/// Points are solved through one shared [`SolverContext`], each
+/// warm-started from the nearest earlier successful ratio — the §6.3
+/// incremental-solve chain. Results are identical to per-point cold
+/// solves (canonical extraction); only the solve accounting shrinks.
 pub fn sweep_points(
     g: &TaskGraph,
     device: &Device,
@@ -101,7 +127,15 @@ pub fn sweep_points(
     base: &FloorplanConfig,
     sweep: &[f64],
 ) -> Vec<SweepPoint> {
-    sweep_points_with(sweep, |ratio| solve_point(g, device, estimates, base, ratio))
+    let mut ctx = SolverContext::new();
+    let mut last: Option<Floorplan> = None;
+    sweep_points_with(sweep, |ratio| {
+        let plan = solve_point_in(g, device, estimates, base, ratio, last.as_ref(), &mut ctx);
+        if let Some(p) = &plan {
+            last = Some(p.clone());
+        }
+        plan
+    })
 }
 
 /// [`sweep_points`] with a caller-supplied per-ratio solver — the single

@@ -8,19 +8,25 @@
 //! coordinate-doubling update of Eqs. 3–6.
 //!
 //! Exactness note (documented substitution): the paper solves each
-//! iteration with Gurobi. Our dense-tableau B&B is exact for instances up
-//! to `ilp_vertex_threshold` vertices; above that we solve the LP
-//! relaxation, round, repair, and polish with Fiduccia–Mattheyses passes —
-//! the classic partitioning heuristic — which preserves the flow behaviour
-//! (feasible, low-cut floorplans) at CNN-13×16 scale.
+//! iteration with Gurobi. Our solves go through the pluggable
+//! [`crate::solver`] engine's escalation chain: the exact branch-and-bound
+//! backend for instances up to `ilp_vertex_threshold` binaries, the
+//! LP-rounding heuristic tier, and finally the greedy + Fiduccia–Mattheyses
+//! path below — which preserves the flow behaviour (feasible, low-cut
+//! floorplans) at CNN-13×16 scale. Consecutive related solves (the §6.3
+//! ratio sweep, the §5.2 feedback rounds) thread one
+//! [`SolverContext`] through [`partition_device_in`] so the previous
+//! floorplan warm-starts the next solve.
 
 use super::FloorplanConfig;
 use crate::device::area::NUM_RESOURCE_KINDS;
 use crate::device::{AreaVector, Device, SlotId};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::TaskEstimate;
-use crate::ilp::{solve_lp, LpOutcome};
-use crate::ilp::{solve_milp, Constraint, MilpResult, Problem, SolveParams};
+use crate::ilp::{Constraint, Problem};
+use crate::solver::{
+    ExactBackend, HeuristicBackend, MilpOutcome, SolveParams, SolverContext,
+};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -113,8 +119,14 @@ pub struct PartitionStats {
     pub num_aux_vars: usize,
     pub solve_seconds: f64,
     pub method: SolveMethod,
+    /// True only when the branch-and-bound *proved* optimality to within
+    /// its absolute gap — a budget-truncated solve reports `false` plus
+    /// its honest [`PartitionStats::gap`] instead of claiming optimality.
     pub proved_optimal: bool,
     pub bb_nodes: usize,
+    /// Absolute optimality gap of the exact solve (`Some(0.0)` when
+    /// proved; `None` on the heuristic tiers, which carry no bound).
+    pub gap: Option<f64>,
 }
 
 /// Partitioning failure (bubbles up to utilization-ratio relaxation).
@@ -131,7 +143,8 @@ struct Demand {
     ddr: usize,
 }
 
-/// Run all partitioning iterations; returns per-instance slot assignment.
+/// Run all partitioning iterations cold; returns per-instance slot
+/// assignment. One-shot wrapper over [`partition_device_in`].
 pub fn partition_device(
     g: &TaskGraph,
     device: &Device,
@@ -139,6 +152,30 @@ pub fn partition_device(
     util: f64,
     cfg: &FloorplanConfig,
 ) -> Result<(Vec<SlotId>, Vec<PartitionStats>), PartitionInfeasible> {
+    let mut ctx = SolverContext::new();
+    partition_device_in(g, device, estimates, util, cfg, None, &mut ctx)
+}
+
+/// [`partition_device`] with an incremental [`SolverContext`] and an
+/// optional warm-start assignment (typically the previous sweep ratio's or
+/// feedback round's floorplan). The region tree is fixed by device
+/// geometry, so a prior assignment can be re-read as a per-iteration
+/// decision hint; the solver only uses it to prune — results are
+/// byte-identical with and without it (see the [`crate::solver`] docs),
+/// only the solve accounting shrinks.
+pub fn partition_device_in(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    util: f64,
+    cfg: &FloorplanConfig,
+    warm: Option<&[SlotId]>,
+    ctx: &mut SolverContext,
+) -> Result<(Vec<SlotId>, Vec<PartitionStats>), PartitionInfeasible> {
+    if ctx.budget.is_none() {
+        ctx.budget = cfg.solver_budget;
+    }
+    let warm = warm.filter(|a| a.len() == g.num_insts());
     let n = g.num_insts();
     let demands: Vec<Demand> = (0..n)
         .map(|i| {
@@ -175,7 +212,7 @@ pub fn partition_device(
         iteration += 1;
         let t0 = Instant::now();
         let iter_result = partition_iteration(
-            g, device, &demands, &regions, &vert_region, axis, util, cfg, &mut rng,
+            g, device, &demands, &regions, &vert_region, axis, util, cfg, &mut rng, warm, ctx,
         );
         let elapsed = t0.elapsed().as_secs_f64();
         match iter_result {
@@ -189,6 +226,7 @@ pub fn partition_device(
                     method: out.method,
                     proved_optimal: out.proved_optimal,
                     bb_nodes: out.bb_nodes,
+                    gap: out.gap,
                 });
                 regions = out.regions;
                 vert_region = out.vert_region;
@@ -215,6 +253,45 @@ struct IterOutcome {
     method: SolveMethod,
     proved_optimal: bool,
     bb_nodes: usize,
+    gap: Option<f64>,
+}
+
+/// Re-read a prior assignment as a decision hint for this iteration: the
+/// region tree depends only on device geometry, so vertex `v`'s decision
+/// is "does its prior slot fall in the high child of its current region".
+/// Returns `None` when the prior assignment has diverged from the current
+/// region structure (a vertex's prior slot is outside its region).
+fn warm_hint(
+    device: &Device,
+    regions: &[Region],
+    new_regions: &[Region],
+    children: &[(usize, Option<usize>)],
+    vert_region: &[usize],
+    var_of: &[Option<usize>],
+    num_vars: usize,
+    prior: &[SlotId],
+) -> Option<Vec<f64>> {
+    let contains = |r: &Region, row: usize, col: usize| {
+        r.r0 <= row && row <= r.r1 && r.c0 <= col && col <= r.c1
+    };
+    let mut hint = vec![0.0f64; num_vars];
+    for (v, var) in var_of.iter().enumerate() {
+        let Some(var) = var else { continue };
+        let (row, col) = device.coords(prior[v]);
+        if !contains(&regions[vert_region[v]], row, col) {
+            return None; // earlier iterations diverged from the prior plan
+        }
+        let (lo, hi) = children[vert_region[v]];
+        let hi = hi.expect("vertices with a decision variable split");
+        hint[*var] = if contains(&new_regions[hi], row, col) {
+            1.0
+        } else if contains(&new_regions[lo], row, col) {
+            0.0
+        } else {
+            return None;
+        };
+    }
+    Some(hint)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -228,6 +305,8 @@ fn partition_iteration(
     util: f64,
     cfg: &FloorplanConfig,
     rng: &mut Rng,
+    warm: Option<&[SlotId]>,
+    ctx: &mut SolverContext,
 ) -> Option<IterOutcome> {
     let n = vert_region.len();
     // Build child regions. Non-splitting regions map to a single child.
@@ -272,6 +351,7 @@ fn partition_iteration(
             method: SolveMethod::Ilp,
             proved_optimal: true,
             bb_nodes: 0,
+            gap: Some(0.0),
         });
     }
 
@@ -461,9 +541,10 @@ fn partition_iteration(
         }
     }
 
-    // Solve. Three regimes by instance size: exact B&B, LP-relaxation
-    // rounding, or pure greedy+FM (the dense-tableau LP itself becomes the
-    // bottleneck at CNN-13×16 scale).
+    // Solve through the `crate::solver` escalation chain (Exact → LP+FM →
+    // Greedy+FM; see the solver module docs for the §4.3/Table 11
+    // mapping). Any tier that declines — or proves *per-iteration*
+    // infeasibility — falls through to the greedy path below.
     let use_exact = num_binaries <= cfg.ilp_vertex_threshold;
     // The dense-tableau LP relaxation suffers heavy degenerate stalling on
     // mid-size instances (~50 s at 120 binaries) while greedy+FM+repair
@@ -473,16 +554,24 @@ fn partition_iteration(
     let mut method = SolveMethod::Ilp;
     let mut proved = false;
     let mut bb_nodes = 0usize;
+    let mut gap: Option<f64> = None;
     let mut decision: Option<Vec<bool>> = None;
+    let params = SolveParams { max_nodes: cfg.max_bb_nodes, abs_gap: 1e-6, rel_gap: 0.0 };
 
     if use_exact {
-        match solve_milp(
-            &p,
-            SolveParams { max_nodes: cfg.max_bb_nodes, abs_gap: 1e-6, rel_gap: 0.01 },
-        ) {
-            MilpResult::Optimal { x, proved_optimal, nodes, .. } => {
-                proved = proved_optimal;
-                bb_nodes = nodes;
+        // Warm hint: the previous related solve's assignment (sweep ratio
+        // or feedback round), re-read against the current region tree.
+        let hint = warm.and_then(|prior| {
+            warm_hint(
+                device, regions, &new_regions, &children, vert_region, &var_of, p.num_vars,
+                prior,
+            )
+        });
+        match ctx.solve_milp(&ExactBackend, &p, &params, hint.as_deref()) {
+            MilpOutcome::Optimal { x, stats, .. } => {
+                proved = stats.proved_optimal;
+                bb_nodes = stats.nodes;
+                gap = stats.gap;
                 decision = Some(extract_decisions(&x, &var_of));
             }
             // ILP infeasibility here is *per-iteration*: earlier greedy
@@ -490,21 +579,25 @@ fn partition_iteration(
             // though a global assignment exists. Fall through to the
             // greedy + repair path (repair honors same-slot groups and
             // returns None itself when capacity really cannot be met,
-            // which then triggers the caller's ratio relaxation).
-            MilpResult::Infeasible | MilpResult::Unbounded => {}
+            // which then triggers the caller's ratio relaxation). A
+            // `Declined` budget expiry escalates the same way. Either
+            // way, the attempt's node count is real work this iteration
+            // paid — keep it, so PartitionStats/SolveSummary agree with
+            // the context's `total_nodes` accounting.
+            // (Only the node count is kept: the greedy answer that follows
+            // carries no bound, so `gap` stays `None`.)
+            MilpOutcome::Infeasible { stats } | MilpOutcome::Declined { stats } => {
+                bb_nodes = stats.nodes;
+            }
+            MilpOutcome::Unbounded => {}
         }
     } else if use_lp {
         method = SolveMethod::LpFm;
-        // LP relaxation root (with binary bounds as rows).
-        let mut lp = p.clone();
-        for (i, &b) in p.binary.iter().enumerate() {
-            if b {
-                lp.add(Constraint::le(vec![(i, 1.0)], 1.0));
-            }
-        }
-        if let LpOutcome::Optimal { x, .. } = solve_lp(&lp) {
-            let rounded = extract_decisions(&x, &var_of);
-            decision = Some(rounded);
+        if let MilpOutcome::Optimal { x, stats, .. } =
+            ctx.solve_milp(&HeuristicBackend, &p, &params, None)
+        {
+            bb_nodes = stats.nodes;
+            decision = Some(extract_decisions(&x, &var_of));
         }
     } else {
         method = SolveMethod::GreedyFm;
@@ -560,6 +653,7 @@ fn partition_iteration(
         method,
         proved_optimal: proved,
         bb_nodes,
+        gap,
     })
 }
 
@@ -1104,6 +1198,70 @@ mod tests {
         let est = estimate_all(&g);
         let (asgn, _) = partition_device(&g, &d, &est, 0.75, &cfg()).unwrap();
         assert_eq!(asgn[0], asgn[7]);
+    }
+
+    #[test]
+    fn warm_restart_reproduces_cold_partition() {
+        let mut b = TaskGraphBuilder::new("warm");
+        let p = b.proto("K", ComputeSpec::passthrough(64));
+        let ids = b.invoke_n(p, "k", 10);
+        for i in 0..9 {
+            b.stream(&format!("s{i}"), 64, 2, ids[i], ids[i + 1]);
+        }
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        let (cold_asgn, cold_stats) = partition_device(&g, &d, &est, 0.75, &cfg()).unwrap();
+        // Warm re-solve from the cold assignment on a fresh context: the
+        // solver's canonical extraction makes the results identical.
+        let mut ctx = SolverContext::new();
+        let (warm_asgn, warm_stats) =
+            partition_device_in(&g, &d, &est, 0.75, &cfg(), Some(&cold_asgn), &mut ctx)
+                .unwrap();
+        assert_eq!(warm_asgn, cold_asgn);
+        assert_eq!(warm_stats.len(), cold_stats.len());
+        for s in &warm_stats {
+            if s.method == SolveMethod::Ilp && s.proved_optimal {
+                assert_eq!(s.gap, Some(0.0), "proved iterations report a zero gap");
+            }
+        }
+        // Re-solving the identical ratio on the SAME context is answered
+        // entirely from the memo: zero fresh branch-and-bound nodes.
+        let before = ctx.total_nodes;
+        let (memo_asgn, memo_stats) =
+            partition_device_in(&g, &d, &est, 0.75, &cfg(), Some(&cold_asgn), &mut ctx)
+                .unwrap();
+        assert_eq!(memo_asgn, cold_asgn);
+        assert_eq!(ctx.total_nodes, before, "memo answers identical problems for free");
+        assert!(memo_stats.iter().all(|s| s.bb_nodes == 0));
+        assert!(ctx.warm_hits > 0, "memo hits are accounted as warm hits");
+    }
+
+    #[test]
+    fn solver_budget_caps_node_counts() {
+        use crate::solver::SolveBudget;
+        let mut b = TaskGraphBuilder::new("budget");
+        let p = b.proto("K", ComputeSpec::passthrough(64));
+        let ids = b.invoke_n(p, "k", 8);
+        for i in 0..7 {
+            b.stream(&format!("s{i}"), 64, 2, ids[i], ids[i + 1]);
+        }
+        let g = b.build().unwrap();
+        let d = u250();
+        let est = estimate_all(&g);
+        let cfg = FloorplanConfig {
+            solver_budget: Some(SolveBudget::Nodes(2)),
+            ..FloorplanConfig::default()
+        };
+        // A 2-node budget still floorplans (escalation / unproven
+        // incumbents), and two runs are byte-identical: node budgets are
+        // deterministic, never wall-clock.
+        let (a, sa) = partition_device(&g, &d, &est, 0.75, &cfg).unwrap();
+        let (b2, sb) = partition_device(&g, &d, &est, 0.75, &cfg).unwrap();
+        assert_eq!(a, b2);
+        let na: Vec<usize> = sa.iter().map(|s| s.bb_nodes).collect();
+        let nb: Vec<usize> = sb.iter().map(|s| s.bb_nodes).collect();
+        assert_eq!(na, nb, "budgeted node accounting is reproducible");
     }
 
     #[test]

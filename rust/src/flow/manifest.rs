@@ -73,8 +73,10 @@ use super::persist::{
 use super::{FlowVariant, SessionError};
 
 /// On-disk manifest format version (see the module docs for the
-/// stability guarantee).
-pub const MANIFEST_VERSION: u64 = 1;
+/// stability guarantee). v2 = v1 + the per-unit `solve` summary
+/// (solver method / node / gap telemetry for the bench CSV's
+/// Table-11-style columns).
+pub const MANIFEST_VERSION: u64 = 2;
 
 /// Name of the manifest file inside a shard's work directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
@@ -144,6 +146,64 @@ pub struct UnitResult {
     /// units only; `None` for infeasible points and full sessions) —
     /// lets the merge reconstruct duplicate marking across ratios.
     pub assignment: Option<Vec<usize>>,
+    /// Deterministic solver telemetry of the unit's floorplan solve
+    /// (`None` for baseline/degraded sessions and failed sweep points).
+    pub solve: Option<SolveSummary>,
+}
+
+/// Compact, fully deterministic solver summary of one executed unit —
+/// the Table-11-style columns the bench CSV reports per design. Every
+/// field reproduces across machines, shards and `--jobs` counts (no
+/// wall-clock), so it can ride in the byte-compared CSVs and be diffed
+/// against the committed solver-regression baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveSummary {
+    /// Worst escalation tier used across partitioning iterations
+    /// (`ilp` < `lp-fm` < `greedy-fm`) — a method *downgrade* here is
+    /// what the CI solver-regression job fails on.
+    pub method: String,
+    /// Total branch-and-bound nodes (LP solves) across iterations.
+    pub nodes: u64,
+    /// Largest per-iteration absolute optimality gap (`None` when no
+    /// iteration carried bound information, i.e. pure heuristic solves).
+    pub gap: Option<f64>,
+    /// Every iteration proved optimal.
+    pub proved: bool,
+}
+
+impl SolveSummary {
+    /// Aggregate a floorplan's per-iteration [`crate::floorplan::PartitionStats`].
+    pub fn from_floorplan(fp: Option<&crate::floorplan::Floorplan>) -> Option<SolveSummary> {
+        use crate::floorplan::partition::SolveMethod;
+        let fp = fp?;
+        let rank = |m: SolveMethod| match m {
+            SolveMethod::Ilp => 0u8,
+            SolveMethod::LpFm => 1,
+            SolveMethod::GreedyFm => 2,
+        };
+        let name = |m: SolveMethod| match m {
+            SolveMethod::Ilp => "ilp",
+            SolveMethod::LpFm => "lp-fm",
+            SolveMethod::GreedyFm => "greedy-fm",
+        };
+        let worst = fp
+            .stats
+            .iter()
+            .map(|s| s.method)
+            .max_by_key(|&m| rank(m))
+            .unwrap_or(SolveMethod::Ilp);
+        let gap = fp
+            .stats
+            .iter()
+            .filter_map(|s| s.gap)
+            .fold(None, |acc: Option<f64>, g| Some(acc.map_or(g, |a| a.max(g))));
+        Some(SolveSummary {
+            method: name(worst).to_string(),
+            nodes: fp.stats.iter().map(|s| s.bb_nodes as u64).sum(),
+            gap,
+            proved: fp.stats.iter().all(|s| s.proved_optimal),
+        })
+    }
 }
 
 /// One unit inside a shard manifest.
@@ -508,6 +568,17 @@ fn result_json(r: &UnitResult) -> Json {
                 Json::Arr(a.iter().map(|&s| unum(s as u64)).collect())
             }),
         ),
+        (
+            "solve".into(),
+            opt(&r.solve, |s| {
+                Json::Obj(vec![
+                    ("method".into(), Json::Str(s.method.clone())),
+                    ("nodes".into(), unum(s.nodes)),
+                    ("gap".into(), opt(&s.gap, |&g| num(g))),
+                    ("proved".into(), Json::Bool(s.proved)),
+                ])
+            }),
+        ),
     ])
 }
 
@@ -568,6 +639,19 @@ fn parse_result(v: &Json) -> R<UnitResult> {
                 .iter()
                 .map(|s| s.as_usize().ok_or_else(|| bad("bad slot id in assignment")))
                 .collect()
+        })?,
+        solve: get_opt(v, "solve", |s| {
+            Ok(SolveSummary {
+                method: get_str(s, "method")?.to_string(),
+                nodes: get_u64(s, "nodes")?,
+                gap: get_opt(s, "gap", |x| {
+                    x.as_f64().ok_or_else(|| bad("gap not a number"))
+                })?,
+                proved: s
+                    .get("proved")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| bad("proved not a boolean"))?,
+            })
         })?,
     })
 }
@@ -686,6 +770,12 @@ mod tests {
             cycles: None,
             util_pct: [1.5, 2.25, 0.0, 0.0, 0.0],
             assignment: e.unit.util_ratio.map(|_| vec![0, 1]),
+            solve: Some(SolveSummary {
+                method: "ilp".into(),
+                nodes: 5,
+                gap: Some(0.0),
+                proved: true,
+            }),
         });
         e
     }

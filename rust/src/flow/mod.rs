@@ -30,6 +30,7 @@ pub use batch::{run_indexed, BatchJob, BatchRunner};
 pub use session::{
     FloorplanArtifact, PipelineArtifact, Session, SessionContext, SessionError,
     SessionSet, SimArtifact, StageCache, SweepArtifact, SweepCandidate,
+    SweepSolverTelemetry,
 };
 pub use stage::Stage;
 

@@ -7,8 +7,9 @@
 //! prefix of stages.
 //!
 //! **Format stability.** The on-disk layout is versioned
-//! ([`FORMAT_VERSION`], currently 2: v1 plus the `device` identity field
-//! and the §6.3 `sweep` artifact). Within a version the byte layout is
+//! ([`FORMAT_VERSION`], currently 3: v2 plus the solver telemetry — the
+//! honest `gap` per partitioning iteration and the sweep's
+//! `solver` accounting block). Within a version the byte layout is
 //! frozen — `rust/tests/data/golden_sweep_ctx.json` is a committed golden
 //! checkpoint that must keep round-tripping byte-identically, so resume
 //! compatibility cannot silently break; any layout change must bump the
@@ -27,14 +28,15 @@ use crate::util::json::Json;
 
 use super::session::{
     FloorplanArtifact, PipelineArtifact, SessionContext, SessionError, SimArtifact,
-    SweepArtifact, SweepCandidate,
+    SweepArtifact, SweepCandidate, SweepSolverTelemetry,
 };
 use super::stage::Stage;
 use super::FlowVariant;
 
 /// On-disk checkpoint format version (see the module docs for the
-/// stability guarantee). v2 = v1 + `device` + `sweep`.
-pub const FORMAT_VERSION: u64 = 2;
+/// stability guarantee). v3 = v2 + solver telemetry (per-iteration `gap`,
+/// sweep `solver` block).
+pub const FORMAT_VERSION: u64 = 3;
 
 // ---------------------------------------------------------------------------
 // Writing
@@ -137,6 +139,7 @@ fn floorplan_json(fp: &Floorplan) -> Json {
                             ("method".into(), Json::Str(method_name(st.method).into())),
                             ("proved_optimal".into(), Json::Bool(st.proved_optimal)),
                             ("bb_nodes".into(), unum(st.bb_nodes as u64)),
+                            ("gap".into(), opt(&st.gap, |&g| num(g))),
                         ])
                     })
                     .collect(),
@@ -205,6 +208,14 @@ fn timing_json(t: &TimingReport) -> Json {
 
 fn sweep_json(sw: &SweepArtifact) -> Json {
     Json::Obj(vec![
+        (
+            "solver".into(),
+            Json::Obj(vec![
+                ("solves".into(), unum(sw.solver.solves)),
+                ("warm_hits".into(), unum(sw.solver.warm_hits)),
+                ("bb_nodes".into(), unum(sw.solver.bb_nodes)),
+            ]),
+        ),
         ("best".into(), opt(&sw.best, |&b| unum(b as u64))),
         (
             "points".into(),
@@ -428,6 +439,9 @@ fn parse_floorplan(v: &Json) -> R<Floorplan> {
                 },
                 proved_optimal: get_bool(st, "proved_optimal")?,
                 bb_nodes: get_usize(st, "bb_nodes")?,
+                gap: get_opt(st, "gap", |x| {
+                    x.as_f64().ok_or_else(|| bad("gap not a number"))
+                })?,
             })
         })
         .collect::<R<Vec<_>>>()?;
@@ -515,11 +529,17 @@ fn parse_sweep(v: &Json) -> R<SweepArtifact> {
             })
         })
         .collect::<R<Vec<_>>>()?;
+    let sv = field(v, "solver")?;
     Ok(SweepArtifact {
         best: get_opt(v, "best", |x| {
             x.as_usize().ok_or_else(|| bad("best not an integer"))
         })?,
         points,
+        solver: SweepSolverTelemetry {
+            solves: get_u64(sv, "solves")?,
+            warm_hits: get_u64(sv, "warm_hits")?,
+            bb_nodes: get_u64(sv, "bb_nodes")?,
+        },
     })
 }
 
@@ -685,7 +705,7 @@ mod tests {
         let ctx =
             SessionContext::new("d", DeviceKind::U250, super::super::FlowVariant::Tapa);
         let bumped = context_to_json_text(&ctx)
-            .replace("\"version\":2", "\"version\":99");
+            .replace("\"version\":3", "\"version\":99");
         assert!(context_from_json_text(&bumped).is_err());
         let wrong_dev =
             context_to_json_text(&ctx).replace("\"device\":\"U250\"", "\"device\":\"U999\"");

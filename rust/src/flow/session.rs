@@ -28,6 +28,7 @@ use crate::pipeline::{pipeline_edges, pipeline_with_feedback, PipelinePlan};
 use crate::place::{place_baseline, place_floorplan_guided, Placement, RustStep, StepExecutor};
 use crate::route::{route, RouteReport};
 use crate::sim::{simulate, SimConfig};
+use crate::solver::SolverContext;
 use crate::timing::{analyze, analyze_with_areas, TimingReport};
 
 use super::stage::Stage;
@@ -93,6 +94,25 @@ pub struct SweepArtifact {
     /// Index into `points` of the adopted candidate; `None` when the
     /// sweep is disabled or no point produced a usable floorplan.
     pub best: Option<usize>,
+    /// Solver accounting of the candidate generation — the sweep's
+    /// Table-11-style telemetry.
+    pub solver: SweepSolverTelemetry,
+}
+
+/// Deterministic solver accounting of one §6.3 sweep (candidate
+/// generation only; candidate *implementation* involves no MILP). All
+/// fields are reproducible across machines and `--jobs` counts; warm
+/// hits and node totals shrink when the sweep chain reuses earlier
+/// ratios' solutions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepSolverTelemetry {
+    /// MILP solves attempted across the sweep's partitioning iterations.
+    pub solves: u64,
+    /// Solves answered from warm state (context memo, or a warm hint
+    /// matching the proved optimum).
+    pub warm_hits: u64,
+    /// Total branch-and-bound nodes (LP solves) across all MILP solves.
+    pub bb_nodes: u64,
 }
 
 /// One evaluated sweep point inside a [`SweepArtifact`].
@@ -233,16 +253,19 @@ impl StageCache {
 
     /// Cache key of one sweep point: design identity, device identity and
     /// the exact ratio bits, plus the floorplanner knobs that change the
-    /// partition (`max_util` itself is overridden by the ratio).
+    /// partition (`max_util` itself is overridden by the ratio; the
+    /// solver budget caps the exact search, so budgeted and unbudgeted
+    /// points must not share entries).
     fn sweep_key(design: &Design, device: &Device, base: &FloorplanConfig, ratio: f64) -> String {
         format!(
-            "{}@{}#{}s/{}:{}:{}@{:016x}",
+            "{}@{}#{}s/{}:{}:{}:{}@{:016x}",
             Self::key(design),
             device.name,
             device.num_slots(),
             base.seed,
             base.ilp_vertex_threshold,
             base.max_bb_nodes,
+            base.solver_budget.map(|b| b.label()).unwrap_or_else(|| "-".into()),
             ratio.to_bits()
         )
     }
@@ -250,7 +273,8 @@ impl StageCache {
     /// The §6.3 floorplan candidate of one design at one sweep ratio on
     /// one device, solved at most once per cache (same race discipline as
     /// [`StageCache::estimates_for`]). `None` inside the `Arc` records an
-    /// infeasible sweep point, so failures are cached too.
+    /// infeasible sweep point, so failures are cached too. Cold wrapper
+    /// over [`StageCache::sweep_plan_for_in`].
     pub fn sweep_plan_for(
         &self,
         design: &Design,
@@ -259,12 +283,40 @@ impl StageCache {
         base: &FloorplanConfig,
         ratio: f64,
     ) -> Arc<Option<Floorplan>> {
+        let mut ctx = SolverContext::new().with_budget(base.solver_budget);
+        self.sweep_plan_for_in(design, device, estimates, base, ratio, None, &mut ctx)
+    }
+
+    /// [`StageCache::sweep_plan_for`] with an incremental
+    /// [`SolverContext`] and warm-start plan for cache misses. Safe to mix
+    /// with cold callers on the same cache: the solver's canonical
+    /// extraction makes warm and cold solves of one point byte-identical,
+    /// so whoever populates an entry first, the plan is the same.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sweep_plan_for_in(
+        &self,
+        design: &Design,
+        device: &Device,
+        estimates: &[TaskEstimate],
+        base: &FloorplanConfig,
+        ratio: f64,
+        warm: Option<&Floorplan>,
+        ctx: &mut SolverContext,
+    ) -> Arc<Option<Floorplan>> {
         let key = Self::sweep_key(design, device, base, ratio);
         if let Some(hit) = self.sweeps.lock().unwrap().get(&key) {
             self.sweep_hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
-        let plan = Arc::new(multi::solve_point(&design.graph, device, estimates, base, ratio));
+        let plan = Arc::new(multi::solve_point_in(
+            &design.graph,
+            device,
+            estimates,
+            base,
+            ratio,
+            warm,
+            ctx,
+        ));
         let mut map = self.sweeps.lock().unwrap();
         if let Some(winner) = map.get(&key) {
             self.sweep_hits.fetch_add(1, Ordering::Relaxed);
@@ -776,16 +828,45 @@ impl Session {
         let jobs = self.jobs;
 
         // 1. Candidate generation, cached per (design, device, ratio);
-        //    duplicate marking shared with `floorplan::multi`.
+        //    duplicate marking shared with `floorplan::multi`. One
+        //    incremental SolverContext spans the whole sweep: every ratio
+        //    warm-starts from the nearest earlier successful plan (cached
+        //    plans included) and identical consecutive problems come out
+        //    of the context memo for free. Warm starts never change a
+        //    result (canonical extraction), so this chain stays
+        //    byte-identical to the cold per-point cache path used by
+        //    sharded bench workers.
+        let mut solver_ctx = SolverContext::new()
+            .with_jobs(jobs)
+            .with_budget(cfg.floorplan.solver_budget);
+        let mut last: Option<Floorplan> = None;
         let mut points: Vec<SweepCandidate> =
-            multi::sweep_points_with(&cfg.sweep.ratios, |ratio| match &self.cache {
-                Some(c) => {
-                    (*c.sweep_plan_for(&self.design, &device, &est, &cfg.floorplan, ratio))
-                        .clone()
+            multi::sweep_points_with(&cfg.sweep.ratios, |ratio| {
+                let plan = match &self.cache {
+                    Some(c) => (*c.sweep_plan_for_in(
+                        &self.design,
+                        &device,
+                        &est,
+                        &cfg.floorplan,
+                        ratio,
+                        last.as_ref(),
+                        &mut solver_ctx,
+                    ))
+                    .clone(),
+                    None => multi::solve_point_in(
+                        &self.design.graph,
+                        &device,
+                        &est,
+                        &cfg.floorplan,
+                        ratio,
+                        last.as_ref(),
+                        &mut solver_ctx,
+                    ),
+                };
+                if let Some(p) = &plan {
+                    last = Some(p.clone());
                 }
-                None => {
-                    multi::solve_point(&self.design.graph, &device, &est, &cfg.floorplan, ratio)
-                }
+                plan
             })
             .into_iter()
             .map(|p| SweepCandidate {
@@ -795,6 +876,11 @@ impl Session {
                 fmax_mhz: None,
             })
             .collect();
+        let solver = SweepSolverTelemetry {
+            solves: solver_ctx.solves,
+            warm_hits: solver_ctx.warm_hits,
+            bb_nodes: solver_ctx.total_nodes,
+        };
 
         // 2. Implement every unique successful candidate ("implement all
         //    Pareto candidates in parallel, keep the best routed result").
@@ -841,7 +927,7 @@ impl Session {
             let art = self.solve_feedback_floorplan();
             self.ctx.floorplan = Some(art);
         }
-        SweepArtifact { points, best }
+        SweepArtifact { points, best, solver }
     }
 
     fn run_stage(&mut self, st: Stage, exec: &dyn StepExecutor) {

@@ -1,4 +1,4 @@
-//! Exact (M)ILP solver — the Gurobi stand-in (§7.1).
+//! The (M)ILP *problem model* and its dense LP engine.
 //!
 //! The paper solves two problem classes with Gurobi:
 //! 1. the per-iteration floorplan partitioning ILP (§4.3): a few hundred
@@ -8,14 +8,15 @@
 //!    (SDC) whose constraint matrix is totally unimodular, so the LP
 //!    relaxation is integral.
 //!
-//! We implement a dense two-phase primal simplex ([`simplex`]) and a
-//! best-first branch-and-bound wrapper for binaries ([`branch`]). Both are
-//! exact; problem sizes here (≤ ~1000 columns) are well within reach.
+//! This module owns the shared [`Problem`]/[`Constraint`] matrix types and
+//! the dense two-phase primal simplex ([`simplex`]). Branch-and-bound for
+//! binaries lives one layer up, behind the pluggable
+//! [`crate::solver::MilpBackend`] trait — [`crate::solver::ExactBackend`]
+//! is the former `ilp::branch`, extended with warm starts, deterministic
+//! parallel node waves and honest gap reporting.
 
-pub mod branch;
 pub mod simplex;
 
-pub use branch::{solve_milp, MilpResult, SolveParams};
 pub use simplex::{solve_lp, LpOutcome};
 
 /// Comparison operator of a linear constraint.
@@ -27,7 +28,11 @@ pub enum Cmp {
 }
 
 /// A linear constraint `Σ coeff_i · x_i  (≤|≥|=)  rhs`.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` is structural (exact coefficient bits) — the
+/// [`crate::solver::SolverContext`] memo uses it to prove two solves are
+/// the same problem before reusing a result.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Constraint {
     /// Sparse coefficient list `(var_index, coefficient)`.
     pub coeffs: Vec<(usize, f64)>,
@@ -51,8 +56,9 @@ impl Constraint {
 ///
 /// All variables are `x_i ≥ 0`. Binary variables additionally get an
 /// implicit `x_i ≤ 1` row and are branched to integrality by
-/// [`solve_milp`]. (General integers are not needed by the flow.)
-#[derive(Clone, Debug, Default)]
+/// [`crate::solver::ExactBackend`]. (General integers are not needed by
+/// the flow.)
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Problem {
     pub num_vars: usize,
     /// Objective coefficients (minimize `c · x`); indexed densely.

@@ -3,7 +3,8 @@
 //! Solves `min c·x  s.t.  A x (≤|≥|=) b,  x ≥ 0` on a classic tableau.
 //! Pivot selection is Dantzig's rule with a Bland's-rule fallback after a
 //! degeneracy budget to guarantee termination. Binary upper bounds are
-//! added by the caller ([`super::branch`]) as explicit rows.
+//! added by the caller (the branch-and-bound in [`crate::solver::exact`])
+//! as explicit rows.
 //!
 //! Problem sizes in this crate stay below ~1200 columns × ~1200 rows
 //! (CNN 13×16: 493 binaries), for which a dense tableau is fast and simple.

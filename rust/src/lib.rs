@@ -11,8 +11,10 @@
 //!   `async_mmap`) — [`graph`];
 //! - an **HLS estimator** substrate that stands in for Vitis HLS: per-task
 //!   area (LUT/FF/BRAM/DSP) and timing estimation — [`hls`];
-//! - an exact **ILP solver** (two-phase dense simplex + branch & bound)
-//!   standing in for Gurobi — [`ilp`];
+//! - the (M)ILP problem model and dense two-phase simplex — [`ilp`] — and
+//!   the pluggable **solver engine** on top of it (backend escalation,
+//!   warm-started incremental solves, deterministic parallel
+//!   branch-and-bound) standing in for Gurobi — [`solver`];
 //! - the **coarse-grained floorplanner** (iterative 2-way partitioning,
 //!   HBM channel binding, multi-floorplan generation) — [`floorplan`];
 //! - **floorplan-aware pipelining** with SDC-based latency balancing —
@@ -61,6 +63,7 @@ pub mod device;
 pub mod graph;
 pub mod hls;
 pub mod ilp;
+pub mod solver;
 pub mod floorplan;
 pub mod pipeline;
 pub mod sim;

@@ -8,12 +8,16 @@
 //!       [--device D[,D..]]           tapa-4slot)
 //!       [--sweep] [--select P]      §6.3 multi-floorplan sweep; P picks
 //!       [--jobs N]                   the winner (fmax | cost)
+//!       [--solver-budget B]         cap the exact ILP search (<N>nodes or
+//!                                    <N>ms, converted to nodes — runs
+//!                                    reproduce across machines)
 //!       [--workdir DIR]
 //!       [--to STAGE]                stop after STAGE (estimate, floorplan,
 //!                                    sweep, pipeline, place, route, sta, sim)
 //!       [--resume]                  continue from the workdir checkpoint
 //! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
 //!       [--jobs N]                  parallel sessions (43-designs suite)
+//!       [--solver-budget B]         same knob for the bench suites
 //!       [--shard k/N --workdir W]   distributed worker: run shard k of N
 //!                                    into W/manifest.json (resumable)
 //! tapa bench --list                 list experiment ids
@@ -75,9 +79,11 @@ fn print_help() {
          co-optimization\n\n\
          USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
          [--config FILE] [--no-sim]\n               [--device D[,D...]] [--sweep] \
-         [--select fmax|cost] [--jobs N]\n               [--workdir DIR] [--to STAGE] \
+         [--select fmax|cost] [--jobs N]\n               [--solver-budget <N>nodes|<N>ms] \
+         [--workdir DIR] [--to STAGE]\n               \
          [--resume]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n               \
-         [--shard k/N --workdir DIR]\n  tapa bench --list\n  \
+         [--solver-budget <N>nodes|<N>ms] [--shard k/N --workdir DIR]\n  \
+         tapa bench --list\n  \
          tapa merge DIR... [--csv] [--out FILE] [--residual DIR]\n  \
          tapa engine-info\n\n\
          STAGES (for --to): estimate floorplan sweep pipeline place route sta sim\n\
@@ -90,6 +96,11 @@ fn print_help() {
          winner: `fmax` (best routed result, default) or `cost` (min crossing\n  \
          cost). --jobs N implements candidates over N worker threads with\n  \
          deterministic, submission-ordered results.\n\
+         SOLVER: the partitioning ILP runs through the pluggable solver engine\n  \
+         (exact warm-started branch-and-bound -> LP+FM -> greedy+FM escalation;\n  \
+         see the `solver` module docs). --solver-budget caps the exact search\n  \
+         in deterministic node counts; `<N>ms` is converted through a fixed\n  \
+         calibration, so budgeted runs are reproducible across machines.\n\
          CHECKPOINTS: versioned JSON (flow::persist); the byte layout is frozen\n  \
          within a format version, so old workdirs keep resuming.\n\
          SHARDING: `bench ID --shard k/N --workdir W` runs only the suite units\n  \
@@ -127,6 +138,27 @@ fn parse_jobs(args: &[String]) -> Result<usize, ()> {
             }
         },
         None => Ok(1),
+    }
+}
+
+/// Parse `--solver-budget <N>nodes|<N>ms` into the flow config. Returns
+/// false (after reporting) on a malformed spec.
+fn apply_solver_budget(args: &[String], cfg: &mut FlowConfig) -> bool {
+    let Some(spec) = flag_value(args, "--solver-budget") else {
+        return true;
+    };
+    match tapa::solver::SolveBudget::parse(&spec) {
+        Some(b) => {
+            cfg.floorplan.solver_budget = Some(b);
+            true
+        }
+        None => {
+            eprintln!(
+                "bad --solver-budget `{spec}` (expected <N>nodes or <N>ms, e.g. \
+                 2000nodes or 500ms)"
+            );
+            false
+        }
     }
 }
 
@@ -213,6 +245,9 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     let sweep_flag = has_flag(args, "--sweep");
     if sweep_flag {
         cfg.sweep.enabled = true;
+    }
+    if !apply_solver_budget(args, &mut cfg) {
+        return ExitCode::FAILURE;
     }
     if let Some(sel) = flag_value(args, "--select") {
         match SelectPolicy::parse(&sel) {
@@ -553,7 +588,10 @@ fn cmd_bench(args: &[String]) -> ExitCode {
     let Ok(jobs) = parse_jobs(args) else {
         return ExitCode::FAILURE;
     };
-    let cfg = load_config(args);
+    let mut cfg = load_config(args);
+    if !apply_solver_budget(args, &mut cfg) {
+        return ExitCode::FAILURE;
+    }
     let shard = flag_value(args, "--shard");
     let workdir = flag_value(args, "--workdir").map(PathBuf::from);
     if shard.is_some() || workdir.is_some() {

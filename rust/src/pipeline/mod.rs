@@ -116,7 +116,12 @@ pub fn pipeline_with_feedback(
     max_rounds: usize,
 ) -> Result<(Floorplan, PipelinePlan), crate::floorplan::FloorplanError> {
     let baseline_constraints = g.same_slot.len();
-    let mut fp = crate::floorplan::floorplan(g, device, estimates, cfg)?;
+    // One solver context for the whole loop: each re-floorplan
+    // warm-starts from the previous round's assignment, and the rollback
+    // re-solve of the round-1 problem is answered from the context's memo
+    // instead of a cold search.
+    let mut ctx = crate::solver::SolverContext::new();
+    let mut fp = crate::floorplan::floorplan_in(g, device, estimates, cfg, None, &mut ctx)?;
     for _ in 0..max_rounds {
         let plan = pipeline_edges(g, device, &fp, cfg.stages_per_crossing);
         if plan.cycle_feedback.is_empty() {
@@ -125,13 +130,22 @@ pub fn pipeline_with_feedback(
         for &(a, b) in &plan.cycle_feedback {
             g.same_slot.push((a, b));
         }
-        match crate::floorplan::floorplan(g, device, estimates, cfg) {
+        let prior = fp.assignment.clone();
+        match crate::floorplan::floorplan_in(g, device, estimates, cfg, Some(&prior), &mut ctx)
+        {
             Ok(new_fp) => fp = new_fp,
             Err(_) => {
                 // Roll back: co-location impossible; keep the original
                 // floorplan and zero the latency of cycle-internal edges.
                 g.same_slot.truncate(baseline_constraints);
-                fp = crate::floorplan::floorplan(g, device, estimates, cfg)?;
+                fp = crate::floorplan::floorplan_in(
+                    g,
+                    device,
+                    estimates,
+                    cfg,
+                    Some(&prior),
+                    &mut ctx,
+                )?;
                 let plan = pipeline_edges_zeroing_cycles(g, device, &fp, cfg.stages_per_crossing);
                 return Ok((fp, plan));
             }

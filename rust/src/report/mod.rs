@@ -105,6 +105,15 @@ pub fn fmt_cycles(c: Option<u64>) -> String {
     }
 }
 
+/// Format a solver optimality gap (absolute; `-` when the solve carried
+/// no bound information, i.e. heuristic tiers).
+pub fn fmt_gap(g: Option<f64>) -> String {
+    match g {
+        Some(v) => format!("{v:.2}"),
+        None => "-".to_string(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +154,8 @@ mod tests {
         assert_eq!(fmt_cycles(Some(5)), "5");
         assert_eq!(fmt_cycles(None), "-");
         assert_eq!(fmt_pct(17.823), "17.82");
+        assert_eq!(fmt_gap(Some(0.0)), "0.00");
+        assert_eq!(fmt_gap(Some(1.5)), "1.50");
+        assert_eq!(fmt_gap(None), "-");
     }
 }

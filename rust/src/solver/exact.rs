@@ -1,0 +1,676 @@
+//! The exact tier: best-first branch & bound over the LP relaxation — the
+//! default [`MilpBackend`] and the Gurobi stand-in for the §4.3
+//! partitioning ILP (this code is the former `ilp::branch`, rebuilt for
+//! warm starts and deterministic parallelism).
+//!
+//! ## Two phases
+//!
+//! **Phase 1 (bounding)** is a best-first search expanded in fixed-width
+//! *waves*: up to [`WAVE`] frontier nodes are selected (deterministically,
+//! with the incumbent frozen), their LP relaxations are solved in parallel
+//! over [`crate::util::pool::run_indexed`], and the results are applied
+//! sequentially in selection order. Because wave composition never depends
+//! on the worker count, the explored tree — and therefore the node count
+//! reported in [`SolverStats`] — is byte-identical for any `--jobs`.
+//!
+//! **Phase 2 (canonical extraction)** runs once optimality is proved: a
+//! deterministic depth-first dive (branch variable = most fractional,
+//! `0`-branch first) pruned against the proved objective re-derives the
+//! *canonical* optimal solution. Phase 2 depends only on `(problem,
+//! optimal value)`, never on how phase 1 found the optimum — which is what
+//! makes warm-started, parallel, and cold sequential solves return the
+//! same vector. Its tolerance ([`super::VALUE_TOL`]) assumes distinct
+//! objective values at integral points are separated by more than `0.25`,
+//! which holds for the integer-weighted problems this crate builds.
+//!
+//! ## Warm starts
+//!
+//! A warm hint proposes binary values (e.g. the previous sweep ratio's
+//! partition, re-derived against the current region tree). The backend
+//! completes it to a full point by fixing the binaries and solving the
+//! continuous LP once; if feasible, the completion becomes the starting
+//! incumbent, pruning phase 1 — often down to the root. The hint can never
+//! change *any* observable result: proved outcomes are re-derived by
+//! phase 2, and a warm-hinted search that ends unproven (node budget) is
+//! discarded and re-solved cold before anything is returned.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::{
+    hint_fixings, lp_with_fixings, most_fractional, round_and_repair, MilpBackend, MilpOutcome,
+    SolveParams, SolverContext, SolverStats, VALUE_TOL,
+};
+use crate::ilp::simplex::{solve_lp, LpOutcome};
+use crate::ilp::Problem;
+use crate::util::pool::run_indexed;
+
+/// Nodes selected per parallel wave. A constant (never the worker count!)
+/// so the explored tree is identical for any `--jobs`.
+const WAVE: usize = 8;
+
+/// Safety cap on phase-2 dives; generous — with the proved optimum as the
+/// pruning threshold the dive is near-linear in the binary count.
+const PHASE2_CAP: usize = 4096;
+
+/// The exact branch-and-bound backend (tier 1 of the escalation chain).
+pub struct ExactBackend;
+
+struct HeapItem {
+    bound: f64,
+    idx: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound && self.idx == other.idx
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the smallest (bound, idx)
+        // pops first — idx ties make the order total and deterministic.
+        other
+            .bound
+            .partial_cmp(&self.bound)
+            .unwrap_or(Ordering::Equal)
+            .then(other.idx.cmp(&self.idx))
+    }
+}
+
+/// Round binary entries of an LP point to exact 0/1.
+fn round_binaries(p: &Problem, mut x: Vec<f64>) -> Vec<f64> {
+    for (i, &b) in p.binary.iter().enumerate() {
+        if b {
+            x[i] = x[i].round().clamp(0.0, 1.0);
+        }
+    }
+    x
+}
+
+/// Phase 2: deterministic DFS for the canonical optimal solution, guided
+/// by the proved optimal objective. Returns `None` only when the safety
+/// cap trips (callers fall back to the phase-1 incumbent).
+fn extract_canonical(
+    p: &Problem,
+    obj_star: f64,
+    nodes: &mut usize,
+) -> Option<(Vec<f64>, f64)> {
+    let thresh = obj_star + VALUE_TOL;
+    let mut stack: Vec<Vec<(usize, f64)>> = vec![Vec::new()];
+    let mut expanded = 0usize;
+    while let Some(fix) = stack.pop() {
+        expanded += 1;
+        if expanded > PHASE2_CAP {
+            return None;
+        }
+        *nodes += 1;
+        match solve_lp(&lp_with_fixings(p, &fix)) {
+            LpOutcome::Optimal { x, obj } => {
+                if obj > thresh {
+                    continue;
+                }
+                match most_fractional(p, &x) {
+                    None => return Some((round_binaries(p, x), obj)),
+                    Some(v) => {
+                        // Explore the 0-branch first: push 1 below 0.
+                        let mut f1 = fix.clone();
+                        f1.push((v, 1.0));
+                        stack.push(f1);
+                        let mut f0 = fix;
+                        f0.push((v, 0.0));
+                        stack.push(f0);
+                    }
+                }
+            }
+            LpOutcome::Infeasible | LpOutcome::Unbounded => {}
+        }
+    }
+    None
+}
+
+impl MilpBackend for ExactBackend {
+    fn name(&self) -> &'static str {
+        "exact-bb"
+    }
+
+    fn solve(
+        &self,
+        p: &Problem,
+        params: &SolveParams,
+        ctx: &mut SolverContext,
+        warm: Option<&[f64]>,
+    ) -> MilpOutcome {
+        let (out, canonical) = solve_once(p, params, ctx, warm);
+        // Warm transparency: any outcome `solve_once` could not
+        // canonicalize (an unproven incumbent, a budget `Declined`, or the
+        // rare phase-2 cap fallback) may depend on the hint — the
+        // incumbent it returns can be the hint itself. Discard it and
+        // re-solve cold, returning the redo verbatim — stats included —
+        // so a warm-hinted solve is observationally indistinguishable
+        // from a cold one in every case. The abandoned attempt's work is
+        // accounted in `ctx.discarded_nodes` (deliberately outside the
+        // byte-compared per-solve stats).
+        if warm.is_some() && !canonical {
+            let wasted = match &out {
+                MilpOutcome::Optimal { stats, .. }
+                | MilpOutcome::Infeasible { stats }
+                | MilpOutcome::Declined { stats } => stats.nodes as u64,
+                MilpOutcome::Unbounded => 0,
+            };
+            ctx.discarded_nodes += wasted;
+            let (cold, _) = solve_once(p, params, ctx, None);
+            return cold;
+        }
+        out
+    }
+}
+
+/// One uninterrupted exact solve (the body of [`ExactBackend::solve`];
+/// the trait method wraps it with the cold-redo rule above). The second
+/// return value reports whether the outcome is *canonical* — provably
+/// independent of the warm hint; non-canonical warm outcomes are redone
+/// cold by the wrapper.
+fn solve_once(
+    p: &Problem,
+    params: &SolveParams,
+    ctx: &mut SolverContext,
+    warm: Option<&[f64]>,
+) -> (MilpOutcome, bool) {
+    {
+        let cap = ctx.node_cap(params.max_nodes);
+        let workers = ctx.jobs.max(1);
+        let mut nodes = 0usize;
+        let stats = |nodes: usize, warm_used: bool, warm_hit: bool, proved: bool, gap: Option<f64>| {
+            SolverStats {
+                nodes,
+                warm_used,
+                warm_hit,
+                proved_optimal: proved,
+                gap,
+                solve_seconds: 0.0,
+            }
+        };
+
+        // Root relaxation.
+        nodes += 1;
+        let (root_x, root_obj) = match solve_lp(&lp_with_fixings(p, &[])) {
+            LpOutcome::Optimal { x, obj } => (x, obj),
+            LpOutcome::Infeasible => {
+                return (
+                    MilpOutcome::Infeasible {
+                        stats: stats(nodes, false, false, true, Some(0.0)),
+                    },
+                    true,
+                )
+            }
+            LpOutcome::Unbounded => return (MilpOutcome::Unbounded, true),
+        };
+        let Some(root_branch) = most_fractional(p, &root_x) else {
+            // Root already integral: the proved optimum, found identically
+            // with or without a warm hint — no completion solve needed.
+            return (
+                MilpOutcome::Optimal {
+                    x: round_binaries(p, root_x),
+                    obj: root_obj,
+                    stats: stats(nodes, false, false, true, Some(0.0)),
+                },
+                true,
+            );
+        };
+
+        // Starting incumbents: root rounding, then the warm completion.
+        let mut incumbent: Option<(Vec<f64>, f64)> = round_and_repair(p, &root_x).map(|x| {
+            let o = p.objective_value(&x);
+            (x, o)
+        });
+        let mut warm_used = false;
+        let mut warm_obj: Option<f64> = None;
+        if let Some(hint) = warm {
+            let fix = hint_fixings(p, hint);
+            nodes += 1;
+            if let LpOutcome::Optimal { x, obj } = solve_lp(&lp_with_fixings(p, &fix)) {
+                warm_used = true;
+                warm_obj = Some(obj);
+                let better =
+                    incumbent.as_ref().map_or(true, |(_, io)| obj < *io - params.abs_gap);
+                if better {
+                    incumbent = Some((round_binaries(p, x), obj));
+                }
+            }
+        }
+
+        // Phase 1: wave-parallel best-first bounding.
+        let mut fixings_store: Vec<Vec<(usize, f64)>> = Vec::new();
+        let mut heap: BinaryHeap<HeapItem> = BinaryHeap::new();
+        for val in [0.0, 1.0] {
+            fixings_store.push(vec![(root_branch, val)]);
+            heap.push(HeapItem { bound: root_obj, idx: fixings_store.len() - 1 });
+        }
+        // Minimum LP bound this search left unexplored (pruned or
+        // truncated) — the honest-gap denominator.
+        let mut bound_floor = f64::INFINITY;
+        let mut truncated = false;
+        loop {
+            // Select the wave. The incumbent is frozen during selection,
+            // so the wave — and hence the whole explored tree — does not
+            // depend on the worker count.
+            let mut wave: Vec<usize> = Vec::new();
+            while wave.len() < WAVE && nodes + wave.len() < cap {
+                let Some(item) = heap.pop() else { break };
+                let prunable = incumbent.as_ref().is_some_and(|(_, io)| {
+                    let tol = params.abs_gap.max(params.rel_gap * io.abs());
+                    item.bound >= *io - tol
+                });
+                if prunable {
+                    // The heap is ordered by bound: everything left is
+                    // prunable too.
+                    bound_floor = bound_floor.min(item.bound);
+                    while let Some(rest) = heap.pop() {
+                        bound_floor = bound_floor.min(rest.bound);
+                    }
+                    break;
+                }
+                wave.push(item.idx);
+            }
+            if wave.is_empty() {
+                if !heap.is_empty() {
+                    // Node budget expired with live frontier nodes.
+                    truncated = true;
+                    if let Some(top) = heap.peek() {
+                        bound_floor = bound_floor.min(top.bound);
+                    }
+                }
+                break;
+            }
+            let outs = run_indexed(wave.len(), workers, |i| {
+                solve_lp(&lp_with_fixings(p, &fixings_store[wave[i]]))
+            });
+            nodes += wave.len();
+            let mut unbounded = false;
+            for (k, out) in outs.into_iter().enumerate() {
+                let idx = wave[k];
+                match out {
+                    LpOutcome::Infeasible => {}
+                    LpOutcome::Unbounded => unbounded = true,
+                    LpOutcome::Optimal { x, obj } => {
+                        let prunable = incumbent.as_ref().is_some_and(|(_, io)| {
+                            let tol = params.abs_gap.max(params.rel_gap * io.abs());
+                            obj >= *io - tol
+                        });
+                        if prunable {
+                            bound_floor = bound_floor.min(obj);
+                            continue;
+                        }
+                        match most_fractional(p, &x) {
+                            None => {
+                                let better = incumbent
+                                    .as_ref()
+                                    .map_or(true, |(_, io)| obj < *io - params.abs_gap);
+                                if better {
+                                    incumbent = Some((round_binaries(p, x), obj));
+                                }
+                            }
+                            Some(v) => {
+                                for val in [0.0, 1.0] {
+                                    let mut fix = fixings_store[idx].clone();
+                                    fix.push((v, val));
+                                    fixings_store.push(fix);
+                                    heap.push(HeapItem {
+                                        bound: obj,
+                                        idx: fixings_store.len() - 1,
+                                    });
+                                }
+                                if incumbent.is_none() {
+                                    if let Some(xi) = round_and_repair(p, &x) {
+                                        let oi = p.objective_value(&xi);
+                                        incumbent = Some((xi, oi));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if unbounded {
+                return (MilpOutcome::Unbounded, true);
+            }
+            if nodes >= cap && !heap.is_empty() {
+                truncated = true;
+                if let Some(top) = heap.peek() {
+                    bound_floor = bound_floor.min(top.bound);
+                }
+                break;
+            }
+        }
+
+        let gap = match &incumbent {
+            Some((_, io)) if bound_floor.is_finite() => (*io - bound_floor).max(0.0),
+            _ => 0.0,
+        };
+        // Proof is a statement about bounds, not about how the search
+        // ended: with an incumbent, optimality is proved iff no unexplored
+        // node (pruned or left behind by the budget) can improve it beyond
+        // `abs_gap`. Without one, only an exhausted frontier proves
+        // infeasibility.
+        let proved = match &incumbent {
+            Some(_) => gap <= params.abs_gap,
+            None => !truncated,
+        };
+        let warm_hit = warm_used
+            && proved
+            && warm_obj.is_some_and(|wo| {
+                incumbent.as_ref().is_some_and(|(_, io)| (wo - io).abs() <= VALUE_TOL)
+            });
+
+        match incumbent {
+            None => {
+                if truncated {
+                    // May depend on the hint (its completion node counted
+                    // against the budget): not canonical.
+                    (
+                        MilpOutcome::Declined {
+                            stats: stats(nodes, warm_used, false, false, None),
+                        },
+                        false,
+                    )
+                } else {
+                    (
+                        MilpOutcome::Infeasible {
+                            stats: stats(nodes, warm_used, false, true, Some(0.0)),
+                        },
+                        true,
+                    )
+                }
+            }
+            Some((inc_x, inc_obj)) => {
+                if !proved {
+                    // Best-effort incumbent with its honest gap — may be
+                    // the warm completion itself, so not canonical; the
+                    // trait wrapper re-solves it cold when hinted.
+                    return (
+                        MilpOutcome::Optimal {
+                            x: inc_x,
+                            obj: inc_obj,
+                            stats: stats(nodes, warm_used, false, false, Some(gap)),
+                        },
+                        false,
+                    );
+                }
+                // Phase 2: canonical extraction, independent of how the
+                // optimum was found.
+                match extract_canonical(p, inc_obj, &mut nodes) {
+                    Some((x, obj)) => (
+                        MilpOutcome::Optimal {
+                            x,
+                            obj,
+                            stats: stats(nodes, warm_used, warm_hit, true, Some(0.0)),
+                        },
+                        true,
+                    ),
+                    // Extraction cap tripped: fall back to the phase-1
+                    // incumbent. Proved, but the vector may be the warm
+                    // completion — not canonical.
+                    None => (
+                        MilpOutcome::Optimal {
+                            x: inc_x,
+                            obj: inc_obj,
+                            stats: stats(nodes, warm_used, warm_hit, true, Some(0.0)),
+                        },
+                        false,
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Solve a mixed binary program with the exact backend on a throwaway
+/// context — the drop-in replacement for the former `ilp::solve_milp`.
+pub fn solve_exact(p: &Problem, params: SolveParams) -> MilpOutcome {
+    let mut ctx = SolverContext::new();
+    ExactBackend.solve(p, &params, &mut ctx, None)
+}
+
+#[cfg(test)]
+mod canonical_tests {
+    use super::*;
+    use crate::ilp::Constraint;
+
+    /// The wrapper's transparency rule end to end: a hinted solve under a
+    /// budget too small to prove returns exactly what the cold solve
+    /// returns (redo verbatim), never the hint-derived incumbent.
+    #[test]
+    fn truncated_warm_solve_equals_cold_solve() {
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        let params = SolveParams { max_nodes: 1, ..SolveParams::default() };
+        let mut ctx = SolverContext::new();
+        let cold = ExactBackend.solve(&p, &params, &mut ctx, None);
+        let hint = [0.0, 1.0];
+        let mut ctx2 = SolverContext::new();
+        let warm = ExactBackend.solve(&p, &params, &mut ctx2, Some(&hint));
+        match (&cold, &warm) {
+            (
+                MilpOutcome::Optimal { x: xc, obj: oc, stats: sc },
+                MilpOutcome::Optimal { x: xw, obj: ow, stats: sw },
+            ) => {
+                assert_eq!(xc, xw, "truncated warm result must be the cold redo");
+                assert_eq!(oc, ow);
+                assert_eq!(sc.nodes, sw.nodes, "redo stats are returned verbatim");
+            }
+            other => panic!("expected two truncated optima, got {other:?}"),
+        }
+        assert!(ctx2.discarded_nodes > 0, "the abandoned warm attempt is accounted");
+        assert_eq!(ctx.discarded_nodes, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::Constraint;
+
+    fn opt(r: &MilpOutcome) -> (Vec<f64>, f64) {
+        match r {
+            MilpOutcome::Optimal { x, obj, .. } => (x.clone(), *obj),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 5a + 4b + 3c s.t. 2a + 3b + c <= 5, binaries. Best: a=1, b=1.
+        let mut p = Problem::new(3);
+        p.objective = vec![-5.0, -4.0, -3.0];
+        p.binary = vec![true, true, true];
+        p.add(Constraint::le(vec![(0, 2.0), (1, 3.0), (2, 1.0)], 5.0));
+        let (x, obj) = opt(&solve_exact(&p, SolveParams::default()));
+        assert_eq!(obj, -9.0);
+        assert_eq!(x[0].round() as i32, 1);
+        assert_eq!(x[1].round() as i32, 1);
+    }
+
+    #[test]
+    fn forced_fractional_lp_gets_integral_milp() {
+        // max a + b s.t. a + b <= 1.5 → LP gives 1.5, MILP must give 1.
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        let (x, obj) = opt(&solve_exact(&p, SolveParams::default()));
+        assert_eq!(obj, -1.0);
+        let s = x[0].round() + x[1].round();
+        assert_eq!(s as i32, 1);
+    }
+
+    #[test]
+    fn infeasible_binary_program() {
+        let mut p = Problem::new(2);
+        p.binary = vec![true, true];
+        p.add(Constraint::ge(vec![(0, 1.0), (1, 1.0)], 3.0));
+        assert!(matches!(
+            solve_exact(&p, SolveParams::default()),
+            MilpOutcome::Infeasible { .. }
+        ));
+    }
+
+    #[test]
+    fn equality_partition() {
+        // Partition 4 items of sizes 3,3,2,2 into side-1 totalling 5:
+        // Σ size_i x_i = 5, minimize x0 (prefer item0 on side 0).
+        let sizes = [3.0, 3.0, 2.0, 2.0];
+        let mut p = Problem::new(4);
+        p.objective = vec![1.0, 0.0, 0.0, 0.0];
+        p.binary = vec![true; 4];
+        p.add(Constraint::eq(
+            sizes.iter().enumerate().map(|(i, &s)| (i, s)).collect(),
+            5.0,
+        ));
+        let (x, obj) = opt(&solve_exact(&p, SolveParams::default()));
+        assert_eq!(obj, 0.0);
+        let total: f64 = sizes.iter().zip(x.iter()).map(|(s, v)| s * v.round()).sum();
+        assert_eq!(total, 5.0);
+    }
+
+    #[test]
+    fn mixed_continuous_and_binary() {
+        // min y s.t. y >= 2.5 - 2b, y >= 0, b binary; choosing b=1 → y=0.5.
+        let mut p = Problem::new(2); // y, b
+        p.objective = vec![1.0, 0.0];
+        p.binary = vec![false, true];
+        p.add(Constraint::ge(vec![(0, 1.0), (1, 2.0)], 2.5));
+        let (x, obj) = opt(&solve_exact(&p, SolveParams::default()));
+        assert!((obj - 0.5).abs() < 1e-6);
+        assert_eq!(x[1].round() as i32, 1);
+    }
+
+    #[test]
+    fn larger_assignment_problem() {
+        // Assign 8 items to 2 bins, exactly 4 per bin, chain objective —
+        // the toy version of the floorplan ILP.
+        let n = 8;
+        let mut p = Problem::new(n);
+        p.binary = vec![true; n];
+        p.add(Constraint::le((0..n).map(|i| (i, 2.0)).collect(), 8.0));
+        p.add(Constraint::ge((0..n).map(|i| (i, 2.0)).collect(), 8.0));
+        for i in 0..n - 1 {
+            let d = p.add_var(1.0, false);
+            p.add(Constraint::ge(vec![(d, 1.0), (i, -1.0), (i + 1, 1.0)], 0.0));
+            p.add(Constraint::ge(vec![(d, 1.0), (i, 1.0), (i + 1, -1.0)], 0.0));
+        }
+        let (x, obj) = opt(&solve_exact(&p, SolveParams::default()));
+        // Optimal: contiguous split → exactly one chain crossing.
+        assert!((obj - 1.0).abs() < 1e-6, "obj={obj}");
+        let ones: usize = (0..n).map(|i| x[i].round() as usize).sum();
+        assert_eq!(ones, 4);
+    }
+
+    /// The determinism contract: the returned vector is identical for any
+    /// worker count and with or without a warm hint, as long as the solve
+    /// proves optimality.
+    #[test]
+    fn canonical_result_is_jobs_and_warm_independent() {
+        let build = || {
+            // Chain assignment with ties: multiple optimal splits exist.
+            let n = 6;
+            let mut p = Problem::new(n);
+            p.binary = vec![true; n];
+            p.add(Constraint::le((0..n).map(|i| (i, 1.0)).collect(), 3.0));
+            p.add(Constraint::ge((0..n).map(|i| (i, 1.0)).collect(), 3.0));
+            for i in 0..n - 1 {
+                let d = p.add_var(1.0, false);
+                p.add(Constraint::ge(vec![(d, 1.0), (i, -1.0), (i + 1, 1.0)], 0.0));
+                p.add(Constraint::ge(vec![(d, 1.0), (i, 1.0), (i + 1, -1.0)], 0.0));
+            }
+            p
+        };
+        let p = build();
+        let params = SolveParams::default();
+        let cold = {
+            let mut ctx = SolverContext::new().with_jobs(1);
+            ExactBackend.solve(&p, &params, &mut ctx, None)
+        };
+        let (x_cold, obj_cold) = opt(&cold);
+        for jobs in [2usize, 4, 8] {
+            let mut ctx = SolverContext::new().with_jobs(jobs);
+            let (x, obj) = opt(&ExactBackend.solve(&p, &params, &mut ctx, None));
+            assert_eq!(x, x_cold, "jobs={jobs}");
+            assert_eq!(obj, obj_cold);
+        }
+        // Node counts are part of the determinism contract too.
+        let nodes_of = |o: &MilpOutcome| match o {
+            MilpOutcome::Optimal { stats, .. } => stats.nodes,
+            _ => panic!(),
+        };
+        let n1 = nodes_of(&cold);
+        let mut ctx = SolverContext::new().with_jobs(8);
+        let n8 = nodes_of(&ExactBackend.solve(&p, &params, &mut ctx, None));
+        assert_eq!(n1, n8, "explored tree must not depend on the worker count");
+
+        // Warm hint: propose the known optimum; result identical, proved.
+        let mut ctx = SolverContext::new();
+        let warm = ExactBackend.solve(&p, &params, &mut ctx, Some(&x_cold));
+        let (x_warm, obj_warm) = opt(&warm);
+        assert_eq!(x_warm, x_cold, "warm start must not change a proved result");
+        assert_eq!(obj_warm, obj_cold);
+        match &warm {
+            MilpOutcome::Optimal { stats, .. } => {
+                assert!(stats.proved_optimal);
+                assert!(stats.warm_used);
+                assert!(stats.warm_hit, "optimal hint must register as a warm hit");
+            }
+            _ => unreachable!(),
+        }
+        // A nonsense hint is completed, found worse, and ignored.
+        let junk = vec![1.0; p.num_vars];
+        let mut ctx = SolverContext::new();
+        let (x_junk, obj_junk) = opt(&ExactBackend.solve(&p, &params, &mut ctx, Some(&junk)));
+        assert_eq!(x_junk, x_cold);
+        assert_eq!(obj_junk, obj_cold);
+    }
+
+    #[test]
+    fn budget_truncation_reports_honest_gap() {
+        // A problem that needs branching, with a 1-node budget: the root
+        // relaxation eats the budget and the incumbent (from rounding)
+        // must come back unproven with a positive gap.
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        let params = SolveParams { max_nodes: 1, ..SolveParams::default() };
+        match solve_exact(&p, params) {
+            MilpOutcome::Optimal { stats, obj, .. } => {
+                assert!(!stats.proved_optimal, "1-node budget cannot prove");
+                let gap = stats.gap.expect("truncated solve reports a gap");
+                assert!(gap > 0.0, "gap={gap}");
+                assert_eq!(obj, -1.0, "rounding still finds the optimum here");
+            }
+            other => panic!("expected truncated optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn proved_solves_report_zero_gap() {
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        match solve_exact(&p, SolveParams::default()) {
+            MilpOutcome::Optimal { stats, .. } => {
+                assert!(stats.proved_optimal);
+                assert_eq!(stats.gap, Some(0.0));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

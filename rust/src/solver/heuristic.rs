@@ -1,0 +1,132 @@
+//! The heuristic tier: LP relaxation + rounding + repair — tier 2 of the
+//! escalation chain (the problem-level half of the paper's "LP + FM"
+//! documented substitution; the Fiduccia–Mattheyses polish stays with the
+//! caller, which owns the task graph the gains are computed on).
+
+use super::{
+    hint_fixings, lp_with_fixings, round_and_repair, MilpBackend, MilpOutcome, SolveParams,
+    SolverContext, SolverStats,
+};
+use crate::ilp::simplex::{solve_lp, LpOutcome};
+use crate::ilp::Problem;
+
+/// LP-relaxation rounding backend. Never proves optimality (`gap: None`);
+/// declines when the rounded point cannot be repaired to feasibility, so
+/// the caller escalates to its greedy tier.
+pub struct HeuristicBackend;
+
+impl MilpBackend for HeuristicBackend {
+    fn name(&self) -> &'static str {
+        "lp-round"
+    }
+
+    fn solve(
+        &self,
+        p: &Problem,
+        _params: &SolveParams,
+        _ctx: &mut SolverContext,
+        warm: Option<&[f64]>,
+    ) -> MilpOutcome {
+        let stats = |nodes: usize, warm_used: bool| SolverStats {
+            nodes,
+            warm_used,
+            warm_hit: false,
+            proved_optimal: false,
+            gap: None,
+            solve_seconds: 0.0,
+        };
+        // One LP solve: the relaxation root.
+        match solve_lp(&lp_with_fixings(p, &[])) {
+            LpOutcome::Optimal { x, .. } => match round_and_repair(p, &x) {
+                Some(xr) => {
+                    let obj = p.objective_value(&xr);
+                    MilpOutcome::Optimal { x: xr, obj, stats: stats(1, false) }
+                }
+                None => {
+                    // Rounding failed; a feasible warm hint can still save
+                    // the tier (completion via the shared helper, exactly
+                    // as the exact backend does it).
+                    if let Some(hint) = warm {
+                        let fix = hint_fixings(p, hint);
+                        if let LpOutcome::Optimal { x, obj } = solve_lp(&lp_with_fixings(p, &fix))
+                        {
+                            return MilpOutcome::Optimal { x, obj, stats: stats(2, true) };
+                        }
+                    }
+                    MilpOutcome::Declined { stats: stats(1, false) }
+                }
+            },
+            LpOutcome::Infeasible => MilpOutcome::Infeasible {
+                stats: SolverStats {
+                    nodes: 1,
+                    proved_optimal: true,
+                    gap: Some(0.0),
+                    ..stats(1, false)
+                },
+            },
+            LpOutcome::Unbounded => MilpOutcome::Unbounded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::Constraint;
+
+    #[test]
+    fn rounds_a_fractional_relaxation_to_feasibility() {
+        // max a + b s.t. a + b <= 1.5: LP is fractional; rounding+repair
+        // must land on a feasible (not necessarily optimal) point.
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        let mut ctx = SolverContext::new();
+        match HeuristicBackend.solve(&p, &SolveParams::default(), &mut ctx, None) {
+            MilpOutcome::Optimal { x, stats, .. } => {
+                assert!(p.is_feasible(&x, 1e-6));
+                assert!(!stats.proved_optimal, "the heuristic tier never proves");
+                assert_eq!(stats.gap, None);
+            }
+            other => panic!("expected a repaired point, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn warm_hint_rescues_failed_rounding() {
+        // min a s.t. 2a + b = 2 over binaries: the relaxation's optimum
+        // (a=0.5, b=1) rounds to (1, 1), which violates the equality row —
+        // and equality rows are beyond the flip-repair. Without a hint the
+        // tier declines; a feasible hint is completed into a solution.
+        let mut p = Problem::new(2);
+        p.objective = vec![1.0, 0.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::eq(vec![(0, 2.0), (1, 1.0)], 2.0));
+        let mut ctx = SolverContext::new();
+        assert!(matches!(
+            HeuristicBackend.solve(&p, &SolveParams::default(), &mut ctx, None),
+            MilpOutcome::Declined { .. }
+        ));
+        let hint = [1.0, 0.0];
+        match HeuristicBackend.solve(&p, &SolveParams::default(), &mut ctx, Some(&hint)) {
+            MilpOutcome::Optimal { x, stats, .. } => {
+                assert!(p.is_feasible(&x, 1e-6));
+                assert!(stats.warm_used);
+            }
+            other => panic!("hint completion must rescue the tier, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_relaxation_is_proved_infeasible() {
+        let mut p = Problem::new(1);
+        p.binary = vec![true];
+        p.add(Constraint::ge(vec![(0, 1.0)], 3.0));
+        let mut ctx = SolverContext::new();
+        assert!(matches!(
+            HeuristicBackend.solve(&p, &SolveParams::default(), &mut ctx, None),
+            MilpOutcome::Infeasible { .. }
+        ));
+    }
+}

@@ -1,0 +1,602 @@
+//! Pluggable (M)ILP solver engine — the substrate behind the §4.3
+//! partitioning ILP and the §5.2 latency-balancing LP.
+//!
+//! ## Why a layer of its own
+//!
+//! The paper solves both problem classes with Gurobi and reports the
+//! per-iteration solve times as a first-class result (Table 11). Our
+//! reproduction used to hard-wire a single cold-start branch-and-bound into
+//! `floorplan::partition`; this module extracts it behind the
+//! [`MilpBackend`] trait so that (a) the §4.3 escalation chain is an
+//! explicit policy instead of an `if` ladder, (b) consecutive solves of
+//! near-identical problems — the §6.3 utilization-ratio sweep and the §5.2
+//! floorplan-feedback rounds — can warm-start from the previous solution
+//! through a shared [`SolverContext`], and (c) a real external solver (or a
+//! distributed one) can later slot in behind the same trait.
+//!
+//! ## Backend escalation chain (paper §4.3 / Table 11 terminology)
+//!
+//! | tier | backend | paper analogue | `SolveMethod` tag |
+//! |------|---------|----------------|-------------------|
+//! | 1 | [`ExactBackend`] — best-first branch-and-bound over the dense two-phase simplex, parallel node waves, warm starts | the Gurobi ILP solve of one partitioning iteration ("Div-k" columns of Table 11) | `Ilp` |
+//! | 2 | [`HeuristicBackend`] — LP relaxation + rounding + repair (polished by the caller's Fiduccia–Mattheyses passes) | the documented substitution for instances past Gurobi-scale exactness | `LpFm` |
+//! | 3 | caller-side greedy seed + repair + FM (stays in `floorplan::partition`: it needs the task graph, not just the matrix) | the classic partitioning heuristic | `GreedyFm` |
+//!
+//! Escalation triggers: tier 1 is used up to
+//! `FloorplanConfig::ilp_vertex_threshold` binaries and *declines* (rather
+//! than silently returning garbage) when its node budget expires without a
+//! proved optimum and no incumbent exists; tier 2 declines when rounding
+//! cannot repair to feasibility; tier 3 always produces an answer or
+//! reports the iteration infeasible.
+//!
+//! Note: tier 2 is currently **disabled in production** — the dense
+//! tableau stalls on degenerate mid-size relaxations while greedy+FM
+//! matches its cut quality in milliseconds, so `floorplan::partition`
+//! escalates straight from tier 1 to tier 3 (the `use_lp` ablation flag
+//! there re-enables the middle tier; `HeuristicBackend` is kept wired and
+//! unit-tested for it).
+//!
+//! The §5.2 latency-balancing LP never enters this chain: its constraint
+//! matrix is totally unimodular, so [`SolverContext::solve_lp`] routes it
+//! straight to the simplex and the integrality of the result is a theorem
+//! (property-tested in `pipeline::balance`), not a branch-and-bound outcome.
+//!
+//! ## Determinism contract
+//!
+//! Results are independent of the worker count (`--jobs`) and of warm
+//! starts — always. When the exact backend proves optimality, the search
+//! first establishes the proved optimal objective (phase 1, where
+//! parallelism and warm incumbents only prune work), then extracts the
+//! **canonical** optimal solution by a deterministic depth-first dive
+//! guided by that objective (phase 2). When a warm-hinted search ends
+//! *unproven* (node budget exhausted), the backend discards it and
+//! re-solves cold, so even budget-truncated outcomes are byte-identical
+//! to a cold solve. This is what lets the warm-started sweep, the cold
+//! per-ratio cache path, and the sharded bench workers all produce
+//! byte-identical floorplans.
+
+pub mod exact;
+pub mod heuristic;
+
+pub use exact::ExactBackend;
+pub use heuristic::HeuristicBackend;
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::ilp::simplex::{solve_lp, LpOutcome};
+use crate::ilp::{Cmp, Constraint, Problem};
+
+/// Canonical-extraction tolerance. Objective values of the problems this
+/// crate solves exactly (§4.3 partitioning: integer edge widths × integer
+/// positions) are integers at integral points, so distinct values differ
+/// by ≥ 1; `0.25` is far above dense-tableau float noise and far below the
+/// value spacing, making equality tests robust on both sides.
+pub(crate) const VALUE_TOL: f64 = 0.25;
+
+/// Solver budget for `tapa compile`/`tapa bench --solver-budget`.
+///
+/// Budgets are enforced in **branch-and-bound nodes** (LP solves), never in
+/// wall-clock time, so a budgeted run expands the identical tree on any
+/// machine. A millisecond budget is converted once, up front, through the
+/// fixed [`SolveBudget::NODES_PER_MS`] calibration constant — convenient to
+/// type, still reproducible.
+///
+/// The cap bounds the exact search's *bounding phase*; when that phase
+/// proves optimality, canonical extraction adds a further (deterministic,
+/// bounded) batch of LP solves which also appears in the reported node
+/// counts. The cap is deliberately not a hard ceiling on the report: a
+/// proved-then-extracted solve is strictly more useful than an unproven
+/// one truncated mid-extraction, and the counts stay reproducible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveBudget {
+    /// Hard cap on branch-and-bound nodes per exact solve.
+    Nodes(usize),
+    /// Approximate wall-clock budget, converted to nodes deterministically.
+    Millis(u64),
+}
+
+impl SolveBudget {
+    /// Fixed nodes-per-millisecond calibration for [`SolveBudget::Millis`]
+    /// (measured on the dense tableau at ~100 columns; the exact value
+    /// matters less than it being a constant).
+    pub const NODES_PER_MS: usize = 4;
+
+    /// The deterministic node cap this budget grants one exact solve.
+    pub fn node_cap(&self) -> usize {
+        match self {
+            SolveBudget::Nodes(n) => (*n).max(1),
+            SolveBudget::Millis(ms) => (*ms as usize).saturating_mul(Self::NODES_PER_MS).max(1),
+        }
+    }
+
+    /// Parse the CLI/config spec: `<N>nodes` or `<N>ms` (e.g. `2000nodes`,
+    /// `500ms`).
+    pub fn parse(s: &str) -> Option<SolveBudget> {
+        let s = s.trim();
+        if let Some(n) = s.strip_suffix("nodes") {
+            return n.trim().parse::<usize>().ok().filter(|&n| n > 0).map(SolveBudget::Nodes);
+        }
+        if let Some(ms) = s.strip_suffix("ms") {
+            return ms.trim().parse::<u64>().ok().filter(|&m| m > 0).map(SolveBudget::Millis);
+        }
+        None
+    }
+
+    /// Inverse of [`SolveBudget::parse`] (cache keys, diagnostics).
+    pub fn label(&self) -> String {
+        match self {
+            SolveBudget::Nodes(n) => format!("{n}nodes"),
+            SolveBudget::Millis(ms) => format!("{ms}ms"),
+        }
+    }
+}
+
+/// Knobs of one exact solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveParams {
+    /// Node cap for phase 1 (bounding) of the exact search.
+    pub max_nodes: usize,
+    /// Absolute optimality gap at which a solve counts as *proved*.
+    pub abs_gap: f64,
+    /// Relative early-stop gap. Leave at `0.0` (prove fully) whenever
+    /// warm-start reproducibility matters — an early-stopped solve reports
+    /// `proved_optimal = false` with its honest gap.
+    pub rel_gap: f64,
+}
+
+impl Default for SolveParams {
+    fn default() -> Self {
+        SolveParams { max_nodes: 20_000, abs_gap: 1e-6, rel_gap: 0.0 }
+    }
+}
+
+/// Deterministic per-solve telemetry (the raw material of Table 11 rows
+/// and the bench CSV's solver columns). `solve_seconds` is the only
+/// machine-dependent field; everything else is reproducible.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolverStats {
+    /// LP solves performed (phase 1 + phase 2; 0 on a memo hit).
+    pub nodes: usize,
+    /// A warm hint (memo entry or incumbent completion) was usable.
+    pub warm_used: bool,
+    /// The warm hint's objective matched the proved optimum — the solve
+    /// was effectively free.
+    pub warm_hit: bool,
+    /// Optimality was proved to within `abs_gap`.
+    pub proved_optimal: bool,
+    /// Honest absolute gap `incumbent − best unexplored bound` (`Some(0.0)`
+    /// when proved; `None` when no bound information exists, e.g. on the
+    /// heuristic tiers).
+    pub gap: Option<f64>,
+    pub solve_seconds: f64,
+}
+
+/// Outcome of one backend solve.
+#[derive(Clone, Debug)]
+pub enum MilpOutcome {
+    /// A solution. `stats.proved_optimal` distinguishes proved optima from
+    /// best-effort incumbents.
+    Optimal { x: Vec<f64>, obj: f64, stats: SolverStats },
+    /// Proved infeasible.
+    Infeasible { stats: SolverStats },
+    Unbounded,
+    /// The backend gave up (budget expired with no incumbent, or rounding
+    /// failed): escalate to the next tier.
+    Declined { stats: SolverStats },
+}
+
+/// A pluggable mixed-binary-program solver. The `warm` hint, when present,
+/// proposes values for the *binary* variables only (length `p.num_vars`,
+/// non-binary entries ignored); backends complete it to a full point by
+/// solving the continuous LP with the binaries fixed.
+pub trait MilpBackend {
+    fn name(&self) -> &'static str;
+    fn solve(
+        &self,
+        p: &Problem,
+        params: &SolveParams,
+        ctx: &mut SolverContext,
+        warm: Option<&[f64]>,
+    ) -> MilpOutcome;
+}
+
+/// A proved solve memoized inside a [`SolverContext`].
+#[derive(Clone, Debug)]
+struct MemoEntry {
+    /// Full problem copy — reuse requires structural equality, not just a
+    /// matching hash, so a collision can never smuggle in a wrong answer.
+    problem: Problem,
+    outcome: MemoOutcome,
+}
+
+#[derive(Clone, Debug)]
+enum MemoOutcome {
+    Optimal { x: Vec<f64>, obj: f64, gap: Option<f64> },
+    Infeasible,
+}
+
+/// Incremental solver state threaded through consecutive related solves —
+/// the §6.3 sweep ratios of one design and the §5.2 feedback rounds.
+///
+/// Carries (a) a memo of *proved* results keyed by the exact problem, so a
+/// re-solve after a no-op delta (adjacent sweep ratios whose capacity rows
+/// vanish identically) is free, (b) the worker count for parallel
+/// branch-and-bound waves, (c) the optional node budget, and (d) running
+/// telemetry totals.
+#[derive(Debug, Default)]
+pub struct SolverContext {
+    /// Worker threads for exact-search node waves (1 = sequential). The
+    /// result is identical for any value; only wall-clock changes.
+    pub jobs: usize,
+    /// Optional per-solve node budget (`--solver-budget`); overrides the
+    /// caller's default cap when present.
+    pub budget: Option<SolveBudget>,
+    memo: HashMap<u64, Vec<MemoEntry>>,
+    /// MILP solves performed through this context (memo hits included).
+    pub solves: u64,
+    /// Solves answered entirely from warm state (memo hit, or a warm hint
+    /// that matched the proved optimum).
+    pub warm_hits: u64,
+    /// Total branch-and-bound nodes (LP solves) across all MILP solves.
+    pub total_nodes: u64,
+    /// Nodes burned by warm-hinted attempts that ended unproven and were
+    /// redone cold (the price of warm transparency). Kept separate from
+    /// `total_nodes`/per-solve stats so those stay byte-identical to a
+    /// cold run; check this counter when a budgeted warm chain seems to
+    /// cost more than its cap suggests.
+    pub discarded_nodes: u64,
+    /// Total MILP solve seconds (machine-dependent; not serialized).
+    pub total_seconds: f64,
+    /// Tracked pure-LP solves ([`SolverContext::solve_lp`]).
+    pub lp_solves: u64,
+}
+
+impl SolverContext {
+    pub fn new() -> SolverContext {
+        SolverContext::default()
+    }
+
+    pub fn with_jobs(mut self, jobs: usize) -> SolverContext {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Option<SolveBudget>) -> SolverContext {
+        self.budget = budget;
+        self
+    }
+
+    /// Node cap for one exact solve: the budget when configured, else the
+    /// caller's default.
+    pub fn node_cap(&self, default_cap: usize) -> usize {
+        self.budget.map(|b| b.node_cap()).unwrap_or(default_cap).max(1)
+    }
+
+    /// Solve through `backend`, recording telemetry and consulting the
+    /// proved-result memo first.
+    pub fn solve_milp(
+        &mut self,
+        backend: &dyn MilpBackend,
+        p: &Problem,
+        params: &SolveParams,
+        warm: Option<&[f64]>,
+    ) -> MilpOutcome {
+        self.solves += 1;
+        let key = fingerprint(p);
+        if let Some(entries) = self.memo.get(&key) {
+            if let Some(e) = entries.iter().find(|e| &e.problem == p) {
+                self.warm_hits += 1;
+                let stats = SolverStats {
+                    nodes: 0,
+                    warm_used: true,
+                    warm_hit: true,
+                    proved_optimal: true,
+                    gap: Some(0.0),
+                    solve_seconds: 0.0,
+                };
+                return match &e.outcome {
+                    MemoOutcome::Optimal { x, obj, gap } => MilpOutcome::Optimal {
+                        x: x.clone(),
+                        obj: *obj,
+                        stats: SolverStats { gap: *gap, ..stats },
+                    },
+                    MemoOutcome::Infeasible => MilpOutcome::Infeasible { stats },
+                };
+            }
+        }
+        let t0 = Instant::now();
+        let mut out = backend.solve(p, params, self, warm);
+        let dt = t0.elapsed().as_secs_f64();
+        let stats = match &mut out {
+            MilpOutcome::Optimal { stats, .. }
+            | MilpOutcome::Infeasible { stats }
+            | MilpOutcome::Declined { stats } => {
+                stats.solve_seconds = dt;
+                Some(*stats)
+            }
+            MilpOutcome::Unbounded => None,
+        };
+        if let Some(st) = stats {
+            self.total_nodes += st.nodes as u64;
+            self.total_seconds += dt;
+            if st.warm_hit {
+                self.warm_hits += 1;
+            }
+        }
+        // Memoize proved results only: unproven incumbents may depend on
+        // the warm hint and must not leak across solves.
+        match &out {
+            MilpOutcome::Optimal { x, obj, stats } if stats.proved_optimal => {
+                self.memo.entry(key).or_default().push(MemoEntry {
+                    problem: p.clone(),
+                    outcome: MemoOutcome::Optimal { x: x.clone(), obj: *obj, gap: stats.gap },
+                });
+            }
+            MilpOutcome::Infeasible { stats } if stats.proved_optimal => {
+                self.memo.entry(key).or_default().push(MemoEntry {
+                    problem: p.clone(),
+                    outcome: MemoOutcome::Infeasible,
+                });
+            }
+            _ => {}
+        }
+        out
+    }
+
+    /// Solve a pure LP (no integrality), tracked. This is the §5.2 SDC
+    /// path: no branching, `nodes = 0` by construction.
+    pub fn solve_lp(&mut self, p: &Problem) -> (LpOutcome, SolverStats) {
+        let t0 = Instant::now();
+        let out = solve_lp(p);
+        let dt = t0.elapsed().as_secs_f64();
+        self.lp_solves += 1;
+        self.total_seconds += dt;
+        let optimal = matches!(&out, LpOutcome::Optimal { .. });
+        let stats = SolverStats {
+            nodes: 0,
+            warm_used: false,
+            warm_hit: false,
+            proved_optimal: optimal,
+            gap: if optimal { Some(0.0) } else { None },
+            solve_seconds: dt,
+        };
+        (out, stats)
+    }
+}
+
+/// FNV-1a over the full problem structure (exact f64 bits). Collisions are
+/// harmless: the memo re-checks structural equality before reuse.
+fn fingerprint(p: &Problem) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(&(p.num_vars as u64).to_le_bytes());
+    for &c in &p.objective {
+        eat(&c.to_bits().to_le_bytes());
+    }
+    for &b in &p.binary {
+        eat(&[b as u8]);
+    }
+    for c in &p.constraints {
+        eat(&[match c.cmp {
+            Cmp::Le => 0u8,
+            Cmp::Ge => 1,
+            Cmp::Eq => 2,
+        }]);
+        eat(&c.rhs.to_bits().to_le_bytes());
+        for &(j, a) in &c.coeffs {
+            eat(&(j as u64).to_le_bytes());
+            eat(&a.to_bits().to_le_bytes());
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Shared backend internals
+// ---------------------------------------------------------------------------
+
+/// Equality fixings pinning every binary to a warm hint's proposed value —
+/// the rows of the hint-completion LP shared by both backends.
+pub(crate) fn hint_fixings(p: &Problem, hint: &[f64]) -> Vec<(usize, f64)> {
+    p.binary
+        .iter()
+        .enumerate()
+        .filter(|&(_, &b)| b)
+        .map(|(i, _)| {
+            (i, if hint.get(i).copied().unwrap_or(0.0) > 0.5 { 1.0 } else { 0.0 })
+        })
+        .collect()
+}
+
+/// The base problem plus explicit binary upper bounds and `(var, value)`
+/// equality fixings — the LP a branch-and-bound node relaxes.
+pub(crate) fn lp_with_fixings(base: &Problem, fixings: &[(usize, f64)]) -> Problem {
+    let mut p = base.clone();
+    for (i, &b) in base.binary.iter().enumerate() {
+        if b {
+            p.add(Constraint { coeffs: vec![(i, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+        }
+    }
+    for &(v, val) in fixings {
+        p.add(Constraint::eq(vec![(v, 1.0)], val));
+    }
+    p
+}
+
+/// Most fractional binary of an LP point (deterministic: index order
+/// breaks ties), or `None` when the point is binary-integral.
+pub(crate) fn most_fractional(p: &Problem, x: &[f64]) -> Option<usize> {
+    let mut best = None;
+    let mut best_frac = 1e-6;
+    for (i, &b) in p.binary.iter().enumerate() {
+        if b {
+            let f = (x[i] - x[i].round()).abs();
+            let dist_to_half = (x[i].fract() - 0.5).abs();
+            if f > 1e-6 {
+                let score = 0.5 - dist_to_half.min(0.5);
+                if score > best_frac || best.is_none() {
+                    best_frac = score.max(best_frac);
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Try to build a feasible integer point by rounding the LP solution and
+/// greedily repairing constraint violations by flipping binaries.
+pub(crate) fn round_and_repair(p: &Problem, x_lp: &[f64]) -> Option<Vec<f64>> {
+    let mut x: Vec<f64> = x_lp
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| if p.binary[i] { v.round().clamp(0.0, 1.0) } else { v })
+        .collect();
+    if p.is_feasible(&x, 1e-6) {
+        return Some(x);
+    }
+    // Repair: for each violated ≤ row, flip the binary with the largest
+    // positive coefficient that is currently 1 (reduces LHS the most).
+    for _ in 0..3 * p.num_vars.max(8) {
+        let mut violated = None;
+        for c in &p.constraints {
+            let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
+            let viol = match c.cmp {
+                Cmp::Le => lhs - c.rhs,
+                Cmp::Ge => c.rhs - lhs,
+                Cmp::Eq => (lhs - c.rhs).abs(),
+            };
+            if viol > 1e-6 {
+                violated = Some((c, viol));
+                break;
+            }
+        }
+        let Some((c, _)) = violated else { return Some(x) };
+        // Pick a flip that helps.
+        let mut flipped = false;
+        match c.cmp {
+            Cmp::Le => {
+                let mut cands: Vec<(usize, f64)> = c
+                    .coeffs
+                    .iter()
+                    .filter(|&&(j, a)| p.binary[j] && a > 0.0 && x[j] > 0.5)
+                    .cloned()
+                    .collect();
+                cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                if let Some(&(j, _)) = cands.first() {
+                    x[j] = 0.0;
+                    flipped = true;
+                }
+            }
+            Cmp::Ge => {
+                let mut cands: Vec<(usize, f64)> = c
+                    .coeffs
+                    .iter()
+                    .filter(|&&(j, a)| p.binary[j] && a > 0.0 && x[j] < 0.5)
+                    .cloned()
+                    .collect();
+                cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                if let Some(&(j, _)) = cands.first() {
+                    x[j] = 1.0;
+                    flipped = true;
+                }
+            }
+            Cmp::Eq => {}
+        }
+        if !flipped {
+            return None;
+        }
+    }
+    if p.is_feasible(&x, 1e-6) {
+        Some(x)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_parses_and_converts_deterministically() {
+        assert_eq!(SolveBudget::parse("2000nodes"), Some(SolveBudget::Nodes(2000)));
+        assert_eq!(SolveBudget::parse(" 500ms "), Some(SolveBudget::Millis(500)));
+        assert_eq!(SolveBudget::parse("0nodes"), None);
+        assert_eq!(SolveBudget::parse("12"), None);
+        assert_eq!(SolveBudget::parse("fastnodes"), None);
+        assert_eq!(SolveBudget::Nodes(7).node_cap(), 7);
+        assert_eq!(
+            SolveBudget::Millis(500).node_cap(),
+            500 * SolveBudget::NODES_PER_MS
+        );
+        assert_eq!(SolveBudget::Millis(500).label(), "500ms");
+        assert_eq!(SolveBudget::parse(&SolveBudget::Nodes(9).label()), Some(SolveBudget::Nodes(9)));
+    }
+
+    #[test]
+    fn context_node_cap_prefers_budget() {
+        let ctx = SolverContext::new();
+        assert_eq!(ctx.node_cap(150), 150);
+        let ctx = SolverContext::new().with_budget(Some(SolveBudget::Nodes(40)));
+        assert_eq!(ctx.node_cap(150), 40);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_rhs_and_structure() {
+        let mut a = Problem::new(2);
+        a.binary = vec![true, true];
+        a.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.0));
+        let mut b = a.clone();
+        b.constraints[0].rhs = 2.0;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        let c = a.clone();
+        assert_eq!(fingerprint(&a), fingerprint(&c));
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn memo_returns_identical_result_for_identical_problems() {
+        // min -(a+b) s.t. a+b <= 1.5 — forces one branch.
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        let mut ctx = SolverContext::new();
+        let first = ctx.solve_milp(&ExactBackend, &p, &SolveParams::default(), None);
+        let MilpOutcome::Optimal { x: x1, obj: o1, stats: s1 } = first else {
+            panic!("first solve must be optimal");
+        };
+        assert!(s1.proved_optimal);
+        assert!(s1.nodes > 0);
+        let again = ctx.solve_milp(&ExactBackend, &p, &SolveParams::default(), None);
+        let MilpOutcome::Optimal { x: x2, obj: o2, stats: s2 } = again else {
+            panic!("memo hit must be optimal");
+        };
+        assert_eq!(x1, x2, "memo must hand back the identical solution");
+        assert_eq!(o1, o2);
+        assert_eq!(s2.nodes, 0, "memo hit costs no nodes");
+        assert!(s2.warm_hit);
+        assert_eq!(ctx.warm_hits, 1);
+        assert_eq!(ctx.solves, 2);
+    }
+
+    #[test]
+    fn tracked_lp_reports_zero_nodes() {
+        let mut p = Problem::new(1);
+        p.objective = vec![1.0];
+        p.add(Constraint::ge(vec![(0, 1.0)], 2.0));
+        let mut ctx = SolverContext::new();
+        let (out, stats) = ctx.solve_lp(&p);
+        assert!(matches!(out, LpOutcome::Optimal { .. }));
+        assert_eq!(stats.nodes, 0);
+        assert!(stats.proved_optimal);
+        assert_eq!(ctx.lp_solves, 1);
+    }
+}

@@ -5,6 +5,7 @@
 //! the offending seed).
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod prop;
 pub mod stats;

@@ -1,0 +1,83 @@
+//! Shared indexed worker pool.
+//!
+//! [`run_indexed`] is the scheduling-independent fan-out primitive used by
+//! the batch runner (`tapa bench --jobs N`), the §6.3 sweep's per-candidate
+//! implementation fan-out, and the [`crate::solver`] layer's parallel
+//! branch-and-bound waves. It lives in `util` (below every consumer) so the
+//! solver does not have to reach *up* into `flow`; `flow::batch` re-exports
+//! it under its historical path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(0..n)` over a pool of `workers` threads, returning the results
+/// in index (submission) order. With one worker (or one item) everything
+/// runs inline on the caller's thread, so results — and side-effect
+/// ordering inside `f` — are identical for any worker count as long as
+/// `f(i)` is a pure function of `i`.
+pub fn run_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    // Clamp to the item count: a shard of 2 units under `--jobs 8` must
+    // spawn 2 workers, not 8 idle threads (regression-asserted in tests).
+    let workers = if workers == 0 { 1 } else { workers.min(n) };
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let done = &done;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut out = done.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_preserves_submission_order() {
+        for workers in [1usize, 3, 8] {
+            let out = run_indexed(17, workers, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "{workers} workers");
+        }
+        assert!(run_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn run_indexed_clamps_workers_to_item_count() {
+        // Tiny shards must not burn idle threads: with 2 items and 8
+        // requested workers, at most 2 distinct threads may execute `f`.
+        use std::collections::HashSet;
+        use std::thread::ThreadId;
+        let ids: Mutex<HashSet<ThreadId>> = Mutex::new(HashSet::new());
+        let out = run_indexed(2, 8, |i| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            i * 7
+        });
+        assert_eq!(out, vec![0, 7]);
+        let distinct = ids.lock().unwrap().len();
+        assert!(distinct <= 2, "spawned {distinct} workers for 2 items");
+    }
+}

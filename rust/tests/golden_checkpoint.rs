@@ -1,11 +1,12 @@
 //! Golden checkpoint: locks the versioned `flow::persist` on-disk format.
 //!
 //! `data/golden_sweep_ctx.json` is a committed, known-good serialized
-//! [`SessionContext`] (format v2, with a §6.3 `SweepArtifact`). The
-//! parser must accept it and the writer must reproduce it byte for byte
-//! — so a future PR cannot silently change the layout and break
-//! `--resume` compatibility. Any intentional layout change must bump
-//! `flow::persist::FORMAT_VERSION` and refresh this golden.
+//! [`SessionContext`] (format v3, with a §6.3 `SweepArtifact` including
+//! its solver telemetry). The parser must accept it and the writer must
+//! reproduce it byte for byte — so a future PR cannot silently change
+//! the layout and break `--resume` compatibility. Any intentional layout
+//! change must bump `flow::persist::FORMAT_VERSION` and refresh this
+//! golden.
 
 use tapa::device::DeviceKind;
 use tapa::flow::{persist, FlowVariant, Stage};
@@ -13,12 +14,12 @@ use tapa::flow::{persist, FlowVariant, Stage};
 const GOLDEN: &str = include_str!("data/golden_sweep_ctx.json");
 
 #[test]
-fn golden_v2_checkpoint_roundtrips_byte_identically() {
+fn golden_v3_checkpoint_roundtrips_byte_identically() {
     let ctx = persist::context_from_json_text(GOLDEN).expect("golden checkpoint parses");
     assert_eq!(
         persist::context_to_json_text(&ctx),
         GOLDEN,
-        "writer drifted from the committed v2 checkpoint format — resume \
+        "writer drifted from the committed v3 checkpoint format — resume \
          compatibility would break; bump FORMAT_VERSION and refresh the golden \
          instead of changing the layout in place"
     );
@@ -41,10 +42,18 @@ fn golden_checkpoint_carries_the_expected_artifacts() {
     let fp = fa.floorplan.as_ref().expect("adopted floorplan");
     assert_eq!(fp.assignment.len(), 2);
     assert_eq!(fp.cost, 32);
+    // v3: per-iteration solver stats carry the honest gap.
+    assert_eq!(fp.stats.len(), 1);
+    assert_eq!(fp.stats[0].gap, Some(0.0));
+    assert!(fp.stats[0].proved_optimal);
 
     let sw = ctx.sweep.as_ref().expect("sweep artifact");
     assert_eq!(sw.best, Some(0));
     assert_eq!(sw.points.len(), 3);
+    // v3: the sweep records its solver accounting.
+    assert_eq!(sw.solver.solves, 3);
+    assert_eq!(sw.solver.warm_hits, 1);
+    assert_eq!(sw.solver.bb_nodes, 6);
     // Point 0: the winner, fully implemented.
     assert_eq!(sw.points[0].util_ratio, 0.5);
     assert_eq!(sw.points[0].fmax_mhz, Some(300.5));

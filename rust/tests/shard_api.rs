@@ -43,7 +43,7 @@ fn tapa_bin() -> Command {
 }
 
 #[test]
-fn golden_v1_manifest_roundtrips_byte_identically() {
+fn golden_v2_manifest_roundtrips_byte_identically() {
     // Locks the on-disk manifest layout, like the checkpoint golden: any
     // intentional change must bump MANIFEST_VERSION and refresh this file.
     const GOLDEN: &str = include_str!("data/golden_manifest.json");
@@ -51,7 +51,7 @@ fn golden_v1_manifest_roundtrips_byte_identically() {
     assert_eq!(
         manifest_to_json_text(&m),
         GOLDEN,
-        "writer drifted from the committed v1 manifest format — merge \
+        "writer drifted from the committed v2 manifest format — merge \
          compatibility across workers would break; bump MANIFEST_VERSION and \
          refresh the golden instead of changing the layout in place"
     );
@@ -66,6 +66,12 @@ fn golden_v1_manifest_roundtrips_byte_identically() {
     let r = m.units[0].result.as_ref().expect("done unit carries a result");
     assert_eq!(r.fmax_mhz, Some(287.5));
     assert_eq!(r.assignment.as_deref(), Some(&[0usize, 1, 2][..]));
+    // v2: the deterministic solver summary rides with the result.
+    let s = r.solve.as_ref().expect("v2 result carries solver telemetry");
+    assert_eq!(s.method, "ilp");
+    assert_eq!(s.nodes, 5);
+    assert_eq!(s.gap, Some(0.0));
+    assert!(s.proved);
     assert_eq!(m.units[1].status, UnitStatus::Failed);
     assert_eq!(m.units[1].unit.variant, FlowVariant::Baseline);
     assert_eq!(m.units[1].attempts, 2);

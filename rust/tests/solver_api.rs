@@ -1,0 +1,231 @@
+//! Integration tests for the pluggable solver engine layer: warm-started
+//! incremental sweep solves must be solution-identical to cold per-point
+//! solves (the contract that keeps `StageCache` entries, sharded bench
+//! workers and `Stage::Sweep` chains coherent), strictly cheaper in
+//! branch-and-bound nodes, and byte-identical across `--jobs` counts.
+
+use tapa::device::DeviceKind;
+use tapa::floorplan::multi::solve_point_in;
+use tapa::floorplan::Floorplan;
+use tapa::flow::{Design, FlowConfig, FlowVariant, Session, SimOptions, Stage};
+use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+use tapa::hls::estimate_all;
+use tapa::place::RustStep;
+use tapa::solver::SolverContext;
+
+/// A light chain: every sweep ratio admits the same partition (capacity
+/// is never binding), so consecutive ratios build *identical* ILPs — the
+/// no-op-delta case the context memo answers for free.
+fn light_chain(name: &str, n: usize) -> Design {
+    let mut b = TaskGraphBuilder::new(name);
+    let p = b.proto(
+        "K",
+        ComputeSpec {
+            mac_ops: 25,
+            alu_ops: 200,
+            bram_bytes: 48 * 1024,
+            uram_bytes: 0,
+            trip_count: 256,
+            ii: 1,
+            pipeline_depth: 6,
+        },
+    );
+    let ids = b.invoke_n(p, "k", n);
+    for i in 0..n - 1 {
+        b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+    }
+    Design { name: name.to_string(), graph: b.build().unwrap(), device: DeviceKind::U250 }
+}
+
+/// A fat chain (kernels ≈ a third of a slot): capacity rows are binding
+/// and ratio-dependent, so consecutive ratios solve genuinely *different*
+/// problems — the bound/RHS-delta case covered by warm-hint completion.
+fn fat_chain(name: &str, n: usize) -> Design {
+    let mut b = TaskGraphBuilder::new(name);
+    let p = b.proto(
+        "Fat",
+        ComputeSpec {
+            mac_ops: 40,
+            alu_ops: 1300,
+            bram_bytes: 80 * 2304,
+            uram_bytes: 0,
+            trip_count: 512,
+            ii: 1,
+            pipeline_depth: 8,
+        },
+    );
+    let ids = b.invoke_n(p, "k", n);
+    for i in 0..n - 1 {
+        b.stream(&format!("s{i}"), 256, 2, ids[i], ids[i + 1]);
+    }
+    Design { name: name.to_string(), graph: b.build().unwrap(), device: DeviceKind::U250 }
+}
+
+const RATIOS: [f64; 5] = [0.55, 0.6, 0.7, 0.8, 0.85];
+
+fn sweep_cfg() -> FlowConfig {
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.sweep.enabled = true;
+    cfg.sweep.ratios = RATIOS.to_vec();
+    cfg
+}
+
+/// Cold reference: each ratio solved on its own fresh context, exactly
+/// what a sharded bench worker pays for one isolated sweep-point unit.
+/// Returns the plans and the total branch-and-bound node count.
+fn cold_points(d: &Design, cfg: &FlowConfig) -> (Vec<Option<Floorplan>>, u64) {
+    let device = d.device.device();
+    let est = estimate_all(&d.graph);
+    let mut nodes = 0u64;
+    let mut plans = Vec::new();
+    for &r in &cfg.sweep.ratios {
+        let mut ctx = SolverContext::new();
+        plans.push(solve_point_in(&d.graph, &device, &est, &cfg.floorplan, r, None, &mut ctx));
+        nodes += ctx.total_nodes;
+    }
+    (plans, nodes)
+}
+
+fn assert_same_plan(a: Option<&Floorplan>, b: Option<&Floorplan>, what: &str) {
+    match (a, b) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            assert_eq!(a.assignment, b.assignment, "{what}: assignment diverged");
+            assert_eq!(a.cost, b.cost, "{what}: cost diverged");
+            assert_eq!(a.util_ratio, b.util_ratio, "{what}: ratio diverged");
+        }
+        _ => panic!("{what}: one path solved, the other failed"),
+    }
+}
+
+/// The headline acceptance: a warm-started `Stage::Sweep` over ≥ 4 util
+/// ratios produces the same winners (solution-identical plans, same
+/// duplicate structure, same adopted best) as the cold per-point path,
+/// while registering warm-start hits and strictly fewer total
+/// branch-and-bound nodes than the cold solves pay.
+#[test]
+fn warm_sweep_matches_cold_points_and_saves_nodes() {
+    let d = light_chain("solver_warm_chain", 8);
+    let cfg = sweep_cfg();
+    let (cold, cold_nodes) = cold_points(&d, &cfg);
+
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone());
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.as_ref().expect("sweep artifact");
+    assert_eq!(art.points.len(), RATIOS.len());
+
+    // Solution identity, point by point — winners included.
+    for (p, c) in art.points.iter().zip(&cold) {
+        assert_same_plan(p.plan.as_ref(), c.as_ref(), &format!("ratio {}", p.util_ratio));
+    }
+    // Duplicate structure reconstructed from the cold assignments must
+    // match the warm artifact's keep-first marking.
+    for (j, p) in art.points.iter().enumerate() {
+        let expect_dup = cold[j].as_ref().and_then(|cj| {
+            cold[..j]
+                .iter()
+                .position(|q| q.as_ref().is_some_and(|qp| qp.assignment == cj.assignment))
+        });
+        assert_eq!(p.duplicate_of, expect_dup, "duplicate mark at point {j}");
+    }
+    if let Some(b) = art.best {
+        assert!(art.points[b].plan.is_some(), "winner must carry a plan");
+    }
+
+    // Warm accounting: the chain hit warm state and did strictly less
+    // branch-and-bound work than the cold per-point solves.
+    assert!(art.solver.warm_hits >= 1, "no warm-start hit across {} solves", art.solver.solves);
+    assert!(
+        art.solver.bb_nodes < cold_nodes,
+        "warm sweep must be strictly cheaper: warm {} vs cold {cold_nodes} nodes",
+        art.solver.bb_nodes
+    );
+}
+
+/// Same solution-identity contract on a design where capacity rows make
+/// every ratio a genuinely different ILP (warm hints instead of memo
+/// hits, including "Failed" points at tight ratios).
+#[test]
+fn warm_sweep_matches_cold_points_on_capacity_bound_design() {
+    let d = fat_chain("solver_fat_chain", 6);
+    let cfg = sweep_cfg();
+    let (cold, _) = cold_points(&d, &cfg);
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg);
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.as_ref().expect("sweep artifact");
+    for (p, c) in art.points.iter().zip(&cold) {
+        assert_same_plan(p.plan.as_ref(), c.as_ref(), &format!("ratio {}", p.util_ratio));
+    }
+}
+
+/// Parallel branch-and-bound determinism at the artifact level: plans,
+/// Fmax scores, the adopted winner AND the node accounting are identical
+/// for `--jobs` 1, 4 and 8 (waves have a fixed width, so the explored
+/// tree never depends on the worker count).
+#[test]
+fn sweep_artifact_identical_for_jobs_1_4_8() {
+    let d = light_chain("solver_jobs_chain", 8);
+    let cfg = sweep_cfg();
+    let run = |jobs: usize| {
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone()).with_jobs(jobs);
+        s.up_to(Stage::Sweep, &RustStep).unwrap();
+        s.context().sweep.clone().unwrap()
+    };
+    let a = run(1);
+    for jobs in [4usize, 8] {
+        let b = run(jobs);
+        assert_eq!(a.best, b.best, "jobs={jobs}");
+        assert_eq!(a.solver, b.solver, "solver accounting must not depend on jobs={jobs}");
+        assert_eq!(a.points.len(), b.points.len());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.util_ratio, pb.util_ratio);
+            assert_eq!(pa.duplicate_of, pb.duplicate_of, "jobs={jobs}");
+            assert_eq!(pa.fmax_mhz, pb.fmax_mhz, "jobs={jobs}");
+            assert_same_plan(
+                pa.plan.as_ref(),
+                pb.plan.as_ref(),
+                &format!("jobs={jobs} ratio {}", pa.util_ratio),
+            );
+            // Node accounting inside the serialized per-iteration stats
+            // is part of the determinism contract too.
+            if let (Some(fa), Some(fb)) = (&pa.plan, &pb.plan) {
+                let na: Vec<usize> = fa.stats.iter().map(|s| s.bb_nodes).collect();
+                let nb: Vec<usize> = fb.stats.iter().map(|s| s.bb_nodes).collect();
+                assert_eq!(na, nb, "jobs={jobs}");
+            }
+        }
+    }
+}
+
+/// The honest-gap satellite: no partitioning iteration may claim proved
+/// optimality without a zero gap, and proved exact iterations always
+/// carry `Some(0.0)`.
+#[test]
+fn partition_stats_never_claim_unproved_optimality() {
+    let d = fat_chain("solver_gap_chain", 6);
+    let cfg = sweep_cfg();
+    let mut s = Session::new(d, FlowVariant::Tapa, cfg);
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.as_ref().unwrap();
+    let mut iterations = 0;
+    for p in art.points.iter().filter_map(|p| p.plan.as_ref()) {
+        for st in &p.stats {
+            iterations += 1;
+            if st.proved_optimal {
+                assert_eq!(
+                    st.gap,
+                    Some(0.0),
+                    "iteration {} claims proved optimality with gap {:?}",
+                    st.iteration,
+                    st.gap
+                );
+            } else if let Some(g) = st.gap {
+                assert!(g > 0.0, "unproved iteration must carry a positive gap, got {g}");
+            }
+        }
+    }
+    assert!(iterations > 0, "the sweep solved at least one partition");
+}
