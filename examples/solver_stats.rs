@@ -102,4 +102,15 @@ fn main() {
         "  {} solve(s), {} warm hit(s), {} B&B node(s); winner: {:?}",
         art.solver.solves, art.solver.warm_hits, art.solver.bb_nodes, art.best
     );
+    // …and since PR 5 the candidate *implementations* are incremental
+    // too: the phys engine warm-chains place→route→STA across candidates.
+    println!(
+        "  phys: {} eval(s) ({} warm), retimed {}/{} edges, placer steps {}/{}",
+        art.phys.evals,
+        art.phys.warm_evals,
+        art.phys.retimed_edges,
+        art.phys.cold_retimed_edges,
+        art.phys.placer_steps,
+        art.phys.cold_placer_steps
+    );
 }

@@ -25,7 +25,7 @@ use crate::flow::{
     SessionError, SimOptions, Stage, StageCache,
 };
 use crate::place::RustStep;
-use crate::report::{fmt_cycles, fmt_gap, fmt_mhz, fmt_pct, Table};
+use crate::report::{fmt_cong, fmt_cycles, fmt_gap, fmt_mhz, fmt_pct, Table};
 use crate::sim::BurstDetector;
 use crate::util::stats::mean;
 
@@ -272,11 +272,18 @@ fn execute_resolved_unit(
                 util_pct: r.util_pct,
                 assignment: None,
                 solve: SolveSummary::from_floorplan(r.floorplan.as_ref()),
+                route_cong: Some(r.route.max_congestion),
+                wall_seconds: None,
             }
         }
         Some(ratio) => {
             // One §6.3 sweep point, scored exactly as Stage::Sweep does
             // (same solver, same candidate evaluation, same device view).
+            // The evaluation threads a unit-private PhysContext: units
+            // must stay independent of shard layout and of each other
+            // (the incremental engine is bit-identical to cold anyway,
+            // but a fresh context makes the independence structural),
+            // while the sequential warm chain lives in Stage::Sweep.
             let device = match unit.variant {
                 FlowVariant::TapaCoarse4Slot => design.device.device().merged_columns(),
                 _ => design.device.device(),
@@ -305,15 +312,19 @@ fn execute_resolved_unit(
                     util_pct: [0.0; 5],
                     assignment: None,
                     solve: None,
+                    route_cong: None,
+                    wall_seconds: None,
                 },
                 Some(fp) => {
                     let solve = SolveSummary::from_floorplan(Some(&fp));
-                    let fmax = crate::flow::evaluate_sweep_candidate(
+                    let mut phys = crate::phys::PhysContext::new();
+                    let fmax = crate::flow::evaluate_sweep_candidate_in(
                         &design.graph,
                         &device,
                         &est,
                         &fp,
                         &cfg,
+                        &mut phys,
                     );
                     UnitResult {
                         fmax_mhz: fmax,
@@ -321,6 +332,8 @@ fn execute_resolved_unit(
                         util_pct: [0.0; 5],
                         assignment: Some(fp.assignment.iter().map(|s| s.0).collect()),
                         solve,
+                        route_cong: None,
+                        wall_seconds: None,
                     }
                 }
             }
@@ -361,6 +374,10 @@ pub fn run_manifest(
     run_indexed(todo.len(), jobs, |i| {
         let idx = todo[i];
         let unit = shared.lock().unwrap().units[idx].unit.clone();
+        // Per-unit wall-clock rides in the manifest (never in the
+        // byte-compared CSVs): future sharding can weigh units by
+        // measured cost instead of round-robin counting.
+        let t0 = std::time::Instant::now();
         let res = match catalogue.get(&unit.design) {
             Some(d) => {
                 let mut d = d.clone();
@@ -369,6 +386,10 @@ pub fn run_manifest(
             }
             None => Err(format!("unknown design `{}`", unit.design)),
         };
+        let res = res.map(|mut r| {
+            r.wall_seconds = Some(t0.elapsed().as_secs_f64());
+            r
+        });
         let mut g = shared.lock().unwrap();
         let e = &mut g.units[idx];
         e.attempts += 1;
@@ -497,6 +518,8 @@ pub fn batch_suite_table(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Tabl
             util_pct: r.util_pct,
             assignment: None,
             solve: SolveSummary::from_floorplan(r.floorplan.as_ref()),
+            route_cong: Some(r.route.max_congestion),
+            wall_seconds: None,
         })
         .collect();
     suite_table(id, &results)
@@ -514,7 +537,7 @@ fn designs_table(title: &str, designs: &[Design], results: &[UnitResult]) -> Tab
         title,
         &[
             "Design", "Device", "Orig(MHz)", "Opt(MHz)", "OrigLUT%", "OptLUT%", "Solve",
-            "BBNodes", "Gap",
+            "BBNodes", "Gap", "OrigCong", "OptCong",
         ],
     );
     for (i, d) in designs.iter().enumerate() {
@@ -541,6 +564,11 @@ fn designs_table(title: &str, designs: &[Design], results: &[UnitResult]) -> Tab
             method,
             nodes,
             gap,
+            // Route columns (worst-slot congestion): appended after Gap
+            // so the solver-regression column cuts stay stable; these
+            // two are what the phys-regression CI job diffs.
+            fmt_cong(orig.route_cong),
+            fmt_cong(opt.route_cong),
         ]);
     }
     t

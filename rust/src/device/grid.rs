@@ -109,6 +109,32 @@ impl Device {
         (0..self.slots.len()).map(SlotId)
     }
 
+    /// Fingerprint of the device's *region tree* — the slot grid, per-slot
+    /// capacities and boundary wiring the floorplanner partitions over.
+    /// Two devices with equal fingerprints pose structurally identical
+    /// partitioning problems, so [`crate::phys::PhysContext`] state (the
+    /// solver's proved-result memo in particular) can be shared between
+    /// them ([`crate::flow::SessionSet`] groups per-device sessions by
+    /// this value). The part name is deliberately excluded: renamed but
+    /// geometrically identical parts still coincide.
+    pub fn region_fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv1a::new();
+        h.write_u64(self.rows as u64);
+        h.write_u64(self.cols as u64);
+        for s in &self.slots {
+            for v in s.capacity.as_array() {
+                h.write_u64(v);
+            }
+            h.write_u64(s.ddr_ports as u64);
+        }
+        h.write_u64(self.sll_capacity_bits);
+        h.write_u64(self.col_capacity_bits);
+        h.write_u64(self.num_slr as u64);
+        h.write_u64(self.ip_interference.to_bits());
+        h.write_u64(self.hbm.is_some() as u64);
+        h.finish()
+    }
+
     /// Collapse the vertical IP-column split, yielding a device with one
     /// slot per row (the Fig. 15 "4-slot" control experiment on U250).
     pub fn merged_columns(&self) -> Device {

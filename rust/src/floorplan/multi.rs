@@ -127,10 +127,26 @@ pub fn sweep_points(
     base: &FloorplanConfig,
     sweep: &[f64],
 ) -> Vec<SweepPoint> {
-    let mut ctx = SolverContext::new();
+    let mut phys = crate::phys::PhysContext::new();
+    sweep_points_in(g, device, estimates, base, sweep, &mut phys)
+}
+
+/// [`sweep_points`] on a caller-supplied [`crate::phys::PhysContext`] —
+/// the chain's solves run through the context's incremental solver
+/// state, so repeated sweeps (later sessions, feedback rounds, other
+/// devices with a coinciding region tree) reuse its proved-result memo.
+pub fn sweep_points_in(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    base: &FloorplanConfig,
+    sweep: &[f64],
+    phys: &mut crate::phys::PhysContext,
+) -> Vec<SweepPoint> {
+    let ctx = &mut phys.solver;
     let mut last: Option<Floorplan> = None;
     sweep_points_with(sweep, |ratio| {
-        let plan = solve_point_in(g, device, estimates, base, ratio, last.as_ref(), &mut ctx);
+        let plan = solve_point_in(g, device, estimates, base, ratio, last.as_ref(), &mut *ctx);
         if let Some(p) = &plan {
             last = Some(p.clone());
         }

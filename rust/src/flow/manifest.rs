@@ -75,8 +75,13 @@ use super::{FlowVariant, SessionError};
 /// On-disk manifest format version (see the module docs for the
 /// stability guarantee). v2 = v1 + the per-unit `solve` summary
 /// (solver method / node / gap telemetry for the bench CSV's
-/// Table-11-style columns).
-pub const MANIFEST_VERSION: u64 = 2;
+/// Table-11-style columns). v3 = v2 + the per-unit `route_cong`
+/// (worst-slot congestion, feeding the CSV Cong columns the CI
+/// phys-regression job diffs) and `wall_seconds` (measured unit
+/// wall-clock — the one deliberately machine-dependent field, recorded
+/// so future sharding can weigh units by cost instead of round-robin
+/// counting; it never reaches the byte-compared CSVs).
+pub const MANIFEST_VERSION: u64 = 3;
 
 /// Name of the manifest file inside a shard's work directory.
 pub const MANIFEST_FILE: &str = "manifest.json";
@@ -149,6 +154,13 @@ pub struct UnitResult {
     /// Deterministic solver telemetry of the unit's floorplan solve
     /// (`None` for baseline/degraded sessions and failed sweep points).
     pub solve: Option<SolveSummary>,
+    /// Worst-slot routing congestion of the implemented session (`None`
+    /// for sweep-point units) — the bench CSVs' OrigCong/OptCong columns.
+    pub route_cong: Option<f64>,
+    /// Wall-clock seconds the executing worker spent on this unit.
+    /// Machine-dependent by design (it exists to weigh future shard
+    /// partitioning); excluded from every byte-compared output.
+    pub wall_seconds: Option<f64>,
 }
 
 /// Compact, fully deterministic solver summary of one executed unit —
@@ -579,6 +591,8 @@ fn result_json(r: &UnitResult) -> Json {
                 ])
             }),
         ),
+        ("route_cong".into(), opt(&r.route_cong, |&c| num(c))),
+        ("wall_seconds".into(), opt(&r.wall_seconds, |&w| num(w))),
     ])
 }
 
@@ -652,6 +666,12 @@ fn parse_result(v: &Json) -> R<UnitResult> {
                     .and_then(Json::as_bool)
                     .ok_or_else(|| bad("proved not a boolean"))?,
             })
+        })?,
+        route_cong: get_opt(v, "route_cong", |x| {
+            x.as_f64().ok_or_else(|| bad("route_cong not a number"))
+        })?,
+        wall_seconds: get_opt(v, "wall_seconds", |x| {
+            x.as_f64().ok_or_else(|| bad("wall_seconds not a number"))
         })?,
     })
 }
@@ -776,6 +796,8 @@ mod tests {
                 gap: Some(0.0),
                 proved: true,
             }),
+            route_cong: Some(0.5),
+            wall_seconds: Some(0.125),
         });
         e
     }

@@ -215,7 +215,8 @@ pub fn run_flow(design: &Design, variant: FlowVariant, cfg: &FlowConfig) -> Flow
 /// [`Stage::Sweep`] (and Table 10) performs, on the deterministic Rust
 /// reference step. This is the execution body of a ratio-carrying
 /// [`manifest::WorkUnit`], so a sharded sweep scores candidates exactly
-/// as a single-machine session would.
+/// as a single-machine session would. Cold wrapper over
+/// [`evaluate_sweep_candidate_in`].
 pub fn evaluate_sweep_candidate(
     g: &TaskGraph,
     device: &Device,
@@ -223,7 +224,26 @@ pub fn evaluate_sweep_candidate(
     fp: &Floorplan,
     cfg: &FlowConfig,
 ) -> Option<f64> {
-    session::evaluate_candidate(g, device, estimates, fp, cfg, &RustStep)
+    let mut phys = crate::phys::PhysContext::new();
+    evaluate_sweep_candidate_in(g, device, estimates, fp, cfg, &mut phys)
+}
+
+/// [`evaluate_sweep_candidate`] on a caller-supplied
+/// [`crate::phys::PhysContext`] — the evaluation runs through the
+/// context's incremental [`crate::phys::PhysEngine`], warm against
+/// whatever that engine evaluated last. Results are bit-identical warm
+/// or cold (the engine's determinism contract), which is why sharded
+/// workers with per-unit cold contexts and warm-chained sweep sessions
+/// emit byte-identical CSVs.
+pub fn evaluate_sweep_candidate_in(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    fp: &Floorplan,
+    cfg: &FlowConfig,
+    phys: &mut crate::phys::PhysContext,
+) -> Option<f64> {
+    session::evaluate_candidate_in(g, device, estimates, fp, cfg, &RustStep, phys)
 }
 
 /// Run one variant with an explicit analytical-step executor (the PJRT

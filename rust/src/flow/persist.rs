@@ -7,10 +7,11 @@
 //! prefix of stages.
 //!
 //! **Format stability.** The on-disk layout is versioned
-//! ([`FORMAT_VERSION`], currently 3: v2 plus the solver telemetry — the
-//! honest `gap` per partitioning iteration and the sweep's
-//! `solver` accounting block). Within a version the byte layout is
-//! frozen — `rust/tests/data/golden_sweep_ctx.json` is a committed golden
+//! ([`FORMAT_VERSION`], currently 4: v3 plus the sweep's `phys`
+//! accounting block — the incremental physical-design engine's
+//! warm-evaluation / re-timed-edge / placer-step telemetry). Within a
+//! version the byte layout is frozen —
+//! `rust/tests/data/golden_sweep_ctx.json` is a committed golden
 //! checkpoint that must keep round-tripping byte-identically, so resume
 //! compatibility cannot silently break; any layout change must bump the
 //! version and refresh the golden.
@@ -35,8 +36,9 @@ use super::FlowVariant;
 
 /// On-disk checkpoint format version (see the module docs for the
 /// stability guarantee). v3 = v2 + solver telemetry (per-iteration `gap`,
-/// sweep `solver` block).
-pub const FORMAT_VERSION: u64 = 3;
+/// sweep `solver` block). v4 = v3 + the sweep's `phys` block (incremental
+/// physical-design engine telemetry).
+pub const FORMAT_VERSION: u64 = 4;
 
 // ---------------------------------------------------------------------------
 // Writing
@@ -214,6 +216,19 @@ fn sweep_json(sw: &SweepArtifact) -> Json {
                 ("solves".into(), unum(sw.solver.solves)),
                 ("warm_hits".into(), unum(sw.solver.warm_hits)),
                 ("bb_nodes".into(), unum(sw.solver.bb_nodes)),
+            ]),
+        ),
+        (
+            "phys".into(),
+            Json::Obj(vec![
+                ("evals".into(), unum(sw.phys.evals)),
+                ("warm_evals".into(), unum(sw.phys.warm_evals)),
+                ("moved_instances".into(), unum(sw.phys.moved_instances)),
+                ("retimed_edges".into(), unum(sw.phys.retimed_edges)),
+                ("cold_retimed_edges".into(), unum(sw.phys.cold_retimed_edges)),
+                ("placer_steps".into(), unum(sw.phys.placer_steps)),
+                ("cold_placer_steps".into(), unum(sw.phys.cold_placer_steps)),
+                ("redone_cold".into(), unum(sw.phys.redone_cold)),
             ]),
         ),
         ("best".into(), opt(&sw.best, |&b| unum(b as u64))),
@@ -530,6 +545,7 @@ fn parse_sweep(v: &Json) -> R<SweepArtifact> {
         })
         .collect::<R<Vec<_>>>()?;
     let sv = field(v, "solver")?;
+    let ph = field(v, "phys")?;
     Ok(SweepArtifact {
         best: get_opt(v, "best", |x| {
             x.as_usize().ok_or_else(|| bad("best not an integer"))
@@ -539,6 +555,16 @@ fn parse_sweep(v: &Json) -> R<SweepArtifact> {
             solves: get_u64(sv, "solves")?,
             warm_hits: get_u64(sv, "warm_hits")?,
             bb_nodes: get_u64(sv, "bb_nodes")?,
+        },
+        phys: crate::phys::PhysTelemetry {
+            evals: get_u64(ph, "evals")?,
+            warm_evals: get_u64(ph, "warm_evals")?,
+            moved_instances: get_u64(ph, "moved_instances")?,
+            retimed_edges: get_u64(ph, "retimed_edges")?,
+            cold_retimed_edges: get_u64(ph, "cold_retimed_edges")?,
+            placer_steps: get_u64(ph, "placer_steps")?,
+            cold_placer_steps: get_u64(ph, "cold_placer_steps")?,
+            redone_cold: get_u64(ph, "redone_cold")?,
         },
     })
 }
@@ -705,7 +731,7 @@ mod tests {
         let ctx =
             SessionContext::new("d", DeviceKind::U250, super::super::FlowVariant::Tapa);
         let bumped = context_to_json_text(&ctx)
-            .replace("\"version\":3", "\"version\":99");
+            .replace("\"version\":4", "\"version\":99");
         assert!(context_from_json_text(&bumped).is_err());
         let wrong_dev =
             context_to_json_text(&ctx).replace("\"device\":\"U250\"", "\"device\":\"U999\"");

@@ -24,12 +24,13 @@ use crate::device::{Device, DeviceKind};
 use crate::floorplan::{multi, Floorplan, FloorplanConfig};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::{estimate_all, TaskEstimate};
-use crate::pipeline::{pipeline_edges, pipeline_with_feedback, PipelinePlan};
+use crate::phys::{PhysContext, PhysTelemetry};
+use crate::pipeline::{pipeline_edges, pipeline_with_feedback_in, PipelinePlan};
 use crate::place::{place_baseline, place_floorplan_guided, Placement, RustStep, StepExecutor};
 use crate::route::{route, RouteReport};
 use crate::sim::{simulate, SimConfig};
 use crate::solver::SolverContext;
-use crate::timing::{analyze, analyze_with_areas, TimingReport};
+use crate::timing::{analyze, TimingReport};
 
 use super::stage::Stage;
 use super::{utilization_pct, Design, FlowConfig, FlowResult, FlowVariant, SelectPolicy};
@@ -97,6 +98,14 @@ pub struct SweepArtifact {
     /// Solver accounting of the candidate generation — the sweep's
     /// Table-11-style telemetry.
     pub solver: SweepSolverTelemetry,
+    /// Physical-design accounting of the candidate *implementation*
+    /// phase: how much of each place→route→STA evaluation the
+    /// incremental [`crate::phys::PhysEngine`] reused from the previous
+    /// candidate (warm evaluations, moved instances, re-timed vs cold
+    /// edge counts, placer updates vs cold). Deterministic — candidates
+    /// are chained in ratio order — so it rides in checkpoints and is
+    /// identical for any `--jobs` count.
+    pub phys: PhysTelemetry,
 }
 
 /// Deterministic solver accounting of one §6.3 sweep (candidate
@@ -348,11 +357,15 @@ pub struct Session {
     graph: TaskGraph,
     workdir: Option<PathBuf>,
     cache: Option<Arc<StageCache>>,
-    /// Worker threads for the §6.3 sweep's candidate implementations.
+    /// Worker threads for the solver's branch-and-bound node waves.
     jobs: usize,
     /// Stages actually executed by this process (checkpoint-loaded stages
     /// are in `ctx.completed` but not here).
     executed: Vec<Stage>,
+    /// The session's incremental physical-design context: solver memo +
+    /// per-design engines. Private by default; [`SessionSet`] shares one
+    /// context across sessions whose device region trees coincide.
+    phys: Arc<Mutex<PhysContext>>,
 }
 
 impl Session {
@@ -369,6 +382,7 @@ impl Session {
             cache: None,
             jobs: 1,
             executed: Vec::new(),
+            phys: Arc::new(Mutex::new(PhysContext::new())),
         }
     }
 
@@ -384,11 +398,28 @@ impl Session {
         self
     }
 
-    /// Implement sweep candidates over `n` worker threads. Candidate
-    /// scoring always runs on the deterministic Rust reference step
-    /// (like [`super::BatchRunner`] workers) and results are collected
-    /// in submission order, so the sweep artifact is byte-identical for
-    /// any worker count and any session executor.
+    /// Share an incremental physical-design context (solver memo +
+    /// engines) with other sessions — [`SessionSet`] does this for
+    /// devices whose region trees coincide. Sharing never changes a
+    /// result: warm state is canonical (solver) or exactly
+    /// cold-equivalent (phys engine).
+    pub fn with_phys(mut self, phys: Arc<Mutex<PhysContext>>) -> Session {
+        self.phys = phys;
+        self
+    }
+
+    /// The session's physical-design context (telemetry, tests).
+    pub fn phys(&self) -> &Arc<Mutex<PhysContext>> {
+        &self.phys
+    }
+
+    /// Worker threads for the exact solver's branch-and-bound node
+    /// waves. Results are identical for any value (fixed-width waves);
+    /// only wall-clock changes. Sweep candidates themselves are
+    /// implemented sequentially through the incremental
+    /// [`crate::phys::PhysEngine`] — each candidate warm-starts from the
+    /// previous one, which replaces the former per-candidate thread
+    /// fan-out (and is what keeps the phys telemetry deterministic).
     pub fn with_jobs(mut self, n: usize) -> Session {
         self.jobs = n.max(1);
         self
@@ -650,6 +681,7 @@ impl Session {
             cache: None,
             jobs: 1,
             executed: Vec::new(),
+            phys: Arc::new(Mutex::new(PhysContext::new())),
         })
     }
 
@@ -793,7 +825,19 @@ impl Session {
         let device = self.device();
         let mut g = self.graph.clone();
         let base_len = g.same_slot.len();
-        match pipeline_with_feedback(&mut g, &device, &est, &self.cfg.floorplan, 3) {
+        // The feedback loop runs through the session's shared PhysContext
+        // so its floorplan solves reuse (and feed) the incremental solver
+        // memo. It historically runs unbudgeted — the `--solver-budget`
+        // cap applies to the sweep's exact searches — so the shared
+        // context's budget is stashed for the duration of the call.
+        let phys = Arc::clone(&self.phys);
+        let mut phys = phys.lock().unwrap();
+        let saved_budget = phys.solver.budget.take();
+        let solved =
+            pipeline_with_feedback_in(&mut g, &device, &est, &self.cfg.floorplan, 3, &mut phys);
+        phys.solver.budget = saved_budget;
+        drop(phys);
+        match solved {
             Ok((fp, plan)) => {
                 let extra = g.same_slot[base_len..]
                     .iter()
@@ -826,19 +870,25 @@ impl Session {
         let device = self.device();
         let cfg = self.cfg.clone();
         let jobs = self.jobs;
+        let phys_arc = Arc::clone(&self.phys);
+        let mut phys = phys_arc.lock().unwrap();
+        phys.solver.jobs = jobs;
+        phys.solver.budget = cfg.floorplan.solver_budget;
+        // The context may be shared (SessionSet) or reused across calls,
+        // so this sweep's telemetry is isolated as a delta.
+        let solves0 = (phys.solver.solves, phys.solver.warm_hits, phys.solver.total_nodes);
+        let phys0 = phys.telemetry();
 
         // 1. Candidate generation, cached per (design, device, ratio);
-        //    duplicate marking shared with `floorplan::multi`. One
-        //    incremental SolverContext spans the whole sweep: every ratio
-        //    warm-starts from the nearest earlier successful plan (cached
-        //    plans included) and identical consecutive problems come out
-        //    of the context memo for free. Warm starts never change a
-        //    result (canonical extraction), so this chain stays
-        //    byte-identical to the cold per-point cache path used by
-        //    sharded bench workers.
-        let mut solver_ctx = SolverContext::new()
-            .with_jobs(jobs)
-            .with_budget(cfg.floorplan.solver_budget);
+        //    duplicate marking shared with `floorplan::multi`. The
+        //    context's incremental SolverContext spans the whole sweep:
+        //    every ratio warm-starts from the nearest earlier successful
+        //    plan (cached plans included) and identical consecutive
+        //    problems come out of the context memo for free. Warm starts
+        //    never change a result (canonical extraction), so this chain
+        //    stays byte-identical to the cold per-point cache path used
+        //    by sharded bench workers.
+        let solver_ctx = &mut phys.solver;
         let mut last: Option<Floorplan> = None;
         let mut points: Vec<SweepCandidate> =
             multi::sweep_points_with(&cfg.sweep.ratios, |ratio| {
@@ -850,7 +900,7 @@ impl Session {
                         &cfg.floorplan,
                         ratio,
                         last.as_ref(),
-                        &mut solver_ctx,
+                        &mut *solver_ctx,
                     ))
                     .clone(),
                     None => multi::solve_point_in(
@@ -860,7 +910,7 @@ impl Session {
                         &cfg.floorplan,
                         ratio,
                         last.as_ref(),
-                        &mut solver_ctx,
+                        &mut *solver_ctx,
                     ),
                 };
                 if let Some(p) = &plan {
@@ -877,27 +927,31 @@ impl Session {
             })
             .collect();
         let solver = SweepSolverTelemetry {
-            solves: solver_ctx.solves,
-            warm_hits: solver_ctx.warm_hits,
-            bb_nodes: solver_ctx.total_nodes,
+            solves: phys.solver.solves - solves0.0,
+            warm_hits: phys.solver.warm_hits - solves0.1,
+            bb_nodes: phys.solver.total_nodes - solves0.2,
         };
 
         // 2. Implement every unique successful candidate ("implement all
-        //    Pareto candidates in parallel, keep the best routed result").
-        //    Results come back in submission order regardless of workers.
+        //    Pareto candidates, keep the best routed result") through the
+        //    incremental PhysEngine, chained in ratio order: each
+        //    candidate's place→route→STA warm-starts from the previous
+        //    one's converged state. The chain replaces the former
+        //    per-candidate thread fan-out — warm evaluation of a
+        //    few-slot delta is cheaper than a cold evaluation per
+        //    worker, results are bit-identical to cold either way, and
+        //    the reuse telemetry below stays deterministic.
         let g = &self.design.graph;
-        let fmax: Vec<Option<f64>> =
-            super::batch::run_indexed(points.len(), jobs, |i| {
-                let p = &points[i];
-                if p.duplicate_of.is_some() {
-                    return None;
-                }
-                let fp = p.plan.as_ref()?;
-                evaluate_candidate(g, &device, &est, fp, &cfg, &RustStep)
-            });
-        for (p, f) in points.iter_mut().zip(fmax) {
-            p.fmax_mhz = f;
+        for i in 0..points.len() {
+            if points[i].duplicate_of.is_some() {
+                continue;
+            }
+            let Some(fp) = points[i].plan.clone() else { continue };
+            points[i].fmax_mhz =
+                evaluate_candidate_in(g, &device, &est, &fp, &cfg, &RustStep, &mut phys);
         }
+        let phys_t = phys.telemetry().delta_since(&phys0);
+        drop(phys);
 
         // 3. Select and adopt: the winner becomes the session's floorplan
         //    for the remaining stages (and the working graph is reset to
@@ -927,7 +981,7 @@ impl Session {
             let art = self.solve_feedback_floorplan();
             self.ctx.floorplan = Some(art);
         }
-        SweepArtifact { points, best, solver }
+        SweepArtifact { points, best, solver, phys: phys_t }
     }
 
     fn run_stage(&mut self, st: Stage, exec: &dyn StepExecutor) {
@@ -1013,33 +1067,39 @@ impl Session {
                         .floorplan
                         .as_ref()
                         .and_then(|f| f.floorplan.as_ref())
-                        .expect("constrained placement needs a floorplan");
-                    place_floorplan_guided(&self.graph, &device, fp, &self.cfg.analytical, exec)
-                        .0
+                        .expect("constrained placement needs a floorplan")
+                        .clone();
+                    let aug = self.augmented_estimates();
+                    let phys = Arc::clone(&self.phys);
+                    let mut phys = phys.lock().unwrap();
+                    phys.engine_for(&self.graph, &device, &aug).place_guided(
+                        &fp,
+                        &self.cfg.analytical,
+                        exec,
+                    )
                 };
                 self.ctx.placement = Some(placement);
             }
             Stage::Route => {
                 let device = self.device();
                 let aug = self.augmented_estimates();
-                let rep = route(
-                    &self.graph,
-                    &device,
-                    &aug,
-                    self.ctx.placement.as_ref().expect("place stage done"),
-                );
+                let phys = Arc::clone(&self.phys);
+                let mut phys = phys.lock().unwrap();
+                let rep = phys
+                    .engine_for(&self.graph, &device, &aug)
+                    .route_placed(self.ctx.placement.as_ref().expect("place stage done"));
                 self.ctx.route = Some(rep);
             }
             Stage::Sta => {
                 let device = self.device();
                 let aug = self.augmented_estimates();
-                let timing = analyze_with_areas(
-                    &self.graph,
-                    &device,
+                let phys = Arc::clone(&self.phys);
+                let mut phys = phys.lock().unwrap();
+                let timing = phys.engine_for(&self.graph, &device, &aug).sta_placed(
                     self.ctx.placement.as_ref().expect("place stage done"),
                     self.ctx.route.as_ref().expect("route stage done"),
                     &self.ctx.pipeline.as_ref().expect("pipeline stage done").stages,
-                    Some(&aug),
+                    true,
                 );
                 self.ctx.timing = Some(timing);
             }
@@ -1072,20 +1132,29 @@ impl Session {
 /// pipelining, guided placement, routing, STA — and report its Fmax.
 /// This is byte-for-byte the per-candidate evaluation Table 10 performs
 /// (post-route [`analyze`], no internal-path area correction). Exposed
-/// through [`super::evaluate_sweep_candidate`] so sharded sweep-point
-/// work units score candidates identically.
-pub(crate) fn evaluate_candidate(
+/// through [`super::evaluate_sweep_candidate_in`] so sharded sweep-point
+/// work units score candidates identically. With the deterministic Rust
+/// reference step the evaluation runs through the context's incremental
+/// [`crate::phys::PhysEngine`] (warm against whatever that engine
+/// evaluated last — bit-identical to cold either way); any other
+/// executor falls back to the literal classic chain.
+pub(crate) fn evaluate_candidate_in(
     g: &TaskGraph,
     device: &Device,
     estimates: &[TaskEstimate],
     fp: &Floorplan,
     cfg: &FlowConfig,
     exec: &dyn StepExecutor,
+    phys: &mut PhysContext,
 ) -> Option<f64> {
     let plan = pipeline_edges(g, device, fp, cfg.floorplan.stages_per_crossing);
+    let stages: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
+    if exec.name() == RustStep.name() {
+        let eng = phys.engine_for(g, device, estimates);
+        return eng.evaluate(fp, &stages, &cfg.analytical).timing.fmax_mhz;
+    }
     let (pl, _) = place_floorplan_guided(g, device, fp, &cfg.analytical, exec);
     let rep = route(g, device, estimates, &pl);
-    let stages: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
     analyze(g, device, &pl, &rep, &stages).fmax_mhz
 }
 
@@ -1127,6 +1196,30 @@ pub struct SessionSet {
 }
 
 impl SessionSet {
+    /// Group per-device sessions onto shared [`PhysContext`]s where the
+    /// device region trees coincide
+    /// ([`crate::device::Device::region_fingerprint`]): structurally
+    /// identical partitioning problems on different parts then hit one
+    /// shared proved-result memo (and one set of phys engines). Distinct
+    /// trees keep distinct contexts, so sharing can never mix
+    /// incompatible warm state — and even between coinciding trees, the
+    /// solver memo re-checks full structural problem equality before any
+    /// reuse.
+    fn share_phys_by_region(sessions: Vec<Session>) -> Vec<Session> {
+        let mut by_region: HashMap<u64, Arc<Mutex<PhysContext>>> = HashMap::new();
+        sessions
+            .into_iter()
+            .map(|s| {
+                let fp = s.design.device.device().region_fingerprint();
+                let ctx = by_region
+                    .entry(fp)
+                    .or_insert_with(|| Arc::new(Mutex::new(PhysContext::new())))
+                    .clone();
+                s.with_phys(ctx)
+            })
+            .collect()
+    }
+
     /// Fresh sessions for `design` retargeted to each device in order.
     pub fn for_devices(
         design: &Design,
@@ -1143,7 +1236,7 @@ impl SessionSet {
                 Session::new(d, variant, cfg.clone()).with_cache(cache.clone())
             })
             .collect();
-        SessionSet { sessions, cache }
+        SessionSet { sessions: Self::share_phys_by_region(sessions), cache }
     }
 
     /// Strict resume: every device must have a checkpoint in `workdir`,
@@ -1167,7 +1260,7 @@ impl SessionSet {
             let s = Session::resume(d, Some(variant), cfg.clone(), workdir)?;
             sessions.push(s.with_cache(cache.clone()));
         }
-        Ok(SessionSet { sessions, cache })
+        Ok(SessionSet { sessions: Self::share_phys_by_region(sessions), cache })
     }
 
     /// Lenient variant of [`SessionSet::resume`]: sessions with a
@@ -1194,7 +1287,7 @@ impl SessionSet {
             };
             sessions.push(s.with_cache(cache.clone()));
         }
-        Ok(SessionSet { sessions, cache })
+        Ok(SessionSet { sessions: Self::share_phys_by_region(sessions), cache })
     }
 
     /// Persist every session's context to `dir` after each `up_to` call.
@@ -1208,7 +1301,9 @@ impl SessionSet {
         self
     }
 
-    /// Sweep-candidate worker threads per session.
+    /// Solver branch-and-bound worker threads per session (see
+    /// [`Session::with_jobs`]; sweep candidates are implemented as a
+    /// sequential warm chain since the incremental engine landed).
     pub fn with_jobs(mut self, n: usize) -> SessionSet {
         self.sessions = self.sessions.into_iter().map(|s| s.with_jobs(n)).collect();
         self

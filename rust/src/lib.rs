@@ -24,7 +24,9 @@
 //! - **placement / routing / timing** simulators standing in for Vivado,
 //!   including an analytical placer whose inner loop is an AOT-compiled
 //!   JAX/Pallas artifact executed through PJRT — [`place`], [`route`],
-//!   [`timing`], [`runtime`];
+//!   [`timing`], [`runtime`] — unified behind the **incremental
+//!   physical-design engine** that re-evaluates floorplan/latency deltas
+//!   warm while staying bit-identical to cold — [`phys`];
 //! - device models for the Xilinx Alveo U250 / U280 — [`device`];
 //! - benchmark generators for all designs evaluated in the paper —
 //!   [`bench_suite`].
@@ -68,6 +70,7 @@ pub mod floorplan;
 pub mod pipeline;
 pub mod sim;
 pub mod place;
+pub mod phys;
 pub mod route;
 pub mod timing;
 pub mod runtime;

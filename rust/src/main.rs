@@ -433,6 +433,33 @@ fn print_sweep(ctx: &tapa::flow::SessionContext) {
             fmt_mhz(art.points[b].fmax_mhz)
         );
     }
+    // Incremental-engine accounting: how much of the candidate
+    // implementations the warm chain reused (surfaced in the
+    // phys-regression CI job's sweep-smoke step log, alongside the
+    // compile's wall-clock line).
+    let ph = &art.phys;
+    if ph.evals > 0 {
+        println!(
+            "  phys        : {} evals ({} warm), retimed {}/{} edges, \
+             placer steps {}/{}, moved {} insts",
+            ph.evals,
+            ph.warm_evals,
+            ph.retimed_edges,
+            ph.cold_retimed_edges,
+            ph.placer_steps,
+            ph.cold_placer_steps,
+            ph.moved_instances
+        );
+        if ph.redone_cold > 0 {
+            // Never expected: a warm evaluation diverged from its cold
+            // re-check and was discarded — an incremental-path bug.
+            eprintln!(
+                "  WARNING     : {} warm phys evaluation(s) diverged from cold \
+                 and were redone (incremental-engine bug — please report)",
+                ph.redone_cold
+            );
+        }
+    }
 }
 
 /// `tapa compile --device a,b[,…]`: one design compiled for several parts

@@ -1,0 +1,935 @@
+//! The [`PhysEngine`]: cold and incremental place → route → STA.
+//!
+//! The cold paths call the same primitives the standalone `place`,
+//! `route` and `timing` modules export, so a cold engine evaluation is
+//! bit-identical to the historical three-call chain. The incremental
+//! paths reuse the previous evaluation's state under exact-equality
+//! guards only — see the module docs in [`super`] for the determinism
+//! contract and `rust/tests/phys_api.rs` for the property test pinning
+//! incremental == cold.
+
+use crate::device::Device;
+use crate::floorplan::Floorplan;
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+use crate::place::analytical::{self, step_positions, AnalyticalParams, PlacerArrays};
+use crate::place::{place_floorplan_guided, PlaceStrategy, Placement, RustStep, StepExecutor};
+use crate::route::{self, RouteBits, RouteReport};
+use crate::timing::{self, TimingReport};
+
+use super::{PhysJitter, PhysTelemetry};
+
+/// One full physical-design evaluation of a floorplan + stage assignment.
+#[derive(Clone, Debug)]
+pub struct PhysEval {
+    pub placement: Placement,
+    pub route: RouteReport,
+    pub timing: TimingReport,
+}
+
+/// Everything the previous evaluation left behind that a delta
+/// re-evaluation can reuse.
+struct EvalState {
+    assignment: Vec<crate::device::SlotId>,
+    stages: Vec<u32>,
+    /// Placement knobs the trajectory was computed under (`lr`/`alpha`
+    /// bits + iteration cap) — a warm re-evaluation under different
+    /// knobs must run cold, or an unchanged floorplan would silently
+    /// reuse a trajectory the new knobs would not produce.
+    params_key: (u32, u32, usize),
+    /// Anchor positions of the last evaluation (change ⇔ slot change,
+    /// but kept explicitly so the dirty test is self-contained).
+    anchors: Vec<f32>,
+    /// Placement trajectory: `pos[k]` = positions after `k` gradient
+    /// steps (clamped); `pos[0]` is the spread initialization.
+    pos: Vec<Vec<f32>>,
+    /// Per step: each edge's wirelength term at that step's input
+    /// positions (`wl` is their in-order sum).
+    wl_terms: Vec<Vec<f32>>,
+    /// Gradient steps the descent ran before converging.
+    steps: usize,
+    /// Exact integer routing-demand state.
+    bits: RouteBits,
+    report: RouteReport,
+    edge_delay: Vec<f64>,
+    inst_delay: Vec<f64>,
+}
+
+/// Per-evaluation work accounting, applied to the telemetry once per
+/// evaluation (so the verify re-run cannot double-count).
+struct Counts {
+    moved: u64,
+    retimed: u64,
+    placer_steps: u64,
+    cold_placer_steps: u64,
+}
+
+/// The unified physical-design engine of one `(design, device,
+/// estimates)` triple. Owns the net model (graph edges, estimate areas,
+/// device view, adjacency) and the previous evaluation's state, and
+/// re-evaluates floorplan/latency deltas incrementally.
+pub struct PhysEngine {
+    graph: TaskGraph,
+    device: Device,
+    estimates: Vec<TaskEstimate>,
+    /// Instance → incident edge ids, ascending (the cold gradient
+    /// accumulates contributions in global edge order; ascending incident
+    /// order reproduces each accumulator's float-op sequence exactly).
+    adj: Vec<Vec<usize>>,
+    /// Instance → neighbor instances (dirty propagation stencil).
+    nbrs: Vec<Vec<usize>>,
+    /// Jitters of the engine's evaluation strategy (floorplan-guided),
+    /// derived once — the single site `route` and `timing` factors come
+    /// from inside the engine.
+    jitter: PhysJitter,
+    verify: bool,
+    state: Option<EvalState>,
+    pub telemetry: PhysTelemetry,
+}
+
+impl PhysEngine {
+    pub(super) fn new(
+        g: &TaskGraph,
+        device: &Device,
+        estimates: &[TaskEstimate],
+        verify: bool,
+    ) -> PhysEngine {
+        let n = g.num_insts();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut nbrs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (e, edge) in g.edges.iter().enumerate() {
+            adj[edge.producer.0].push(e);
+            if edge.consumer != edge.producer {
+                adj[edge.consumer.0].push(e);
+            }
+            nbrs[edge.producer.0].push(edge.consumer.0);
+            nbrs[edge.consumer.0].push(edge.producer.0);
+        }
+        PhysEngine {
+            jitter: PhysJitter::for_design(&g.name, PlaceStrategy::FloorplanGuided),
+            graph: g.clone(),
+            device: device.clone(),
+            estimates: estimates.to_vec(),
+            adj,
+            nbrs,
+            verify,
+            state: None,
+            telemetry: PhysTelemetry::default(),
+        }
+    }
+
+    /// Structural identity check backing [`super::PhysContext::engine_for`]'s
+    /// collision guard: hash-key equality alone never hands back another
+    /// triple's warm state.
+    pub(super) fn matches(
+        &self,
+        g: &TaskGraph,
+        device: &Device,
+        estimates: &[TaskEstimate],
+    ) -> bool {
+        self.graph.name == g.name
+            && self.graph.num_insts() == g.num_insts()
+            && self.graph.num_edges() == g.num_edges()
+            && self
+                .graph
+                .edges
+                .iter()
+                .zip(&g.edges)
+                .all(|(a, b)| {
+                    a.producer == b.producer
+                        && a.consumer == b.consumer
+                        && a.width_bits == b.width_bits
+                })
+            && self.device.name == device.name
+            && self.device.region_fingerprint() == device.region_fingerprint()
+            && self.estimates.len() == estimates.len()
+            && self
+                .estimates
+                .iter()
+                .zip(estimates)
+                .all(|(a, b)| a.area == b.area)
+    }
+
+    /// Re-run every warm evaluation cold and keep the cold result on any
+    /// divergence (the PR-4 "redone cold" discipline, applied to physical
+    /// design). Also enabled context-wide by `TAPA_PHYS_VERIFY=1`.
+    pub fn set_verify(&mut self, on: bool) {
+        self.verify = on;
+    }
+
+    /// Drop the previous evaluation's state; the next evaluation runs
+    /// cold.
+    pub fn reset(&mut self) {
+        self.state = None;
+    }
+
+    /// Evaluate one floorplan + per-edge stage assignment end to end:
+    /// floorplan-guided analytical placement, congestion-aware routing,
+    /// post-route STA (the §6.3 candidate scoring — plain
+    /// [`crate::timing::analyze`] semantics, no task-area correction).
+    /// Incremental against the previous evaluation when one exists.
+    pub fn evaluate(
+        &mut self,
+        fp: &Floorplan,
+        stages: &[u32],
+        params: &AnalyticalParams,
+    ) -> PhysEval {
+        let n = self.graph.num_insts();
+        let ne = self.graph.num_edges();
+        assert_eq!(fp.assignment.len(), n, "floorplan does not match the engine's design");
+        assert_eq!(stages.len(), ne, "stage vector does not match the engine's design");
+
+        self.telemetry.evals += 1;
+        self.telemetry.cold_retimed_edges += ne as u64;
+        let prev = self
+            .state
+            .take()
+            // Warm state is only valid under the same placement knobs.
+            .filter(|p| p.params_key == params_key(params));
+        let (state, eval, counts) = match prev {
+            Some(prev) => {
+                self.telemetry.warm_evals += 1;
+                let (st, ev, c) = self.eval_warm(&prev, fp, stages, params);
+                if self.verify {
+                    let (cst, cev, cc) = self.eval_cold(fp, stages, params);
+                    if !same_eval(&ev, &cev) {
+                        // Keep the cold result AND the cold accounting:
+                        // the warm path's work was thrown away, so its
+                        // counts must not describe the checkpointed eval.
+                        // Loudly: a divergence is an incremental-path bug
+                        // report, not something to bury in a counter.
+                        eprintln!(
+                            "warning: phys warm evaluation of `{}` diverged from \
+                             cold; cold result kept (redone_cold)",
+                            self.graph.name
+                        );
+                        self.telemetry.redone_cold += 1;
+                        self.telemetry.warm_evals -= 1;
+                        (cst, cev, cc)
+                    } else {
+                        (st, ev, c)
+                    }
+                } else {
+                    (st, ev, c)
+                }
+            }
+            None => self.eval_cold(fp, stages, params),
+        };
+        self.telemetry.moved_instances += counts.moved;
+        self.telemetry.retimed_edges += counts.retimed;
+        self.telemetry.placer_steps += counts.placer_steps;
+        self.telemetry.cold_placer_steps += counts.cold_placer_steps;
+        self.state = Some(state);
+        eval
+    }
+
+    /// [`PhysEngine::evaluate`] with the warm state discarded first — the
+    /// cold reference the property tests compare against.
+    pub fn evaluate_cold(
+        &mut self,
+        fp: &Floorplan,
+        stages: &[u32],
+        params: &AnalyticalParams,
+    ) -> PhysEval {
+        self.reset();
+        self.evaluate(fp, stages, params)
+    }
+
+    /// Floorplan-guided placement alone (the session `Place` stage). With
+    /// the deterministic Rust reference step the engine's own descent
+    /// runs (identical math, no congestion-map cost); any other executor
+    /// (the PJRT artifact) falls back to the classic loop — its step math
+    /// lives outside the engine, so trajectories cannot be reused.
+    pub fn place_guided(
+        &self,
+        fp: &Floorplan,
+        params: &AnalyticalParams,
+        exec: &dyn StepExecutor,
+    ) -> Placement {
+        if exec.name() == RustStep.name() {
+            let (hist, _, _, _) = self.cold_place(fp, params);
+            let last = hist.last().expect("descent ran");
+            Placement {
+                strategy: PlaceStrategy::FloorplanGuided,
+                slot: fp.assignment.clone(),
+                xy: final_xy(last, self.graph.num_insts()),
+            }
+        } else {
+            place_floorplan_guided(&self.graph, &self.device, fp, params, exec).0
+        }
+    }
+
+    /// Route an existing placement (the session `Route` stage; handles
+    /// both strategies, including the baseline packing pressure).
+    pub fn route_placed(&self, placement: &Placement) -> RouteReport {
+        let j = PhysJitter::for_design(&self.graph.name, placement.strategy);
+        route::route_with_jitter(&self.graph, &self.device, &self.estimates, placement, j.route)
+    }
+
+    /// Post-route STA of an existing placement (the session `Sta` stage).
+    /// `with_areas` selects the task-size-dependent internal-path model
+    /// ([`crate::timing::analyze_with_areas`] vs plain `analyze`).
+    pub fn sta_placed(
+        &self,
+        placement: &Placement,
+        route: &RouteReport,
+        stages: &[u32],
+        with_areas: bool,
+    ) -> TimingReport {
+        let j = PhysJitter::for_design(&self.graph.name, placement.strategy);
+        let est = if with_areas { Some(self.estimates.as_slice()) } else { None };
+        timing::analyze_with_areas_jittered(
+            &self.graph,
+            &self.device,
+            placement,
+            route,
+            stages,
+            est,
+            j.sta,
+        )
+    }
+
+    // -----------------------------------------------------------------
+    // Cold evaluation
+    // -----------------------------------------------------------------
+
+    fn eval_cold(
+        &self,
+        fp: &Floorplan,
+        stages: &[u32],
+        params: &AnalyticalParams,
+    ) -> (EvalState, PhysEval, Counts) {
+        let n = self.graph.num_insts();
+        let ne = self.graph.num_edges();
+        let (hist, wl_terms, steps, anchors) = self.cold_place(fp, params);
+        let placement = Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: fp.assignment.clone(),
+            xy: final_xy(hist.last().expect("descent ran"), n),
+        };
+        let bits =
+            route::accumulate_bits(&self.graph, &self.device, &self.estimates, &placement.slot);
+        let report = route::derive_report(
+            &self.device,
+            &bits,
+            PlaceStrategy::FloorplanGuided,
+            self.jitter.route,
+        );
+        let edge_delay: Vec<f64> = (0..ne)
+            .map(|ei| {
+                timing::edge_path_delay(&self.graph, &self.device, &placement, &report, stages, ei)
+            })
+            .collect();
+        let inst_delay: Vec<f64> = (0..n)
+            .map(|v| timing::task_delay(&self.device, &placement, &report, None, v))
+            .collect();
+        let tr = select_critical(&edge_delay, &inst_delay, report.failed(), self.jitter.sta);
+        let counts = Counts {
+            moved: n as u64,
+            retimed: ne as u64,
+            placer_steps: steps as u64 * n as u64,
+            cold_placer_steps: steps as u64 * n as u64,
+        };
+        let eval = PhysEval { placement, route: report.clone(), timing: tr };
+        let state = EvalState {
+            assignment: fp.assignment.clone(),
+            stages: stages.to_vec(),
+            params_key: params_key(params),
+            anchors,
+            pos: hist,
+            wl_terms,
+            steps,
+            bits,
+            report,
+            edge_delay,
+            inst_delay,
+        };
+        (state, eval, counts)
+    }
+
+    /// The cold analytical descent: [`place_floorplan_guided`]'s control
+    /// flow verbatim on [`step_positions`] (the Rust reference step minus
+    /// the congestion map, which the flow discards), recording the
+    /// trajectory and per-edge wirelength terms future warm evaluations
+    /// reuse. Returns `(positions after each step, per-step edge terms,
+    /// steps run, anchors)`.
+    fn cold_place(
+        &self,
+        fp: &Floorplan,
+        params: &AnalyticalParams,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, usize, Vec<f32>) {
+        let mut arrays = analytical::build_arrays(&self.graph, &self.device, fp);
+        let anchors = arrays.anchor.clone();
+        let mut hist = vec![arrays.pos.clone()];
+        let mut terms_hist: Vec<Vec<f32>> = Vec::new();
+        let mut last_wl = f32::INFINITY;
+        let mut steps = 0usize;
+        for _ in 0..params.iters {
+            let terms = edge_terms(&arrays);
+            let (new_pos, wl) = step_positions(&arrays, params);
+            arrays.pos = new_pos;
+            clamp_into_slots(&mut arrays.pos, &self.device, fp, arrays.num_v);
+            hist.push(arrays.pos.clone());
+            terms_hist.push(terms);
+            steps += 1;
+            // Early exit on convergence (identical test to the classic
+            // loop, quirks included, so trajectories stay bit-equal).
+            if (last_wl - wl).abs() <= 1e-3 * last_wl.abs() {
+                break;
+            }
+            last_wl = wl;
+        }
+        (hist, terms_hist, steps, anchors)
+    }
+
+    // -----------------------------------------------------------------
+    // Incremental evaluation
+    // -----------------------------------------------------------------
+
+    fn eval_warm(
+        &self,
+        prev: &EvalState,
+        fp: &Floorplan,
+        stages: &[u32],
+        params: &AnalyticalParams,
+    ) -> (EvalState, PhysEval, Counts) {
+        let n = self.graph.num_insts();
+        let ne = self.graph.num_edges();
+
+        // ---- placement: dirty-propagated trajectory reuse -------------
+        let arrays = analytical::build_arrays(&self.graph, &self.device, fp);
+        let anchors = arrays.anchor.clone();
+        // An instance is position-dirty at step 0 when its spread
+        // initialization moved (its slot changed, or a co-slotted
+        // instance joined/left); anchor-dirty instances diverge from the
+        // first update onward.
+        let mut pos_dirty = vec![false; n];
+        let mut anchor_dirty = vec![false; n];
+        for v in 0..n {
+            if arrays.pos[2 * v].to_bits() != prev.pos[0][2 * v].to_bits()
+                || arrays.pos[2 * v + 1].to_bits() != prev.pos[0][2 * v + 1].to_bits()
+            {
+                pos_dirty[v] = true;
+            }
+            if anchors[2 * v].to_bits() != prev.anchors[2 * v].to_bits()
+                || anchors[2 * v + 1].to_bits() != prev.anchors[2 * v + 1].to_bits()
+            {
+                anchor_dirty[v] = true;
+            }
+        }
+        let mut cur = arrays.pos.clone();
+        let mut hist = vec![cur.clone()];
+        let mut terms_hist: Vec<Vec<f32>> = Vec::new();
+        let mut last_wl = f32::INFINITY;
+        let mut steps = 0usize;
+        let mut placer_updates = 0u64;
+        let mut cold_updates = 0u64;
+        for it in 0..params.iters {
+            // A reference trajectory exists for this step only while the
+            // previous descent was still running; past its convergence
+            // point everything is recomputed.
+            let have_ref = it < prev.steps;
+            // Wirelength of this step, from the current positions: clean
+            // edges (neither endpoint position-dirty) reuse the recorded
+            // term; the in-order sum reproduces the cold accumulation.
+            let mut wl = 0.0f32;
+            let mut terms = vec![0.0f32; ne];
+            for e in 0..ne {
+                let w = arrays.weight[e];
+                if w == 0.0 {
+                    continue;
+                }
+                let i = arrays.pairs[2 * e] as usize;
+                let j = arrays.pairs[2 * e + 1] as usize;
+                let t = if have_ref && !pos_dirty[i] && !pos_dirty[j] {
+                    prev.wl_terms[it][e]
+                } else {
+                    let dx = cur[2 * i] - cur[2 * j];
+                    let dy = cur[2 * i + 1] - cur[2 * j + 1];
+                    w * (dx * dx + dy * dy)
+                };
+                terms[e] = t;
+                wl += t;
+            }
+            // Update set: an instance's step-`it` update diverges when it
+            // was position-dirty, its anchor changed, or any neighbor was
+            // position-dirty (the gradient stencil).
+            let mut upd = vec![false; n];
+            for v in 0..n {
+                if pos_dirty[v] || anchor_dirty[v] || !have_ref {
+                    upd[v] = true;
+                }
+            }
+            if have_ref {
+                for v in 0..n {
+                    if pos_dirty[v] {
+                        for &w in &self.nbrs[v] {
+                            upd[w] = true;
+                        }
+                    }
+                }
+            }
+            let mut next =
+                if have_ref { prev.pos[it + 1].clone() } else { cur.clone() };
+            for v in 0..n {
+                if !upd[v] {
+                    continue;
+                }
+                placer_updates += 1;
+                let (x, y) = self.update_instance(v, &cur, &anchors, &arrays, params);
+                let (row, col) = self.device.coords(fp.assignment[v]);
+                let m = analytical::CLAMP_MARGIN;
+                next[2 * v] = x.clamp(col as f32 + m, (col + 1) as f32 - m);
+                next[2 * v + 1] = y.clamp(row as f32 + m, (row + 1) as f32 - m);
+            }
+            cold_updates += n as u64;
+            cur = next;
+            hist.push(cur.clone());
+            terms_hist.push(terms);
+            steps += 1;
+            pos_dirty = upd;
+            if (last_wl - wl).abs() <= 1e-3 * last_wl.abs() {
+                break;
+            }
+            last_wl = wl;
+        }
+        let placement = Placement {
+            strategy: PlaceStrategy::FloorplanGuided,
+            slot: fp.assignment.clone(),
+            xy: final_xy(hist.last().expect("descent ran"), n),
+        };
+
+        // ---- route: exact integer deltas ------------------------------
+        let moved: Vec<usize> =
+            (0..n).filter(|&v| fp.assignment[v] != prev.assignment[v]).collect();
+        let mut bits = prev.bits.clone();
+        for &v in &moved {
+            let a = self.estimates[v].area;
+            bits.slot_area[prev.assignment[v].0] = bits.slot_area[prev.assignment[v].0] - a;
+            bits.slot_area[fp.assignment[v].0] += a;
+        }
+        let mut edge_touched = vec![false; ne];
+        for &v in &moved {
+            for &e in &self.adj[v] {
+                edge_touched[e] = true;
+            }
+        }
+        for (ei, &touched) in edge_touched.iter().enumerate() {
+            if !touched {
+                continue;
+            }
+            let e = &self.graph.edges[ei];
+            let w = e.width_bits as u64;
+            route::apply_edge_bits(
+                &mut bits,
+                &self.device,
+                prev.assignment[e.producer.0],
+                prev.assignment[e.consumer.0],
+                w,
+                false,
+            );
+            route::apply_edge_bits(
+                &mut bits,
+                &self.device,
+                fp.assignment[e.producer.0],
+                fp.assignment[e.consumer.0],
+                w,
+                true,
+            );
+        }
+        let report = route::derive_report(
+            &self.device,
+            &bits,
+            PlaceStrategy::FloorplanGuided,
+            self.jitter.route,
+        );
+
+        // ---- STA: re-time only what changed ---------------------------
+        let final_pos = hist.last().expect("descent ran");
+        let prev_final = prev.pos.last().expect("previous descent ran");
+        let xy_moved: Vec<bool> = (0..n)
+            .map(|v| {
+                fp.assignment[v] != prev.assignment[v]
+                    || final_pos[2 * v].to_bits() != prev_final[2 * v].to_bits()
+                    || final_pos[2 * v + 1].to_bits() != prev_final[2 * v + 1].to_bits()
+            })
+            .collect();
+        let cong_changed: Vec<bool> = report
+            .slot_congestion
+            .iter()
+            .zip(&prev.report.slot_congestion)
+            .map(|(a, b)| a.to_bits() != b.to_bits())
+            .collect();
+        let mut retimed = 0u64;
+        let edge_delay: Vec<f64> = (0..ne)
+            .map(|ei| {
+                let e = &self.graph.edges[ei];
+                let (pi, ci) = (e.producer.0, e.consumer.0);
+                let dirty = stages[ei] != prev.stages[ei]
+                    || xy_moved[pi]
+                    || xy_moved[ci]
+                    || cong_changed[fp.assignment[pi].0]
+                    || cong_changed[fp.assignment[ci].0];
+                if dirty {
+                    retimed += 1;
+                    timing::edge_path_delay(
+                        &self.graph,
+                        &self.device,
+                        &placement,
+                        &report,
+                        stages,
+                        ei,
+                    )
+                } else {
+                    prev.edge_delay[ei]
+                }
+            })
+            .collect();
+        let inst_delay: Vec<f64> = (0..n)
+            .map(|v| {
+                let dirty =
+                    fp.assignment[v] != prev.assignment[v] || cong_changed[fp.assignment[v].0];
+                if dirty {
+                    timing::task_delay(&self.device, &placement, &report, None, v)
+                } else {
+                    prev.inst_delay[v]
+                }
+            })
+            .collect();
+        let tr = select_critical(&edge_delay, &inst_delay, report.failed(), self.jitter.sta);
+
+        let counts = Counts {
+            moved: moved.len() as u64,
+            retimed,
+            placer_steps: placer_updates,
+            cold_placer_steps: cold_updates,
+        };
+        let eval = PhysEval { placement, route: report.clone(), timing: tr };
+        let state = EvalState {
+            assignment: fp.assignment.clone(),
+            stages: stages.to_vec(),
+            params_key: params_key(params),
+            anchors,
+            pos: hist,
+            wl_terms: terms_hist,
+            steps,
+            bits,
+            report,
+            edge_delay,
+            inst_delay,
+        };
+        (state, eval, counts)
+    }
+
+    /// One instance's gradient-descent update (sans clamp) — the
+    /// per-instance factoring of [`step_positions`]: contributions
+    /// accumulate in ascending incident-edge order, reproducing the cold
+    /// pass's float-op sequence per accumulator exactly.
+    fn update_instance(
+        &self,
+        v: usize,
+        cur: &[f32],
+        anchors: &[f32],
+        arrays: &PlacerArrays,
+        p: &AnalyticalParams,
+    ) -> (f32, f32) {
+        let mut gx = 0.0f32;
+        let mut gy = 0.0f32;
+        for &e in &self.adj[v] {
+            let w = arrays.weight[e];
+            if w == 0.0 {
+                continue;
+            }
+            let i = arrays.pairs[2 * e] as usize;
+            let j = arrays.pairs[2 * e + 1] as usize;
+            let dx = cur[2 * i] - cur[2 * j];
+            let dy = cur[2 * i + 1] - cur[2 * j + 1];
+            if i == v {
+                gx += 2.0 * w * dx;
+                gy += 2.0 * w * dy;
+            }
+            if j == v {
+                gx -= 2.0 * w * dx;
+                gy -= 2.0 * w * dy;
+            }
+        }
+        let k = 2 * v;
+        let gxt = gx + 2.0 * p.alpha * (cur[k] - anchors[k]);
+        let x = cur[k] - p.lr * gxt;
+        let gyt = gy + 2.0 * p.alpha * (cur[k + 1] - anchors[k + 1]);
+        let y = cur[k + 1] - p.lr * gyt;
+        (x, y)
+    }
+}
+
+/// Bitwise identity of the placement knobs a trajectory depends on.
+fn params_key(p: &AnalyticalParams) -> (u32, u32, usize) {
+    (p.lr.to_bits(), p.alpha.to_bits(), p.iters)
+}
+
+/// Per-edge wirelength terms at the given positions — the summands of
+/// [`step_positions`]'s `wl`, recorded so warm steps can reuse clean
+/// edges' terms.
+fn edge_terms(a: &PlacerArrays) -> Vec<f32> {
+    let mut t = vec![0.0f32; a.num_e];
+    for e in 0..a.num_e {
+        let w = a.weight[e];
+        if w == 0.0 {
+            continue;
+        }
+        let i = a.pairs[2 * e] as usize;
+        let j = a.pairs[2 * e + 1] as usize;
+        let dx = a.pos[2 * i] - a.pos[2 * j];
+        let dy = a.pos[2 * i + 1] - a.pos[2 * j + 1];
+        t[e] = w * (dx * dx + dy * dy);
+    }
+    t
+}
+
+/// Clamp live instances into their floorplan slots (identical to the
+/// classic loop's in-place clamp).
+fn clamp_into_slots(pos: &mut [f32], device: &Device, fp: &Floorplan, num_v: usize) {
+    for v in 0..num_v {
+        let (row, col) = device.coords(fp.assignment[v]);
+        let m = analytical::CLAMP_MARGIN;
+        pos[2 * v] = pos[2 * v].clamp(col as f32 + m, (col + 1) as f32 - m);
+        pos[2 * v + 1] = pos[2 * v + 1].clamp(row as f32 + m, (row + 1) as f32 - m);
+    }
+}
+
+fn final_xy(pos: &[f32], n: usize) -> Vec<(f32, f32)> {
+    (0..n).map(|v| (pos[2 * v], pos[2 * v + 1])).collect()
+}
+
+/// The critical-path selection of [`crate::timing::analyze_with_areas`],
+/// over precomputed per-edge and per-instance delays (same comparison
+/// sequence, so cached-and-recomputed mixes select identically).
+fn select_critical(
+    edge_delay: &[f64],
+    inst_delay: &[f64],
+    route_failed: bool,
+    jitter: f64,
+) -> TimingReport {
+    let mut critical_ns = 0.0f64;
+    let mut critical_edge = None;
+    for (ei, &d) in edge_delay.iter().enumerate() {
+        if d > critical_ns {
+            critical_ns = d;
+            critical_edge = Some(ei);
+        }
+    }
+    for &d in inst_delay {
+        if d > critical_ns {
+            critical_ns = d;
+            critical_edge = None;
+        }
+    }
+    timing::finish_report(critical_ns, critical_edge, route_failed, jitter)
+}
+
+/// Bitwise equality of two evaluations (the verify re-check).
+fn same_eval(a: &PhysEval, b: &PhysEval) -> bool {
+    let xy_eq = a.placement.xy.len() == b.placement.xy.len()
+        && a
+            .placement
+            .xy
+            .iter()
+            .zip(&b.placement.xy)
+            .all(|(p, q)| p.0.to_bits() == q.0.to_bits() && p.1.to_bits() == q.1.to_bits());
+    let cong_eq = a.route.slot_congestion.len() == b.route.slot_congestion.len()
+        && a
+            .route
+            .slot_congestion
+            .iter()
+            .zip(&b.route.slot_congestion)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.route
+            .boundary_util
+            .iter()
+            .zip(&b.route.boundary_util)
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.route.max_congestion.to_bits() == b.route.max_congestion.to_bits()
+        && a.route.max_boundary.to_bits() == b.route.max_boundary.to_bits()
+        && a.route.placement_failed == b.route.placement_failed
+        && a.route.routing_failed == b.route.routing_failed;
+    let fmax_eq = match (a.timing.fmax_mhz, b.timing.fmax_mhz) {
+        (Some(x), Some(y)) => x.to_bits() == y.to_bits(),
+        (None, None) => true,
+        _ => false,
+    };
+    a.placement.slot == b.placement.slot
+        && xy_eq
+        && cong_eq
+        && fmax_eq
+        && a.timing.critical_ns.to_bits() == b.timing.critical_ns.to_bits()
+        && a.timing.critical_edge == b.timing.critical_edge
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::floorplan::{floorplan, FloorplanConfig};
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+    use crate::phys::PhysContext;
+    use crate::route::route;
+    use crate::timing::analyze;
+
+    fn chain(n: usize) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("phys_engine_chain");
+        let p = b.proto(
+            "K",
+            ComputeSpec {
+                mac_ops: 25,
+                alu_ops: 200,
+                bram_bytes: 48 * 1024,
+                uram_bytes: 0,
+                trip_count: 256,
+                ii: 1,
+                pipeline_depth: 6,
+            },
+        );
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn cold_evaluation_matches_the_classic_chain() {
+        let g = chain(10);
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let stages: Vec<u32> = vec![2; g.num_edges()];
+        let params = AnalyticalParams::default();
+
+        let (pl, _) = place_floorplan_guided(&g, &d, &fp, &params, &RustStep);
+        let rep = route(&g, &d, &est, &pl);
+        let want = analyze(&g, &d, &pl, &rep, &stages);
+
+        let mut ctx = PhysContext::new();
+        let got = ctx.engine_for(&g, &d, &est).evaluate(&fp, &stages, &params);
+        assert_eq!(got.placement.slot, pl.slot);
+        for (a, b) in got.placement.xy.iter().zip(&pl.xy) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        for (a, b) in got.route.slot_congestion.iter().zip(&rep.slot_congestion) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(got.route.max_congestion.to_bits(), rep.max_congestion.to_bits());
+        assert_eq!(got.timing.critical_ns.to_bits(), want.critical_ns.to_bits());
+        assert_eq!(got.timing.critical_edge, want.critical_edge);
+        assert_eq!(
+            got.timing.fmax_mhz.map(f64::to_bits),
+            want.fmax_mhz.map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn warm_evaluation_is_bit_identical_to_cold_and_cheaper() {
+        let g = chain(12);
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let stages: Vec<u32> = vec![2; g.num_edges()];
+        let params = AnalyticalParams::default();
+
+        // Perturb one instance into a different slot.
+        let mut fp2 = fp.clone();
+        let target = (fp2.assignment[0].0 + 1) % d.num_slots();
+        fp2.assignment[0] = crate::device::SlotId(target);
+
+        let mut warm_ctx = PhysContext::new();
+        {
+            let eng = warm_ctx.engine_for(&g, &d, &est);
+            eng.evaluate(&fp, &stages, &params);
+            let warm = eng.evaluate(&fp2, &stages, &params);
+            let mut cold_ctx = PhysContext::new();
+            let cold = cold_ctx.engine_for(&g, &d, &est).evaluate(&fp2, &stages, &params);
+            assert!(same_eval(&warm, &cold), "warm must reproduce cold bit for bit");
+        }
+        let t = warm_ctx.telemetry();
+        assert_eq!(t.evals, 2);
+        assert_eq!(t.warm_evals, 1);
+        assert_eq!(t.redone_cold, 0);
+        assert!(
+            t.placer_steps < t.cold_placer_steps,
+            "warm descent must touch fewer instances: {} vs {}",
+            t.placer_steps,
+            t.cold_placer_steps
+        );
+        assert!(
+            t.retimed_edges < t.cold_retimed_edges,
+            "warm STA must re-time fewer edges: {} vs {}",
+            t.retimed_edges,
+            t.cold_retimed_edges
+        );
+    }
+
+    #[test]
+    fn stage_only_delta_retimes_only_changed_edges() {
+        let g = chain(10);
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let params = AnalyticalParams::default();
+        let stages: Vec<u32> = vec![2; g.num_edges()];
+        let mut stages2 = stages.clone();
+        stages2[0] = 4;
+
+        let mut ctx = PhysContext::new();
+        let eng = ctx.engine_for(&g, &d, &est);
+        eng.evaluate(&fp, &stages, &params);
+        let before = eng.telemetry;
+        let warm = eng.evaluate(&fp, &stages2, &params);
+        let delta = eng.telemetry.delta_since(&before);
+        assert_eq!(delta.moved_instances, 0, "no instance moved");
+        assert_eq!(delta.retimed_edges, 1, "exactly the changed edge re-times");
+        let mut cold_ctx = PhysContext::new();
+        let cold = cold_ctx.engine_for(&g, &d, &est).evaluate(&fp, &stages2, &params);
+        assert!(same_eval(&warm, &cold));
+    }
+
+    #[test]
+    fn changed_placement_knobs_invalidate_warm_state() {
+        let g = chain(8);
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let stages: Vec<u32> = vec![2; g.num_edges()];
+        let params = AnalyticalParams::default();
+        let hotter = AnalyticalParams { lr: params.lr * 2.0, ..params };
+
+        let mut ctx = PhysContext::new();
+        let eng = ctx.engine_for(&g, &d, &est);
+        eng.evaluate(&fp, &stages, &params);
+        // Same floorplan, different knobs: the stored trajectory is
+        // invalid and the evaluation must run cold.
+        let warm = eng.evaluate(&fp, &stages, &hotter);
+        assert_eq!(eng.telemetry.warm_evals, 0, "knob change must force a cold run");
+        let mut cold_ctx = PhysContext::new();
+        let cold = cold_ctx.engine_for(&g, &d, &est).evaluate(&fp, &stages, &hotter);
+        assert!(same_eval(&warm, &cold));
+    }
+
+    #[test]
+    fn place_guided_matches_classic_loop() {
+        let g = chain(8);
+        let d = u250();
+        let est = estimate_all(&g);
+        let fp = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+        let params = AnalyticalParams::default();
+        let (want, _) = place_floorplan_guided(&g, &d, &fp, &params, &RustStep);
+        let mut ctx = PhysContext::new();
+        let got = ctx.engine_for(&g, &d, &est).place_guided(&fp, &params, &RustStep);
+        assert_eq!(got.slot, want.slot);
+        for (a, b) in got.xy.iter().zip(&want.xy) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+    }
+}

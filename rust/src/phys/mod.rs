@@ -1,0 +1,309 @@
+//! Unified incremental physical-design engine — one owner for the
+//! place → route → STA chain (§5–§6, Fig. 3).
+//!
+//! ## Why a layer of its own
+//!
+//! The paper's core loop — floorplan-aware pipelining (§5) validated by
+//! post-placement timing, and the §6.3 multi-floorplan sweep scored by
+//! post-route Fmax — repeatedly implements *near-identical* physical
+//! designs: consecutive sweep candidates differ in a handful of slot
+//! assignments, and §5.2 feedback rounds differ in a few edge stage
+//! counts. This crate used to re-run the full chain from scratch through
+//! three parallel call paths (`Stage::Place/Route/Sta` in
+//! `flow::session`, `flow::evaluate_sweep_candidate`, and the test-side
+//! chains); design-space exploration frameworks built on TAPA (TAPA-CS,
+//! the holistic co-optimization line) identify exactly this repeated
+//! physical estimation as the scaling bottleneck.
+//!
+//! [`PhysEngine`] collapses the chain behind one reusable *net model*
+//! built once per `(design, device, estimates)` — instance areas,
+//! pipelined nets with stage counts, slot/xy placement state, per-slot
+//! routing demand and per-SLR-boundary crossing bits — and re-evaluates
+//! it by **delta** when only the floorplan assignment or pipeline
+//! latencies change:
+//!
+//! * the analytical placer warm-starts from the previous candidate's
+//!   converged trajectory, recomputing only instances whose anchors or
+//!   neighborhoods changed (exact dirty propagation over the gradient
+//!   stencil, so the result is bit-identical to a cold descent);
+//! * route congestion is updated on the exact integer demand state
+//!   ([`crate::route::RouteBits`]): only slots and boundaries spanned by
+//!   a moved instance's nets change, and integer deltas reproduce a cold
+//!   accumulation bit for bit;
+//! * STA re-times only edges whose endpoints moved, whose stage counts
+//!   changed, or whose endpoint-slot congestion changed — every other
+//!   edge reuses its cached delay.
+//!
+//! ## Fig. 3 / paper terminology map
+//!
+//! | paper concept | engine object |
+//! |---|---|
+//! | baseline pack (Fig. 3 "whole design in 1–2 dies") | [`crate::place::place_baseline`], routed via [`PhysEngine::route_placed`] with the `BaselinePack` pressure surcharge |
+//! | floorplan-guided placement (Fig. 3 right) | [`PhysEngine::place_guided`] / the placement half of [`PhysEngine::evaluate`] |
+//! | SLL crossings (§1, limited die-boundary wires) | `RouteBits::boundary_bits` vs `Device::sll_capacity_bits` |
+//! | congestion multiplier (§2.4 local congestion) | `RouteReport::slot_congestion` feeding [`crate::timing::model::congestion_factor`] |
+//! | §6.3 sweep candidate scoring (Table 10) | [`PhysEngine::evaluate`] — pipeline → place → route → STA, post-route [`crate::timing::analyze`] semantics |
+//!
+//! ## Determinism contract (PR-4 discipline)
+//!
+//! Warm starts never change a result. The incremental paths are
+//! *exactly* equal to a cold evaluation by construction (integer deltas;
+//! bit-faithful dirty propagation; cached f64 delays reused only when
+//! every input is bit-identical), property-tested in
+//! `rust/tests/phys_api.rs`, and guarded at runtime: with
+//! `TAPA_PHYS_VERIFY=1` (or [`PhysEngine::set_verify`]) every warm
+//! evaluation is re-run cold and any divergence is discarded in favor of
+//! the cold result (counted in [`PhysTelemetry::redone_cold`]). Sweep
+//! artifacts and bench CSVs are therefore byte-identical for any
+//! candidate order, `--jobs` count, and warm/cold mix.
+//!
+//! ## PhysContext
+//!
+//! [`PhysContext`] is the incremental state threaded through the flow —
+//! `Stage::Sweep`, `floorplan::multi::sweep_points_in`,
+//! `pipeline::pipeline_with_feedback_in` and the manifest unit executor.
+//! It carries the (M)ILP [`SolverContext`] (proved-result memo + warm
+//! hints, PR 4) *and* the per-design [`PhysEngine`]s, so one context
+//! warm-starts both the floorplan solves and the physical evaluations.
+//! [`crate::flow::SessionSet`] shares one context across devices whose
+//! [`crate::device::Device::region_fingerprint`]s coincide, so
+//! structurally identical partitioning problems on different parts hit
+//! one shared memo.
+
+mod engine;
+
+pub use engine::{PhysEngine, PhysEval};
+
+use std::collections::HashMap;
+
+use crate::device::Device;
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+use crate::place::PlaceStrategy;
+use crate::route::route_jitter;
+use crate::solver::SolverContext;
+
+/// The deterministic P&R jitter pair of one `(design, strategy)` — the
+/// router's and the STA's factors, derived once here and passed down.
+/// Before this module, `timing` silently re-derived its salt from
+/// `placement.strategy as u8` behind `route`'s back; this is now the
+/// single derivation site.
+#[derive(Clone, Copy, Debug)]
+pub struct PhysJitter {
+    /// Router congestion/boundary jitter (±6%).
+    pub route: f64,
+    /// STA critical-path jitter (independent salt, same scheme).
+    pub sta: f64,
+}
+
+impl PhysJitter {
+    /// Jitters of a design under a placement strategy (the historical
+    /// salts: `strategy` for the router, `0x7 ^ strategy` for STA).
+    pub fn for_design(name: &str, strategy: PlaceStrategy) -> PhysJitter {
+        PhysJitter {
+            route: route_jitter(name, strategy as u8),
+            sta: route_jitter(name, 0x7 ^ strategy as u8),
+        }
+    }
+}
+
+/// Deterministic accounting of the engine's incremental work — the
+/// "how much did warm starts save" telemetry surfaced in
+/// [`crate::flow::SweepArtifact`] and the bench logs. Every field
+/// reproduces across machines and `--jobs` counts (sweep evaluations are
+/// chained in ratio order), so it can ride in checkpoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhysTelemetry {
+    /// Full place→route→STA evaluations performed.
+    pub evals: u64,
+    /// Evaluations served by the incremental (warm) path.
+    pub warm_evals: u64,
+    /// Instances whose slot assignment changed across evaluations (a cold
+    /// evaluation counts every instance).
+    pub moved_instances: u64,
+    /// Edges actually re-timed by STA.
+    pub retimed_edges: u64,
+    /// Edges a cold STA would have timed (`evals × num_edges`) — the
+    /// baseline `retimed_edges` is measured against.
+    pub cold_retimed_edges: u64,
+    /// Per-instance placement updates actually computed.
+    pub placer_steps: u64,
+    /// Per-instance updates a cold descent would have computed.
+    pub cold_placer_steps: u64,
+    /// Warm evaluations that failed the verify re-check and were replaced
+    /// by their cold re-run (0 unless verification is enabled; any
+    /// non-zero value is a bug report against the incremental paths).
+    pub redone_cold: u64,
+}
+
+impl PhysTelemetry {
+    /// Field-wise sum (aggregation across engines).
+    pub fn accumulate(&mut self, o: &PhysTelemetry) {
+        self.evals += o.evals;
+        self.warm_evals += o.warm_evals;
+        self.moved_instances += o.moved_instances;
+        self.retimed_edges += o.retimed_edges;
+        self.cold_retimed_edges += o.cold_retimed_edges;
+        self.placer_steps += o.placer_steps;
+        self.cold_placer_steps += o.cold_placer_steps;
+        self.redone_cold += o.redone_cold;
+    }
+
+    /// Field-wise difference against an earlier snapshot — how one
+    /// bounded phase (e.g. one session's sweep) isolates its own
+    /// accounting on a shared, long-lived context.
+    pub fn delta_since(&self, earlier: &PhysTelemetry) -> PhysTelemetry {
+        PhysTelemetry {
+            evals: self.evals - earlier.evals,
+            warm_evals: self.warm_evals - earlier.warm_evals,
+            moved_instances: self.moved_instances - earlier.moved_instances,
+            retimed_edges: self.retimed_edges - earlier.retimed_edges,
+            cold_retimed_edges: self.cold_retimed_edges - earlier.cold_retimed_edges,
+            placer_steps: self.placer_steps - earlier.placer_steps,
+            cold_placer_steps: self.cold_placer_steps - earlier.cold_placer_steps,
+            redone_cold: self.redone_cold - earlier.redone_cold,
+        }
+    }
+}
+
+/// Incremental physical-design state threaded through consecutive
+/// related evaluations — the one context of the unified engine. See the
+/// module docs for what it carries and where the flow threads it.
+pub struct PhysContext {
+    /// The (M)ILP solver's incremental state (PR 4): proved-result memo,
+    /// warm hints, node budget, worker count, telemetry totals.
+    pub solver: SolverContext,
+    /// One engine per `(design, device, estimates)` identity.
+    engines: HashMap<u64, PhysEngine>,
+    /// Re-run every warm evaluation cold and compare (`TAPA_PHYS_VERIFY`).
+    verify: bool,
+}
+
+impl Default for PhysContext {
+    fn default() -> Self {
+        // Route through `new` so the `TAPA_PHYS_VERIFY` check cannot be
+        // bypassed by a `..Default::default()` construction path.
+        PhysContext::new()
+    }
+}
+
+impl PhysContext {
+    pub fn new() -> PhysContext {
+        PhysContext {
+            solver: SolverContext::new(),
+            engines: HashMap::new(),
+            verify: std::env::var_os("TAPA_PHYS_VERIFY").is_some(),
+        }
+    }
+
+    /// The engine owning `(g, device, estimates)`'s net model, built on
+    /// first use. Estimates are part of the identity (a session's
+    /// register-augmented estimates get their own engine, distinct from
+    /// the sweep's raw-estimate engine). Warm state is never reused on
+    /// hash equality alone: a cached engine re-checks its identity
+    /// structurally (same discipline as the solver memo) and a colliding
+    /// key is rebuilt fresh instead of handing back the wrong design's
+    /// state.
+    pub fn engine_for(
+        &mut self,
+        g: &TaskGraph,
+        device: &Device,
+        estimates: &[TaskEstimate],
+    ) -> &mut PhysEngine {
+        let key = engine_key(g, device, estimates);
+        let verify = self.verify;
+        let entry = self
+            .engines
+            .entry(key)
+            .or_insert_with(|| PhysEngine::new(g, device, estimates, verify));
+        if !entry.matches(g, device, estimates) {
+            // 64-bit FNV collision between two distinct identities:
+            // correctness first — replace with a fresh engine for the
+            // requested triple (losing only warm state).
+            *entry = PhysEngine::new(g, device, estimates, verify);
+        }
+        entry
+    }
+
+    /// Number of live engines (diagnostics).
+    pub fn num_engines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Aggregate telemetry over every engine in the context.
+    pub fn telemetry(&self) -> PhysTelemetry {
+        let mut t = PhysTelemetry::default();
+        for e in self.engines.values() {
+            t.accumulate(&e.telemetry);
+        }
+        t
+    }
+}
+
+/// FNV-1a identity of an engine: design name and edge structure, device
+/// region tree + name, and the estimate areas the router consumes.
+/// Collisions are harmless — [`PhysContext::engine_for`] re-checks the
+/// identity structurally before reusing any warm state.
+fn engine_key(g: &TaskGraph, device: &Device, estimates: &[TaskEstimate]) -> u64 {
+    let mut h = crate::util::Fnv1a::new();
+    h.write_bytes(g.name.as_bytes());
+    h.write_u64(g.num_insts() as u64);
+    for e in &g.edges {
+        h.write_u64(e.producer.0 as u64);
+        h.write_u64(e.consumer.0 as u64);
+        h.write_u64(e.width_bits as u64);
+    }
+    h.write_bytes(device.name.as_bytes());
+    h.write_u64(device.region_fingerprint());
+    h.write_u64(estimates.len() as u64);
+    for est in estimates {
+        for v in est.area.as_array() {
+            h.write_u64(v);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{u250, u280};
+
+    #[test]
+    fn jitter_matches_the_historical_salts() {
+        let j = PhysJitter::for_design("cnn_13x8", PlaceStrategy::FloorplanGuided);
+        assert_eq!(
+            j.route,
+            route_jitter("cnn_13x8", PlaceStrategy::FloorplanGuided as u8)
+        );
+        assert_eq!(
+            j.sta,
+            route_jitter("cnn_13x8", 0x7 ^ PlaceStrategy::FloorplanGuided as u8)
+        );
+        // Router and STA jitters stay independent draws.
+        assert_ne!(j.route, j.sta);
+    }
+
+    #[test]
+    fn region_fingerprints_distinguish_parts_and_are_stable() {
+        assert_eq!(u250().region_fingerprint(), u250().region_fingerprint());
+        assert_ne!(u250().region_fingerprint(), u280().region_fingerprint());
+        assert_ne!(
+            u250().region_fingerprint(),
+            u250().merged_columns().region_fingerprint()
+        );
+    }
+
+    #[test]
+    fn telemetry_accumulates_and_deltas() {
+        let mut a = PhysTelemetry { evals: 2, warm_evals: 1, ..Default::default() };
+        let b = PhysTelemetry { evals: 3, retimed_edges: 7, ..Default::default() };
+        a.accumulate(&b);
+        assert_eq!(a.evals, 5);
+        assert_eq!(a.retimed_edges, 7);
+        let d = a.delta_since(&b);
+        assert_eq!(d.evals, 2);
+        assert_eq!(d.retimed_edges, 0);
+        assert_eq!(d.warm_evals, 1);
+    }
+}

@@ -115,13 +115,31 @@ pub fn pipeline_with_feedback(
     cfg: &crate::floorplan::FloorplanConfig,
     max_rounds: usize,
 ) -> Result<(Floorplan, PipelinePlan), crate::floorplan::FloorplanError> {
+    let mut phys = crate::phys::PhysContext::new();
+    pipeline_with_feedback_in(g, device, estimates, cfg, max_rounds, &mut phys)
+}
+
+/// [`pipeline_with_feedback`] on a caller-supplied [`crate::phys::PhysContext`]:
+/// the loop's floorplan re-solves run through the context's incremental
+/// solver state, so a session (or a whole [`crate::flow::SessionSet`])
+/// threading one context gets its feedback rounds warm-started against
+/// everything it solved before — without changing any result (warm
+/// starts are canonical, PR-4 contract).
+pub fn pipeline_with_feedback_in(
+    g: &mut TaskGraph,
+    device: &Device,
+    estimates: &[crate::hls::TaskEstimate],
+    cfg: &crate::floorplan::FloorplanConfig,
+    max_rounds: usize,
+    phys: &mut crate::phys::PhysContext,
+) -> Result<(Floorplan, PipelinePlan), crate::floorplan::FloorplanError> {
     let baseline_constraints = g.same_slot.len();
     // One solver context for the whole loop: each re-floorplan
     // warm-starts from the previous round's assignment, and the rollback
     // re-solve of the round-1 problem is answered from the context's memo
     // instead of a cold search.
-    let mut ctx = crate::solver::SolverContext::new();
-    let mut fp = crate::floorplan::floorplan_in(g, device, estimates, cfg, None, &mut ctx)?;
+    let ctx = &mut phys.solver;
+    let mut fp = crate::floorplan::floorplan_in(g, device, estimates, cfg, None, ctx)?;
     for _ in 0..max_rounds {
         let plan = pipeline_edges(g, device, &fp, cfg.stages_per_crossing);
         if plan.cycle_feedback.is_empty() {
@@ -131,8 +149,7 @@ pub fn pipeline_with_feedback(
             g.same_slot.push((a, b));
         }
         let prior = fp.assignment.clone();
-        match crate::floorplan::floorplan_in(g, device, estimates, cfg, Some(&prior), &mut ctx)
-        {
+        match crate::floorplan::floorplan_in(g, device, estimates, cfg, Some(&prior), ctx) {
             Ok(new_fp) => fp = new_fp,
             Err(_) => {
                 // Roll back: co-location impossible; keep the original
@@ -144,7 +161,7 @@ pub fn pipeline_with_feedback(
                     estimates,
                     cfg,
                     Some(&prior),
-                    &mut ctx,
+                    ctx,
                 )?;
                 let plan = pipeline_edges_zeroing_cycles(g, device, &fp, cfg.stages_per_crossing);
                 return Ok((fp, plan));

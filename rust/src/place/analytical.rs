@@ -87,31 +87,7 @@ pub struct RustStep;
 
 impl StepExecutor for RustStep {
     fn step(&self, a: &PlacerArrays, p: &AnalyticalParams) -> StepOutput {
-        let mut grad = vec![0.0f32; 2 * MAX_V];
-        let mut wl = 0.0f32;
-        for e in 0..a.num_e {
-            let w = a.weight[e];
-            if w == 0.0 {
-                continue;
-            }
-            let i = a.pairs[2 * e] as usize;
-            let j = a.pairs[2 * e + 1] as usize;
-            let dx = a.pos[2 * i] - a.pos[2 * j];
-            let dy = a.pos[2 * i + 1] - a.pos[2 * j + 1];
-            wl += w * (dx * dx + dy * dy);
-            grad[2 * i] += 2.0 * w * dx;
-            grad[2 * i + 1] += 2.0 * w * dy;
-            grad[2 * j] -= 2.0 * w * dx;
-            grad[2 * j + 1] -= 2.0 * w * dy;
-        }
-        let mut pos = a.pos.clone();
-        for v in 0..a.num_v {
-            for d in 0..2 {
-                let k = 2 * v + d;
-                let g = grad[k] + 2.0 * p.alpha * (a.pos[k] - a.anchor[k]);
-                pos[k] = a.pos[k] - p.lr * g;
-            }
-        }
+        let (pos, wl) = step_positions(a, p);
         let congestion = rudy_map(&pos, a);
         StepOutput { pos, congestion, wl }
     }
@@ -119,6 +95,40 @@ impl StepExecutor for RustStep {
     fn name(&self) -> &'static str {
         "rust-ref"
     }
+}
+
+/// The position/wirelength half of [`RustStep::step`] — everything except
+/// the RUDY congestion map. Exposed so [`crate::phys::PhysEngine`] can run
+/// the placement iteration bit-identically without paying for a
+/// congestion map the flow discards (the flow's congestion signal comes
+/// from the router model, not the placer).
+pub fn step_positions(a: &PlacerArrays, p: &AnalyticalParams) -> (Vec<f32>, f32) {
+    let mut grad = vec![0.0f32; 2 * MAX_V];
+    let mut wl = 0.0f32;
+    for e in 0..a.num_e {
+        let w = a.weight[e];
+        if w == 0.0 {
+            continue;
+        }
+        let i = a.pairs[2 * e] as usize;
+        let j = a.pairs[2 * e + 1] as usize;
+        let dx = a.pos[2 * i] - a.pos[2 * j];
+        let dy = a.pos[2 * i + 1] - a.pos[2 * j + 1];
+        wl += w * (dx * dx + dy * dy);
+        grad[2 * i] += 2.0 * w * dx;
+        grad[2 * i + 1] += 2.0 * w * dy;
+        grad[2 * j] -= 2.0 * w * dx;
+        grad[2 * j + 1] -= 2.0 * w * dy;
+    }
+    let mut pos = a.pos.clone();
+    for v in 0..a.num_v {
+        for d in 0..2 {
+            let k = 2 * v + d;
+            let g = grad[k] + 2.0 * p.alpha * (a.pos[k] - a.anchor[k]);
+            pos[k] = a.pos[k] - p.lr * g;
+        }
+    }
+    (pos, wl)
 }
 
 /// RUDY congestion accumulation (reference math, mirrored by the Pallas
@@ -218,6 +228,10 @@ pub fn build_arrays(
     }
 }
 
+/// Clamp margin keeping logic off slot boundaries (in slot-grid units),
+/// shared with the incremental re-placement in [`crate::phys`].
+pub const CLAMP_MARGIN: f32 = 0.02;
+
 /// Run floorplan-guided analytical placement: iterate the step executor,
 /// clamping every instance into its floorplan slot after each step (the
 /// hard constraint the tcl file would impose on Vivado).
@@ -238,7 +252,7 @@ pub fn place_floorplan_guided(
         // Clamp into floorplan slots (margin keeps logic off boundaries).
         for v in 0..arrays.num_v {
             let (row, col) = device.coords(fp.assignment[v]);
-            let m = 0.02f32;
+            let m = CLAMP_MARGIN;
             arrays.pos[2 * v] =
                 arrays.pos[2 * v].clamp(col as f32 + m, (col + 1) as f32 - m);
             arrays.pos[2 * v + 1] =

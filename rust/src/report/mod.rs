@@ -114,6 +114,15 @@ pub fn fmt_gap(g: Option<f64>) -> String {
     }
 }
 
+/// Format a routing-congestion cell (worst-slot demand ratio; `-` for
+/// units that carry no route report, e.g. sweep points).
+pub fn fmt_cong(c: Option<f64>) -> String {
+    match c {
+        Some(v) => format!("{v:.3}"),
+        None => "-".to_string(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -51,76 +51,138 @@ const CONG_FF_WEIGHT: f64 = 0.22;
 /// this fraction of the slot's LUT capacity, add to congestion.
 const NET_BITS_PER_LUT_CAP: f64 = 1.40;
 
-/// Route a placed design.
-pub fn route(
+/// The integer routing-demand state a placement induces on the device —
+/// per-slot placed area, per-slot net bits (L-route spans) and per-SLR-
+/// boundary crossing bits. All fields are exact integers, so they can be
+/// updated by *delta* when a few instances move slots (the incremental
+/// path in [`crate::phys`]) and still reproduce a cold accumulation bit
+/// for bit; [`derive_report`] turns them into a [`RouteReport`].
+#[derive(Clone, Debug)]
+pub struct RouteBits {
+    pub slot_area: Vec<crate::device::AreaVector>,
+    pub net_bits: Vec<u64>,
+    pub boundary_bits: Vec<u64>,
+}
+
+/// Accumulate the routing-demand integers of a slot assignment (the first
+/// half of [`route`]).
+pub(crate) fn accumulate_bits(
     g: &TaskGraph,
     device: &Device,
     estimates: &[TaskEstimate],
-    placement: &Placement,
+    slot: &[SlotId],
+) -> RouteBits {
+    let nslots = device.num_slots();
+    // Per-slot placed area.
+    let mut slot_area = vec![crate::device::AreaVector::ZERO; nslots];
+    for (v, s) in slot.iter().enumerate() {
+        slot_area[s.0] += estimates[v].area;
+    }
+    // Net demand: each net loads every slot its L-shaped route spans, and
+    // boundary crossings load the SLLs.
+    let mut bits = RouteBits {
+        slot_area,
+        net_bits: vec![0u64; nslots],
+        boundary_bits: vec![0u64; device.rows.saturating_sub(1)],
+    };
+    for e in &g.edges {
+        apply_edge_bits(
+            &mut bits,
+            device,
+            slot[e.producer.0],
+            slot[e.consumer.0],
+            e.width_bits as u64,
+            true,
+        );
+    }
+    bits
+}
+
+/// Add (or subtract) one net's L-route span from the demand integers —
+/// the unit of the incremental route update: moving an instance removes
+/// its nets' old spans and adds the new ones, leaving untouched slots and
+/// boundaries bit-identical to a cold accumulation.
+pub(crate) fn apply_edge_bits(
+    bits: &mut RouteBits,
+    device: &Device,
+    producer_slot: SlotId,
+    consumer_slot: SlotId,
+    w: u64,
+    add: bool,
+) {
+    let (pr, pc) = device.coords(producer_slot);
+    let (cr, cc) = device.coords(consumer_slot);
+    let (r0, r1) = (pr.min(cr), pr.max(cr));
+    let (c0, c1) = (pc.min(cc), pc.max(cc));
+    // L-route: traverse rows in the producer column, then columns in
+    // the consumer row.
+    for r in r0..=r1 {
+        let s = device.slot_id(r, pc).0;
+        if add {
+            bits.net_bits[s] += w;
+        } else {
+            bits.net_bits[s] -= w;
+        }
+    }
+    for c in c0..=c1 {
+        let s = device.slot_id(cr, c).0;
+        if add {
+            bits.net_bits[s] += w;
+        } else {
+            bits.net_bits[s] -= w;
+        }
+    }
+    for b in r0..r1 {
+        if add {
+            bits.boundary_bits[b] += w;
+        } else {
+            bits.boundary_bits[b] -= w;
+        }
+    }
+}
+
+/// Derive the [`RouteReport`] from the routing-demand integers (the
+/// second half of [`route`]). Pure function of the integers, the device
+/// and the strategy, so an incrementally-updated [`RouteBits`] yields the
+/// identical report.
+pub(crate) fn derive_report(
+    device: &Device,
+    bits: &RouteBits,
+    strategy: crate::place::PlaceStrategy,
+    jitter: f64,
 ) -> RouteReport {
     let nslots = device.num_slots();
     let mut area_util = vec![0.0f64; nslots];
     let mut lut_util = vec![0.0f64; nslots];
     let mut ff_util = vec![0.0f64; nslots];
-
-    // Per-slot placed area.
-    let mut slot_area = vec![crate::device::AreaVector::ZERO; nslots];
-    for (v, s) in placement.slot.iter().enumerate() {
-        slot_area[s.0] += estimates[v].area;
-    }
     for s in 0..nslots {
         let cap = &device.slots[s].capacity;
-        area_util[s] = slot_area[s].max_utilization(cap);
-        lut_util[s] = slot_area[s].lut as f64 / cap.lut.max(1) as f64;
-        ff_util[s] = slot_area[s].ff as f64 / cap.ff.max(1) as f64;
-    }
-
-    // Net demand: each net loads every slot its L-shaped route spans, and
-    // boundary crossings load the SLLs.
-    let mut net_bits = vec![0u64; nslots];
-    let mut boundary_bits = vec![0u64; device.rows.saturating_sub(1)];
-    for e in &g.edges {
-        let (pr, pc) = device.coords(placement.slot[e.producer.0]);
-        let (cr, cc) = device.coords(placement.slot[e.consumer.0]);
-        let w = e.width_bits as u64;
-        let (r0, r1) = (pr.min(cr), pr.max(cr));
-        let (c0, c1) = (pc.min(cc), pc.max(cc));
-        // L-route: traverse rows in the producer column, then columns in
-        // the consumer row.
-        for r in r0..=r1 {
-            net_bits[device.slot_id(r, pc).0] += w;
-        }
-        for c in c0..=c1 {
-            net_bits[device.slot_id(cr, c).0] += w;
-        }
-        for b in r0..r1 {
-            boundary_bits[b] += w;
-        }
+        area_util[s] = bits.slot_area[s].max_utilization(cap);
+        lut_util[s] = bits.slot_area[s].lut as f64 / cap.lut.max(1) as f64;
+        ff_util[s] = bits.slot_area[s].ff as f64 / cap.ff.max(1) as f64;
     }
 
     // Unconstrained packing interleaves unrelated nets; floorplan
     // constraints give the router breathing room (Figs. 3–4). Baseline
     // placements see a routing-pressure surcharge on every slot.
-    let pressure = match placement.strategy {
+    let pressure = match strategy {
         crate::place::PlaceStrategy::BaselinePack => 1.18,
         crate::place::PlaceStrategy::FloorplanGuided => 1.0,
     };
     let slot_congestion: Vec<f64> = (0..nslots)
         .map(|s| {
-            let net_term = net_bits[s] as f64
+            let net_term = bits.net_bits[s] as f64
                 / (device.slots[s].capacity.lut as f64 * NET_BITS_PER_LUT_CAP).max(1.0);
             (CONG_LUT_WEIGHT * lut_util[s] + CONG_FF_WEIGHT * ff_util[s] + net_term)
                 * pressure
                 + device.ip_interference
         })
         .collect();
-    let boundary_util: Vec<f64> = boundary_bits
+    let boundary_util: Vec<f64> = bits
+        .boundary_bits
         .iter()
         .map(|&b| b as f64 / device.sll_capacity_bits.max(1) as f64)
         .collect();
-
-    // Deterministic P&R jitter per (design, strategy): ±6%.
-    let jitter = route_jitter(&g.name, placement.strategy as u8);
 
     let max_congestion =
         slot_congestion.iter().cloned().fold(0.0, f64::max) * jitter;
@@ -135,6 +197,35 @@ pub fn route(
         placement_failed: max_area > PLACE_FAIL_UTIL,
         routing_failed: max_congestion > ROUTE_FAIL_CONG || max_boundary > ROUTE_FAIL_BOUNDARY,
     }
+}
+
+/// Route a placed design. The deterministic P&R jitter is derived from
+/// the design name here; [`route_with_jitter`] is the engine-facing entry
+/// point where [`crate::phys`] passes the jitter it computed once per
+/// `(design, strategy)`.
+pub fn route(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    placement: &Placement,
+) -> RouteReport {
+    // Deterministic P&R jitter per (design, strategy): ±6%.
+    let jitter = route_jitter(&g.name, placement.strategy as u8);
+    route_with_jitter(g, device, estimates, placement, jitter)
+}
+
+/// [`route`] with the jitter supplied by the caller — the single
+/// derivation site lives in [`crate::phys::PhysJitter`], removing the
+/// cross-module re-derivation `timing` used to do.
+pub fn route_with_jitter(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    placement: &Placement,
+    jitter: f64,
+) -> RouteReport {
+    let bits = accumulate_bits(g, device, estimates, &placement.slot);
+    derive_report(device, &bits, placement.strategy, jitter)
 }
 
 /// Deterministic pseudo-random factor in [0.94, 1.06] from a design name —

@@ -41,7 +41,11 @@ pub fn analyze(
     analyze_with_areas(g, device, placement, route, edge_stages, None)
 }
 
-/// Full analysis including task-size-dependent internal paths.
+/// Full analysis including task-size-dependent internal paths. The
+/// deterministic STA jitter is derived from the design name here;
+/// [`analyze_with_areas_jittered`] is the engine-facing entry point where
+/// [`crate::phys`] passes the jitter it computed once per
+/// `(design, strategy)`.
 pub fn analyze_with_areas(
     g: &TaskGraph,
     device: &Device,
@@ -50,17 +54,26 @@ pub fn analyze_with_areas(
     edge_stages: &[u32],
     estimates: Option<&[TaskEstimate]>,
 ) -> TimingReport {
+    // P&R jitter (same deterministic scheme as the router).
+    let jitter = crate::route::route_jitter(&g.name, 0x7 ^ placement.strategy as u8);
+    analyze_with_areas_jittered(g, device, placement, route, edge_stages, estimates, jitter)
+}
+
+/// [`analyze_with_areas`] with a caller-supplied jitter factor.
+pub fn analyze_with_areas_jittered(
+    g: &TaskGraph,
+    device: &Device,
+    placement: &Placement,
+    route: &RouteReport,
+    edge_stages: &[u32],
+    estimates: Option<&[TaskEstimate]>,
+    jitter: f64,
+) -> TimingReport {
     let mut critical_ns = 0.0f64;
     let mut critical_edge = None;
 
-    for (ei, e) in g.edges.iter().enumerate() {
-        let cong = local_congestion(route, placement, e);
-        let d = edge_delay_ns(
-            placement.distance(e.producer.0, e.consumer.0),
-            placement.slr_crossings(device, e.producer.0, e.consumer.0) as u32,
-            edge_stages[ei],
-            cong,
-        );
+    for ei in 0..g.num_edges() {
+        let d = edge_path_delay(g, device, placement, route, edge_stages, ei);
         if d > critical_ns {
             critical_ns = d;
             critical_edge = Some(ei);
@@ -70,27 +83,70 @@ pub fn analyze_with_areas(
     // Logic-limited paths inside tasks: congestion of the worst slot a
     // task occupies stretches its intra-task nets; oversized tasks carry
     // longer internal paths (§7.3).
-    for (v, s) in placement.slot.iter().enumerate() {
-        let cong = route.slot_congestion[s.0];
-        let d = match estimates {
-            Some(est) => {
-                let slot_lut = device.slots[s.0].capacity.lut.max(1);
-                let ratio = est[v].area.lut as f64 / slot_lut as f64;
-                task_logic_delay_ns(cong, ratio)
-            }
-            None => logic_delay_ns(cong),
-        };
+    for v in 0..placement.slot.len() {
+        let d = task_delay(device, placement, route, estimates, v);
         if d > critical_ns {
             critical_ns = d;
             critical_edge = None;
         }
     }
 
-    // P&R jitter (same deterministic scheme as the router).
-    let jitter = crate::route::route_jitter(&g.name, 0x7 ^ placement.strategy as u8);
-    critical_ns *= jitter;
+    finish_report(critical_ns, critical_edge, route.failed(), jitter)
+}
 
-    let fmax = if route.failed() {
+/// Delay of one inter-task connection as placed and routed — the per-edge
+/// body of the STA loop, shared with the incremental re-timing path in
+/// [`crate::phys`] (an edge whose endpoints, stage count and endpoint
+/// congestion are unchanged reproduces this value bit for bit).
+pub(crate) fn edge_path_delay(
+    g: &TaskGraph,
+    device: &Device,
+    placement: &Placement,
+    route: &RouteReport,
+    edge_stages: &[u32],
+    ei: usize,
+) -> f64 {
+    let e = &g.edges[ei];
+    let cong = local_congestion(route, placement, e);
+    edge_delay_ns(
+        placement.distance(e.producer.0, e.consumer.0),
+        placement.slr_crossings(device, e.producer.0, e.consumer.0) as u32,
+        edge_stages[ei],
+        cong,
+    )
+}
+
+/// Intra-task logic-path delay of one instance — the per-task body of the
+/// STA loop, shared with [`crate::phys`].
+pub(crate) fn task_delay(
+    device: &Device,
+    placement: &Placement,
+    route: &RouteReport,
+    estimates: Option<&[TaskEstimate]>,
+    v: usize,
+) -> f64 {
+    let s = placement.slot[v];
+    let cong = route.slot_congestion[s.0];
+    match estimates {
+        Some(est) => {
+            let slot_lut = device.slots[s.0].capacity.lut.max(1);
+            let ratio = est[v].area.lut as f64 / slot_lut as f64;
+            task_logic_delay_ns(cong, ratio)
+        }
+        None => logic_delay_ns(cong),
+    }
+}
+
+/// Apply the STA jitter and assemble the report — shared final step of
+/// the cold and incremental analyses.
+pub(crate) fn finish_report(
+    mut critical_ns: f64,
+    critical_edge: Option<usize>,
+    route_failed: bool,
+    jitter: f64,
+) -> TimingReport {
+    critical_ns *= jitter;
+    let fmax = if route_failed {
         None
     } else {
         Some((1000.0 / critical_ns).min(FMAX_CEILING_MHZ))

@@ -12,6 +12,40 @@ pub mod stats;
 
 pub use rng::Rng;
 
+/// Incremental FNV-1a hasher (the byte-mixing scheme several modules
+/// hand-rolled before; new in-memory identities should build on this —
+/// the on-disk suite hash in `flow::manifest` keeps its frozen local
+/// copy).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write_bytes(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Relative-tolerance float comparison used by numeric cross-checks
 /// (rust reference placer vs the XLA artifact).
 pub fn approx_eq(a: f32, b: f32, rtol: f32, atol: f32) -> bool {

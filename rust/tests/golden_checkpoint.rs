@@ -1,8 +1,9 @@
 //! Golden checkpoint: locks the versioned `flow::persist` on-disk format.
 //!
 //! `data/golden_sweep_ctx.json` is a committed, known-good serialized
-//! [`SessionContext`] (format v3, with a §6.3 `SweepArtifact` including
-//! its solver telemetry). The parser must accept it and the writer must
+//! [`SessionContext`] (format v4, with a §6.3 `SweepArtifact` including
+//! its solver telemetry and the incremental physical-design engine's
+//! `phys` accounting). The parser must accept it and the writer must
 //! reproduce it byte for byte — so a future PR cannot silently change
 //! the layout and break `--resume` compatibility. Any intentional layout
 //! change must bump `flow::persist::FORMAT_VERSION` and refresh this
@@ -14,12 +15,12 @@ use tapa::flow::{persist, FlowVariant, Stage};
 const GOLDEN: &str = include_str!("data/golden_sweep_ctx.json");
 
 #[test]
-fn golden_v3_checkpoint_roundtrips_byte_identically() {
+fn golden_v4_checkpoint_roundtrips_byte_identically() {
     let ctx = persist::context_from_json_text(GOLDEN).expect("golden checkpoint parses");
     assert_eq!(
         persist::context_to_json_text(&ctx),
         GOLDEN,
-        "writer drifted from the committed v3 checkpoint format — resume \
+        "writer drifted from the committed v4 checkpoint format — resume \
          compatibility would break; bump FORMAT_VERSION and refresh the golden \
          instead of changing the layout in place"
     );
@@ -54,6 +55,15 @@ fn golden_checkpoint_carries_the_expected_artifacts() {
     assert_eq!(sw.solver.solves, 3);
     assert_eq!(sw.solver.warm_hits, 1);
     assert_eq!(sw.solver.bb_nodes, 6);
+    // v4: the sweep records the incremental engine's accounting.
+    assert_eq!(sw.phys.evals, 2);
+    assert_eq!(sw.phys.warm_evals, 1);
+    assert_eq!(sw.phys.moved_instances, 3);
+    assert_eq!(sw.phys.retimed_edges, 2);
+    assert_eq!(sw.phys.cold_retimed_edges, 2);
+    assert_eq!(sw.phys.placer_steps, 3);
+    assert_eq!(sw.phys.cold_placer_steps, 4);
+    assert_eq!(sw.phys.redone_cold, 0);
     // Point 0: the winner, fully implemented.
     assert_eq!(sw.points[0].util_ratio, 0.5);
     assert_eq!(sw.points[0].fmax_mhz, Some(300.5));

@@ -1,0 +1,318 @@
+//! Integration tests for the unified incremental physical-design engine
+//! (`tapa::phys`): incremental re-evaluation must be *exactly* equal to
+//! a cold full evaluation (fmax, congestion, critical edge, placement
+//! bits) under random floorplan/latency perturbations; sweep artifacts
+//! must stay byte-identical for any `--jobs` count while their phys
+//! telemetry proves the warm chain did strictly less work than cold; and
+//! [`SessionSet`]s must share one `PhysContext` exactly across devices
+//! whose region trees coincide (cross-device solver warm hits).
+
+use std::sync::Arc;
+
+use tapa::device::{DeviceKind, SlotId};
+use tapa::floorplan::{floorplan, Floorplan, FloorplanConfig};
+use tapa::flow::{Design, FlowConfig, FlowVariant, Session, SessionSet, SimOptions, Stage};
+use tapa::graph::{ComputeSpec, TaskGraph, TaskGraphBuilder};
+use tapa::hls::estimate_all;
+use tapa::phys::{PhysContext, PhysEval};
+use tapa::place::{AnalyticalParams, RustStep};
+use tapa::util::prop::{forall, Config};
+
+fn chain_graph(name: &str, n: usize) -> TaskGraph {
+    let mut b = TaskGraphBuilder::new(name);
+    let p = b.proto(
+        "K",
+        ComputeSpec {
+            mac_ops: 25,
+            alu_ops: 200,
+            bram_bytes: 48 * 1024,
+            uram_bytes: 0,
+            trip_count: 256,
+            ii: 1,
+            pipeline_depth: 6,
+        },
+    );
+    let ids = b.invoke_n(p, "k", n);
+    for i in 0..n - 1 {
+        b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+    }
+    b.build().unwrap()
+}
+
+fn chain_design(name: &str, n: usize) -> Design {
+    Design {
+        name: name.to_string(),
+        graph: chain_graph(name, n),
+        device: DeviceKind::U250,
+    }
+}
+
+fn sweep_cfg() -> FlowConfig {
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.sweep.enabled = true;
+    cfg.sweep.ratios = vec![0.6, 0.7, 0.85];
+    cfg
+}
+
+fn assert_same_eval(a: &PhysEval, b: &PhysEval, what: &str) {
+    assert_eq!(a.placement.slot, b.placement.slot, "{what}: slot assignment");
+    assert_eq!(a.placement.xy.len(), b.placement.xy.len(), "{what}: xy arity");
+    for (i, (p, q)) in a.placement.xy.iter().zip(&b.placement.xy).enumerate() {
+        assert_eq!(p.0.to_bits(), q.0.to_bits(), "{what}: x[{i}]");
+        assert_eq!(p.1.to_bits(), q.1.to_bits(), "{what}: y[{i}]");
+    }
+    for (s, (x, y)) in
+        a.route.slot_congestion.iter().zip(&b.route.slot_congestion).enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: slot congestion [{s}]");
+    }
+    for (bidx, (x, y)) in
+        a.route.boundary_util.iter().zip(&b.route.boundary_util).enumerate()
+    {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: boundary util [{bidx}]");
+    }
+    assert_eq!(
+        a.route.max_congestion.to_bits(),
+        b.route.max_congestion.to_bits(),
+        "{what}: max congestion"
+    );
+    assert_eq!(
+        a.route.max_boundary.to_bits(),
+        b.route.max_boundary.to_bits(),
+        "{what}: max boundary"
+    );
+    assert_eq!(a.route.placement_failed, b.route.placement_failed, "{what}");
+    assert_eq!(a.route.routing_failed, b.route.routing_failed, "{what}");
+    assert_eq!(
+        a.timing.critical_ns.to_bits(),
+        b.timing.critical_ns.to_bits(),
+        "{what}: critical path"
+    );
+    assert_eq!(a.timing.critical_edge, b.timing.critical_edge, "{what}: critical edge");
+    assert_eq!(
+        a.timing.fmax_mhz.map(f64::to_bits),
+        b.timing.fmax_mhz.map(f64::to_bits),
+        "{what}: fmax"
+    );
+}
+
+/// The acceptance property: a chain of random floorplan and latency
+/// perturbations, each evaluated incrementally on one long-lived engine,
+/// is exactly equal — placement bits, congestion, critical edge, Fmax —
+/// to a cold full evaluation of the same point on a fresh engine.
+#[test]
+fn incremental_evaluation_equals_cold_under_random_perturbations() {
+    let g = chain_graph("phys_prop_chain", 10);
+    let d = DeviceKind::U250.device();
+    let est = estimate_all(&g);
+    let base = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+    let params = AnalyticalParams::default();
+    let nslots = d.num_slots();
+
+    forall(Config::default().cases(16).seed(0x9476), |rng| {
+        let mut warm_ctx = PhysContext::new();
+        let mut assignment = base.assignment.clone();
+        let mut stages: Vec<u32> = vec![2; g.num_edges()];
+        for step in 0..4 {
+            // Perturb a handful of slot assignments…
+            let n_moves = rng.gen_range_in(1, 4);
+            for _ in 0..n_moves {
+                let v = rng.gen_range(assignment.len());
+                assignment[v] = SlotId(rng.gen_range(nslots));
+            }
+            // …and one edge's pipeline latency.
+            if rng.gen_bool(0.7) {
+                let e = rng.gen_range(stages.len());
+                stages[e] = rng.gen_range(7) as u32;
+            }
+            let fp = Floorplan {
+                assignment: assignment.clone(),
+                cost: 0,
+                util_ratio: 0.75,
+                stats: Vec::new(),
+            };
+            let warm = warm_ctx.engine_for(&g, &d, &est).evaluate(&fp, &stages, &params);
+            let mut cold_ctx = PhysContext::new();
+            let cold =
+                cold_ctx.engine_for(&g, &d, &est).evaluate(&fp, &stages, &params);
+            assert_same_eval(&warm, &cold, &format!("perturbation step {step}"));
+        }
+        let t = warm_ctx.telemetry();
+        assert_eq!(t.evals, 4);
+        assert_eq!(t.warm_evals, 3, "every evaluation after the first is warm");
+        assert_eq!(t.redone_cold, 0);
+    });
+}
+
+/// The sweep's phys telemetry is internally consistent and proves the
+/// warm chain did strictly less placement and STA work than cold
+/// evaluations would have.
+#[test]
+fn sweep_phys_telemetry_proves_strict_savings() {
+    let d = chain_design("phys_sweep_chain", 10);
+    let mut s = Session::new(d, FlowVariant::Tapa, sweep_cfg());
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.as_ref().expect("sweep artifact");
+    let ph = &art.phys;
+    let implemented = art
+        .points
+        .iter()
+        .filter(|p| p.duplicate_of.is_none() && p.plan.is_some())
+        .count() as u64;
+    assert_eq!(ph.evals, implemented, "one evaluation per unique successful candidate");
+    assert!(ph.evals >= 1, "the chain floorplans at some ratio");
+    assert_eq!(
+        ph.warm_evals,
+        ph.evals - 1,
+        "every candidate after the first warm-starts from its predecessor"
+    );
+    assert_eq!(ph.redone_cold, 0, "no warm evaluation diverged from cold");
+    assert_eq!(ph.cold_retimed_edges, ph.evals * s.design().graph.num_edges() as u64);
+    if ph.warm_evals > 0 {
+        assert!(
+            ph.retimed_edges < ph.cold_retimed_edges,
+            "warm chain must re-time strictly fewer edges: {} vs {}",
+            ph.retimed_edges,
+            ph.cold_retimed_edges
+        );
+        assert!(
+            ph.placer_steps < ph.cold_placer_steps,
+            "warm chain must run strictly fewer placer updates: {} vs {}",
+            ph.placer_steps,
+            ph.cold_placer_steps
+        );
+    }
+}
+
+/// Sweep artifacts — points, winner, solver AND phys telemetry — are
+/// identical for any `--jobs` count: candidate implementation is a
+/// deterministic warm chain in ratio order, and jobs only parallelizes
+/// the solver's node waves.
+#[test]
+fn sweep_artifact_and_phys_telemetry_identical_for_jobs_1_4_8() {
+    let d = chain_design("phys_jobs_chain", 8);
+    let cfg = sweep_cfg();
+    let run = |jobs: usize| {
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone()).with_jobs(jobs);
+        s.up_to(Stage::Sweep, &RustStep).unwrap();
+        s.context().sweep.clone().unwrap()
+    };
+    let a = run(1);
+    for jobs in [4usize, 8] {
+        let b = run(jobs);
+        assert_eq!(a.best, b.best, "jobs={jobs}");
+        assert_eq!(a.solver, b.solver, "jobs={jobs}: solver accounting");
+        assert_eq!(a.phys, b.phys, "jobs={jobs}: phys accounting");
+        let fa: Vec<Option<u64>> =
+            a.points.iter().map(|p| p.fmax_mhz.map(f64::to_bits)).collect();
+        let fb: Vec<Option<u64>> =
+            b.points.iter().map(|p| p.fmax_mhz.map(f64::to_bits)).collect();
+        assert_eq!(fa, fb, "jobs={jobs}: candidate scores (bitwise)");
+    }
+}
+
+/// Warm-chained sweep scoring equals isolated cold scoring of the same
+/// candidates — the session/shard byte-identity contract at the Fmax
+/// level, checked directly against `evaluate_sweep_candidate`'s cold
+/// per-point path.
+#[test]
+fn warm_chained_sweep_scores_equal_cold_per_point_scores() {
+    let d = chain_design("phys_cold_eq_chain", 8);
+    let cfg = sweep_cfg();
+    let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone());
+    s.up_to(Stage::Sweep, &RustStep).unwrap();
+    let art = s.context().sweep.as_ref().unwrap();
+    let device = d.device.device();
+    let est = estimate_all(&d.graph);
+    for p in art.points.iter().filter(|p| p.duplicate_of.is_none()) {
+        let Some(fp) = &p.plan else { continue };
+        let cold = tapa::flow::evaluate_sweep_candidate(&d.graph, &device, &est, fp, &cfg);
+        assert_eq!(
+            p.fmax_mhz.map(f64::to_bits),
+            cold.map(f64::to_bits),
+            "ratio {}",
+            p.util_ratio
+        );
+    }
+}
+
+/// Satellite: [`SessionSet`] shares one `PhysContext` across devices
+/// whose region trees coincide, so the second device's identical
+/// floorplan solves are answered from the shared proved-result memo
+/// (cross-device warm hits) — and never shares across distinct trees.
+#[test]
+fn session_set_shares_phys_context_across_coinciding_region_trees() {
+    let d = chain_design("phys_share_chain", 8);
+    let cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+
+    // Reference: one device alone — its solver warm-hit count is
+    // whatever the feedback loop earns on its own.
+    let mut solo = SessionSet::for_devices(
+        &d,
+        &[DeviceKind::U250],
+        FlowVariant::Tapa,
+        cfg.clone(),
+    );
+    solo.up_to(Stage::Floorplan, &RustStep).unwrap();
+    let solo_ctx = solo.sessions()[0].phys().lock().unwrap();
+    let (solo_solves, solo_warm) = (solo_ctx.solver.solves, solo_ctx.solver.warm_hits);
+    drop(solo_ctx);
+    assert!(solo_solves >= 1, "the feedback loop solves at least one partition");
+
+    // Two sessions on coinciding region trees share one context: the
+    // second session's structurally identical solves come from the memo.
+    let mut pair = SessionSet::for_devices(
+        &d,
+        &[DeviceKind::U250, DeviceKind::U250],
+        FlowVariant::Tapa,
+        cfg.clone(),
+    );
+    pair.up_to(Stage::Floorplan, &RustStep).unwrap();
+    assert!(
+        Arc::ptr_eq(pair.sessions()[0].phys(), pair.sessions()[1].phys()),
+        "coinciding region trees share one PhysContext"
+    );
+    let ctx = pair.sessions()[0].phys().lock().unwrap();
+    assert_eq!(ctx.solver.solves, 2 * solo_solves, "both sessions solved through it");
+    assert!(
+        ctx.solver.warm_hits > 2 * solo_warm,
+        "the second device's solves must hit the shared memo: {} warm hits \
+         across {} solves (solo: {solo_warm}/{solo_solves})",
+        ctx.solver.warm_hits,
+        ctx.solver.solves
+    );
+    drop(ctx);
+
+    // Sharing never changes results: both sessions adopt the identical
+    // floorplan, equal to the solo run's.
+    let fp_of = |s: &Session| {
+        s.context()
+            .floorplan
+            .as_ref()
+            .and_then(|f| f.floorplan.as_ref())
+            .expect("floorplan solved")
+            .assignment
+            .clone()
+    };
+    let solo_fp = fp_of(&solo.sessions()[0]);
+    assert_eq!(fp_of(&pair.sessions()[0]), solo_fp);
+    assert_eq!(fp_of(&pair.sessions()[1]), solo_fp);
+
+    // Distinct region trees (U250 vs U280) keep distinct contexts.
+    let mixed = SessionSet::for_devices(
+        &d,
+        &[DeviceKind::U250, DeviceKind::U280],
+        FlowVariant::Tapa,
+        cfg,
+    );
+    assert!(
+        !Arc::ptr_eq(mixed.sessions()[0].phys(), mixed.sessions()[1].phys()),
+        "distinct region trees must not share warm state"
+    );
+}

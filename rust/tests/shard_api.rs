@@ -43,7 +43,7 @@ fn tapa_bin() -> Command {
 }
 
 #[test]
-fn golden_v2_manifest_roundtrips_byte_identically() {
+fn golden_v3_manifest_roundtrips_byte_identically() {
     // Locks the on-disk manifest layout, like the checkpoint golden: any
     // intentional change must bump MANIFEST_VERSION and refresh this file.
     const GOLDEN: &str = include_str!("data/golden_manifest.json");
@@ -51,7 +51,7 @@ fn golden_v2_manifest_roundtrips_byte_identically() {
     assert_eq!(
         manifest_to_json_text(&m),
         GOLDEN,
-        "writer drifted from the committed v2 manifest format — merge \
+        "writer drifted from the committed v3 manifest format — merge \
          compatibility across workers would break; bump MANIFEST_VERSION and \
          refresh the golden instead of changing the layout in place"
     );
@@ -72,6 +72,10 @@ fn golden_v2_manifest_roundtrips_byte_identically() {
     assert_eq!(s.nodes, 5);
     assert_eq!(s.gap, Some(0.0));
     assert!(s.proved);
+    // v3: worst-slot congestion and the measured unit wall-clock ride in
+    // the manifest (wall-clock never reaches the byte-compared CSVs).
+    assert_eq!(r.route_cong, Some(0.5));
+    assert_eq!(r.wall_seconds, Some(0.125));
     assert_eq!(m.units[1].status, UnitStatus::Failed);
     assert_eq!(m.units[1].unit.variant, FlowVariant::Baseline);
     assert_eq!(m.units[1].attempts, 2);
