@@ -1,0 +1,98 @@
+//! Drive the compile-as-a-service daemon end-to-end: submit a compile
+//! job into its async queue, poll until done, fetch the response, and
+//! show the warm repeat being served from the content-addressed store
+//! with zero cold evaluations.
+//!
+//! The example runs the [`tapa::serve::Server`] in-process through
+//! [`tapa::serve::Server::handle_line`] — the exact protocol surface the
+//! Unix-socket and stdio transports (and `tapa submit`) speak, minus the
+//! socket plumbing, so it works anywhere `cargo run` does. Against a
+//! real daemon the same lines go over `<workdir>/serve.sock`:
+//!
+//! ```text
+//! tapa serve --workdir W --jobs 4 &
+//! tapa submit --workdir W --design stencil_k2_u250 --async
+//! ```
+//!
+//! Run with: `cargo run --release --example serve_client`
+
+use tapa::flow::FlowConfig;
+use tapa::serve::Server;
+use tapa::util::json::Json;
+
+fn main() {
+    let workdir =
+        std::env::temp_dir().join(format!("tapa_serve_client_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&workdir);
+    let srv = Server::open(&workdir, 2, FlowConfig::default()).expect("daemon opens");
+    let workers = srv.start_workers();
+    println!("daemon over {} ({} queue workers)", workdir.display(), 2);
+
+    // -- submit ----------------------------------------------------------
+    let request = "{\"op\":\"run\",\"design\":\"stencil_k2_u250\",\"device\":\"u250\"}";
+    let submit = format!("{{\"op\":\"submit\",\"request\":{request}}}");
+    let (line, _) = srv.handle_line(&submit);
+    let job = Json::parse(&line)
+        .ok()
+        .and_then(|v| v.get("job").and_then(Json::as_u64))
+        .unwrap_or_else(|| panic!("submit rejected: {line}"));
+    println!("submitted job {job}: {request}");
+
+    // -- poll ------------------------------------------------------------
+    loop {
+        let (line, _) = srv.handle_line(&format!("{{\"op\":\"poll\",\"job\":{job}}}"));
+        let state = Json::parse(&line)
+            .ok()
+            .and_then(|v| v.get("state").and_then(Json::as_str).map(String::from))
+            .unwrap_or_else(|| panic!("poll failed: {line}"));
+        println!("  poll: {state}");
+        if state == "done" {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+
+    // -- fetch -----------------------------------------------------------
+    let (line, _) = srv.handle_line(&format!("{{\"op\":\"fetch\",\"job\":{job}}}"));
+    let resp = Json::parse(&line).expect("fetch response parses");
+    let fmax = resp
+        .get("result")
+        .and_then(|r| r.get("fmax_mhz"))
+        .and_then(Json::as_f64);
+    println!(
+        "fetched: served={} key={} fmax={:?} MHz",
+        resp.get("served").and_then(Json::as_str).unwrap_or("?"),
+        resp.get("key").and_then(Json::as_str).unwrap_or("?"),
+        fmax
+    );
+
+    // -- warm repeat -----------------------------------------------------
+    // The same request again, synchronously this time: answered straight
+    // from the store the first job published into — zero cold
+    // evaluations, byte-identical result.
+    let (line2, _) = srv.handle_line(request);
+    let again = Json::parse(&line2).expect("repeat response parses");
+    println!(
+        "repeat:  served={} cold_evals={}",
+        again.get("served").and_then(Json::as_str).unwrap_or("?"),
+        again.get("cold_evals").and_then(Json::as_u64).unwrap_or(99),
+    );
+    assert_eq!(again.get("served").and_then(Json::as_str), Some("store"));
+    assert_eq!(again.get("cold_evals").and_then(Json::as_u64), Some(0));
+    assert_eq!(
+        again.get("result").map(Json::write),
+        resp.get("result").map(Json::write),
+        "store-served bytes must equal the job's"
+    );
+
+    // -- stats + shutdown ------------------------------------------------
+    let (line, _) = srv.handle_line("{\"op\":\"stats\"}");
+    println!("stats:   {line}");
+    let (_, quit) = srv.handle_line("{\"op\":\"shutdown\"}");
+    assert!(quit);
+    for w in workers {
+        let _ = w.join();
+    }
+    println!("daemon shut down cleanly");
+    let _ = std::fs::remove_dir_all(&workdir);
+}

@@ -24,9 +24,11 @@ use crate::flow::{
     run_flow, run_indexed, BatchRunner, Design, FlowConfig, FlowVariant, Session,
     SessionError, SimOptions, Stage, StageCache,
 };
+use crate::phys::PhysContext;
 use crate::place::RustStep;
 use crate::report::{fmt_cong, fmt_cycles, fmt_gap, fmt_mhz, fmt_pct, Table};
 use crate::sim::BurstDetector;
+use crate::store::{ArtifactStore, Served, StoreKey};
 use crate::util::stats::mean;
 
 /// Experiment identifiers (`tapa bench --list`).
@@ -233,10 +235,27 @@ pub fn execute_unit_cached(
     cfg: &FlowConfig,
     cache: Option<&Arc<StageCache>>,
 ) -> Result<UnitResult, String> {
+    execute_unit_warm(unit, cfg, cache, None)
+}
+
+/// [`execute_unit_cached`] with an optional shared warm
+/// [`PhysContext`] — the serve daemon keeps one context per region
+/// fingerprint alive between requests (mirroring
+/// `SessionSet::share_phys_by_region`) and threads it through here.
+/// Sharing never changes a result: the solver memo is canonical and the
+/// phys engine is exactly cold-equivalent (the PR 4/5 warm≡cold
+/// contracts), so warm daemon responses stay byte-identical to one-shot
+/// CLI artifacts.
+pub fn execute_unit_warm(
+    unit: &WorkUnit,
+    cfg: &FlowConfig,
+    cache: Option<&Arc<StageCache>>,
+    phys: Option<&Arc<Mutex<PhysContext>>>,
+) -> Result<UnitResult, String> {
     let mut design = super::find_design(&unit.design)
         .ok_or_else(|| format!("unknown design `{}`", unit.design))?;
     design.device = unit.device;
-    execute_resolved_unit(design, unit, cfg, cache)
+    execute_resolved_unit(design, unit, cfg, cache, phys)
 }
 
 /// [`execute_unit_cached`] with the design already resolved — the batch
@@ -248,6 +267,7 @@ fn execute_resolved_unit(
     unit: &WorkUnit,
     cfg: &FlowConfig,
     cache: Option<&Arc<StageCache>>,
+    phys: Option<&Arc<Mutex<PhysContext>>>,
 ) -> Result<UnitResult, String> {
     if let Ok(pat) = std::env::var("TAPA_BENCH_FAIL") {
         let key = unit.key();
@@ -259,11 +279,15 @@ fn execute_resolved_unit(
     let unit = unit.clone();
     let cfg = cfg.clone();
     let cache = cache.cloned();
+    let phys = phys.cloned();
     catch_unwind(AssertUnwindSafe(move || match unit.util_ratio {
         None => {
             let mut s = Session::new(design, unit.variant, cfg);
             if let Some(c) = cache {
                 s = s.with_cache(c);
+            }
+            if let Some(p) = phys {
+                s = s.with_phys(p);
             }
             let r = s.run_all(&RustStep).expect("in-memory session cannot fail");
             UnitResult {
@@ -292,12 +316,44 @@ fn execute_resolved_unit(
                 Some(c) => (*c.estimates_for(&design)).clone(),
                 None => crate::hls::estimate_all(&design.graph),
             };
-            let plan = match &cache {
-                Some(c) => {
+            // With a shared warm context, solve through its solver memo —
+            // re-asserting the request's budget first (the partitioner
+            // only folds `cfg.solver_budget` into an *unbudgeted*
+            // context, and a long-lived daemon context may carry a
+            // previous request's budget).
+            let plan = match (&cache, &phys) {
+                (Some(c), Some(p)) => {
+                    let mut g = p.lock().unwrap();
+                    g.solver.budget = cfg.floorplan.solver_budget;
+                    (*c.sweep_plan_for_in(
+                        &design,
+                        &device,
+                        &est,
+                        &cfg.floorplan,
+                        ratio,
+                        None,
+                        &mut g.solver,
+                    ))
+                    .clone()
+                }
+                (Some(c), None) => {
                     (*c.sweep_plan_for(&design, &device, &est, &cfg.floorplan, ratio))
                         .clone()
                 }
-                None => crate::floorplan::multi::solve_point(
+                (None, Some(p)) => {
+                    let mut g = p.lock().unwrap();
+                    g.solver.budget = cfg.floorplan.solver_budget;
+                    crate::floorplan::multi::solve_point_in(
+                        &design.graph,
+                        &device,
+                        &est,
+                        &cfg.floorplan,
+                        ratio,
+                        None,
+                        &mut g.solver,
+                    )
+                }
+                (None, None) => crate::floorplan::multi::solve_point(
                     &design.graph,
                     &device,
                     &est,
@@ -317,15 +373,27 @@ fn execute_resolved_unit(
                 },
                 Some(fp) => {
                     let solve = SolveSummary::from_floorplan(Some(&fp));
-                    let mut phys = crate::phys::PhysContext::new();
-                    let fmax = crate::flow::evaluate_sweep_candidate_in(
-                        &design.graph,
-                        &device,
-                        &est,
-                        &fp,
-                        &cfg,
-                        &mut phys,
-                    );
+                    // Score through the shared warm engine when one is
+                    // threaded in (bit-identical to the fresh-context
+                    // evaluation below, property-tested in phys_api).
+                    let fmax = match &phys {
+                        Some(p) => crate::flow::evaluate_sweep_candidate_in(
+                            &design.graph,
+                            &device,
+                            &est,
+                            &fp,
+                            &cfg,
+                            &mut p.lock().unwrap(),
+                        ),
+                        None => crate::flow::evaluate_sweep_candidate_in(
+                            &design.graph,
+                            &device,
+                            &est,
+                            &fp,
+                            &cfg,
+                            &mut PhysContext::new(),
+                        ),
+                    };
                     UnitResult {
                         fmax_mhz: fmax,
                         cycles: None,
@@ -354,6 +422,24 @@ pub fn run_manifest(
     jobs: usize,
     save_path: Option<&Path>,
 ) -> Result<(usize, usize), SessionError> {
+    run_manifest_stored(m, cfg, jobs, save_path, None)
+}
+
+/// [`run_manifest`] with an optional shared [`ArtifactStore`]: every
+/// unit is served through [`ArtifactStore::get_or_compute`], so results
+/// already published by any cooperating process (a previous run, another
+/// shard worker, the serve daemon) are read instead of recomputed, and
+/// cold results are published for the next process. `wall_seconds` is
+/// only measured for cold evaluations (store-served units cost nothing
+/// and must stay byte-deterministic); the store moves it into its index
+/// as the unit's cost history for [`Manifest::plan_weighted`].
+pub fn run_manifest_stored(
+    m: &mut Manifest,
+    cfg: &FlowConfig,
+    jobs: usize,
+    save_path: Option<&Path>,
+    store: Option<&ArtifactStore>,
+) -> Result<(usize, usize), SessionError> {
     let todo: Vec<usize> = m
         .units
         .iter()
@@ -374,22 +460,25 @@ pub fn run_manifest(
     run_indexed(todo.len(), jobs, |i| {
         let idx = todo[i];
         let unit = shared.lock().unwrap().units[idx].unit.clone();
-        // Per-unit wall-clock rides in the manifest (never in the
-        // byte-compared CSVs): future sharding can weigh units by
-        // measured cost instead of round-robin counting.
-        let t0 = std::time::Instant::now();
-        let res = match catalogue.get(&unit.design) {
+        let compute = || match catalogue.get(&unit.design) {
             Some(d) => {
                 let mut d = d.clone();
                 d.device = unit.device;
-                execute_resolved_unit(d, &unit, cfg, Some(&cache))
+                // Per-unit wall-clock rides in the manifest (never in
+                // the byte-compared CSVs): cost-weighted sharding weighs
+                // units by it instead of round-robin counting.
+                let t0 = std::time::Instant::now();
+                execute_resolved_unit(d, &unit, cfg, Some(&cache), None).map(|mut r| {
+                    r.wall_seconds = Some(t0.elapsed().as_secs_f64());
+                    r
+                })
             }
             None => Err(format!("unknown design `{}`", unit.design)),
         };
-        let res = res.map(|mut r| {
-            r.wall_seconds = Some(t0.elapsed().as_secs_f64());
-            r
-        });
+        let res = match store {
+            Some(s) => s.get_or_compute(&StoreKey::for_unit(&unit, cfg), compute).0,
+            None => compute(),
+        };
         let mut g = shared.lock().unwrap();
         let e = &mut g.units[idx];
         e.attempts += 1;
@@ -482,10 +571,52 @@ pub fn manifest_table(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Table> 
             .unwrap_or_else(|| panic!("unknown design `{}`", u.design))
             .clone();
         d.device = u.device;
-        execute_resolved_unit(d, u, &cfg, Some(&cache))
+        execute_resolved_unit(d, u, &cfg, Some(&cache), None)
             .unwrap_or_else(|e| panic!("unit `{}` failed: {e}", u.key()))
     });
     suite_table(id, &results)
+}
+
+/// [`manifest_table`] backed by a shared [`ArtifactStore`] — the
+/// one-shot `tapa bench <suite> --store DIR` path. Returns the table
+/// plus `(store_hits, cold_units)` for this run, so callers (and the CI
+/// `serve-smoke` job) can assert a repeated run is served entirely warm.
+/// The table is byte-identical to [`manifest_table`]'s: stored payloads
+/// are exactly the executor's results minus the machine-dependent
+/// wall-clock, which never reaches a table.
+pub fn stored_suite_table(
+    id: &str,
+    cfg: &FlowConfig,
+    jobs: usize,
+    store: &ArtifactStore,
+) -> Option<(Table, (u64, u64))> {
+    let units = suite_units(id)?;
+    let cfg = suite_cfg(id, cfg);
+    let cache = Arc::new(StageCache::default());
+    let catalogue: HashMap<String, Design> = super::design_catalogue()
+        .into_iter()
+        .map(|d| (d.name.clone(), d))
+        .collect();
+    let served: Vec<(UnitResult, Served)> = run_indexed(units.len(), jobs, |i| {
+        let u = &units[i];
+        let key = StoreKey::for_unit(u, &cfg);
+        let (res, served) = store.get_or_compute(&key, || {
+            let mut d = catalogue
+                .get(&u.design)
+                .ok_or_else(|| format!("unknown design `{}`", u.design))?
+                .clone();
+            d.device = u.device;
+            execute_resolved_unit(d, u, &cfg, Some(&cache), None)
+        });
+        (
+            res.unwrap_or_else(|e| panic!("unit `{}` failed: {e}", u.key())),
+            served,
+        )
+    });
+    let hits = served.iter().filter(|(_, s)| *s == Served::Store).count() as u64;
+    let cold = served.iter().filter(|(_, s)| *s == Served::Cold).count() as u64;
+    let results: Vec<UnitResult> = served.into_iter().map(|(r, _)| r).collect();
+    Some((suite_table(id, &results)?, (hits, cold)))
 }
 
 /// Single-machine reference run of a full-session suite (`fast-suite`,

@@ -326,6 +326,77 @@ impl Manifest {
         }
     }
 
+    /// Cost-weighted variant of [`Manifest::plan`]: LPT (longest
+    /// processing time first) bin-packing over per-unit `costs` —
+    /// wall-seconds history harvested from a shared artifact store
+    /// (`ArtifactStore::unit_cost`). Units are assigned, most expensive
+    /// first, to the currently least-loaded shard; ties break
+    /// deterministically (equal cost → lower unit index first, equal
+    /// load → lower shard index), and units with no history are charged
+    /// the mean of the known costs. With no history at all (`costs` all
+    /// `None`) this falls back to the round-robin [`Manifest::plan`]
+    /// exactly.
+    ///
+    /// Only the *partition* changes: suite id, suite hash, total size
+    /// and per-entry unit identity are identical to a round-robin plan,
+    /// so merge validation and the merged result table are byte-for-byte
+    /// the same (test-enforced). Every cooperating worker must plan from
+    /// the same cost vector — workers with inconsistent histories
+    /// produce overlapping or gapped shards, which `merge` rejects.
+    pub fn plan_weighted(
+        suite: &str,
+        units: &[WorkUnit],
+        shard: Shard,
+        costs: &[Option<f64>],
+    ) -> Manifest {
+        if costs.iter().all(Option::is_none) || costs.len() != units.len() {
+            return Manifest::plan(suite, units, shard);
+        }
+        let known: Vec<f64> = costs.iter().filter_map(|c| *c).collect();
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        let cost = |i: usize| costs[i].unwrap_or(mean);
+        // LPT: most expensive first; equal costs keep unit order.
+        let mut order: Vec<usize> = (0..units.len()).collect();
+        order.sort_by(|&a, &b| {
+            cost(b)
+                .partial_cmp(&cost(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut load = vec![0.0f64; shard.count];
+        let mut mine: Vec<usize> = Vec::new();
+        for i in order {
+            let mut best = 0;
+            for s in 1..shard.count {
+                if load[s] < load[best] {
+                    best = s;
+                }
+            }
+            load[best] += cost(i);
+            if best == shard.index {
+                mine.push(i);
+            }
+        }
+        mine.sort_unstable();
+        Manifest {
+            suite: suite.to_string(),
+            suite_hash: suite_hash(suite, units),
+            total_units: units.len(),
+            shard,
+            units: mine
+                .into_iter()
+                .map(|i| UnitEntry {
+                    index: i,
+                    unit: units[i].clone(),
+                    status: UnitStatus::Pending,
+                    attempts: 0,
+                    error: None,
+                    result: None,
+                })
+                .collect(),
+        }
+    }
+
     /// The manifest file inside a shard's work directory.
     pub fn file_path(workdir: &Path) -> PathBuf {
         workdir.join(MANIFEST_FILE)
@@ -565,6 +636,19 @@ pub fn merge(manifests: &[Manifest]) -> Result<Merged, SessionError> {
 // Serialization (same discipline as `flow::persist`: deterministic
 // writer, strict reader, versioned layout)
 // ---------------------------------------------------------------------------
+
+/// Serialize one unit result in the frozen manifest-v3 byte layout.
+/// Public for the artifact store (`crate::store`), which persists unit
+/// results under the same deterministic writer so a store-served
+/// artifact is byte-identical to a manifest row.
+pub fn unit_result_to_json(r: &UnitResult) -> Json {
+    result_json(r)
+}
+
+/// Strict inverse of [`unit_result_to_json`].
+pub fn unit_result_from_json(v: &Json) -> R<UnitResult> {
+    parse_result(v)
+}
 
 fn result_json(r: &UnitResult) -> Json {
     Json::Obj(vec![
@@ -817,6 +901,85 @@ mod tests {
         for m in &shards {
             assert_eq!(m.total_units, 5);
             m.validate_against("s", &units).unwrap();
+        }
+    }
+
+    #[test]
+    fn weighted_plan_partitions_by_cost() {
+        let units = suite();
+        // Unit 0 dominates: LPT must isolate it and pack the cheap rest
+        // together, unlike round-robin.
+        let costs = vec![Some(100.0), Some(1.0), Some(1.0), Some(1.0), None];
+        let shards: Vec<Manifest> = (0..2)
+            .map(|k| Manifest::plan_weighted("s", &units, Shard { index: k, count: 2 }, &costs))
+            .collect();
+        let mut covered: Vec<usize> = shards
+            .iter()
+            .flat_map(|m| m.units.iter().map(|e| e.index))
+            .collect();
+        covered.sort_unstable();
+        assert_eq!(covered, vec![0, 1, 2, 3, 4], "weighted shards must partition");
+        for m in &shards {
+            m.validate_against("s", &units).unwrap();
+            // Entries stay in global-index order like round-robin plans.
+            let idx: Vec<usize> = m.units.iter().map(|e| e.index).collect();
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            assert_eq!(idx, sorted);
+        }
+        let owner_of_0 = shards
+            .iter()
+            .position(|m| m.units.iter().any(|e| e.index == 0))
+            .unwrap();
+        assert_eq!(
+            shards[owner_of_0].units.len(),
+            1,
+            "the dominant unit must get a shard to itself"
+        );
+        assert_eq!(shards[1 - owner_of_0].units.len(), 4);
+    }
+
+    #[test]
+    fn weighted_plan_without_history_is_round_robin() {
+        let units = suite();
+        let costs = vec![None; units.len()];
+        for k in 0..3 {
+            let shard = Shard { index: k, count: 3 };
+            let weighted = Manifest::plan_weighted("s", &units, shard, &costs);
+            let plain = Manifest::plan("s", &units, shard);
+            assert_eq!(manifest_to_json_text(&weighted), manifest_to_json_text(&plain));
+        }
+    }
+
+    #[test]
+    fn weighted_and_round_robin_plans_merge_identically() {
+        let units = suite();
+        let costs = vec![Some(9.0), Some(2.0), Some(2.0), Some(5.0), Some(1.0)];
+        let run = |plans: Vec<Manifest>| {
+            let done_shards: Vec<Manifest> = plans
+                .into_iter()
+                .map(|mut m| {
+                    for i in 0..m.units.len() {
+                        m.units[i] = done(m.units[i].clone());
+                    }
+                    m
+                })
+                .collect();
+            merge(&done_shards).unwrap()
+        };
+        let weighted = run((0..2)
+            .map(|k| Manifest::plan_weighted("s", &units, Shard { index: k, count: 2 }, &costs))
+            .collect());
+        let round_robin = run((0..2)
+            .map(|k| Manifest::plan("s", &units, Shard { index: k, count: 2 }))
+            .collect());
+        assert_eq!(weighted.suite_hash, round_robin.suite_hash);
+        let a = weighted.complete_results().unwrap();
+        let b = round_robin.complete_results().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            // Byte-level identity of the merged rows, not just PartialEq.
+            assert_eq!(unit_result_to_json(x).write(), unit_result_to_json(y).write());
         }
     }
 

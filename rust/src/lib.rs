@@ -29,7 +29,12 @@
 //!   warm while staying bit-identical to cold — [`phys`];
 //! - device models for the Xilinx Alveo U250 / U280 — [`device`];
 //! - benchmark generators for all designs evaluated in the paper —
-//!   [`bench_suite`].
+//!   [`bench_suite`];
+//! - a durable **content-addressed artifact store** keyed by
+//!   `(design hash, device fingerprint, config/budget hash)` — [`store`] —
+//!   and the persistent **compile-as-a-service daemon** (`tapa serve`)
+//!   that funnels line-JSON requests through it with in-flight
+//!   deduplication and warm per-region solver/phys contexts — [`serve`].
 //!
 //! All of the above is orchestrated by the **staged compilation API** in
 //! [`flow`]: a [`flow::Session`] walks the explicit stage pipeline
@@ -78,3 +83,5 @@ pub mod bench_suite;
 pub mod report;
 pub mod util;
 pub mod flow;
+pub mod store;
+pub mod serve;

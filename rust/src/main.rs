@@ -20,11 +20,25 @@
 //!       [--solver-budget B]         same knob for the bench suites
 //!       [--shard k/N --workdir W]   distributed worker: run shard k of N
 //!                                    into W/manifest.json (resumable)
+//!       [--store DIR]               read/write the shared artifact store
 //! tapa bench --list                 list experiment ids
 //! tapa merge W1 W2 ... [--csv]      validate + merge shard manifests into
 //!       [--out F] [--residual DIR]   the suite table; failures re-queue
+//! tapa serve --workdir W [--jobs N] compile-as-a-service daemon: line-JSON
+//!       [--stdio]                    protocol on W/serve.sock (or stdio),
+//!                                    artifact store at W/store
+//! tapa submit --workdir W ...       thin client for a running daemon
+//!       (--suite ID [--csv] | --design NAME [--device D] [--variant V]
+//!        [--ratio R] | --ping | --stats | --shutdown) [--async] [--meta]
 //! tapa engine-info                  check the PJRT artifact
 //! ```
+//!
+//! Compile-as-a-service: `tapa serve` keeps one warm solver/phys context
+//! per device region fingerprint and funnels every request through the
+//! durable content-addressed store in `W/store`, deduplicating identical
+//! in-flight requests; `tapa compile --store DIR` / `tapa bench <suite>
+//! --store DIR` are the one-shot paths over the same store and return
+//! byte-identical artifacts (see `docs/serve.md`).
 //!
 //! Sharded execution: `suite_units` flattens a batch experiment into a
 //! deterministic work-unit list; `--shard k/N` workers own the units
@@ -60,6 +74,8 @@ fn main() -> ExitCode {
         Some("compile") => cmd_compile(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("merge") => cmd_merge(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("submit") => cmd_submit(&args[1..]),
         Some("engine-info") => cmd_engine_info(),
         Some("help") | Some("--help") | None => {
             print_help();
@@ -81,10 +97,15 @@ fn print_help() {
          [--config FILE] [--no-sim]\n               [--device D[,D...]] [--sweep] \
          [--select fmax|cost] [--jobs N]\n               [--solver-budget <N>nodes|<N>ms] \
          [--workdir DIR] [--to STAGE]\n               \
-         [--resume]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n               \
-         [--solver-budget <N>nodes|<N>ms] [--shard k/N --workdir DIR]\n  \
-         tapa bench --list\n  \
+         [--resume] [--store DIR]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n               \
+         [--solver-budget <N>nodes|<N>ms] [--shard k/N --workdir DIR]\n               \
+         [--store DIR]\n  tapa bench --list\n  \
          tapa merge DIR... [--csv] [--out FILE] [--residual DIR]\n  \
+         tapa serve --workdir DIR [--jobs N] [--config FILE]\n               \
+         [--solver-budget <N>nodes|<N>ms] [--stdio]\n  \
+         tapa submit --workdir DIR (--suite ID [--csv] | --design NAME\n               \
+         [--device D] [--variant V] [--ratio R] | --ping | --stats |\n               \
+         --shutdown) [--async] [--meta]\n  \
          tapa engine-info\n\n\
          STAGES (for --to): estimate floorplan sweep pipeline place route sta sim\n\
          DEVICES (for --device): u250 u280 — a comma-separated list compiles the\n  \
@@ -110,7 +131,15 @@ fn print_help() {
          overlaps or gaps), re-queues failed units into --residual DIR (finish\n  \
          them with `bench ID --workdir DIR`), and emits the suite table\n  \
          byte-identical to a single-machine `bench ID` run. Shardable suites:\n  \
-         fast-suite 43-designs table8 table9 table10."
+         fast-suite 43-designs table8 table9 table10.\n\
+         SERVE: `serve --workdir W` runs the compile-as-a-service daemon: a\n  \
+         line-delimited JSON protocol on W/serve.sock (or stdin/stdout with\n  \
+         --stdio), an async job queue over --jobs workers, one warm solver/phys\n  \
+         context per device region, and a durable content-addressed artifact\n  \
+         store at W/store shared with the one-shot `--store DIR` paths of\n  \
+         `compile` and `bench` (byte-identical artifacts either way). `submit`\n  \
+         is the thin client; --async exercises submit/poll/fetch, --meta prints\n  \
+         the raw response line. See docs/serve.md."
     );
 }
 
@@ -286,6 +315,37 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         eprintln!("unknown design {name} (see `tapa list`)");
         return ExitCode::FAILURE;
     };
+
+    if let Some(store_dir) = flag_value(args, "--store") {
+        // One-shot compile-as-a-service mode: route the request through
+        // the same content-addressed store + unit executor the `serve`
+        // daemon uses, so artifacts are byte-identical either way.
+        if resume || workdir.is_some() || flag_value(args, "--to").is_some() {
+            eprintln!(
+                "--store is a one-shot store-backed mode; it cannot combine with \
+                 --workdir, --resume or --to"
+            );
+            return ExitCode::FAILURE;
+        }
+        if devices.len() > 1 {
+            eprintln!("--store compiles one device per request; pass a single --device");
+            return ExitCode::FAILURE;
+        }
+        let ratio = match flag_value(args, "--ratio") {
+            Some(r) => match r.parse::<f64>() {
+                Ok(x) => Some(x),
+                Err(_) => {
+                    eprintln!("bad --ratio `{r}` (expected a utilization ratio, e.g. 0.7)");
+                    return ExitCode::FAILURE;
+                }
+            },
+            None => None,
+        };
+        if let Some(&dev) = devices.first() {
+            design.device = dev;
+        }
+        return compile_stored(&store_dir, &design, variant_flag, ratio, &cfg);
+    }
 
     if devices.len() > 1 {
         return compile_multi_device(
@@ -601,6 +661,57 @@ fn compile_multi_device(
     ExitCode::SUCCESS
 }
 
+/// `tapa compile --store DIR`: the one-shot compile-as-a-service path.
+/// Routes the request through the same [`tapa::store::StoreKey`] +
+/// unit executor a running `tapa serve` daemon uses, so the published
+/// artifact is byte-identical either way. The canonical result JSON
+/// goes to stdout (pipeable); status goes to stderr.
+fn compile_stored(
+    store_dir: &str,
+    design: &tapa::flow::Design,
+    variant_flag: Option<FlowVariant>,
+    ratio: Option<f64>,
+    cfg: &FlowConfig,
+) -> ExitCode {
+    use tapa::flow::manifest::{unit_result_to_json, WorkUnit};
+    use tapa::store::{ArtifactStore, StoreKey};
+
+    let store = match ArtifactStore::open(PathBuf::from(store_dir)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot open store {store_dir}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let unit = WorkUnit {
+        design: design.name.clone(),
+        device: design.device,
+        variant: variant_flag.unwrap_or(FlowVariant::Tapa),
+        util_ratio: ratio,
+    };
+    let key = StoreKey::for_unit(&unit, cfg);
+    let t0 = std::time::Instant::now();
+    let (res, served) = store.get_or_compute(&key, || experiments::execute_unit(&unit, cfg));
+    match res {
+        Ok(r) => {
+            eprintln!(
+                "unit {}: served {} in {:.2}s (key {}, store {})",
+                unit.key(),
+                served.name(),
+                t0.elapsed().as_secs_f64(),
+                key.hex(),
+                store.root().display()
+            );
+            println!("{}", unit_result_to_json(&r).write());
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("unit {} failed: {e}", unit.key());
+            ExitCode::FAILURE
+        }
+    }
+}
+
 fn cmd_bench(args: &[String]) -> ExitCode {
     if has_flag(args, "--list") {
         for id in experiments::ALL_EXPERIMENTS {
@@ -621,8 +732,39 @@ fn cmd_bench(args: &[String]) -> ExitCode {
     }
     let shard = flag_value(args, "--shard");
     let workdir = flag_value(args, "--workdir").map(PathBuf::from);
+    let store_dir = flag_value(args, "--store").map(PathBuf::from);
     if shard.is_some() || workdir.is_some() {
-        return cmd_bench_shard(id, shard.as_deref(), workdir, &cfg, jobs);
+        return cmd_bench_shard(id, shard.as_deref(), workdir, &cfg, jobs, store_dir);
+    }
+    if let Some(sdir) = store_dir {
+        // One-shot store-backed suite run: every unit is served from (or
+        // published into) the shared artifact store — the same funnel the
+        // `serve` daemon and `--shard --store` workers use.
+        let store = match tapa::store::ArtifactStore::open(&sdir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot open store {}: {e}", sdir.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let Some((table, (hits, cold))) = experiments::stored_suite_table(id, &cfg, jobs, &store)
+        else {
+            eprintln!(
+                "experiment {id} is not store-backed (storable suites: {})",
+                experiments::SHARDED_SUITES.join(" ")
+            );
+            return ExitCode::FAILURE;
+        };
+        eprintln!(
+            "store {}: {hits} unit(s) served warm, {cold} evaluated cold",
+            store.root().display()
+        );
+        if has_flag(args, "--csv") {
+            print!("{}", table.to_csv());
+        } else {
+            print!("{}", table.render());
+        }
+        return ExitCode::SUCCESS;
     }
     match experiments::run_experiment_jobs(id, &cfg, jobs) {
         Some(table) => {
@@ -646,12 +788,18 @@ fn cmd_bench(args: &[String]) -> ExitCode {
 /// status/attempts per unit. Without `--shard`, an existing manifest in
 /// `--workdir` is resumed as-is — this is how a `tapa merge --residual`
 /// re-queue manifest is finished.
+///
+/// With `--store DIR`, fresh shard plans are cost-weighted: per-unit
+/// `wall_seconds` history recorded in the store index drives an LPT
+/// partition (`Manifest::plan_weighted`) instead of round-robin, and
+/// unit execution is served from / published into the store.
 fn cmd_bench_shard(
     id: &str,
     shard: Option<&str>,
     workdir: Option<PathBuf>,
     cfg: &FlowConfig,
     jobs: usize,
+    store_dir: Option<PathBuf>,
 ) -> ExitCode {
     use tapa::flow::manifest::{Manifest, Shard, UnitStatus};
 
@@ -667,6 +815,16 @@ fn cmd_bench_shard(
         return ExitCode::FAILURE;
     };
     let scfg = experiments::suite_cfg(id, cfg);
+    let store = match &store_dir {
+        Some(sdir) => match tapa::store::ArtifactStore::open(sdir) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("cannot open store {}: {e}", sdir.display());
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
+    };
     let path = Manifest::file_path(&dir);
     let mut m = if path.exists() {
         let m = match Manifest::load(&path) {
@@ -711,7 +869,28 @@ fn cmd_bench_shard(
             eprintln!("bad --shard spec `{spec}` (expected k/N with k < N)");
             return ExitCode::FAILURE;
         };
-        Manifest::plan(id, &units, s)
+        match &store {
+            // Weigh the partition by per-unit wall-clock history from the
+            // store index (LPT; falls back to round-robin when no unit
+            // has a recorded cost). Every shard of one suite run must use
+            // the same store history, or the plans won't partition — the
+            // merge-side overlap/gap validation catches that.
+            Some(st) => {
+                let costs: Vec<Option<f64>> = units
+                    .iter()
+                    .map(|u| st.unit_cost(&tapa::store::StoreKey::for_unit(u, &scfg)))
+                    .collect();
+                let known = costs.iter().filter(|c| c.is_some()).count();
+                if known > 0 {
+                    println!(
+                        "  plan: cost-weighted (LPT) from {known}/{} stored unit cost(s)",
+                        units.len()
+                    );
+                }
+                Manifest::plan_weighted(id, &units, s, &costs)
+            }
+            None => Manifest::plan(id, &units, s),
+        }
     };
     let (pending, done0, failed0) = m.counts();
     println!(
@@ -723,7 +902,13 @@ fn cmd_bench_shard(
         m.suite_hash
     );
     let t0 = std::time::Instant::now();
-    let run = experiments::run_manifest(&mut m, &scfg, jobs, Some(path.as_path()));
+    let run = experiments::run_manifest_stored(
+        &mut m,
+        &scfg,
+        jobs,
+        Some(path.as_path()),
+        store.as_ref(),
+    );
     let (done, failed) = match run {
         Ok(c) => c,
         Err(e) => {
@@ -885,6 +1070,290 @@ fn cmd_merge(args: &[String]) -> ExitCode {
             eprintln!("  wrote {}", out.display());
         }
         None => print!("{text}"),
+    }
+    ExitCode::SUCCESS
+}
+
+/// `tapa serve --workdir W [--jobs N] [--stdio]`: run the persistent
+/// compile-as-a-service daemon. Requests arrive as line-delimited JSON
+/// on `W/serve.sock` (or stdin/stdout with `--stdio`), are deduplicated
+/// against in-flight work, served from the durable store at `W/store`
+/// when possible, and otherwise evaluated on warm per-region
+/// solver/phys contexts. See `docs/serve.md` for the protocol.
+fn cmd_serve(args: &[String]) -> ExitCode {
+    use tapa::serve::Server;
+
+    let Some(dir) = flag_value(args, "--workdir").map(PathBuf::from) else {
+        eprintln!("serve requires --workdir DIR (the socket and store live there)");
+        return ExitCode::FAILURE;
+    };
+    let Ok(jobs) = parse_jobs(args) else {
+        return ExitCode::FAILURE;
+    };
+    let mut cfg = load_config(args);
+    if !apply_solver_budget(args, &mut cfg) {
+        return ExitCode::FAILURE;
+    }
+    let srv = match Server::open(&dir, jobs, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot start daemon: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if has_flag(args, "--stdio") {
+        eprintln!(
+            "tapa serve: line-JSON protocol on stdin/stdout, {jobs} worker(s), \
+             store {}",
+            srv.store().root().display()
+        );
+        return match srv.run_stdio() {
+            Ok(()) => ExitCode::SUCCESS,
+            Err(e) => {
+                eprintln!("daemon failed: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+    #[cfg(unix)]
+    {
+        eprintln!(
+            "tapa serve: listening on {}, {jobs} worker(s), store {}",
+            dir.join(tapa::serve::SOCKET_FILE).display(),
+            srv.store().root().display()
+        );
+        match srv.run_unix(&dir) {
+            Ok(path) => {
+                eprintln!("tapa serve: shut down ({} removed)", path.display());
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("daemon failed: {e}");
+                ExitCode::FAILURE
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = srv;
+        eprintln!("unix sockets are unavailable on this platform; use --stdio");
+        ExitCode::FAILURE
+    }
+}
+
+/// `tapa submit --workdir W …`: thin client for a running daemon.
+/// Builds one protocol request from the flags, sends it over
+/// `W/serve.sock`, and prints the interesting part of the response
+/// (`--meta` prints the raw line; `--async` goes through the daemon's
+/// submit → poll → fetch job queue instead of the synchronous path).
+fn cmd_submit(args: &[String]) -> ExitCode {
+    #[cfg(not(unix))]
+    {
+        let _ = args;
+        eprintln!("submit needs unix sockets; drive `tapa serve --stdio` directly");
+        ExitCode::FAILURE
+    }
+    #[cfg(unix)]
+    {
+        use std::io::{BufRead, BufReader, Write};
+        use std::os::unix::net::UnixStream;
+        use tapa::util::json::Json;
+
+        let Some(dir) = flag_value(args, "--workdir").map(PathBuf::from) else {
+            eprintln!("submit requires --workdir DIR (the daemon's workdir)");
+            return ExitCode::FAILURE;
+        };
+        let req = match build_request(args) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        };
+        let sock = dir.join(tapa::serve::SOCKET_FILE);
+        let stream = match UnixStream::connect(&sock) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!(
+                    "cannot connect to {} ({e}); is `tapa serve --workdir {}` running?",
+                    sock.display(),
+                    dir.display()
+                );
+                return ExitCode::FAILURE;
+            }
+        };
+        let mut reader = BufReader::new(match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot clone socket: {e}");
+                return ExitCode::FAILURE;
+            }
+        });
+        let mut writer = stream;
+        let mut transact = |line: &str| -> Result<String, String> {
+            writeln!(writer, "{line}").map_err(|e| e.to_string())?;
+            writer.flush().map_err(|e| e.to_string())?;
+            let mut resp = String::new();
+            reader.read_line(&mut resp).map_err(|e| e.to_string())?;
+            if resp.is_empty() {
+                return Err("daemon closed the connection".into());
+            }
+            Ok(resp.trim_end().to_string())
+        };
+
+        let final_line = if has_flag(args, "--async") {
+            // submit → poll (until done) → fetch: the queued path. The
+            // fetch response IS the operation's response line.
+            let submit = Json::Obj(vec![
+                ("op".into(), Json::Str("submit".into())),
+                ("request".into(), req),
+            ]);
+            let line = match transact(&submit.write()) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("submit failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let parsed = Json::parse(&line).ok();
+            let job = match parsed.and_then(|v| v.get("job").and_then(Json::as_u64)) {
+                Some(j) => j,
+                None => {
+                    eprintln!("submit rejected: {line}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            eprintln!("job {job} queued");
+            loop {
+                let poll = Json::Obj(vec![
+                    ("op".into(), Json::Str("poll".into())),
+                    ("job".into(), Json::Num(job as f64)),
+                ]);
+                match transact(&poll.write()) {
+                    Ok(l) => {
+                        let state = Json::parse(&l)
+                            .ok()
+                            .and_then(|v| v.get("state").and_then(Json::as_str).map(String::from));
+                        match state.as_deref() {
+                            Some("done") => break,
+                            Some(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+                            None => {
+                                eprintln!("poll failed: {l}");
+                                return ExitCode::FAILURE;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("poll failed: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            let fetch = Json::Obj(vec![
+                ("op".into(), Json::Str("fetch".into())),
+                ("job".into(), Json::Num(job as f64)),
+            ]);
+            match transact(&fetch.write()) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("fetch failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else {
+            match transact(&req.write()) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("request failed: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        };
+        print_response(&final_line, has_flag(args, "--meta"))
+    }
+}
+
+/// Build the one protocol request `tapa submit`'s flags describe.
+#[cfg(unix)]
+fn build_request(args: &[String]) -> Result<tapa::util::json::Json, String> {
+    use tapa::util::json::Json;
+
+    for (flag, op) in [("--ping", "ping"), ("--stats", "stats"), ("--shutdown", "shutdown")] {
+        if has_flag(args, flag) {
+            return Ok(Json::Obj(vec![("op".into(), Json::Str(op.into()))]));
+        }
+    }
+    if let Some(id) = flag_value(args, "--suite") {
+        return Ok(Json::Obj(vec![
+            ("op".into(), Json::Str("bench".into())),
+            ("suite".into(), Json::Str(id)),
+        ]));
+    }
+    if let Some(name) = flag_value(args, "--design") {
+        let device = match flag_value(args, "--device") {
+            Some(d) => d,
+            // Default to the design's catalogue device so quick requests
+            // don't need the flag; the daemon re-validates.
+            None => tapa::bench_suite::find_design(&name)
+                .map(|d| d.device.name().to_ascii_lowercase())
+                .ok_or_else(|| format!("unknown design {name}; pass --device explicitly"))?,
+        };
+        let mut fields = vec![
+            ("op".into(), Json::Str("run".into())),
+            ("design".into(), Json::Str(name)),
+            ("device".into(), Json::Str(device)),
+        ];
+        if let Some(v) = flag_value(args, "--variant") {
+            fields.push(("variant".into(), Json::Str(v)));
+        }
+        if let Some(r) = flag_value(args, "--ratio") {
+            let x: f64 = r
+                .parse()
+                .map_err(|_| format!("bad --ratio `{r}` (expected a float)"))?;
+            fields.push(("ratio".into(), Json::Num(x)));
+        }
+        return Ok(Json::Obj(fields));
+    }
+    Err(
+        "submit requires one of --ping, --stats, --shutdown, --suite ID, or \
+         --design NAME [--device D] [--variant V] [--ratio R]"
+            .into(),
+    )
+}
+
+/// Print a daemon response line: `--meta` dumps it raw; otherwise the
+/// `csv` / `result` payload is extracted for clean piping. Exit status
+/// follows the response's `ok` flag.
+#[cfg(unix)]
+fn print_response(line: &str, meta: bool) -> ExitCode {
+    use tapa::util::json::Json;
+
+    let parsed = Json::parse(line).ok();
+    let ok = parsed
+        .as_ref()
+        .and_then(|v| v.get("ok").and_then(Json::as_bool))
+        .unwrap_or(false);
+    if meta {
+        println!("{line}");
+        return if ok { ExitCode::SUCCESS } else { ExitCode::FAILURE };
+    }
+    let Some(v) = parsed else {
+        eprintln!("malformed response: {line}");
+        return ExitCode::FAILURE;
+    };
+    if !ok {
+        eprintln!(
+            "daemon error: {}",
+            v.get("error").and_then(Json::as_str).unwrap_or(line)
+        );
+        return ExitCode::FAILURE;
+    }
+    if let Some(csv) = v.get("csv").and_then(Json::as_str) {
+        print!("{csv}");
+    } else if let Some(r) = v.get("result") {
+        println!("{}", r.write());
+    } else {
+        println!("{line}");
     }
     ExitCode::SUCCESS
 }

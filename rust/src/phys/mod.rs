@@ -196,6 +196,17 @@ impl PhysContext {
         }
     }
 
+    /// A context whose solver starts under `budget` — what the serve
+    /// daemon uses when creating the long-lived per-region context, so a
+    /// warm daemon request solves under exactly the budget the cold CLI
+    /// path would (sessions re-assert the budget from their config on
+    /// every sweep run, so this only matters for non-session solves).
+    pub fn with_solver_budget(budget: Option<crate::solver::SolveBudget>) -> PhysContext {
+        let mut ctx = PhysContext::new();
+        ctx.solver.budget = budget;
+        ctx
+    }
+
     /// The engine owning `(g, device, estimates)`'s net model, built on
     /// first use. Estimates are part of the identity (a session's
     /// register-augmented estimates get their own engine, distinct from

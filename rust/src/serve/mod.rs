@@ -1,0 +1,574 @@
+//! `tapa serve` — the long-running compile-as-a-service daemon.
+//!
+//! The paper's co-optimization loop is fast enough to be interactive
+//! (§6), and the real rapidstream-tapa flow is already structured as
+//! steps around a persistent context; this module is the missing piece
+//! of that architecture in the reproduction: one warm process serving
+//! many clients. A [`Server`] couples
+//!
+//! * the durable [`ArtifactStore`] (`<workdir>/store`) — every request
+//!   is funneled through [`ArtifactStore::get_or_compute`], so results
+//!   persist across daemon restarts and are shared with one-shot
+//!   `tapa compile/bench --store` processes, and M concurrent clients
+//!   asking for the same key trigger exactly one evaluation;
+//! * one warm [`PhysContext`] (solver memo + incremental phys engines)
+//!   per device `region_fingerprint`, kept alive between requests — the
+//!   same sharing rule as `SessionSet::share_phys_by_region`, safe
+//!   because warm solves are canonical and warm phys evaluations are
+//!   bit-identical to cold (the PR 4/5 contracts);
+//! * a shared [`StageCache`] (HLS estimates once per design);
+//! * an async job queue (`submit` → `poll` → `fetch`) drained by worker
+//!   threads, each job fanning out over [`run_indexed`].
+//!
+//! ## Protocol
+//!
+//! Line-delimited JSON over a Unix socket (`<workdir>/serve.sock`) or a
+//! stdin/stdout pipe: one request object per line in, one response
+//! object per line out (see `docs/serve.md` for the full schema).
+//! Operations:
+//!
+//! | op | effect |
+//! |---|---|
+//! | `ping` | liveness check |
+//! | `run` | compile one unit synchronously (`design`/`device`/`variant`, optional `ratio` for a sweep point) |
+//! | `bench` | run a whole sharding suite (`suite`), reply with its CSV |
+//! | `submit` | enqueue a `run`/`bench` request; replies with a job id |
+//! | `poll` | job state: `queued` / `running` / `done` |
+//! | `fetch` | the finished job's response (error while unfinished) |
+//! | `stats` | store/solver/phys telemetry counters |
+//! | `shutdown` | stop the daemon (after responding) |
+//!
+//! Every `run`/`bench` response carries `served` / `cold_evals`
+//! telemetry, so clients (and the CI `serve-smoke` job) can assert that
+//! a repeated request was answered entirely from the warm store.
+//!
+//! ## Byte identity with the one-shot CLI
+//!
+//! A daemon-served artifact is byte-identical to the one-shot
+//! `tapa bench --store` / `execute_unit` result: both paths run the
+//! same executor ([`execute_unit_warm`]), the same store funnel and the
+//! same frozen serializer (`unit_result_to_json`), and stored payloads
+//! carry no machine-dependent fields. Property-tested in
+//! `rust/tests/serve_api.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::bench_suite::experiments::{execute_unit_warm, suite_cfg, suite_table, suite_units};
+use crate::device::DeviceKind;
+use crate::flow::manifest::{unit_result_to_json, UnitResult, WorkUnit};
+use crate::flow::{FlowConfig, FlowVariant, StageCache};
+use crate::phys::PhysContext;
+use crate::store::{ArtifactStore, Served, StoreKey};
+use crate::util::json::Json;
+use crate::util::pool::run_indexed;
+
+/// Name of the daemon's listening socket inside its workdir.
+pub const SOCKET_FILE: &str = "serve.sock";
+
+/// Subdirectory of the workdir holding the artifact store.
+pub const STORE_DIR: &str = "store";
+
+/// Lifecycle of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobState {
+    Queued,
+    Running,
+    Done,
+}
+
+struct JobSlot {
+    state: JobState,
+    request: Json,
+    /// The finished job's wire response (exactly what a synchronous
+    /// request would have answered).
+    response: Option<String>,
+}
+
+/// The daemon state shared by every connection and worker thread.
+/// Constructed once ([`Server::open`]), wrapped in an [`Arc`], driven by
+/// [`Server::run_unix`] / [`Server::run_stdio`] or directly through
+/// [`Server::handle_line`] (tests, the in-process example client).
+pub struct Server {
+    cfg: FlowConfig,
+    /// Worker threads per request fan-out (`run_indexed`) and queue
+    /// drain width.
+    jobs: usize,
+    store: ArtifactStore,
+    cache: Arc<StageCache>,
+    /// One warm context per effective `region_fingerprint`.
+    phys: Mutex<HashMap<u64, Arc<Mutex<PhysContext>>>>,
+    table: Mutex<HashMap<u64, JobSlot>>,
+    next_job: AtomicU64,
+    queue: Mutex<VecDeque<u64>>,
+    queue_cv: Condvar,
+    stop: AtomicBool,
+    /// Cold unit evaluations across the daemon's lifetime.
+    cold_evals: AtomicU64,
+}
+
+impl Server {
+    /// Open a server over `workdir` (store at `<workdir>/store`).
+    pub fn open(workdir: &Path, jobs: usize, cfg: FlowConfig) -> Result<Arc<Server>, String> {
+        let store = ArtifactStore::open(workdir.join(STORE_DIR)).map_err(|e| e.to_string())?;
+        Ok(Arc::new(Server {
+            cfg,
+            jobs: jobs.max(1),
+            store,
+            cache: Arc::new(StageCache::default()),
+            phys: Mutex::new(HashMap::new()),
+            table: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            cold_evals: AtomicU64::new(0),
+        }))
+    }
+
+    /// The daemon's artifact store (tests, diagnostics).
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Has `shutdown` been requested?
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// The warm context owning `unit`'s effective region fingerprint
+    /// (merged columns for the coarse 4-slot variant — the same view the
+    /// executor compiles against). Created on first use with the
+    /// daemon's configured solver budget.
+    fn phys_for(&self, unit: &WorkUnit) -> Arc<Mutex<PhysContext>> {
+        let device = match unit.variant {
+            FlowVariant::TapaCoarse4Slot => unit.device.device().merged_columns(),
+            _ => unit.device.device(),
+        };
+        let fp = device.region_fingerprint();
+        self.phys
+            .lock()
+            .unwrap()
+            .entry(fp)
+            .or_insert_with(|| {
+                Arc::new(Mutex::new(PhysContext::with_solver_budget(
+                    self.cfg.floorplan.solver_budget,
+                )))
+            })
+            .clone()
+    }
+
+    /// Serve one unit under `cfg` through the store funnel with the warm
+    /// per-region context — the one execution path of every daemon
+    /// request.
+    fn run_unit(&self, unit: &WorkUnit, cfg: &FlowConfig) -> (Result<UnitResult, String>, Served) {
+        let key = StoreKey::for_unit(unit, cfg);
+        let phys = self.phys_for(unit);
+        let out = self.store.get_or_compute(&key, || {
+            execute_unit_warm(unit, cfg, Some(&self.cache), Some(&phys))
+        });
+        if out.1 == Served::Cold {
+            self.cold_evals.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    // -- request handlers -------------------------------------------------
+
+    fn handle_run(&self, req: &Json) -> Result<Json, String> {
+        let unit = parse_unit(req)?;
+        let (res, served) = self.run_unit(&unit, &self.cfg);
+        let result = res?;
+        Ok(Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("op".into(), Json::Str("run".into())),
+            ("unit".into(), Json::Str(unit.key())),
+            (
+                "key".into(),
+                Json::Str(StoreKey::for_unit(&unit, &self.cfg).hex()),
+            ),
+            ("served".into(), Json::Str(served.name().into())),
+            (
+                "cold_evals".into(),
+                Json::Num(if served == Served::Cold { 1.0 } else { 0.0 }),
+            ),
+            ("result".into(), unit_result_to_json(&result)),
+        ]))
+    }
+
+    fn handle_bench(&self, req: &Json) -> Result<Json, String> {
+        let suite = req
+            .get("suite")
+            .and_then(Json::as_str)
+            .ok_or("bench request needs a `suite` field")?
+            .to_string();
+        let units =
+            suite_units(&suite).ok_or_else(|| format!("`{suite}` is not a sharding suite"))?;
+        let cfg = suite_cfg(&suite, &self.cfg);
+        let served: Vec<(Result<UnitResult, String>, Served)> =
+            run_indexed(units.len(), self.jobs, |i| self.run_unit(&units[i], &cfg));
+        let mut results = Vec::with_capacity(served.len());
+        let mut cold = 0u64;
+        let mut hits = 0u64;
+        let mut dedup = 0u64;
+        for (i, (res, s)) in served.into_iter().enumerate() {
+            match s {
+                Served::Cold => cold += 1,
+                Served::Store => hits += 1,
+                Served::Deduped => dedup += 1,
+            }
+            results.push(res.map_err(|e| format!("unit `{}`: {e}", units[i].key()))?);
+        }
+        let table = suite_table(&suite, &results)
+            .ok_or_else(|| format!("could not reassemble suite `{suite}`"))?;
+        Ok(Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("op".into(), Json::Str("bench".into())),
+            ("suite".into(), Json::Str(suite)),
+            ("units".into(), Json::Num(results.len() as f64)),
+            ("cold_evals".into(), Json::Num(cold as f64)),
+            ("store_hits".into(), Json::Num(hits as f64)),
+            ("dedup_waits".into(), Json::Num(dedup as f64)),
+            ("csv".into(), Json::Str(table.to_csv())),
+        ]))
+    }
+
+    fn handle_stats(&self) -> Json {
+        let s = self.store.stats();
+        let (mut solver_cold, mut phys_evals, mut phys_warm) = (0u64, 0u64, 0u64);
+        let contexts = {
+            let phys = self.phys.lock().unwrap();
+            for ctx in phys.values() {
+                let g = ctx.lock().unwrap();
+                solver_cold += g.solver.cold_solves();
+                let t = g.telemetry();
+                phys_evals += t.evals;
+                phys_warm += t.warm_evals;
+            }
+            phys.len()
+        };
+        Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("op".into(), Json::Str("stats".into())),
+            ("store_hits".into(), Json::Num(s.hits as f64)),
+            ("store_misses".into(), Json::Num(s.misses as f64)),
+            ("dedup_waits".into(), Json::Num(s.dedups as f64)),
+            ("store_entries".into(), Json::Num(s.entries as f64)),
+            ("cold_evals".into(), Json::Num(self.cold_evals.load(Ordering::Relaxed) as f64)),
+            ("phys_contexts".into(), Json::Num(contexts as f64)),
+            ("solver_cold_solves".into(), Json::Num(solver_cold as f64)),
+            ("phys_evals".into(), Json::Num(phys_evals as f64)),
+            ("phys_warm_evals".into(), Json::Num(phys_warm as f64)),
+        ])
+    }
+
+    fn handle_submit(self: &Arc<Self>, req: &Json) -> Result<Json, String> {
+        let inner_op = req.get("request").and_then(|r| r.get("op")).and_then(Json::as_str);
+        match inner_op {
+            Some("run") | Some("bench") => {}
+            _ => return Err("submit needs a `request` object with op run|bench".into()),
+        }
+        let request = req.get("request").cloned().expect("checked above");
+        let id = self.next_job.fetch_add(1, Ordering::SeqCst);
+        self.table.lock().unwrap().insert(
+            id,
+            JobSlot { state: JobState::Queued, request, response: None },
+        );
+        self.queue.lock().unwrap().push_back(id);
+        self.queue_cv.notify_one();
+        Ok(Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("op".into(), Json::Str("submit".into())),
+            ("job".into(), Json::Num(id as f64)),
+        ]))
+    }
+
+    fn job_id(req: &Json) -> Result<u64, String> {
+        req.get("job")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| "missing `job` id".into())
+    }
+
+    fn handle_poll(&self, req: &Json) -> Result<Json, String> {
+        let id = Self::job_id(req)?;
+        let table = self.table.lock().unwrap();
+        let slot = table.get(&id).ok_or_else(|| format!("unknown job {id}"))?;
+        let state = match slot.state {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+        };
+        Ok(Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("op".into(), Json::Str("poll".into())),
+            ("job".into(), Json::Num(id as f64)),
+            ("state".into(), Json::Str(state.into())),
+        ]))
+    }
+
+    fn handle_fetch(&self, req: &Json) -> Result<String, String> {
+        let id = Self::job_id(req)?;
+        let table = self.table.lock().unwrap();
+        let slot = table.get(&id).ok_or_else(|| format!("unknown job {id}"))?;
+        slot.response
+            .clone()
+            .ok_or_else(|| format!("job {id} is not finished"))
+    }
+
+    /// Dispatch one already-parsed request to its handler, producing the
+    /// response *text* (one line, no trailing newline).
+    fn dispatch(self: &Arc<Self>, req: &Json) -> String {
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+        let out: Result<Json, String> = match op {
+            "ping" => Ok(Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("op".into(), Json::Str("ping".into())),
+            ])),
+            "run" => self.handle_run(req),
+            "bench" => self.handle_bench(req),
+            "stats" => Ok(self.handle_stats()),
+            "submit" => self.handle_submit(req),
+            "poll" => self.handle_poll(req),
+            "fetch" => return self.handle_fetch(req).unwrap_or_else(|e| error_line(&e)),
+            "shutdown" => {
+                self.stop.store(true, Ordering::SeqCst);
+                self.queue_cv.notify_all();
+                Ok(Json::Obj(vec![
+                    ("ok".into(), Json::Bool(true)),
+                    ("op".into(), Json::Str("shutdown".into())),
+                ]))
+            }
+            "" => Err("request has no `op` field".into()),
+            other => Err(format!("unknown op `{other}`")),
+        };
+        match out {
+            Ok(v) => v.write(),
+            Err(e) => error_line(&e),
+        }
+    }
+
+    /// Handle one protocol line. Returns the response line (without the
+    /// trailing newline) and whether this request asked the daemon to
+    /// shut down. This is the whole protocol surface — the socket and
+    /// stdio transports, the tests and the in-process example all call
+    /// it.
+    pub fn handle_line(self: &Arc<Self>, line: &str) -> (String, bool) {
+        let line = line.trim();
+        if line.is_empty() {
+            return (error_line("empty request"), false);
+        }
+        let req = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => return (error_line(&format!("bad request JSON: {e}")), false),
+        };
+        let resp = self.dispatch(&req);
+        (resp, self.stopped())
+    }
+
+    /// Spawn the queue worker threads that drain `submit` jobs. Returns
+    /// their join handles; they exit when `shutdown` is requested.
+    pub fn start_workers(self: &Arc<Self>) -> Vec<std::thread::JoinHandle<()>> {
+        (0..self.jobs)
+            .map(|_| {
+                let srv = self.clone();
+                std::thread::spawn(move || loop {
+                    let id = {
+                        let mut q = srv.queue.lock().unwrap();
+                        loop {
+                            if srv.stopped() {
+                                return;
+                            }
+                            if let Some(id) = q.pop_front() {
+                                break id;
+                            }
+                            let (g, _) = srv
+                                .queue_cv
+                                .wait_timeout(q, Duration::from_millis(100))
+                                .unwrap();
+                            q = g;
+                        }
+                    };
+                    let request = {
+                        let mut table = srv.table.lock().unwrap();
+                        let slot = table.get_mut(&id).expect("queued job has a slot");
+                        slot.state = JobState::Running;
+                        slot.request.clone()
+                    };
+                    let response = srv.dispatch(&request);
+                    let mut table = srv.table.lock().unwrap();
+                    let slot = table.get_mut(&id).expect("running job has a slot");
+                    slot.response = Some(response);
+                    slot.state = JobState::Done;
+                })
+            })
+            .collect()
+    }
+
+    /// Serve requests from stdin, answers to stdout, until EOF or a
+    /// `shutdown` request — the pipe transport (`tapa serve --stdio`).
+    pub fn run_stdio(self: &Arc<Self>) -> Result<(), String> {
+        let workers = self.start_workers();
+        let stdin = std::io::stdin();
+        let mut stdout = std::io::stdout();
+        for line in stdin.lock().lines() {
+            let line = line.map_err(|e| e.to_string())?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (resp, quit) = self.handle_line(&line);
+            writeln!(stdout, "{resp}").map_err(|e| e.to_string())?;
+            stdout.flush().map_err(|e| e.to_string())?;
+            if quit {
+                break;
+            }
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue_cv.notify_all();
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+
+    /// Serve requests on the Unix socket `<workdir>/serve.sock`, one
+    /// handler thread per connection, until a `shutdown` request.
+    #[cfg(unix)]
+    pub fn run_unix(self: &Arc<Self>, workdir: &Path) -> Result<PathBuf, String> {
+        use std::os::unix::net::UnixListener;
+        std::fs::create_dir_all(workdir).map_err(|e| e.to_string())?;
+        let path = workdir.join(SOCKET_FILE);
+        // A leftover socket from a dead daemon would make bind fail.
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .map_err(|e| format!("cannot bind {}: {e}", path.display()))?;
+        listener.set_nonblocking(true).map_err(|e| e.to_string())?;
+        let workers = self.start_workers();
+        while !self.stopped() {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let srv = self.clone();
+                    std::thread::spawn(move || {
+                        let _ = srv.serve_stream(stream);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(format!("accept failed: {e}")),
+            }
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+        let _ = std::fs::remove_file(&path);
+        Ok(path)
+    }
+
+    #[cfg(unix)]
+    fn serve_stream(
+        self: &Arc<Self>,
+        stream: std::os::unix::net::UnixStream,
+    ) -> Result<(), String> {
+        stream.set_nonblocking(false).map_err(|e| e.to_string())?;
+        let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line.map_err(|e| e.to_string())?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (resp, quit) = self.handle_line(&line);
+            writeln!(writer, "{resp}").map_err(|e| e.to_string())?;
+            writer.flush().map_err(|e| e.to_string())?;
+            if quit {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The canonical error response line.
+fn error_line(msg: &str) -> String {
+    Json::Obj(vec![
+        ("ok".into(), Json::Bool(false)),
+        ("error".into(), Json::Str(msg.to_string())),
+    ])
+    .write()
+}
+
+/// Parse a `run` request's unit fields: `design` (catalogue name),
+/// `device` (`U250`/`U280`), `variant` (`baseline`/`tapa`/…), optional
+/// `ratio` for a §6.3 sweep point.
+fn parse_unit(req: &Json) -> Result<WorkUnit, String> {
+    let design = req
+        .get("design")
+        .and_then(Json::as_str)
+        .ok_or("run request needs a `design` field")?
+        .to_string();
+    let device_name = req
+        .get("device")
+        .and_then(Json::as_str)
+        .ok_or("run request needs a `device` field")?;
+    let device = DeviceKind::parse(device_name)
+        .ok_or_else(|| format!("unknown device `{device_name}`"))?;
+    let variant_name = req.get("variant").and_then(Json::as_str).unwrap_or("tapa");
+    let variant = FlowVariant::parse(variant_name)
+        .ok_or_else(|| format!("unknown variant `{variant_name}`"))?;
+    let util_ratio = match req.get("ratio") {
+        None => None,
+        Some(v) if v.is_null() => None,
+        Some(v) => Some(v.as_f64().ok_or("`ratio` must be a number")?),
+    };
+    Ok(WorkUnit { design, device, variant, util_ratio })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tapa_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn protocol_rejects_malformed_requests() {
+        let dir = tempdir("serve_proto");
+        let srv = Server::open(&dir, 1, FlowConfig::default()).unwrap();
+        let (resp, quit) = srv.handle_line("not json");
+        assert!(resp.contains("\"ok\":false"), "{resp}");
+        assert!(!quit);
+        let (resp, _) = srv.handle_line("{\"op\":\"frobnicate\"}");
+        assert!(resp.contains("unknown op"), "{resp}");
+        let (resp, _) = srv.handle_line("{}");
+        assert!(resp.contains("no `op`"), "{resp}");
+        let (resp, quit) = srv.handle_line("{\"op\":\"ping\"}");
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        assert!(!quit);
+        let (_, quit) = srv.handle_line("{\"op\":\"shutdown\"}");
+        assert!(quit);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unit_parsing_covers_fields_and_errors() {
+        let req = Json::parse(
+            "{\"op\":\"run\",\"design\":\"d\",\"device\":\"u280\",\"variant\":\"baseline\",\"ratio\":0.7}",
+        )
+        .unwrap();
+        let u = parse_unit(&req).unwrap();
+        assert_eq!(u.design, "d");
+        assert_eq!(u.device, DeviceKind::U280);
+        assert_eq!(u.variant, FlowVariant::Baseline);
+        assert_eq!(u.util_ratio, Some(0.7));
+        let bad = Json::parse("{\"op\":\"run\",\"design\":\"d\",\"device\":\"u999\"}").unwrap();
+        assert!(parse_unit(&bad).is_err());
+    }
+}

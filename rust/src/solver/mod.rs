@@ -273,6 +273,13 @@ impl SolverContext {
         self.budget.map(|b| b.node_cap()).unwrap_or(default_cap).max(1)
     }
 
+    /// Solves that actually paid for an exact search (total minus the
+    /// warm-served ones) — the serve daemon's "cold solver evaluations"
+    /// telemetry counter.
+    pub fn cold_solves(&self) -> u64 {
+        self.solves.saturating_sub(self.warm_hits)
+    }
+
     /// Solve through `backend`, recording telemetry and consulting the
     /// proved-result memo first.
     pub fn solve_milp(

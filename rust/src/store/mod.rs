@@ -1,0 +1,702 @@
+//! Durable content-addressed artifact store — the persistence layer of
+//! the compile-as-a-service subsystem (`tapa serve`, `--store DIR`).
+//!
+//! PRs 1–5 separated *what to compute* (typed stage artifacts, manifest
+//! unit rows, solver/phys memos) from *where results live*, but every
+//! cache still died with its process. The [`ArtifactStore`] moves the
+//! durable part to disk: one store directory shared by any number of
+//! concurrent `tapa` processes (the daemon, one-shot `tapa compile
+//! --store`, shard workers), each reading and publishing the same
+//! artifacts.
+//!
+//! ## Keys
+//!
+//! An artifact is addressed by a [`StoreKey`] — `(design hash, device
+//! fingerprint, config hash)` plus the artifact kind. The key *id* a key
+//! hashes to additionally folds in [`STORE_VERSION`], the checkpoint
+//! [`crate::flow::persist::FORMAT_VERSION`] and the manifest
+//! [`crate::flow::manifest::MANIFEST_VERSION`]: bumping any on-disk
+//! layout version changes every id, so a new binary pointed at an old
+//! store directory can never be served a stale-layout artifact — it
+//! simply misses and recomputes (the silent-staleness hazard the version
+//! fold exists to close).
+//!
+//! * design hash — design name, flow variant, and the exact sweep-ratio
+//!   bits (the same per-unit identity scheme as
+//!   [`crate::flow::manifest::suite_hash`]);
+//! * device fingerprint — device name plus
+//!   [`crate::device::Device::region_fingerprint`] of the *effective*
+//!   device (the merged-column view for the 4-slot variant), so edited
+//!   region geometry invalidates artifacts;
+//! * config hash — an FNV-1a over the `Debug` rendering of the entire
+//!   [`FlowConfig`]. Over-keying is deliberate: a knob that could not
+//!   have changed the result costs at most a cache miss, while an
+//!   under-keyed knob would serve a wrong artifact.
+//!
+//! ## Layout and publication
+//!
+//! ```text
+//! STORE/
+//!   index.json            LRU ledger (util::json, atomic rename)
+//!   objects/<16hex>.json  one artifact per key id (atomic rename)
+//! ```
+//!
+//! Objects are the source of truth; the index is a ledger (logical LRU
+//! clock, per-entry cost history for cost-weighted shard planning). An
+//! object is published by writing a temporary file in the store and
+//! `rename(2)`-ing it into place, so readers never observe a torn
+//! artifact; a reader either misses or gets complete bytes. Lost index
+//! updates (two processes racing) lose only LRU/cost metadata, never an
+//! artifact — [`ArtifactStore::gc`] re-adopts orphaned objects before
+//! evicting anything.
+//!
+//! ## GC policy
+//!
+//! [`ArtifactStore::gc`] evicts down to a target entry count in a
+//! deterministic order: ascending `(last-use seq, id)` — a logical LRU
+//! clock bumped on every get/put, never wall time, so the same operation
+//! sequence always evicts the same entries. Pinned ids (artifacts an
+//! in-flight request holds) are never evicted.
+//!
+//! ## In-flight deduplication
+//!
+//! [`ArtifactStore::get_or_compute`] is the one evaluation funnel: a
+//! disk hit is returned as-is; otherwise the first requester of a key
+//! becomes the *leader* and computes while any concurrent requester of
+//! the same key blocks on the leader's flight and receives the identical
+//! result — M concurrent clients, exactly one evaluation. Stored
+//! payloads strip the machine-dependent `wall_seconds` field (it moves
+//! to the index `cost` column), so a store-served result is
+//! byte-identical to a freshly computed one.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::flow::manifest::{
+    unit_result_from_json, unit_result_to_json, UnitResult, WorkUnit, MANIFEST_VERSION,
+};
+use crate::flow::persist::FORMAT_VERSION;
+use crate::flow::{FlowConfig, FlowVariant, SessionError};
+use crate::util::json::Json;
+use crate::util::Fnv1a;
+
+/// On-disk store layout version — folded into every key id, so bumping
+/// it orphans (never mis-serves) artifacts written by older layouts.
+pub const STORE_VERSION: u64 = 1;
+
+/// The index (LRU ledger) file inside a store directory.
+pub const INDEX_FILE: &str = "index.json";
+
+/// Subdirectory holding one object file per artifact.
+pub const OBJECT_DIR: &str = "objects";
+
+/// Semantic class of a stored artifact (diagnostics and the index; the
+/// key id hashes the name, so kinds can never collide).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// A full staged session (a `util_ratio: None` manifest unit — what
+    /// `tapa compile` and the orig/opt bench rows produce).
+    Session,
+    /// One §6.3 sweep point (a `util_ratio: Some(r)` unit).
+    SweepPoint,
+}
+
+impl ArtifactKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::Session => "session",
+            ArtifactKind::SweepPoint => "sweep",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        [ArtifactKind::Session, ArtifactKind::SweepPoint]
+            .into_iter()
+            .find(|k| k.name() == s)
+    }
+}
+
+/// Content address of one artifact. See the module docs for what each
+/// component hashes; [`StoreKey::id`] is the on-disk identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StoreKey {
+    pub kind: ArtifactKind,
+    /// Design name + variant + exact ratio bits.
+    pub design_hash: u64,
+    /// Device name + effective region fingerprint.
+    pub device_fp: u64,
+    /// FNV over the full flow config (see [`config_fingerprint`]).
+    pub config_hash: u64,
+}
+
+/// FNV-1a over the `Debug` rendering of the whole [`FlowConfig`]. The
+/// rendering is deterministic (derived `Debug`, shortest round-trip
+/// float formatting, no hash containers in the config), and any field
+/// added to the config automatically joins the key — new knobs can
+/// never silently share artifacts with old ones.
+pub fn config_fingerprint(cfg: &FlowConfig) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_bytes(format!("{cfg:?}").as_bytes());
+    h.finish()
+}
+
+impl StoreKey {
+    /// The key of one manifest work unit under one effective flow
+    /// config — the shared addressing scheme of the daemon, the one-shot
+    /// `--store` paths and the shard workers (all three must derive the
+    /// identical key for the dedup and byte-identity contracts to hold).
+    pub fn for_unit(unit: &WorkUnit, cfg: &FlowConfig) -> StoreKey {
+        let mut h = Fnv1a::new();
+        h.write_bytes(unit.design.as_bytes());
+        h.write_bytes(&[0x1f]);
+        h.write_bytes(unit.variant.name().as_bytes());
+        h.write_bytes(&[0x1f]);
+        match unit.util_ratio {
+            Some(r) => h.write_u64(r.to_bits()),
+            None => h.write_bytes(&[0xff]),
+        }
+        let design_hash = h.finish();
+        // The *effective* device of the unit — the same view the
+        // executor compiles against (merged columns for the coarse
+        // 4-slot variant).
+        let device = match unit.variant {
+            FlowVariant::TapaCoarse4Slot => unit.device.device().merged_columns(),
+            _ => unit.device.device(),
+        };
+        let mut h = Fnv1a::new();
+        h.write_bytes(unit.device.name().as_bytes());
+        h.write_u64(device.region_fingerprint());
+        StoreKey {
+            kind: match unit.util_ratio {
+                Some(_) => ArtifactKind::SweepPoint,
+                None => ArtifactKind::Session,
+            },
+            design_hash,
+            device_fp: h.finish(),
+            config_hash: config_fingerprint(cfg),
+        }
+    }
+
+    /// The on-disk identity: every key component plus every on-disk
+    /// format version (the staleness fold — see the module docs).
+    pub fn id(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_u64(STORE_VERSION);
+        h.write_u64(FORMAT_VERSION);
+        h.write_u64(MANIFEST_VERSION);
+        h.write_bytes(self.kind.name().as_bytes());
+        h.write_u64(self.design_hash);
+        h.write_u64(self.device_fp);
+        h.write_u64(self.config_hash);
+        h.finish()
+    }
+
+    /// 16-hex-digit rendering of [`StoreKey::id`] (object file names,
+    /// protocol responses).
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.id())
+    }
+}
+
+/// How [`ArtifactStore::get_or_compute`] satisfied a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Served {
+    /// Answered from the persistent store (no evaluation).
+    Store,
+    /// Evaluated cold by this requester (and published to the store).
+    Cold,
+    /// Deduplicated onto a concurrent requester's in-flight evaluation.
+    Deduped,
+}
+
+impl Served {
+    pub fn name(self) -> &'static str {
+        match self {
+            Served::Store => "store",
+            Served::Cold => "cold",
+            Served::Deduped => "dedup",
+        }
+    }
+}
+
+/// Counter snapshot of one store ([`ArtifactStore::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Requests answered from disk.
+    pub hits: u64,
+    /// Requests that fell through to a cold evaluation.
+    pub misses: u64,
+    /// Requests deduplicated onto a concurrent identical request.
+    pub dedups: u64,
+    /// Artifacts currently in the index.
+    pub entries: usize,
+}
+
+/// One in-flight evaluation other requesters of the same key wait on.
+struct Flight {
+    done: Mutex<Option<Result<UnitResult, String>>>,
+    cv: Condvar,
+}
+
+/// In-memory view of the index file.
+#[derive(Default)]
+struct Index {
+    /// Logical LRU clock — bumped on every recorded use.
+    seq: u64,
+    /// id → (kind, last-use seq, best-effort cost history).
+    entries: HashMap<u64, IndexEntry>,
+}
+
+#[derive(Clone)]
+struct IndexEntry {
+    kind: String,
+    seq: u64,
+    /// Last measured wall-seconds of computing this artifact
+    /// (machine-dependent by design; feeds cost-weighted shard
+    /// planning, never any byte-compared output).
+    cost: Option<f64>,
+}
+
+/// The durable content-addressed artifact store. Thread-safe; any
+/// number of processes may share one store directory (see the module
+/// docs for the cross-process guarantees).
+pub struct ArtifactStore {
+    root: PathBuf,
+    /// Serializes index read-modify-write cycles within this process.
+    index_lock: Mutex<()>,
+    /// id → refcount of in-flight requests holding the artifact (GC
+    /// never evicts a pinned id).
+    pins: Mutex<HashMap<u64, usize>>,
+    /// id → in-flight evaluation (the dedup map).
+    flights: Mutex<HashMap<u64, Arc<Flight>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    dedups: AtomicU64,
+}
+
+impl ArtifactStore {
+    /// Open (creating if needed) the store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ArtifactStore, SessionError> {
+        let root = root.into();
+        let objects = root.join(OBJECT_DIR);
+        std::fs::create_dir_all(&objects)
+            .map_err(|e| SessionError::Io(objects.display().to_string(), e.to_string()))?;
+        Ok(ArtifactStore {
+            root,
+            index_lock: Mutex::new(()),
+            pins: Mutex::new(HashMap::new()),
+            flights: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            dedups: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn object_path(&self, id: u64) -> PathBuf {
+        self.root.join(OBJECT_DIR).join(format!("{id:016x}.json"))
+    }
+
+    fn index_path(&self) -> PathBuf {
+        self.root.join(INDEX_FILE)
+    }
+
+    /// Atomic publication: write to a process-unique temporary inside
+    /// the store, then rename into place. Readers see old bytes or new
+    /// bytes, never a prefix.
+    fn write_atomic(&self, path: &Path, text: &str) -> Result<(), SessionError> {
+        let file = path
+            .file_name()
+            .and_then(|f| f.to_str())
+            .unwrap_or("object");
+        let tmp = path.with_file_name(format!(".tmp-{}-{file}", std::process::id()));
+        std::fs::write(&tmp, text)
+            .map_err(|e| SessionError::Io(tmp.display().to_string(), e.to_string()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| SessionError::Io(path.display().to_string(), e.to_string()))
+    }
+
+    // -- index ------------------------------------------------------------
+
+    /// Read the index; a missing or unreadable index is an empty one
+    /// (objects are the source of truth — see [`ArtifactStore::gc`]).
+    fn load_index(&self) -> Index {
+        let Ok(text) = std::fs::read_to_string(self.index_path()) else {
+            return Index::default();
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return Index::default();
+        };
+        let mut ix = Index {
+            seq: root.get("seq").and_then(Json::as_u64).unwrap_or(0),
+            entries: HashMap::new(),
+        };
+        if let Some(list) = root.get("entries").and_then(Json::as_arr) {
+            for e in list {
+                let Some(id) = e
+                    .get("id")
+                    .and_then(Json::as_str)
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                else {
+                    continue;
+                };
+                ix.entries.insert(
+                    id,
+                    IndexEntry {
+                        kind: e
+                            .get("kind")
+                            .and_then(Json::as_str)
+                            .unwrap_or("session")
+                            .to_string(),
+                        seq: e.get("seq").and_then(Json::as_u64).unwrap_or(0),
+                        cost: e.get("cost").and_then(Json::as_f64),
+                    },
+                );
+            }
+        }
+        ix
+    }
+
+    /// Deterministic writer: entries ascending by id.
+    fn save_index(&self, ix: &Index) -> Result<(), SessionError> {
+        let mut ids: Vec<u64> = ix.entries.keys().copied().collect();
+        ids.sort_unstable();
+        let entries: Vec<Json> = ids
+            .iter()
+            .map(|id| {
+                let e = &ix.entries[id];
+                Json::Obj(vec![
+                    ("id".into(), Json::Str(format!("{id:016x}"))),
+                    ("kind".into(), Json::Str(e.kind.clone())),
+                    ("seq".into(), Json::Num(e.seq as f64)),
+                    (
+                        "cost".into(),
+                        e.cost.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            ("version".into(), Json::Num(STORE_VERSION as f64)),
+            ("seq".into(), Json::Num(ix.seq as f64)),
+            ("entries".into(), Json::Arr(entries)),
+        ]);
+        let mut text = doc.write();
+        text.push('\n');
+        self.write_atomic(&self.index_path(), &text)
+    }
+
+    /// Record a use of `id` (bump the LRU clock; merge `cost` when
+    /// given). Best-effort: an I/O failure loses metadata, not data.
+    fn touch(&self, key: &StoreKey, cost: Option<f64>) {
+        let _g = self.index_lock.lock().unwrap();
+        let mut ix = self.load_index();
+        ix.seq += 1;
+        let seq = ix.seq;
+        let e = ix.entries.entry(key.id()).or_insert(IndexEntry {
+            kind: key.kind.name().to_string(),
+            seq,
+            cost: None,
+        });
+        e.seq = seq;
+        if cost.is_some() {
+            e.cost = cost;
+        }
+        let _ = self.save_index(&ix);
+    }
+
+    // -- objects ----------------------------------------------------------
+
+    /// Raw read of the object for `key`, verifying the stored key
+    /// components structurally (an id collision misses instead of
+    /// serving a wrong artifact — same discipline as the solver memo).
+    fn read_unit(&self, key: &StoreKey) -> Option<UnitResult> {
+        let text = std::fs::read_to_string(self.object_path(key.id())).ok()?;
+        let root = Json::parse(&text).ok()?;
+        if root.get("version").and_then(Json::as_u64) != Some(STORE_VERSION) {
+            return None;
+        }
+        let hexes = [
+            ("design_hash", key.design_hash),
+            ("device_fp", key.device_fp),
+            ("config_hash", key.config_hash),
+        ];
+        for (field, want) in hexes {
+            let got = root
+                .get(field)
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())?;
+            if got != want {
+                return None;
+            }
+        }
+        if root.get("kind").and_then(Json::as_str) != Some(key.kind.name()) {
+            return None;
+        }
+        unit_result_from_json(root.get("payload")?).ok()
+    }
+
+    /// Fetch the artifact for `key`, counting a hit and bumping its LRU
+    /// seq. The returned result always carries `wall_seconds: None`
+    /// (stored payloads are scrubbed — see [`ArtifactStore::put_unit`]).
+    pub fn get_unit(&self, key: &StoreKey) -> Option<UnitResult> {
+        let r = self.read_unit(key)?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.touch(key, None);
+        Some(r)
+    }
+
+    /// Publish the artifact for `key` atomically. The machine-dependent
+    /// `wall_seconds` field is moved into the index `cost` column so the
+    /// stored payload — and therefore every store-served response — is
+    /// byte-deterministic.
+    pub fn put_unit(&self, key: &StoreKey, r: &UnitResult) -> Result<(), SessionError> {
+        let cost = r.wall_seconds;
+        let mut scrubbed = r.clone();
+        scrubbed.wall_seconds = None;
+        let doc = Json::Obj(vec![
+            ("version".into(), Json::Num(STORE_VERSION as f64)),
+            ("kind".into(), Json::Str(key.kind.name().into())),
+            ("design_hash".into(), Json::Str(format!("{:016x}", key.design_hash))),
+            ("device_fp".into(), Json::Str(format!("{:016x}", key.device_fp))),
+            ("config_hash".into(), Json::Str(format!("{:016x}", key.config_hash))),
+            ("payload".into(), unit_result_to_json(&scrubbed)),
+        ]);
+        let mut text = doc.write();
+        text.push('\n');
+        self.write_atomic(&self.object_path(key.id()), &text)?;
+        self.touch(key, cost);
+        Ok(())
+    }
+
+    /// Last recorded computation cost of `key` in wall-seconds — the
+    /// store history cost-weighted shard planning seeds from.
+    pub fn unit_cost(&self, key: &StoreKey) -> Option<f64> {
+        self.load_index().entries.get(&key.id()).and_then(|e| e.cost)
+    }
+
+    /// Number of indexed artifacts.
+    pub fn len(&self) -> usize {
+        self.load_index().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses, dedups, entries)` snapshot.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            dedups: self.dedups.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+    // -- pinning and GC ---------------------------------------------------
+
+    /// Pin `key` against eviction while an in-flight request references
+    /// it (refcounted; pair every pin with an [`ArtifactStore::unpin`]).
+    pub fn pin(&self, key: &StoreKey) {
+        *self.pins.lock().unwrap().entry(key.id()).or_insert(0) += 1;
+    }
+
+    pub fn unpin(&self, key: &StoreKey) {
+        let mut pins = self.pins.lock().unwrap();
+        if let Some(n) = pins.get_mut(&key.id()) {
+            *n -= 1;
+            if *n == 0 {
+                pins.remove(&key.id());
+            }
+        }
+    }
+
+    /// Evict artifacts down to `max_entries`, in deterministic LRU order
+    /// (ascending `(last-use seq, id)`), never touching pinned ids.
+    /// Objects missing from the index (lost cross-process index races)
+    /// are re-adopted first, so GC can never orphan-and-forget data it
+    /// did not decide to evict. Returns the number of evicted artifacts.
+    pub fn gc(&self, max_entries: usize) -> usize {
+        let _g = self.index_lock.lock().unwrap();
+        let mut ix = self.load_index();
+        // Adopt orphaned objects at seq 0 (oldest — they have no
+        // recorded use), in deterministic filename order.
+        let dir = self.root.join(OBJECT_DIR);
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().into_string().ok())
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        for name in names {
+            let Some(hex) = name.strip_suffix(".json") else { continue };
+            let Ok(id) = u64::from_str_radix(hex, 16) else { continue };
+            ix.entries.entry(id).or_insert(IndexEntry {
+                kind: "session".to_string(),
+                seq: 0,
+                cost: None,
+            });
+        }
+        if ix.entries.len() <= max_entries {
+            let _ = self.save_index(&ix);
+            return 0;
+        }
+        let pins = self.pins.lock().unwrap();
+        let mut order: Vec<(u64, u64)> = ix
+            .entries
+            .iter()
+            .filter(|(id, _)| !pins.contains_key(id))
+            .map(|(id, e)| (e.seq, *id))
+            .collect();
+        drop(pins);
+        order.sort_unstable();
+        let excess = ix.entries.len() - max_entries;
+        let mut evicted = 0;
+        for &(_, id) in order.iter().take(excess) {
+            if std::fs::remove_file(self.object_path(id)).is_ok() {
+                ix.entries.remove(&id);
+                evicted += 1;
+            } else if !self.object_path(id).exists() {
+                // Already gone (another process evicted it) — drop the
+                // stale ledger row.
+                ix.entries.remove(&id);
+            }
+        }
+        let _ = self.save_index(&ix);
+        evicted
+    }
+
+    // -- the evaluation funnel -------------------------------------------
+
+    /// Serve `key`: from disk if present, otherwise by running `compute`
+    /// exactly once across every concurrent requester of the key (the
+    /// in-flight dedup — see the module docs). Successful computations
+    /// are published to the store; errors are returned to every waiter
+    /// but never stored, so a transient failure stays retryable.
+    pub fn get_or_compute<F>(
+        &self,
+        key: &StoreKey,
+        compute: F,
+    ) -> (Result<UnitResult, String>, Served)
+    where
+        F: FnOnce() -> Result<UnitResult, String>,
+    {
+        if let Some(r) = self.get_unit(key) {
+            return (Ok(r), Served::Store);
+        }
+        let id = key.id();
+        let (flight, leader) = {
+            let mut flights = self.flights.lock().unwrap();
+            match flights.get(&id) {
+                Some(f) => (f.clone(), false),
+                None => {
+                    let f = Arc::new(Flight {
+                        done: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    flights.insert(id, f.clone());
+                    (f, true)
+                }
+            }
+        };
+        if !leader {
+            self.dedups.fetch_add(1, Ordering::Relaxed);
+            let mut done = flight.done.lock().unwrap();
+            while done.is_none() {
+                done = flight.cv.wait(done).unwrap();
+            }
+            return (done.clone().expect("flight completed"), Served::Deduped);
+        }
+        // Leader: pin the key so a concurrent GC cannot evict the
+        // artifact between publication and the waiters' reads, then
+        // re-check the disk (a racing *process* may have published while
+        // we queued) before paying for the evaluation.
+        self.pin(key);
+        let (res, served) = match self.read_unit(key) {
+            Some(r) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.touch(key, None);
+                (Ok(r), Served::Store)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let res = catch_unwind(AssertUnwindSafe(compute))
+                    .unwrap_or_else(|_| Err("artifact computation panicked".to_string()));
+                if let Ok(r) = &res {
+                    let _ = self.put_unit(key, r);
+                }
+                (res, Served::Cold)
+            }
+        };
+        // Waiters receive the scrubbed (wall-less) view — byte-identical
+        // to what a later store hit returns.
+        let shared = res.clone().map(|mut r| {
+            r.wall_seconds = None;
+            r
+        });
+        *flight.done.lock().unwrap() = Some(shared);
+        flight.cv.notify_all();
+        self.flights.lock().unwrap().remove(&id);
+        self.unpin(key);
+        (res, served)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceKind;
+
+    fn unit(design: &str, ratio: Option<f64>) -> WorkUnit {
+        WorkUnit {
+            design: design.to_string(),
+            device: DeviceKind::U250,
+            variant: FlowVariant::Tapa,
+            util_ratio: ratio,
+        }
+    }
+
+    #[test]
+    fn keys_distinguish_every_component() {
+        let cfg = FlowConfig::default();
+        let base = StoreKey::for_unit(&unit("a", None), &cfg);
+        assert_ne!(base.id(), StoreKey::for_unit(&unit("b", None), &cfg).id());
+        assert_ne!(
+            base.id(),
+            StoreKey::for_unit(&unit("a", Some(0.6)), &cfg).id()
+        );
+        let mut u280 = unit("a", None);
+        u280.device = DeviceKind::U280;
+        assert_ne!(base.id(), StoreKey::for_unit(&u280, &cfg).id());
+        let mut variant = unit("a", None);
+        variant.variant = FlowVariant::Baseline;
+        assert_ne!(base.id(), StoreKey::for_unit(&variant, &cfg).id());
+        // Any config knob — here the floorplan seed — changes the key.
+        let mut cfg2 = FlowConfig::default();
+        cfg2.floorplan.seed ^= 1;
+        assert_ne!(base.id(), StoreKey::for_unit(&unit("a", None), &cfg2).id());
+        // Same inputs, same key (and a stable hex rendering).
+        let again = StoreKey::for_unit(&unit("a", None), &cfg);
+        assert_eq!(base.id(), again.id());
+        assert_eq!(base.hex(), again.hex());
+        assert_eq!(base.hex().len(), 16);
+    }
+
+    #[test]
+    fn sweep_ratio_bits_are_exact() {
+        let cfg = FlowConfig::default();
+        let a = StoreKey::for_unit(&unit("a", Some(0.6)), &cfg);
+        let b = StoreKey::for_unit(&unit("a", Some(0.6000000001)), &cfg);
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a.kind, ArtifactKind::SweepPoint);
+    }
+}

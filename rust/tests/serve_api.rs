@@ -1,0 +1,230 @@
+//! Integration tests for the `tapa serve` compile-as-a-service daemon
+//! (`tapa::serve` + `tapa::store` + the `run`/`bench`/`submit` protocol).
+//!
+//! The contracts under test:
+//!
+//! * **daemon ≡ one-shot byte identity** — a daemon-served artifact
+//!   (cold, store-served, or deduplicated) serializes to exactly the
+//!   bytes of the cold one-shot `execute_unit` path;
+//! * **warm repeats** — a repeated request is answered entirely from the
+//!   persistent store with zero cold evaluations, telemetry-asserted
+//!   through the protocol's `served`/`cold_evals` fields (what the CI
+//!   `serve-smoke` job asserts against the release binary);
+//! * **the job queue** — `submit` → `poll` → `fetch` returns the exact
+//!   response line the synchronous path produces;
+//! * **bench parity** — the daemon's suite CSV equals the in-process
+//!   [`manifest_table`] CSV byte-for-byte.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tapa::bench_suite::experiments::{self, execute_unit, suite_cfg, suite_units};
+use tapa::flow::manifest::{unit_result_to_json, WorkUnit};
+use tapa::flow::FlowConfig;
+use tapa::serve::Server;
+use tapa::util::json::Json;
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate
+/// offline).
+fn workdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tapa_serve_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn open(tag: &str, jobs: usize) -> (PathBuf, Arc<Server>) {
+    let dir = workdir(tag);
+    let srv = Server::open(&dir, jobs, FlowConfig::default()).unwrap();
+    (dir, srv)
+}
+
+/// Send one line, assert the response parses and carries `ok: true`.
+fn ok(srv: &Arc<Server>, line: &str) -> Json {
+    let (resp, _) = srv.handle_line(line);
+    let v = Json::parse(&resp).unwrap_or_else(|e| panic!("bad response `{resp}`: {e}"));
+    assert_eq!(
+        v.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "request `{line}` failed: {resp}"
+    );
+    v
+}
+
+/// The `run` request line for a work unit.
+fn run_line(u: &WorkUnit) -> String {
+    Json::Obj(vec![
+        ("op".into(), Json::Str("run".into())),
+        ("design".into(), Json::Str(u.design.clone())),
+        ("device".into(), Json::Str(u.device.name().to_ascii_lowercase())),
+        ("variant".into(), Json::Str(u.variant.name().into())),
+        (
+            "ratio".into(),
+            u.util_ratio.map(Json::Num).unwrap_or(Json::Null),
+        ),
+    ])
+    .write()
+}
+
+#[test]
+fn daemon_and_one_shot_artifacts_are_byte_identical() {
+    let (dir, srv) = open("identity", 1);
+    let unit = suite_units("fast-suite").unwrap().remove(0);
+    // The daemon serves `run` requests under its own config verbatim —
+    // the one-shot reference must use the same one.
+    let want = unit_result_to_json(&execute_unit(&unit, &FlowConfig::default()).unwrap())
+        .write();
+
+    // Cold daemon evaluation (fresh store).
+    let v = ok(&srv, &run_line(&unit));
+    assert_eq!(v.get("served").and_then(Json::as_str), Some("cold"));
+    assert_eq!(v.get("cold_evals").and_then(Json::as_u64), Some(1));
+    assert_eq!(v.get("result").expect("result").write(), want);
+
+    // Repeat: answered from the persistent store, byte-identical, zero
+    // cold evaluations.
+    let v = ok(&srv, &run_line(&unit));
+    assert_eq!(v.get("served").and_then(Json::as_str), Some("store"));
+    assert_eq!(v.get("cold_evals").and_then(Json::as_u64), Some(0));
+    assert_eq!(v.get("result").expect("result").write(), want);
+
+    // Daemon restart over the same workdir: the store survives, the
+    // first request of the new process is already warm.
+    drop(srv);
+    let srv = Server::open(&dir, 1, FlowConfig::default()).unwrap();
+    let v = ok(&srv, &run_line(&unit));
+    assert_eq!(v.get("served").and_then(Json::as_str), Some("store"));
+    assert_eq!(v.get("result").expect("result").write(), want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bench_csv_matches_in_process_suite_and_repeats_warm() {
+    let (dir, srv) = open("bench", 4);
+    let want = experiments::manifest_table("fast-suite", &FlowConfig::default(), 4)
+        .unwrap()
+        .to_csv();
+    let units = suite_units("fast-suite").unwrap().len() as u64;
+
+    let line = "{\"op\":\"bench\",\"suite\":\"fast-suite\"}";
+    let v = ok(&srv, line);
+    assert_eq!(v.get("units").and_then(Json::as_u64), Some(units));
+    assert_eq!(v.get("csv").and_then(Json::as_str), Some(want.as_str()));
+    let first_cold = v.get("cold_evals").and_then(Json::as_u64).unwrap();
+    assert!(first_cold > 0, "fresh store must evaluate something");
+
+    // Second identical submission: served entirely from the warm store —
+    // zero cold evaluations, every unit a store hit, identical CSV.
+    let v = ok(&srv, line);
+    assert_eq!(v.get("cold_evals").and_then(Json::as_u64), Some(0));
+    assert_eq!(v.get("store_hits").and_then(Json::as_u64), Some(units));
+    assert_eq!(v.get("csv").and_then(Json::as_str), Some(want.as_str()));
+
+    // The stats op exposes the same picture daemon-wide.
+    let v = ok(&srv, "{\"op\":\"stats\"}");
+    assert_eq!(v.get("cold_evals").and_then(Json::as_u64), Some(first_cold));
+    assert_eq!(v.get("store_entries").and_then(Json::as_u64), Some(units));
+    assert!(v.get("phys_contexts").and_then(Json::as_u64).unwrap() >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn submit_poll_fetch_returns_the_synchronous_response() {
+    let (dir, srv) = open("queue", 2);
+    let unit = suite_units("fast-suite").unwrap().remove(0);
+
+    // Synchronous reference response (also warms the store, so the
+    // queued job is served from it — results must still be identical).
+    let sync = ok(&srv, &run_line(&unit));
+
+    let workers = srv.start_workers();
+    let submit = Json::Obj(vec![
+        ("op".into(), Json::Str("submit".into())),
+        ("request".into(), Json::parse(&run_line(&unit)).unwrap()),
+    ]);
+    let v = ok(&srv, &submit.write());
+    let job = v.get("job").and_then(Json::as_u64).expect("job id");
+
+    // Poll until the queue worker finishes it.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let v = ok(&srv, &format!("{{\"op\":\"poll\",\"job\":{job}}}"));
+        match v.get("state").and_then(Json::as_str) {
+            Some("done") => break,
+            Some(_) => {
+                assert!(std::time::Instant::now() < deadline, "job never finished");
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            None => panic!("poll lost the job"),
+        }
+    }
+    let fetched = ok(&srv, &format!("{{\"op\":\"fetch\",\"job\":{job}}}"));
+    assert_eq!(
+        fetched.get("result").expect("result").write(),
+        sync.get("result").expect("result").write(),
+        "queued and synchronous responses diverge"
+    );
+    assert_eq!(fetched.get("served").and_then(Json::as_str), Some("store"));
+
+    // Fetching an unfinished/unknown job is an error, not a hang.
+    let (resp, _) = srv.handle_line("{\"op\":\"fetch\",\"job\":999}");
+    assert!(resp.contains("\"ok\":false"), "{resp}");
+
+    // Shutdown drains the workers.
+    let (_, quit) = srv.handle_line("{\"op\":\"shutdown\"}");
+    assert!(quit);
+    for w in workers {
+        w.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn submit_validates_the_inner_request() {
+    let (dir, srv) = open("validate", 1);
+    for bad in [
+        "{\"op\":\"submit\"}",
+        "{\"op\":\"submit\",\"request\":{\"op\":\"shutdown\"}}",
+        "{\"op\":\"submit\",\"request\":{\"op\":\"submit\"}}",
+    ] {
+        let (resp, _) = srv.handle_line(bad);
+        assert!(resp.contains("\"ok\":false"), "`{bad}` accepted: {resp}");
+    }
+    // A run of an unknown design fails cleanly at execution time.
+    let (resp, _) = srv
+        .handle_line("{\"op\":\"run\",\"design\":\"no-such-design\",\"device\":\"u250\"}");
+    assert!(resp.contains("\"ok\":false"), "{resp}");
+    assert!(resp.contains("unknown design"), "{resp}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shard_worker_and_daemon_share_one_store() {
+    // A `--shard --store` worker publishes into the same store a daemon
+    // then answers from (the cross-process cooperation the shared
+    // artifact store exists for) — exercised here in-process through the
+    // same APIs the two binaries wire up.
+    use tapa::flow::manifest::{Manifest, Shard};
+
+    let (dir, srv) = open("shared", 2);
+    let units = suite_units("fast-suite").unwrap();
+    let scfg = suite_cfg("fast-suite", &FlowConfig::default());
+    let mut m = Manifest::plan("fast-suite", &units, Shard::parse("0/1").unwrap());
+    let (done, failed) =
+        experiments::run_manifest_stored(&mut m, &scfg, 2, None, Some(srv.store()))
+            .unwrap();
+    assert_eq!((done, failed), (units.len(), 0));
+    assert_eq!(srv.store().len(), units.len());
+
+    // The daemon's whole suite is now warm: zero cold evaluations. Its
+    // effective bench config is suite_cfg(daemon cfg) == scfg, so the
+    // keys coincide by construction.
+    let v = ok(&srv, "{\"op\":\"bench\",\"suite\":\"fast-suite\"}");
+    assert_eq!(v.get("cold_evals").and_then(Json::as_u64), Some(0));
+    assert_eq!(
+        v.get("store_hits").and_then(Json::as_u64),
+        Some(units.len() as u64)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
