@@ -1,0 +1,23 @@
+# Repo-level build orchestration. The rust crate is self-contained
+# (`cd rust && cargo build --release`); this file exists for the steps
+# that cross the language boundary.
+
+# AOT-lower the JAX/Pallas placer step to HLO text. Runs python ONCE at
+# build time (requires `jax[cpu]`); the rust runtime then loads
+# artifacts/placer_step.hlo.txt at startup and python is never on the
+# request path. The PJRT integration tests (rust/tests/integration_pjrt.rs
+# and the runtime module tests) skip with a message when the artifact is
+# absent and assert against the rust reference step when it is present —
+# regenerate after any change to python/compile/model.py.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts/placer_step.hlo.txt
+
+# Tier-1 gate: release build + full test suite.
+test:
+	cd rust && cargo build --release && cargo test -q
+
+# Python-side unit tests (kernels, model, AOT lowering).
+pytest:
+	cd python && python -m pytest tests -q
+
+.PHONY: artifacts test pytest

@@ -235,7 +235,7 @@ pub fn execute_unit_cached(
     cfg: &FlowConfig,
     cache: Option<&Arc<StageCache>>,
 ) -> Result<UnitResult, String> {
-    execute_unit_warm(unit, cfg, cache, None)
+    execute_unit_warm(unit, cfg, cache, None, 1)
 }
 
 /// [`execute_unit_cached`] with an optional shared warm
@@ -246,16 +246,23 @@ pub fn execute_unit_cached(
 /// phys engine is exactly cold-equivalent (the PR 4/5 warm≡cold
 /// contracts), so warm daemon responses stay byte-identical to one-shot
 /// CLI artifacts.
+///
+/// `jobs` is the intra-unit worker count for full-session units (it
+/// parallelises the sweep implementation phase via the hybrid
+/// scheduler); sweep-point units are single evaluations and ignore it.
+/// Results are bit-identical for every value — the scheduler's
+/// determinism contract — so callers pick it purely for wall-clock.
 pub fn execute_unit_warm(
     unit: &WorkUnit,
     cfg: &FlowConfig,
     cache: Option<&Arc<StageCache>>,
     phys: Option<&Arc<Mutex<PhysContext>>>,
+    jobs: usize,
 ) -> Result<UnitResult, String> {
     let mut design = super::find_design(&unit.design)
         .ok_or_else(|| format!("unknown design `{}`", unit.design))?;
     design.device = unit.device;
-    execute_resolved_unit(design, unit, cfg, cache, phys)
+    execute_resolved_unit(design, unit, cfg, cache, phys, jobs)
 }
 
 /// [`execute_unit_cached`] with the design already resolved — the batch
@@ -268,6 +275,7 @@ fn execute_resolved_unit(
     cfg: &FlowConfig,
     cache: Option<&Arc<StageCache>>,
     phys: Option<&Arc<Mutex<PhysContext>>>,
+    jobs: usize,
 ) -> Result<UnitResult, String> {
     if let Ok(pat) = std::env::var("TAPA_BENCH_FAIL") {
         let key = unit.key();
@@ -282,7 +290,7 @@ fn execute_resolved_unit(
     let phys = phys.cloned();
     catch_unwind(AssertUnwindSafe(move || match unit.util_ratio {
         None => {
-            let mut s = Session::new(design, unit.variant, cfg);
+            let mut s = Session::new(design, unit.variant, cfg).with_jobs(jobs);
             if let Some(c) = cache {
                 s = s.with_cache(c);
             }
@@ -468,7 +476,7 @@ pub fn run_manifest_stored(
                 // the byte-compared CSVs): cost-weighted sharding weighs
                 // units by it instead of round-robin counting.
                 let t0 = std::time::Instant::now();
-                execute_resolved_unit(d, &unit, cfg, Some(&cache), None).map(|mut r| {
+                execute_resolved_unit(d, &unit, cfg, Some(&cache), None, 1).map(|mut r| {
                     r.wall_seconds = Some(t0.elapsed().as_secs_f64());
                     r
                 })
@@ -571,7 +579,7 @@ pub fn manifest_table(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Table> 
             .unwrap_or_else(|| panic!("unknown design `{}`", u.design))
             .clone();
         d.device = u.device;
-        execute_resolved_unit(d, u, &cfg, Some(&cache), None)
+        execute_resolved_unit(d, u, &cfg, Some(&cache), None, 1)
             .unwrap_or_else(|e| panic!("unit `{}` failed: {e}", u.key()))
     });
     suite_table(id, &results)
@@ -606,7 +614,7 @@ pub fn stored_suite_table(
                 .ok_or_else(|| format!("unknown design `{}`", u.design))?
                 .clone();
             d.device = u.device;
-            execute_resolved_unit(d, u, &cfg, Some(&cache), None)
+            execute_resolved_unit(d, u, &cfg, Some(&cache), None, 1)
         });
         (
             res.unwrap_or_else(|e| panic!("unit `{}` failed: {e}", u.key())),

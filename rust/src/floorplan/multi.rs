@@ -176,6 +176,47 @@ pub fn sweep_points_with(
     out
 }
 
+/// Implement (pipeline → place → route → STA) every unique successful
+/// point of a solved sweep, scoring each with its post-route Fmax
+/// (Table 10), and return the scores aligned with `points` (failed and
+/// duplicate points score `None`). Evaluations run on the context's
+/// incremental [`crate::phys::PhysEngine`] through the hybrid
+/// warm/speculative scheduler, split across up to `jobs` warm
+/// sub-chains — scores and phys telemetry are bit-identical for any
+/// `jobs` (see [`crate::phys::sched`](crate::phys::SweepSchedule)); the
+/// returned [`crate::phys::SweepSchedule`] says how the evaluations
+/// were actually scheduled.
+pub fn implement_points_in(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    points: &[SweepPoint],
+    stages_per_crossing: u32,
+    params: &crate::place::analytical::AnalyticalParams,
+    jobs: usize,
+    phys: &mut crate::phys::PhysContext,
+) -> (Vec<Option<f64>>, crate::phys::SweepSchedule) {
+    let mut idx: Vec<usize> = Vec::new();
+    let mut cands: Vec<(Floorplan, Vec<u32>)> = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        if p.duplicate_of.is_some() {
+            continue;
+        }
+        let Some(fp) = p.plan.clone() else { continue };
+        let plan = crate::pipeline::pipeline_edges(g, device, &fp, stages_per_crossing);
+        let stages: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
+        idx.push(i);
+        cands.push((fp, stages));
+    }
+    let (evals, sched) =
+        crate::phys::evaluate_chained(g, device, estimates, &cands, params, jobs, phys);
+    let mut fmax = vec![None; points.len()];
+    for (i, ev) in idx.into_iter().zip(evals) {
+        fmax[i] = ev.timing.fmax_mhz;
+    }
+    (fmax, sched)
+}
+
 /// Convenience: floorplan with the default config, falling back across the
 /// sweep; returns the lowest-cost successful candidate.
 pub fn best_candidate(

@@ -566,6 +566,9 @@ fn parse_sweep(v: &Json) -> R<SweepArtifact> {
             cold_placer_steps: get_u64(ph, "cold_placer_steps")?,
             redone_cold: get_u64(ph, "redone_cold")?,
         },
+        // The schedule is `--jobs`-dependent by design, so it is never
+        // persisted: resumed artifacts report the default (no run).
+        sched: Default::default(),
     })
 }
 

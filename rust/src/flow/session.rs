@@ -24,11 +24,11 @@ use crate::device::{Device, DeviceKind};
 use crate::floorplan::{multi, Floorplan, FloorplanConfig};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::{estimate_all, TaskEstimate};
-use crate::phys::{PhysContext, PhysTelemetry};
+use crate::phys::{PhysContext, PhysTelemetry, SweepSchedule};
 use crate::pipeline::{pipeline_edges, pipeline_with_feedback_in, PipelinePlan};
 use crate::place::{place_baseline, place_floorplan_guided, Placement, RustStep, StepExecutor};
 use crate::route::{route, RouteReport};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::SimConfig;
 use crate::solver::SolverContext;
 use crate::timing::{analyze, TimingReport};
 
@@ -106,6 +106,11 @@ pub struct SweepArtifact {
     /// are chained in ratio order — so it rides in checkpoints and is
     /// identical for any `--jobs` count.
     pub phys: PhysTelemetry,
+    /// How the implementation phase was scheduled across `--jobs` warm
+    /// sub-chains. The one legitimately `--jobs`-dependent output, so it
+    /// is NOT persisted in checkpoints (resumed artifacts read
+    /// `Default`) and is excluded from cross-jobs identity comparisons.
+    pub sched: SweepSchedule,
 }
 
 /// Deterministic solver accounting of one §6.3 sweep (candidate
@@ -414,12 +419,12 @@ impl Session {
     }
 
     /// Worker threads for the exact solver's branch-and-bound node
-    /// waves. Results are identical for any value (fixed-width waves);
-    /// only wall-clock changes. Sweep candidates themselves are
-    /// implemented sequentially through the incremental
-    /// [`crate::phys::PhysEngine`] — each candidate warm-starts from the
-    /// previous one, which replaces the former per-candidate thread
-    /// fan-out (and is what keeps the phys telemetry deterministic).
+    /// waves AND for the sweep's candidate-implementation phase: the
+    /// ratio-ordered warm chain is split into up to `n` per-worker warm
+    /// sub-chains by the hybrid warm/speculative scheduler
+    /// ([`crate::phys::SweepSchedule`]). Results — artifacts, phys
+    /// telemetry, CSVs — are bit-identical for any value; only
+    /// wall-clock (and the non-persisted schedule report) changes.
     pub fn with_jobs(mut self, n: usize) -> Session {
         self.jobs = n.max(1);
         self
@@ -934,21 +939,33 @@ impl Session {
 
         // 2. Implement every unique successful candidate ("implement all
         //    Pareto candidates, keep the best routed result") through the
-        //    incremental PhysEngine, chained in ratio order: each
-        //    candidate's place→route→STA warm-starts from the previous
-        //    one's converged state. The chain replaces the former
-        //    per-candidate thread fan-out — warm evaluation of a
-        //    few-slot delta is cheaper than a cold evaluation per
-        //    worker, results are bit-identical to cold either way, and
-        //    the reuse telemetry below stays deterministic.
+        //    incremental PhysEngine's hybrid warm/speculative scheduler:
+        //    the ratio-ordered chain is split into up to `jobs`
+        //    contiguous warm sub-chains whose seams are warm-replayed
+        //    and cross-checked against the speculative cold starts, so
+        //    scores AND the reuse telemetry below are bit-identical to
+        //    the sequential chain for any worker count.
         let g = &self.design.graph;
-        for i in 0..points.len() {
-            if points[i].duplicate_of.is_some() {
-                continue;
-            }
-            let Some(fp) = points[i].plan.clone() else { continue };
-            points[i].fmax_mhz =
-                evaluate_candidate_in(g, &device, &est, &fp, &cfg, &RustStep, &mut phys);
+        let sweep_points: Vec<multi::SweepPoint> = points
+            .iter()
+            .map(|p| multi::SweepPoint {
+                util_ratio: p.util_ratio,
+                plan: p.plan.clone(),
+                duplicate_of: p.duplicate_of,
+            })
+            .collect();
+        let (fmax, sched) = multi::implement_points_in(
+            g,
+            &device,
+            &est,
+            &sweep_points,
+            cfg.floorplan.stages_per_crossing,
+            &cfg.analytical,
+            jobs,
+            &mut phys,
+        );
+        for (p, f) in points.iter_mut().zip(fmax) {
+            p.fmax_mhz = f;
         }
         let phys_t = phys.telemetry().delta_since(&phys0);
         drop(phys);
@@ -981,7 +998,7 @@ impl Session {
             let art = self.solve_feedback_floorplan();
             self.ctx.floorplan = Some(art);
         }
-        SweepArtifact { points, best, solver, phys: phys_t }
+        SweepArtifact { points, best, solver, phys: phys_t, sched }
     }
 
     fn run_stage(&mut self, st: Stage, exec: &dyn StepExecutor) {
@@ -1108,17 +1125,21 @@ impl Session {
                 let cycles = if self.cfg.sim.enabled && !rep.failed() {
                     let est = self.ctx.estimates.as_ref().expect("estimate stage done");
                     let lat = &self.ctx.pipeline.as_ref().expect("pipeline stage done").sim_lat;
-                    simulate(
-                        &self.graph,
-                        est,
-                        lat,
-                        &SimConfig {
-                            max_cycles: self.cfg.sim.max_cycles,
-                            mem_latency: self.cfg.sim.mem_latency,
-                        },
-                    )
-                    .ok()
-                    .map(|r| r.cycles)
+                    // Through the context's incremental SimEngine: a
+                    // latency-only delta against an earlier simulation of
+                    // the same design (another variant, a feedback
+                    // re-run, a warm daemon request) resumes mid-run —
+                    // bit-identical to a cold `simulate` by the PR-5
+                    // discipline, verified under TAPA_PHYS_VERIFY.
+                    let sim_cfg = SimConfig {
+                        max_cycles: self.cfg.sim.max_cycles,
+                        mem_latency: self.cfg.sim.mem_latency,
+                    };
+                    let phys = Arc::clone(&self.phys);
+                    let mut phys = phys.lock().unwrap();
+                    let eng = phys.sim_for(&self.graph, est);
+                    let res = eng.simulate(&self.graph, est, lat, &sim_cfg);
+                    res.ok().map(|r| r.cycles)
                 } else {
                     None
                 };

@@ -115,8 +115,9 @@ fn print_help() {
          a pipeline stage; candidates are cached per (design, device, ratio) and\n  \
          --resume never re-solves completed sweep points. --select picks the\n  \
          winner: `fmax` (best routed result, default) or `cost` (min crossing\n  \
-         cost). --jobs N implements candidates over N worker threads with\n  \
-         deterministic, submission-ordered results.\n\
+         cost). --jobs N implements candidates over N worker threads (hybrid\n  \
+         warm/speculative sub-chains; see docs/sweep-scheduling.md) with\n  \
+         bit-identical artifacts for every N.\n\
          SOLVER: the partitioning ILP runs through the pluggable solver engine\n  \
          (exact warm-started branch-and-bound -> LP+FM -> greedy+FM escalation;\n  \
          see the `solver` module docs). --solver-budget caps the exact search\n  \
@@ -344,7 +345,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         if let Some(&dev) = devices.first() {
             design.device = dev;
         }
-        return compile_stored(&store_dir, &design, variant_flag, ratio, &cfg);
+        return compile_stored(&store_dir, &design, variant_flag, ratio, &cfg, jobs);
     }
 
     if devices.len() > 1 {
@@ -491,6 +492,17 @@ fn print_sweep(ctx: &tapa::flow::SessionContext) {
             "  best cand   : util ratio {:.2} ({} MHz)",
             art.points[b].util_ratio,
             fmt_mhz(art.points[b].fmax_mhz)
+        );
+    }
+    // Scheduler shape: how the candidate list was split across workers
+    // (`--jobs`-dependent by design — the one line here that may differ
+    // between runs of different widths; the CI phys-regression job greps
+    // it to prove real parallelism, then strips it before diffing).
+    let sc = &art.sched;
+    if sc.sub_chains > 0 {
+        println!(
+            "  sched       : {} sub-chains, {} speculative cold evals, {} seam mismatches",
+            sc.sub_chains, sc.speculative_evals, sc.seam_mismatches
         );
     }
     // Incremental-engine accounting: how much of the candidate
@@ -672,6 +684,7 @@ fn compile_stored(
     variant_flag: Option<FlowVariant>,
     ratio: Option<f64>,
     cfg: &FlowConfig,
+    jobs: usize,
 ) -> ExitCode {
     use tapa::flow::manifest::{unit_result_to_json, WorkUnit};
     use tapa::store::{ArtifactStore, StoreKey};
@@ -691,7 +704,11 @@ fn compile_stored(
     };
     let key = StoreKey::for_unit(&unit, cfg);
     let t0 = std::time::Instant::now();
-    let (res, served) = store.get_or_compute(&key, || experiments::execute_unit(&unit, cfg));
+    let (res, served) = store.get_or_compute(&key, || {
+        // The intra-unit width only affects wall-clock, never bytes, so
+        // the store stays coherent across clients of any --jobs value.
+        experiments::execute_unit_warm(&unit, cfg, None, None, jobs)
+    });
     match res {
         Ok(r) => {
             eprintln!(

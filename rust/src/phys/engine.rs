@@ -727,8 +727,9 @@ fn select_critical(
     timing::finish_report(critical_ns, critical_edge, route_failed, jitter)
 }
 
-/// Bitwise equality of two evaluations (the verify re-check).
-fn same_eval(a: &PhysEval, b: &PhysEval) -> bool {
+/// Bitwise equality of two evaluations (the verify re-check, and the
+/// scheduler's seam cross-check in [`super::sched`]).
+pub(super) fn same_eval(a: &PhysEval, b: &PhysEval) -> bool {
     let xy_eq = a.placement.xy.len() == b.placement.xy.len()
         && a
             .placement

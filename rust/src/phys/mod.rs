@@ -57,6 +57,16 @@
 //! artifacts and bench CSVs are therefore byte-identical for any
 //! candidate order, `--jobs` count, and warm/cold mix.
 //!
+//! The same contract extends to the **parallel sweep scheduler**
+//! ([`sched`], PR 7): `--jobs N` splits the candidate chain into
+//! contiguous per-worker warm sub-chains whose seams are warm-replayed
+//! and cross-checked bitwise against the speculative cold starts, so
+//! results *and* telemetry are byte-identical to the sequential chain —
+//! under `TAPA_PHYS_VERIFY=1` every warm evaluation on every sub-chain
+//! is additionally re-run cold. [`SweepSchedule`] reports how the work
+//! was actually scheduled (the only `--jobs`-dependent output, kept out
+//! of checkpoints).
+//!
 //! ## PhysContext
 //!
 //! [`PhysContext`] is the incremental state threaded through the flow —
@@ -71,8 +81,11 @@
 //! one shared memo.
 
 mod engine;
+mod sched;
 
 pub use engine::{PhysEngine, PhysEval};
+pub use sched::SweepSchedule;
+pub(crate) use sched::evaluate_chained;
 
 use std::collections::HashMap;
 
@@ -81,6 +94,7 @@ use crate::graph::TaskGraph;
 use crate::hls::TaskEstimate;
 use crate::place::PlaceStrategy;
 use crate::route::route_jitter;
+use crate::sim::SimEngine;
 use crate::solver::SolverContext;
 
 /// The deterministic P&R jitter pair of one `(design, strategy)` — the
@@ -175,6 +189,10 @@ pub struct PhysContext {
     pub solver: SolverContext,
     /// One engine per `(design, device, estimates)` identity.
     engines: HashMap<u64, PhysEngine>,
+    /// One incremental simulation engine per `(design, estimates)`
+    /// identity (device-independent: the simulator never sees the
+    /// device).
+    sims: HashMap<u64, SimEngine>,
     /// Re-run every warm evaluation cold and compare (`TAPA_PHYS_VERIFY`).
     verify: bool,
 }
@@ -192,6 +210,7 @@ impl PhysContext {
         PhysContext {
             solver: SolverContext::new(),
             engines: HashMap::new(),
+            sims: HashMap::new(),
             verify: std::env::var_os("TAPA_PHYS_VERIFY").is_some(),
         }
     }
@@ -234,6 +253,41 @@ impl PhysContext {
             *entry = PhysEngine::new(g, device, estimates, verify);
         }
         entry
+    }
+
+    /// The incremental simulation engine owning `(g, estimates)`'s memo,
+    /// built on first use — the `sim` counterpart of [`Self::engine_for`],
+    /// with the same structural collision guard (the sim identity is the
+    /// full serialized behavioral state, compared exactly).
+    pub fn sim_for(&mut self, g: &TaskGraph, estimates: &[TaskEstimate]) -> &mut SimEngine {
+        let mut h = crate::util::Fnv1a::new();
+        h.write_bytes(&crate::sim::incr::identity(g, estimates));
+        let key = h.finish();
+        let verify = self.verify;
+        let entry = self
+            .sims
+            .entry(key)
+            .or_insert_with(|| SimEngine::new(g, estimates, verify));
+        if !entry.matches(g, estimates) {
+            *entry = SimEngine::new(g, estimates, verify);
+        }
+        entry
+    }
+
+    /// Enable/disable warm-vs-cold verification context-wide — the
+    /// programmatic equivalent of launching under `TAPA_PHYS_VERIFY=1`.
+    /// Applies to every engine already built *and* to everything built
+    /// later through this context, including the speculative engines the
+    /// parallel sweep scheduler spawns for its non-first sub-chains and
+    /// the incremental simulation engines.
+    pub fn set_verify(&mut self, on: bool) {
+        self.verify = on;
+        for e in self.engines.values_mut() {
+            e.set_verify(on);
+        }
+        for s in self.sims.values_mut() {
+            s.set_verify(on);
+        }
     }
 
     /// Number of live engines (diagnostics).

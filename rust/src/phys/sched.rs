@@ -1,0 +1,258 @@
+//! Hybrid warm/speculative sweep scheduling — parallel candidate
+//! evaluation with results bit-identical to the sequential warm chain.
+//!
+//! ## The regression this fixes
+//!
+//! PR 5's [`PhysEngine`] made consecutive §6.3 sweep candidates cheap by
+//! warm-chaining each off the previous one — but a chain is strictly
+//! sequential, so `--jobs N` silently stopped scaling the sweep. The
+//! scheduler here restores the parallelism without giving up a single
+//! byte of the determinism contract.
+//!
+//! ## How it works
+//!
+//! The de-duplicated candidate list (in ratio order) is split into
+//! `min(candidates, jobs)` **contiguous spans**, one per worker on the
+//! shared [`run_indexed`] pool:
+//!
+//! * worker 0 takes the context's existing engine and warm-chains its
+//!   span exactly as the sequential path would — including warm-starting
+//!   off whatever state the context already held;
+//! * every other worker starts a fresh engine and evaluates its span's
+//!   first candidate **cold, speculatively**, then warm-chains the rest
+//!   of the span off it;
+//! * after finishing its own span, each worker (except the last)
+//!   **replays the seam**: it warm-continues into the *next* span's
+//!   first candidate. Because a warm evaluation is a pure function of
+//!   (previous state, candidate) and warm state is bit-identical to cold
+//!   state (the PR 5 contract), this replay *is* the evaluation the
+//!   sequential chain would have produced there.
+//!
+//! The seam replay serves two purposes at once: it supplies the
+//! canonical result and telemetry for each span's first candidate (the
+//! speculative cold eval is discarded from the accounting), and it
+//! cross-checks the speculation — [`same_eval`] compares the two
+//! bitwise, and any divergence keeps the warm-chain result and is
+//! counted in [`SweepSchedule::seam_mismatches`] (like
+//! [`PhysTelemetry::redone_cold`], any non-zero value is a bug report
+//! against the incremental paths, not an expected outcome).
+//!
+//! ## Determinism contract
+//!
+//! For any `--jobs`, the returned evaluations are the sequential chain's
+//! evaluations, bit for bit: span 0 *is* the chain's prefix, and each
+//! later span's results equal the chain's by induction over the seams.
+//! The canonical telemetry is assembled from per-evaluation deltas —
+//! span 0's evals, the seam replays, and the in-span warm evals of later
+//! spans — so [`PhysTelemetry`] in artifacts and checkpoints is also
+//! independent of the worker count; only the speculative cold evals
+//! (exactly `sub_chains − 1` of them) are extra work, and they are
+//! reported in [`SweepSchedule`], never in the canonical telemetry.
+//! The context keeps the **last** span's engine, whose state equals the
+//! sequential chain's final state, so later warm consumers (feedback
+//! rounds, the next sweep) see no difference either.
+
+use std::sync::Mutex;
+
+use crate::device::Device;
+use crate::floorplan::Floorplan;
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+use crate::place::analytical::AnalyticalParams;
+use crate::util::pool::run_indexed;
+
+use super::engine::{same_eval, PhysEngine, PhysEval};
+use super::{PhysContext, PhysTelemetry};
+
+/// How one sweep's candidate evaluations were scheduled — structural
+/// evidence that the parallel path actually ran (asserted in CI instead
+/// of wall-clock speedups). Unlike [`PhysTelemetry`], these values
+/// legitimately depend on `--jobs`, so they are *not* persisted in
+/// checkpoints and are excluded from cross-jobs byte-identity
+/// comparisons.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepSchedule {
+    /// Warm sub-chains the candidate list was split into
+    /// (`min(candidates, jobs)`; 1 = the sequential PR 5 chain).
+    pub sub_chains: u64,
+    /// Speculative cold evaluations performed and then discarded from
+    /// the canonical accounting (`sub_chains − 1`).
+    pub speculative_evals: u64,
+    /// Speculative cold evaluations that diverged bitwise from the warm
+    /// chain's seam replay. The warm result is kept; any non-zero value
+    /// is an incremental-path bug report.
+    pub seam_mismatches: u64,
+}
+
+/// One worker's output: its span's evaluations with per-evaluation
+/// telemetry deltas, the seam replay into the next span (absent for the
+/// last), and the engine itself (the last span's is kept).
+struct SpanOut {
+    evals: Vec<PhysEval>,
+    deltas: Vec<PhysTelemetry>,
+    seam: Option<(PhysEval, PhysTelemetry)>,
+    engine: PhysEngine,
+}
+
+/// Evaluate `candidates` (floorplan + per-edge stage vector, in ratio
+/// order) on the context's engine for `(g, device, estimates)`, split
+/// across up to `jobs` warm sub-chains. Returns the evaluations in
+/// candidate order — bit-identical to evaluating them sequentially on
+/// the context engine — plus the schedule that produced them.
+pub(crate) fn evaluate_chained(
+    g: &TaskGraph,
+    device: &Device,
+    estimates: &[TaskEstimate],
+    candidates: &[(Floorplan, Vec<u32>)],
+    params: &AnalyticalParams,
+    jobs: usize,
+    ctx: &mut PhysContext,
+) -> (Vec<PhysEval>, SweepSchedule) {
+    let m = candidates.len();
+    if m == 0 {
+        return (Vec::new(), SweepSchedule::default());
+    }
+    let key = super::engine_key(g, device, estimates);
+    let verify = ctx.verify;
+    // Materialize the context's engine (collision-checked) and take
+    // ownership for the duration of the run; worker 0 warm-chains off
+    // whatever state it already holds, exactly like the sequential path.
+    ctx.engine_for(g, device, estimates);
+    let mut engine = ctx.engines.remove(&key).expect("engine_for inserted it");
+    let pre = engine.telemetry;
+
+    let spans = plan_spans(m, jobs);
+    let s = spans.len();
+    if s == 1 {
+        // The sequential PR 5 chain, verbatim.
+        let evals: Vec<PhysEval> = candidates
+            .iter()
+            .map(|(fp, stages)| engine.evaluate(fp, stages, params))
+            .collect();
+        ctx.engines.insert(key, engine);
+        let sched = SweepSchedule { sub_chains: 1, ..Default::default() };
+        return (evals, sched);
+    }
+
+    // Worker 0's engine travels through the pool via a one-shot slot
+    // (the closure is `Fn`, so it cannot move the engine in directly).
+    let slot0: Mutex<Option<PhysEngine>> = Mutex::new(Some(engine));
+    let spans_ref = &spans;
+    let outs: Vec<SpanOut> = run_indexed(s, s, |w| {
+        let (lo, hi) = spans_ref[w];
+        let mut eng = if w == 0 {
+            slot0.lock().unwrap().take().expect("span 0 runs exactly once")
+        } else {
+            PhysEngine::new(g, device, estimates, verify)
+        };
+        let mut evals = Vec::with_capacity(hi - lo);
+        let mut deltas = Vec::with_capacity(hi - lo);
+        for (fp, stages) in &candidates[lo..hi] {
+            let before = eng.telemetry;
+            evals.push(eng.evaluate(fp, stages, params));
+            deltas.push(eng.telemetry.delta_since(&before));
+        }
+        let seam = if w + 1 < s {
+            // Warm-continue into the next span's first candidate: the
+            // canonical (sequential-chain) evaluation of that seam.
+            let (fp, stages) = &candidates[spans_ref[w + 1].0];
+            let before = eng.telemetry;
+            let ev = eng.evaluate(fp, stages, params);
+            Some((ev, eng.telemetry.delta_since(&before)))
+        } else {
+            None
+        };
+        SpanOut { evals, deltas, seam, engine: eng }
+    });
+
+    let mut sched = SweepSchedule {
+        sub_chains: s as u64,
+        speculative_evals: (s - 1) as u64,
+        seam_mismatches: 0,
+    };
+    // Canonical accounting: span 0's deltas, each seam replay's delta,
+    // and later spans' in-span warm deltas — never the speculative cold
+    // evals. This reproduces the sequential chain's telemetry exactly.
+    let mut canonical = PhysTelemetry::default();
+    let mut evals: Vec<PhysEval> = Vec::with_capacity(m);
+    let mut prev_seam: Option<(PhysEval, PhysTelemetry)> = None;
+    let mut last_engine: Option<PhysEngine> = None;
+    for (w, out) in outs.into_iter().enumerate() {
+        let SpanOut { evals: span_evals, deltas, seam, engine } = out;
+        for (k, (ev, delta)) in span_evals.into_iter().zip(deltas).enumerate() {
+            if w > 0 && k == 0 {
+                let (replay_ev, replay_delta) =
+                    prev_seam.take().expect("previous span replayed this seam");
+                if !same_eval(&ev, &replay_ev) {
+                    // Loudly, like the warm/cold verify divergence: the
+                    // warm chain is authoritative, the speculation is
+                    // discarded, and the mismatch is a bug report.
+                    eprintln!(
+                        "warning: speculative cold evaluation of `{}` diverged \
+                         from the warm chain at a sub-chain seam; warm result kept",
+                        g.name
+                    );
+                    sched.seam_mismatches += 1;
+                }
+                canonical.accumulate(&replay_delta);
+                evals.push(replay_ev);
+            } else {
+                canonical.accumulate(&delta);
+                evals.push(ev);
+            }
+        }
+        prev_seam = seam;
+        last_engine = Some(engine);
+    }
+
+    // Keep the last span's engine: its state is the sequential chain's
+    // final state, and its telemetry is rebuilt as `pre + canonical` so
+    // context totals are also independent of the worker count.
+    let mut engine = last_engine.expect("at least one span ran");
+    engine.telemetry = pre;
+    engine.telemetry.accumulate(&canonical);
+    ctx.engines.insert(key, engine);
+    (evals, sched)
+}
+
+/// Split `m` candidates into `min(m, max(jobs, 1))` contiguous spans,
+/// the first `m % spans` of them one candidate longer. Returned as
+/// `[start, end)` ranges covering `0..m` in order.
+fn plan_spans(m: usize, jobs: usize) -> Vec<(usize, usize)> {
+    let s = m.min(jobs.max(1));
+    let base = m / s;
+    let extra = m % s;
+    let mut spans = Vec::with_capacity(s);
+    let mut start = 0usize;
+    for w in 0..s {
+        let len = base + usize::from(w < extra);
+        spans.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, m);
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_are_contiguous_and_balanced() {
+        for m in 1..20usize {
+            for jobs in [0usize, 1, 2, 3, 8, 64] {
+                let spans = plan_spans(m, jobs);
+                assert_eq!(spans.len(), m.min(jobs.max(1)));
+                assert_eq!(spans[0].0, 0);
+                assert_eq!(spans.last().unwrap().1, m);
+                for w in 1..spans.len() {
+                    assert_eq!(spans[w].0, spans[w - 1].1, "contiguous");
+                }
+                let lens: Vec<usize> = spans.iter().map(|(a, b)| b - a).collect();
+                let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(max - min <= 1, "balanced: {lens:?}");
+                assert!(*min >= 1, "no empty span: {lens:?}");
+            }
+        }
+    }
+}

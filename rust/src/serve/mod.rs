@@ -164,12 +164,19 @@ impl Server {
 
     /// Serve one unit under `cfg` through the store funnel with the warm
     /// per-region context — the one execution path of every daemon
-    /// request.
-    fn run_unit(&self, unit: &WorkUnit, cfg: &FlowConfig) -> (Result<UnitResult, String>, Served) {
+    /// request. `jobs` parallelises inside the unit (the sweep scheduler);
+    /// single-request handlers pass the daemon's width, fan-out handlers
+    /// pass 1 because they already parallelise across units.
+    fn run_unit(
+        &self,
+        unit: &WorkUnit,
+        cfg: &FlowConfig,
+        jobs: usize,
+    ) -> (Result<UnitResult, String>, Served) {
         let key = StoreKey::for_unit(unit, cfg);
         let phys = self.phys_for(unit);
         let out = self.store.get_or_compute(&key, || {
-            execute_unit_warm(unit, cfg, Some(&self.cache), Some(&phys))
+            execute_unit_warm(unit, cfg, Some(&self.cache), Some(&phys), jobs)
         });
         if out.1 == Served::Cold {
             self.cold_evals.fetch_add(1, Ordering::Relaxed);
@@ -181,7 +188,7 @@ impl Server {
 
     fn handle_run(&self, req: &Json) -> Result<Json, String> {
         let unit = parse_unit(req)?;
-        let (res, served) = self.run_unit(&unit, &self.cfg);
+        let (res, served) = self.run_unit(&unit, &self.cfg, self.jobs);
         let result = res?;
         Ok(Json::Obj(vec![
             ("ok".into(), Json::Bool(true)),
@@ -210,7 +217,7 @@ impl Server {
             suite_units(&suite).ok_or_else(|| format!("`{suite}` is not a sharding suite"))?;
         let cfg = suite_cfg(&suite, &self.cfg);
         let served: Vec<(Result<UnitResult, String>, Served)> =
-            run_indexed(units.len(), self.jobs, |i| self.run_unit(&units[i], &cfg));
+            run_indexed(units.len(), self.jobs, |i| self.run_unit(&units[i], &cfg, 1));
         let mut results = Vec::with_capacity(served.len());
         let mut cold = 0u64;
         let mut hits = 0u64;

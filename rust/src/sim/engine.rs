@@ -23,8 +23,10 @@ impl Default for SimConfig {
     }
 }
 
-/// Simulation output.
-#[derive(Clone, Debug)]
+/// Simulation output. All-integer, so equality is exact — the
+/// incremental engine's verify mode compares resumed results bitwise
+/// against cold re-runs.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SimResult {
     /// Total cycles until every joined task finished.
     pub cycles: u64,
@@ -43,29 +45,37 @@ pub enum SimError {
     Deadlock(u64),
 }
 
-/// Simulate a design. `edge_lat[e]` is the pipeline latency inserted on
-/// edge `e` (pipelining + balancing); FIFO depths are automatically
-/// compensated per §5.3 (`depth + 2·lat`).
-pub fn simulate(
+/// The simulator's complete mutable state at the top of a cycle: the
+/// FIFO pool and the node FSMs. Cloneable, so the incremental engine
+/// ([`super::incr`]) can snapshot it mid-run and resume from the
+/// snapshot later.
+#[derive(Clone)]
+pub(super) struct SimState {
+    pub(super) fifos: Vec<Fifo>,
+    pub(super) nodes: Vec<PipelinedNode>,
+}
+
+/// A fresh FIFO for edge `e` under inserted pipeline latency `lat`:
+/// base 1-cycle write-to-read latency + inserted stages. The
+/// almost-full scheme counts in-flight tokens against capacity, so the
+/// base stage and each inserted stage get depth credit (1 + 2·lat,
+/// §5.3). Prefilled with the edge's initial tokens.
+pub(super) fn edge_fifo(e: &crate::graph::Edge, lat: u32) -> Fifo {
+    let mut f = Fifo::new(e.depth, 1 + lat, 1 + 2 * lat);
+    f.prefill(e.initial_tokens);
+    f
+}
+
+/// Build the cycle-0 state: the FIFO pool and the node FSMs, with
+/// mem-latency-shifted sources and feedback edges marked.
+pub(super) fn build_state(
     g: &TaskGraph,
     estimates: &[TaskEstimate],
     edge_lat: &[u32],
     cfg: &SimConfig,
-) -> Result<SimResult, SimError> {
-    assert_eq!(edge_lat.len(), g.num_edges());
-    // FIFO pool: base 1-cycle write-to-read latency + inserted stages. The
-    // almost-full scheme counts in-flight tokens against capacity, so the
-    // base stage and each inserted stage get depth credit (1 + 2·lat, §5.3).
-    let mut fifos: Vec<Fifo> = g
-        .edges
-        .iter()
-        .zip(edge_lat.iter())
-        .map(|(e, &lat)| {
-            let mut f = Fifo::new(e.depth, 1 + lat, 1 + 2 * lat);
-            f.prefill(e.initial_tokens);
-            f
-        })
-        .collect();
+) -> SimState {
+    let fifos: Vec<Fifo> =
+        g.edges.iter().zip(edge_lat.iter()).map(|(e, &lat)| edge_fifo(e, lat)).collect();
 
     // Feedback edges: cycle-internal edges carrying initial tokens gate
     // firing but not termination (§3.3.3-style control loops).
@@ -76,7 +86,7 @@ pub fn simulate(
         .map(|i| i.0)
         .collect();
 
-    let mut nodes: Vec<PipelinedNode> = (0..g.num_insts())
+    let nodes: Vec<PipelinedNode> = (0..g.num_insts())
         .map(|i| {
             let inst = &g.insts[i];
             let inputs: Vec<usize> =
@@ -102,13 +112,30 @@ pub fn simulate(
         })
         .collect();
 
-    let mut now = 0u64;
+    SimState { fifos, nodes }
+}
+
+/// Run the cycle loop from `start` (the state must be the top-of-cycle
+/// state of cycle `start`). `observe` runs at the top of every cycle,
+/// *before* FIFOs advance — a no-op observer reproduces [`simulate`]'s
+/// historical loop exactly, and the incremental engine's observer
+/// records snapshots and first-push cycles from the same vantage point
+/// it resumes at. Returns the final cycle number on termination.
+pub(super) fn run_loop(
+    state: &mut SimState,
+    start: u64,
+    cfg: &SimConfig,
+    mut observe: impl FnMut(u64, &SimState),
+) -> Result<u64, SimError> {
+    let mut now = start;
     loop {
+        observe(now, state);
+        let SimState { fifos, nodes } = &mut *state;
         for f in fifos.iter_mut() {
             f.advance(now);
         }
         for n in nodes.iter_mut() {
-            n.tick(now, &mut fifos);
+            n.tick(now, fifos);
         }
         let all_done = nodes.iter().all(|n| n.detached || n.is_done());
         if all_done {
@@ -119,14 +146,34 @@ pub fn simulate(
             return Err(SimError::Deadlock(cfg.max_cycles));
         }
     }
+    Ok(now)
+}
 
-    Ok(SimResult {
+/// Assemble the result from the final state after [`run_loop`] returned
+/// `now`.
+pub(super) fn assemble_result(g: &TaskGraph, state: &SimState, now: u64) -> SimResult {
+    SimResult {
         cycles: now + 1,
-        tokens_delivered: fifos.iter().map(|f| f.popped).sum::<u64>()
+        tokens_delivered: state.fifos.iter().map(|f| f.popped).sum::<u64>()
             - g.num_edges() as u64, // exclude one EoT per channel
-        peak_occupancy: fifos.iter().map(|f| f.peak_occupancy).collect(),
-        stalls: nodes.iter().map(|n| (n.stall_in, n.stall_out)).collect(),
-    })
+        peak_occupancy: state.fifos.iter().map(|f| f.peak_occupancy).collect(),
+        stalls: state.nodes.iter().map(|n| (n.stall_in, n.stall_out)).collect(),
+    }
+}
+
+/// Simulate a design. `edge_lat[e]` is the pipeline latency inserted on
+/// edge `e` (pipelining + balancing); FIFO depths are automatically
+/// compensated per §5.3 (`depth + 2·lat`).
+pub fn simulate(
+    g: &TaskGraph,
+    estimates: &[TaskEstimate],
+    edge_lat: &[u32],
+    cfg: &SimConfig,
+) -> Result<SimResult, SimError> {
+    assert_eq!(edge_lat.len(), g.num_edges());
+    let mut state = build_state(g, estimates, edge_lat, cfg);
+    let now = run_loop(&mut state, 0, cfg, |_, _| {})?;
+    Ok(assemble_result(g, &state, now))
 }
 
 #[cfg(test)]

@@ -1,0 +1,499 @@
+//! Incremental simulation — the PR 5 delta machinery extended to `sim`.
+//!
+//! The §5.2/§6.3 flow re-simulates near-identical designs: consecutive
+//! sweep candidates and feedback rounds change only the per-edge
+//! inserted pipeline latencies, yet the simulator used to re-run every
+//! cycle from 0. [`SimEngine`] memoizes one run per design identity —
+//! result, periodic state snapshots, and each FIFO's first-push cycle —
+//! and answers a latency-only change by resuming from the latest
+//! snapshot that provably precedes any behavioral divergence.
+//!
+//! ## Why the resumed run is exact
+//!
+//! A FIFO's inserted latency changes its §5.3 capacity
+//! (`depth + 1 + 2·lat`) and its write-to-read delay — but an **empty,
+//! un-prefilled FIFO that has never been pushed** behaves identically
+//! under any latency: `empty()` is true, `full()` is
+//! `0 >= capacity` = false, `peek()`/`head_is_eot()` see nothing. So up
+//! to the first cycle in which any changed FIFO receives a push (`c*`,
+//! the minimum of the memoized first-push cycles), the old run's states
+//! are bit-identical to what the new latencies would have produced —
+//! modulo the changed FIFOs' inert capacity/latency fields, which are
+//! patched by swapping in fresh FIFOs under the new latencies. The
+//! engine resumes from the latest snapshot at or before `c*` and
+//! replays the rest. Changed edges carrying initial tokens have no
+//! latency-independent prefix (prefill occupies them from cycle 0), so
+//! those runs go cold.
+//!
+//! The memoized first-push cycles are exact, not conservative: the loop
+//! observer sees each FIFO's `pushed` counter transition at the top of
+//! the following cycle (and a final sweep catches pushes in the
+//! terminating cycle), so `c*` never truncates a valid prefix.
+//!
+//! ## Determinism contract (PR-5 discipline)
+//!
+//! A resumed run is bit-identical to a cold run by the argument above,
+//! and guarded like the phys engine's warm path: under
+//! `TAPA_PHYS_VERIFY=1` (threaded through
+//! [`crate::phys::PhysContext`]) every resumed result is re-run cold
+//! and compared exactly ([`SimResult`] is all-integer); any divergence
+//! keeps the cold result and is counted in [`SimEngine::redone_cold`].
+//! Errors never corrupt the memo: a failed resume leaves the previous
+//! memo untouched (it only ever works on clones) and falls back to a
+//! full cold run, so the incremental engine cannot change observable
+//! behavior even if its prefix argument were wrong.
+
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+
+use super::engine::{assemble_result, build_state, edge_fifo, run_loop, SimError, SimState};
+use super::{SimConfig, SimResult};
+
+/// Live snapshots kept per memo before the recording interval doubles
+/// (adaptive thinning: long runs keep coarser, bounded history).
+const MAX_SNAPSHOTS: usize = 64;
+
+/// The full serialized simulation identity of `(g, estimates)` — every
+/// field the simulator's behavior depends on, compared byte-for-byte
+/// (no hashing, so identity can never collide). Instance and edge
+/// *names* are excluded: they label diagnostics, not behavior.
+pub(crate) fn identity(g: &TaskGraph, estimates: &[TaskEstimate]) -> Vec<u8> {
+    fn u(b: &mut Vec<u8>, v: u64) {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut b = Vec::new();
+    u(&mut b, g.name.len() as u64);
+    b.extend_from_slice(g.name.as_bytes());
+    u(&mut b, g.num_insts() as u64);
+    for inst in &g.insts {
+        b.push(u8::from(inst.detached));
+    }
+    u(&mut b, g.num_edges() as u64);
+    for e in &g.edges {
+        u(&mut b, e.producer.0 as u64);
+        u(&mut b, e.consumer.0 as u64);
+        u(&mut b, e.depth as u64);
+        u(&mut b, e.initial_tokens as u64);
+    }
+    u(&mut b, estimates.len() as u64);
+    for est in estimates {
+        let s = est.schedule;
+        u(&mut b, s.ii as u64);
+        u(&mut b, s.pipeline_depth as u64);
+        u(&mut b, s.trip_count);
+        u(&mut b, s.startup_cycles as u64);
+        u(&mut b, s.drain_cycles as u64);
+    }
+    b
+}
+
+/// One memoized top-of-cycle state.
+struct Snapshot {
+    now: u64,
+    state: SimState,
+}
+
+/// Everything memoized from the last successful run.
+struct Memo {
+    edge_lat: Vec<u32>,
+    /// `(max_cycles, mem_latency)` — config is part of the memo key.
+    cfg_key: (u64, u32),
+    result: SimResult,
+    snapshots: Vec<Snapshot>,
+    /// Per edge: the cycle during which the FIFO first received a push
+    /// (`None` = never pushed).
+    first_push: Vec<Option<u64>>,
+    interval: u64,
+}
+
+/// Records snapshots and first-push cycles through the loop observer.
+struct Recorder {
+    snapshots: Vec<Snapshot>,
+    first_push: Vec<Option<u64>>,
+    interval: u64,
+}
+
+impl Recorder {
+    fn new(ne: usize) -> Recorder {
+        Recorder { snapshots: Vec::new(), first_push: vec![None; ne], interval: 1 }
+    }
+
+    fn observe(&mut self, now: u64, state: &SimState) {
+        for (fp, f) in self.first_push.iter_mut().zip(&state.fifos) {
+            if fp.is_none() && f.pushed > 0 {
+                // The first push happened during the previous cycle's
+                // node ticks (at now == 0 nothing has ticked yet, so
+                // `now - 1` cannot underflow).
+                *fp = Some(now - 1);
+            }
+        }
+        if now % self.interval != 0 {
+            return;
+        }
+        if self.snapshots.last().is_some_and(|s| s.now == now) {
+            return; // the resume point itself is already retained
+        }
+        if self.snapshots.len() >= MAX_SNAPSHOTS {
+            // Thin adaptively: double the interval, keep aligned states
+            // (cycle 0 always stays — 0 divides everything).
+            self.interval *= 2;
+            let interval = self.interval;
+            self.snapshots.retain(|s| s.now % interval == 0);
+            if now % interval != 0 {
+                return;
+            }
+        }
+        self.snapshots.push(Snapshot { now, state: state.clone() });
+    }
+
+    /// Pushes during the terminating cycle have no later observation
+    /// point; the final state pins them to the last cycle.
+    fn finish(&mut self, now: u64, state: &SimState) {
+        for (fp, f) in self.first_push.iter_mut().zip(&state.fifos) {
+            if fp.is_none() && f.pushed > 0 {
+                *fp = Some(now);
+            }
+        }
+    }
+}
+
+/// Incremental simulation engine of one `(g, estimates)` identity, held
+/// by [`crate::phys::PhysContext`] next to the [`crate::phys::PhysEngine`]s.
+pub struct SimEngine {
+    identity: Vec<u8>,
+    verify: bool,
+    memo: Option<Memo>,
+    /// Simulations answered (including memo hits).
+    pub runs: u64,
+    /// Answered straight from the memo (identical latencies + config).
+    pub memo_hits: u64,
+    /// Runs resumed from a snapshot instead of cycle 0.
+    pub resumed: u64,
+    /// Cycles skipped by resuming (sum of resume start cycles).
+    pub resumed_cycles: u64,
+    /// Resumed results that failed the verify re-check (or resumed runs
+    /// whose outcome differed from the cold fallback) and were replaced
+    /// by their cold re-run. Any non-zero value is a bug report against
+    /// the incremental path.
+    pub redone_cold: u64,
+}
+
+impl SimEngine {
+    pub fn new(g: &TaskGraph, estimates: &[TaskEstimate], verify: bool) -> SimEngine {
+        SimEngine {
+            identity: identity(g, estimates),
+            verify,
+            memo: None,
+            runs: 0,
+            memo_hits: 0,
+            resumed: 0,
+            resumed_cycles: 0,
+            redone_cold: 0,
+        }
+    }
+
+    /// Exact identity check backing [`crate::phys::PhysContext::sim_for`]'s
+    /// collision guard.
+    pub fn matches(&self, g: &TaskGraph, estimates: &[TaskEstimate]) -> bool {
+        self.identity == identity(g, estimates)
+    }
+
+    /// Re-run every resumed simulation cold and compare exactly (also
+    /// enabled engine-wide by `TAPA_PHYS_VERIFY=1` via the context).
+    pub fn set_verify(&mut self, on: bool) {
+        self.verify = on;
+    }
+
+    /// Drop the memo; the next run goes cold.
+    pub fn reset(&mut self) {
+        self.memo = None;
+    }
+
+    /// [`super::simulate`], incrementally: a repeat of the memoized run
+    /// is answered from the memo, a latency-only delta resumes from the
+    /// latest snapshot preceding any divergence, everything else runs
+    /// cold. Results are bit-identical to [`super::simulate`] in every
+    /// case.
+    pub fn simulate(
+        &mut self,
+        g: &TaskGraph,
+        estimates: &[TaskEstimate],
+        edge_lat: &[u32],
+        cfg: &SimConfig,
+    ) -> Result<SimResult, SimError> {
+        assert_eq!(edge_lat.len(), g.num_edges());
+        debug_assert!(self.matches(g, estimates), "engine identity mismatch");
+        self.runs += 1;
+        let cfg_key = (cfg.max_cycles, cfg.mem_latency);
+
+        if let Some(m) = &self.memo {
+            if m.cfg_key == cfg_key && m.edge_lat == edge_lat {
+                self.memo_hits += 1;
+                return Ok(m.result.clone());
+            }
+        }
+
+        // Resume attempt — planned and run entirely on clones, so the
+        // previous memo survives any failure untouched.
+        if let Some((mut state, start, snapshots, first_push, interval)) =
+            self.plan_resume(g, edge_lat, cfg_key)
+        {
+            let mut rec = Recorder { snapshots, first_push, interval };
+            match run_loop(&mut state, start, cfg, |now, st| rec.observe(now, st)) {
+                Ok(now) => {
+                    rec.finish(now, &state);
+                    let result = assemble_result(g, &state, now);
+                    self.resumed += 1;
+                    self.resumed_cycles += start;
+                    if self.verify {
+                        match self.run_cold(g, estimates, edge_lat, cfg) {
+                            Ok((cold, cold_rec)) => {
+                                if cold != result {
+                                    eprintln!(
+                                        "warning: sim incremental resume of `{}` diverged \
+                                         from cold; cold result kept (redone_cold)",
+                                        g.name
+                                    );
+                                    self.redone_cold += 1;
+                                    self.commit(edge_lat, cfg_key, cold.clone(), cold_rec);
+                                    return Ok(cold);
+                                }
+                            }
+                            Err(e) => {
+                                // Resume terminated but cold deadlocked:
+                                // an incremental-path bug; trust cold.
+                                eprintln!(
+                                    "warning: sim incremental resume of `{}` terminated \
+                                     but the cold verify run did not; cold kept",
+                                    g.name
+                                );
+                                self.redone_cold += 1;
+                                self.memo = None;
+                                return Err(e);
+                            }
+                        }
+                    }
+                    self.commit(edge_lat, cfg_key, result.clone(), rec);
+                    return Ok(result);
+                }
+                Err(_) => {
+                    // A deadlock on the resumed path falls through to the
+                    // cold run below: the engine must never change the
+                    // observable outcome, even if the prefix argument
+                    // were somehow wrong. (If cold deadlocks too, the
+                    // outcomes agree and the error propagates.)
+                }
+            }
+        }
+
+        match self.run_cold(g, estimates, edge_lat, cfg) {
+            Ok((result, rec)) => {
+                self.commit(edge_lat, cfg_key, result.clone(), rec);
+                Ok(result)
+            }
+            Err(e) => {
+                self.memo = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// The latency-only resume plan: `(resume state, start cycle,
+    /// retained patched snapshots, retained first-push entries,
+    /// interval)`, or `None` when only a cold run is valid.
+    #[allow(clippy::type_complexity)]
+    fn plan_resume(
+        &self,
+        g: &TaskGraph,
+        edge_lat: &[u32],
+        cfg_key: (u64, u32),
+    ) -> Option<(SimState, u64, Vec<Snapshot>, Vec<Option<u64>>, u64)> {
+        let m = self.memo.as_ref()?;
+        if m.cfg_key != cfg_key {
+            return None;
+        }
+        let changed: Vec<usize> =
+            (0..edge_lat.len()).filter(|&e| m.edge_lat[e] != edge_lat[e]).collect();
+        debug_assert!(!changed.is_empty(), "identical runs are memo hits");
+        // Prefilled channels are occupied from cycle 0: no
+        // latency-independent prefix exists for them.
+        if changed.iter().any(|&e| g.edges[e].initial_tokens > 0) {
+            return None;
+        }
+        // c*: the first cycle during which any changed FIFO saw a push.
+        // Strictly before it every changed FIFO is empty and untouched,
+        // and therefore latency/capacity-independent (module docs).
+        let c_star = changed
+            .iter()
+            .map(|&e| m.first_push[e].unwrap_or(u64::MAX))
+            .min()
+            .unwrap();
+        let si = m.snapshots.iter().rposition(|s| s.now <= c_star)?;
+        let start = m.snapshots[si].now;
+        let patch = |state: &SimState| -> SimState {
+            let mut st = state.clone();
+            for &e in &changed {
+                debug_assert_eq!(st.fifos[e].pushed, 0, "changed FIFO touched before c*");
+                st.fifos[e] = edge_fifo(&g.edges[e], edge_lat[e]);
+            }
+            st
+        };
+        let snapshots: Vec<Snapshot> = m.snapshots[..=si]
+            .iter()
+            .map(|s| Snapshot { now: s.now, state: patch(&s.state) })
+            .collect();
+        let state = snapshots[si].state.clone();
+        // Keep only first-push entries proven inside the shared prefix;
+        // later ones are re-observed by the resumed run.
+        let first_push: Vec<Option<u64>> =
+            m.first_push.iter().map(|fp| fp.filter(|&c| c < start)).collect();
+        Some((state, start, snapshots, first_push, m.interval))
+    }
+
+    fn run_cold(
+        &self,
+        g: &TaskGraph,
+        estimates: &[TaskEstimate],
+        edge_lat: &[u32],
+        cfg: &SimConfig,
+    ) -> Result<(SimResult, Recorder), SimError> {
+        let mut state = build_state(g, estimates, edge_lat, cfg);
+        let mut rec = Recorder::new(g.num_edges());
+        let now = run_loop(&mut state, 0, cfg, |now, st| rec.observe(now, st))?;
+        rec.finish(now, &state);
+        Ok((assemble_result(g, &state, now), rec))
+    }
+
+    fn commit(&mut self, edge_lat: &[u32], cfg_key: (u64, u32), result: SimResult, rec: Recorder) {
+        self.memo = Some(Memo {
+            edge_lat: edge_lat.to_vec(),
+            cfg_key,
+            result,
+            snapshots: rec.snapshots,
+            first_push: rec.first_push,
+            interval: rec.interval,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+    use crate::sim::simulate;
+
+    fn chain(n: usize, trip: u64) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new("incr_chain");
+        let p = b.proto("K", ComputeSpec::passthrough(trip));
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 32, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    /// The core property: for every latency delta — single edge, many
+    /// edges, back to the original — the resumed result is bitwise equal
+    /// to a cold `simulate` of the same inputs.
+    #[test]
+    fn incremental_matches_cold_bitwise_across_latency_deltas() {
+        let g = chain(4, 300);
+        let est = estimate_all(&g);
+        let cfg = SimConfig::default();
+        let mut eng = SimEngine::new(&g, &est, false);
+        let lat_sets: Vec<Vec<u32>> = vec![
+            vec![0, 0, 0],
+            vec![4, 0, 0],
+            vec![4, 6, 0],
+            vec![0, 0, 8],
+            vec![2, 2, 2],
+            vec![0, 0, 0], // back to the start (memo now differs)
+        ];
+        for lats in &lat_sets {
+            let warm = eng.simulate(&g, &est, lats, &cfg).unwrap();
+            let cold = simulate(&g, &est, lats, &cfg).unwrap();
+            assert_eq!(warm, cold, "lats={lats:?}");
+        }
+        assert!(eng.resumed > 0, "at least one run resumed incrementally");
+    }
+
+    /// Verify mode re-runs every resumed simulation cold; with a correct
+    /// incremental path nothing is redone.
+    #[test]
+    fn verify_mode_confirms_resumed_runs() {
+        let g = chain(3, 200);
+        let est = estimate_all(&g);
+        let cfg = SimConfig::default();
+        let mut eng = SimEngine::new(&g, &est, true);
+        for lats in [[0u32, 0], [5, 0], [5, 3], [1, 1]] {
+            let warm = eng.simulate(&g, &est, &lats, &cfg).unwrap();
+            let cold = simulate(&g, &est, &lats, &cfg).unwrap();
+            assert_eq!(warm, cold);
+        }
+        assert!(eng.resumed > 0);
+        assert_eq!(eng.redone_cold, 0, "no resumed run diverged");
+    }
+
+    /// An identical repeat is a memo hit with the identical result.
+    #[test]
+    fn repeat_run_is_a_memo_hit() {
+        let g = chain(3, 100);
+        let est = estimate_all(&g);
+        let cfg = SimConfig::default();
+        let mut eng = SimEngine::new(&g, &est, false);
+        let a = eng.simulate(&g, &est, &[2, 2], &cfg).unwrap();
+        let b = eng.simulate(&g, &est, &[2, 2], &cfg).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(eng.memo_hits, 1);
+        // A config change is not a hit (the cap is part of the key).
+        let c = eng
+            .simulate(&g, &est, &[2, 2], &SimConfig { mem_latency: 40, ..cfg })
+            .unwrap();
+        assert_eq!(eng.memo_hits, 1);
+        assert_eq!(
+            c,
+            simulate(&g, &est, &[2, 2], &SimConfig { mem_latency: 40, ..cfg }).unwrap()
+        );
+    }
+
+    /// Changed prefilled (feedback) channels force a cold run — and the
+    /// result still matches `simulate` exactly.
+    #[test]
+    fn prefilled_changed_edge_goes_cold_and_matches() {
+        let mut b = TaskGraphBuilder::new("incr_cycle");
+        let p = b.proto("K", ComputeSpec::passthrough(64));
+        let a = b.invoke(p, "a");
+        let c = b.invoke(p, "b");
+        b.stream("f", 32, 4, a, c);
+        b.stream_with_init("back", 32, 4, 2, c, a);
+        let g = b.build().unwrap();
+        let est = estimate_all(&g);
+        let cfg = SimConfig::default();
+        let mut eng = SimEngine::new(&g, &est, false);
+        for lats in [[0u32, 0], [0, 3], [2, 3]] {
+            let warm = eng.simulate(&g, &est, &lats, &cfg);
+            let cold = simulate(&g, &est, &lats, &cfg);
+            match (warm, cold) {
+                (Ok(w), Ok(c)) => assert_eq!(w, c),
+                (Err(_), Err(_)) => {}
+                (w, c) => panic!("outcome mismatch: warm={w:?} cold={c:?}"),
+            }
+        }
+    }
+
+    /// Identity distinguishes behavioral changes (schedules, depths,
+    /// tokens) and ignores none of them.
+    #[test]
+    fn identity_tracks_behavioral_fields() {
+        let g = chain(3, 100);
+        let est = estimate_all(&g);
+        let eng = SimEngine::new(&g, &est, false);
+        assert!(eng.matches(&g, &est));
+        let mut est2 = est.clone();
+        est2[0].schedule.trip_count += 1;
+        assert!(!eng.matches(&g, &est2));
+        let g2 = chain(4, 100);
+        assert!(!eng.matches(&g2, &estimate_all(&g2)));
+    }
+}

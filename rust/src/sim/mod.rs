@@ -11,12 +11,14 @@
 pub mod burst;
 pub mod engine;
 pub mod fifo;
+pub mod incr;
 pub mod mem;
 pub mod node;
 
 pub use burst::BurstDetector;
 pub use engine::{simulate, SimConfig, SimResult};
 pub use fifo::{Fifo, Token};
+pub use incr::SimEngine;
 pub use node::{NodeState, PipelinedNode};
 
 #[cfg(test)]

@@ -4,16 +4,15 @@
 //! full guided placement must produce identical slot-legal positions.
 //!
 //! Skips (with a message) when `artifacts/placer_step.hlo.txt` has not
-//! been built (`make artifacts`).
-//!
-//! TRIAGE (seed gap): these three tests are `#[ignore]`d so
-//! `cargo test -q` runs green end to end. They require the AOT PJRT
-//! artifact, which the default build does not ship, and when an older
-//! artifact is present its numerics drift beyond the asserted tolerances
-//! against the current rust-ref step. Re-enable (and drop the attributes)
-//! once `make artifacts` regenerates the artifact against
-//! `python/compile/model.py`; run them explicitly with
-//! `cargo test -- --ignored`. Tracked in ROADMAP.md.
+//! been built (`make artifacts`) — so `cargo test -q` stays green on a
+//! default checkout — and asserts in full when it is present. The
+//! `pjrt-ignored` CI job regenerates the artifact from
+//! `python/compile/model.py` on every PR and runs these against it, so
+//! numeric drift between the AOT artifact and the rust-ref step is
+//! visible instead of silent. The former `#[ignore]` triage (stale
+//! artifacts drifting beyond tolerance) is resolved by always testing
+//! against a freshly lowered artifact; tolerances below are the
+//! single-step f32 accumulation bounds, not drift allowances.
 
 use tapa::bench_suite::cnn::cnn;
 use tapa::device::DeviceKind;
@@ -35,7 +34,6 @@ fn engine() -> Option<Engine> {
 }
 
 #[test]
-#[ignore = "seed gap: needs the AOT PJRT artifact (`make artifacts`) and its numerics drift vs the rust-ref step on multi-iteration runs; tracked in ROADMAP — re-enable once the artifact is regenerated against the current placer step"]
 fn pjrt_matches_rust_over_iterations_on_cnn() {
     let Some(engine) = engine() else { return };
     let d = cnn(4, DeviceKind::U250);
@@ -48,10 +46,10 @@ fn pjrt_matches_rust_over_iterations_on_cnn() {
     for iter in 0..5 {
         let x = engine.run_step(&arrays, &params).expect("pjrt step");
         let r = RustStep.step(&arrays, &params);
-        assert_allclose(&x.pos, &r.pos, 2e-4, 1e-5);
-        assert_allclose(&x.congestion, &r.congestion, 2e-3, 1e-4);
+        assert_allclose(&x.pos, &r.pos, 1e-4, 1e-6);
+        assert_allclose(&x.congestion, &r.congestion, 1e-3, 1e-5);
         assert!(
-            (x.wl - r.wl).abs() <= 2e-3 * r.wl.abs().max(1.0),
+            (x.wl - r.wl).abs() <= 1e-3 * r.wl.abs().max(1.0),
             "iter {iter}: wl {} vs {}",
             x.wl,
             r.wl
@@ -61,7 +59,6 @@ fn pjrt_matches_rust_over_iterations_on_cnn() {
 }
 
 #[test]
-#[ignore = "seed gap: needs the AOT PJRT artifact; slot clamping can diverge at tolerance boundaries between executors; tracked in ROADMAP"]
 fn guided_placement_same_slots_either_executor() {
     let Some(engine) = engine() else { return };
     let d = cnn(2, DeviceKind::U250);
@@ -75,13 +72,12 @@ fn guided_placement_same_slots_either_executor() {
     for v in 0..d.graph.num_insts() {
         let dx = (p_x.xy[v].0 - p_r.xy[v].0).abs();
         let dy = (p_x.xy[v].1 - p_r.xy[v].1).abs();
-        assert!(dx < 1e-2 && dy < 1e-2, "v{v} drifted: {dx},{dy}");
+        assert!(dx < 5e-3 && dy < 5e-3, "v{v} drifted: {dx},{dy}");
     }
-    assert_allclose(&cong_x, &cong_r, 5e-3, 1e-3);
+    assert_allclose(&cong_x, &cong_r, 2e-3, 1e-4);
 }
 
 #[test]
-#[ignore = "seed gap: needs the AOT PJRT artifact; hot-loop stability depends on the PJRT runtime build; tracked in ROADMAP"]
 fn engine_survives_many_invocations() {
     // Hot-path stability: 100 back-to-back executions, no leaks/crashes.
     let Some(engine) = engine() else { return };

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use tapa::device::{DeviceKind, SlotId};
-use tapa::floorplan::{floorplan, Floorplan, FloorplanConfig};
+use tapa::floorplan::{floorplan, multi, Floorplan, FloorplanConfig};
 use tapa::flow::{Design, FlowConfig, FlowVariant, Session, SessionSet, SimOptions, Stage};
 use tapa::graph::{ComputeSpec, TaskGraph, TaskGraphBuilder};
 use tapa::hls::estimate_all;
@@ -201,7 +201,14 @@ fn sweep_artifact_and_phys_telemetry_identical_for_jobs_1_4_8() {
         s.context().sweep.clone().unwrap()
     };
     let a = run(1);
-    for jobs in [4usize, 8] {
+    let implemented = a
+        .points
+        .iter()
+        .filter(|p| p.duplicate_of.is_none() && p.plan.is_some())
+        .count() as u64;
+    assert_eq!(a.sched.sub_chains, implemented.min(1), "jobs=1 runs the sequential chain");
+    assert_eq!(a.sched.speculative_evals, 0);
+    for jobs in [2usize, 4, 8] {
         let b = run(jobs);
         assert_eq!(a.best, b.best, "jobs={jobs}");
         assert_eq!(a.solver, b.solver, "jobs={jobs}: solver accounting");
@@ -211,7 +218,186 @@ fn sweep_artifact_and_phys_telemetry_identical_for_jobs_1_4_8() {
         let fb: Vec<Option<u64>> =
             b.points.iter().map(|p| p.fmax_mhz.map(f64::to_bits)).collect();
         assert_eq!(fa, fb, "jobs={jobs}: candidate scores (bitwise)");
+        // The schedule is the one `--jobs`-dependent output — its shape
+        // is still deterministic: one sub-chain per worker up to the
+        // unique-candidate count, one speculative cold eval per
+        // non-first sub-chain, and no seam may mismatch.
+        assert_eq!(
+            b.sched.sub_chains,
+            implemented.min(jobs as u64),
+            "jobs={jobs}: sub-chain count"
+        );
+        assert_eq!(b.sched.speculative_evals, b.sched.sub_chains.saturating_sub(1));
+        assert_eq!(b.sched.seam_mismatches, 0, "jobs={jobs}: seams must agree");
     }
+}
+
+/// Distinct-candidate fixture for driving the scheduler directly through
+/// [`multi::implement_points_in`]: `m` floorplans that provably never
+/// dedupe (each differs from the base at a different instance), so the
+/// candidate count — and with it `min(m, jobs)` sub-chains — is exact.
+fn distinct_points(base: &Floorplan, m: usize, nslots: usize) -> Vec<multi::SweepPoint> {
+    (0..m)
+        .map(|i| {
+            let mut fp = base.clone();
+            fp.assignment[i] = SlotId((fp.assignment[i].0 + 1) % nslots);
+            multi::SweepPoint {
+                util_ratio: 0.55 + 0.05 * i as f64,
+                plan: Some(fp),
+                duplicate_of: None,
+            }
+        })
+        .collect()
+}
+
+/// The tentpole property, against the scheduler directly: splitting the
+/// candidate chain into parallel warm sub-chains changes neither the
+/// scores (bitwise) nor the canonical phys telemetry, for any worker
+/// count — including more workers than candidates — while the schedule
+/// proves real sub-chains ran.
+#[test]
+fn hybrid_scheduler_matches_sequential_chain_bitwise_for_any_jobs() {
+    let g = chain_graph("phys_sched_chain", 12);
+    let d = DeviceKind::U250.device();
+    let est = estimate_all(&g);
+    let base = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+    let params = AnalyticalParams::default();
+    let points = distinct_points(&base, 6, d.num_slots());
+    let run = |jobs: usize| {
+        let mut ctx = PhysContext::new();
+        let (fmax, sched) =
+            multi::implement_points_in(&g, &d, &est, &points, 2, &params, jobs, &mut ctx);
+        let bits: Vec<Option<u64>> = fmax.iter().map(|f| f.map(f64::to_bits)).collect();
+        (bits, sched, ctx.telemetry())
+    };
+    let (f1, s1, t1) = run(1);
+    assert_eq!(s1.sub_chains, 1);
+    assert_eq!(s1.speculative_evals, 0);
+    assert_eq!(t1.evals, 6);
+    assert_eq!(t1.warm_evals, 5, "the sequential chain warms every non-first eval");
+    for jobs in [2usize, 3, 6, 64] {
+        let (f, s, t) = run(jobs);
+        assert_eq!(f, f1, "jobs={jobs}: scores bitwise");
+        assert_eq!(t, t1, "jobs={jobs}: canonical telemetry (speculation excluded)");
+        assert_eq!(s.sub_chains, 6u64.min(jobs as u64), "jobs={jobs}");
+        assert_eq!(s.speculative_evals, s.sub_chains - 1, "jobs={jobs}");
+        assert_eq!(s.seam_mismatches, 0, "jobs={jobs}: every sub-chain boundary agreed");
+    }
+}
+
+/// Worker 0 must warm-chain off whatever state the context already holds
+/// (the sequential path's behavior): a context warmed by a previous
+/// sweep yields the same parallel results as the same warm context
+/// evaluated sequentially — the sub-chain-boundary *and* warm-context
+/// cold/warm equivalence in one.
+#[test]
+fn parallel_scheduler_respects_preexisting_warm_context() {
+    let g = chain_graph("phys_warmctx_chain", 12);
+    let d = DeviceKind::U250.device();
+    let est = estimate_all(&g);
+    let base = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+    let params = AnalyticalParams::default();
+    let first = distinct_points(&base, 4, d.num_slots());
+    let second: Vec<multi::SweepPoint> =
+        distinct_points(&base, 10, d.num_slots()).into_iter().skip(4).collect();
+    let run = |jobs: usize| {
+        let mut ctx = PhysContext::new();
+        // Warm the context with a first (sequential) pass…
+        multi::implement_points_in(&g, &d, &est, &first, 2, &params, 1, &mut ctx);
+        // …then evaluate a second batch on the warm context.
+        let (fmax, sched) =
+            multi::implement_points_in(&g, &d, &est, &second, 2, &params, jobs, &mut ctx);
+        let bits: Vec<Option<u64>> = fmax.iter().map(|f| f.map(f64::to_bits)).collect();
+        (bits, sched, ctx.telemetry())
+    };
+    let (f1, _, t1) = run(1);
+    assert_eq!(t1.evals, 10);
+    assert_eq!(t1.warm_evals, 9, "the second batch warm-chains off the first");
+    for jobs in [2usize, 3] {
+        let (f, s, t) = run(jobs);
+        assert_eq!(f, f1, "jobs={jobs}: warm-context scores bitwise");
+        assert_eq!(t, t1, "jobs={jobs}: warm-context telemetry");
+        assert_eq!(s.sub_chains, 6u64.min(jobs as u64));
+        assert_eq!(s.seam_mismatches, 0);
+    }
+}
+
+/// The `TAPA_PHYS_VERIFY` guard covers the parallel path: with
+/// verification on ([`PhysContext::set_verify`], the programmatic
+/// equivalent), every warm evaluation on every sub-chain is re-run cold
+/// — nothing may be redone, no seam may mismatch, and results stay
+/// bitwise equal to the unverified sequential chain.
+#[test]
+fn verify_guard_covers_the_parallel_path() {
+    let g = chain_graph("phys_verify_chain", 12);
+    let d = DeviceKind::U250.device();
+    let est = estimate_all(&g);
+    let base = floorplan(&g, &d, &est, &FloorplanConfig::default()).unwrap();
+    let params = AnalyticalParams::default();
+    let points = distinct_points(&base, 6, d.num_slots());
+    let run = |jobs: usize, ctx: &mut PhysContext| {
+        multi::implement_points_in(&g, &d, &est, &points, 2, &params, jobs, ctx)
+    };
+    let mut plain = PhysContext::new();
+    let (f_plain, _) = run(1, &mut plain);
+    let mut ctx = PhysContext::new();
+    ctx.set_verify(true);
+    let (fmax, sched) = run(8, &mut ctx);
+    assert_eq!(sched.sub_chains, 6);
+    assert_eq!(sched.seam_mismatches, 0, "no speculation diverged from the warm chain");
+    let t = ctx.telemetry();
+    assert_eq!(t.redone_cold, 0, "no warm evaluation failed its cold re-check");
+    assert_eq!(t, plain.telemetry(), "verification must not change the accounting");
+    let a: Vec<Option<u64>> = fmax.iter().map(|f| f.map(f64::to_bits)).collect();
+    let b: Vec<Option<u64>> = f_plain.iter().map(|f| f.map(f64::to_bits)).collect();
+    assert_eq!(a, b, "verified parallel == unverified sequential, bitwise");
+}
+
+/// The verify guard at the session level, on the parallel sweep path:
+/// `--jobs 8` with context-wide verification enabled produces the
+/// jobs-1 artifact with zero redone or mismatched evaluations.
+#[test]
+fn session_sweep_under_verify_with_jobs_8_matches_jobs_1() {
+    let d = chain_design("phys_verify_session", 8);
+    let cfg = sweep_cfg();
+    let mut s1 = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone());
+    s1.up_to(Stage::Sweep, &RustStep).unwrap();
+    let a = s1.context().sweep.clone().unwrap();
+
+    let mut s8 = Session::new(d, FlowVariant::Tapa, cfg).with_jobs(8);
+    s8.phys().lock().unwrap().set_verify(true);
+    s8.up_to(Stage::Sweep, &RustStep).unwrap();
+    let b = s8.context().sweep.clone().unwrap();
+
+    assert_eq!(a.best, b.best);
+    assert_eq!(a.phys, b.phys, "canonical telemetry under verify + jobs 8");
+    assert_eq!(b.phys.redone_cold, 0);
+    assert_eq!(b.sched.seam_mismatches, 0);
+    let fa: Vec<Option<u64>> = a.points.iter().map(|p| p.fmax_mhz.map(f64::to_bits)).collect();
+    let fb: Vec<Option<u64>> = b.points.iter().map(|p| p.fmax_mhz.map(f64::to_bits)).collect();
+    assert_eq!(fa, fb, "artifact scores bitwise under verify");
+}
+
+/// The sim delta machinery through its public API: after any chain of
+/// latency-only deltas, the incrementally resumed simulation is bitwise
+/// equal to a cold run of the same inputs.
+#[test]
+fn incremental_simulation_equals_cold_under_random_latency_deltas() {
+    use tapa::sim::{simulate, SimConfig, SimEngine};
+    let g = chain_graph("sim_prop_chain", 6);
+    let est = estimate_all(&g);
+    let cfg = SimConfig::default();
+    forall(Config::default().cases(12).seed(0x51AB), |rng| {
+        let mut eng = SimEngine::new(&g, &est, false);
+        let mut lats = vec![0u32; g.num_edges()];
+        for step in 0..5 {
+            let e = rng.gen_range(lats.len());
+            lats[e] = rng.gen_range(9) as u32;
+            let warm = eng.simulate(&g, &est, &lats, &cfg).unwrap();
+            let cold = simulate(&g, &est, &lats, &cfg).unwrap();
+            assert_eq!(warm, cold, "step {step}: lats={lats:?}");
+        }
+    });
 }
 
 /// Warm-chained sweep scoring equals isolated cold scoring of the same
