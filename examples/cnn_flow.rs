@@ -6,8 +6,15 @@
 
 use tapa::bench_suite::cnn::cnn;
 use tapa::device::DeviceKind;
-use tapa::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+use tapa::flow::{Design, FlowConfig, FlowResult, FlowVariant, Session, SimOptions};
+use tapa::place::RustStep;
 use tapa::report::fmt_mhz;
+
+fn run_flow(d: &Design, v: FlowVariant, cfg: &FlowConfig) -> FlowResult {
+    Session::new(d.clone(), v, cfg.clone())
+        .run_all(&RustStep)
+        .expect("in-memory session cannot fail")
+}
 
 fn main() {
     let max_c: usize = std::env::args()

@@ -7,9 +7,16 @@
 use tapa::bench_suite::hbm::spmv;
 use tapa::floorplan::multi::{generate_with_failures, DEFAULT_SWEEP};
 use tapa::floorplan::{bind_hbm_channels, floorplan, FloorplanConfig};
-use tapa::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+use tapa::flow::{Design, FlowConfig, FlowResult, FlowVariant, Session, SimOptions};
 use tapa::hls::estimate_all;
+use tapa::place::RustStep;
 use tapa::report::fmt_mhz;
+
+fn run_flow(d: &Design, v: FlowVariant, cfg: &FlowConfig) -> FlowResult {
+    Session::new(d.clone(), v, cfg.clone())
+        .run_all(&RustStep)
+        .expect("in-memory session cannot fail")
+}
 
 fn main() {
     let (orig_d, opt_d) = spmv(24);

@@ -21,7 +21,7 @@ use crate::device::DeviceKind;
 use crate::floorplan::multi::DEFAULT_SWEEP;
 use crate::flow::manifest::{Manifest, SolveSummary, UnitResult, UnitStatus, WorkUnit};
 use crate::flow::{
-    run_flow, run_indexed, BatchRunner, Design, FlowConfig, FlowVariant, Session,
+    run_indexed, BatchRunner, Design, FlowConfig, FlowVariant, Session,
     SessionError, SimOptions, Stage, StageCache,
 };
 use crate::phys::PhysContext;
@@ -35,7 +35,7 @@ use crate::util::stats::mean;
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig12", "fig13", "fig14",
-    "fig15", "headline", "43-designs", "fast-suite",
+    "fig15", "headline", "cluster", "43-designs", "fast-suite",
 ];
 
 /// Experiments that decompose into manifest work units and therefore
@@ -69,6 +69,7 @@ pub fn run_experiment_jobs(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Ta
         "fig14" => fig14_gauss(cfg),
         "fig15" => fig15_controls(cfg),
         "headline" => headline_summary(cfg),
+        "cluster" => cluster_partitioning(cfg),
         "43-designs" => designs43(cfg, jobs),
         "fast-suite" => fast_suite(cfg, jobs),
         _ => return None,
@@ -1182,10 +1183,19 @@ pub fn fig15_controls(cfg: &FlowConfig) -> Table {
     let cfg = no_sim(cfg);
     for c in [2usize, 4, 6, 8, 10, 12, 14, 16] {
         let d = cnn::cnn(c, DeviceKind::U250);
-        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
-        let ponly = run_flow(&d, FlowVariant::PipelineOnlyNoConstraints, &cfg);
-        let full = run_flow(&d, FlowVariant::Tapa, &cfg);
-        let coarse = run_flow(&d, FlowVariant::TapaCoarse4Slot, &cfg);
+        // All four variants of one design share a StageCache so the HLS
+        // estimates are computed once per size.
+        let cache = Arc::new(StageCache::default());
+        let mut run = |variant| {
+            Session::new(d.clone(), variant, cfg.clone())
+                .with_cache(cache.clone())
+                .run_all(&RustStep)
+                .expect("in-memory session cannot fail")
+        };
+        let orig = run(FlowVariant::Baseline);
+        let ponly = run(FlowVariant::PipelineOnlyNoConstraints);
+        let full = run(FlowVariant::Tapa);
+        let coarse = run(FlowVariant::TapaCoarse4Slot);
         t.row(vec![
             format!("13x{c}"),
             fmt_mhz(orig.fmax_mhz),
@@ -1243,6 +1253,56 @@ pub fn headline_summary(cfg: &FlowConfig) -> Table {
     t
 }
 
+/// TAPA-CS multi-FPGA partitioning: split each CNN design across two
+/// identical U250 chips and report per-chip Fmax, the system clock (the
+/// slowest chip), the number of cut edges, and inter-FPGA link
+/// utilization against the hard per-link bit budget.
+pub fn cluster_partitioning(cfg: &FlowConfig) -> Table {
+    let mut t = Table::new(
+        "Cluster — TAPA-CS 2-chip partitioning (CNN, U250 x2)",
+        &["Size", "Chip 0", "Chip 1", "System MHz", "Cut edges", "Link util %"],
+    );
+    let mut cfg = no_sim(cfg);
+    cfg.cluster.chips = 2;
+    for c in [4usize, 8, 12, 16] {
+        let d = cnn::cnn(c, DeviceKind::U250);
+        let mut s = Session::new(d, FlowVariant::Tapa, cfg.clone());
+        s.up_to(Stage::Cluster, &RustStep)
+            .expect("in-memory session cannot fail");
+        let cl = s
+            .context()
+            .cluster
+            .as_ref()
+            .expect("cluster stage ran")
+            .clone();
+        if cl.degraded {
+            t.row(vec![
+                format!("13x{c}"),
+                "Failed".into(),
+                "Failed".into(),
+                "Failed".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let chip_mhz = |k: usize| fmt_mhz(cl.chips.get(k).and_then(|r| r.fmax_mhz));
+        let peak = cl
+            .link_utilization()
+            .into_iter()
+            .fold(0.0f64, f64::max);
+        t.row(vec![
+            format!("13x{c}"),
+            chip_mhz(0),
+            chip_mhz(1),
+            fmt_mhz(cl.fmax_mhz()),
+            cl.cut_edges.len().to_string(),
+            fmt_pct(peak * 100.0),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1277,7 +1337,20 @@ mod tests {
             assert!(run_experiment(id, &cfg).is_some(), "{id}");
         }
         assert!(run_experiment("nope", &cfg).is_none());
-        assert_eq!(ALL_EXPERIMENTS.len(), 18);
+        assert_eq!(ALL_EXPERIMENTS.len(), 19);
+    }
+
+    #[test]
+    fn cluster_experiment_reports_per_chip_rows() {
+        let t = cluster_partitioning(&FlowConfig::default());
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            // Every CNN size must partition (no degraded rows) and report
+            // a numeric system clock plus a bounded link utilization.
+            assert_ne!(row[3], "Failed", "row {row:?}");
+            let util: f64 = row[5].parse().expect("numeric link util");
+            assert!((0.0..=100.0).contains(&util), "row {row:?}");
+        }
     }
 
     #[test]

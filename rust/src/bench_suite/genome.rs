@@ -78,13 +78,16 @@ mod tests {
 
     #[test]
     fn shared_mem_never_pipelined_in_flow() {
-        use crate::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+        use crate::flow::{FlowConfig, FlowVariant, Session, SimOptions};
+        use crate::place::RustStep;
         let d = genome();
         let cfg = FlowConfig {
             sim: SimOptions { enabled: false, ..Default::default() },
             ..Default::default()
         };
-        let r = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let r = Session::new(d, FlowVariant::Tapa, cfg)
+            .run_all(&RustStep)
+            .expect("in-memory session cannot fail");
         if let Some(plan) = &r.pipeline {
             assert!(plan.edge_lat.iter().all(|&l| l == 0), "BRAM channels unpipelined");
         }

@@ -10,8 +10,10 @@ pub mod area;
 pub mod grid;
 pub mod hbm;
 pub mod parts;
+pub mod target;
 
 pub use area::AreaVector;
 pub use grid::{Device, Slot, SlotId};
 pub use hbm::HbmTopology;
 pub use parts::{u250, u280, DeviceKind};
+pub use target::{TargetError, TargetSpec};

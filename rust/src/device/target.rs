@@ -1,0 +1,187 @@
+//! Typed compile/bench target specification.
+//!
+//! Every surface that accepts a device list (`tapa compile --device
+//! u250,u280`, `tapa bench --device`, `tapa submit`, the serve daemon's
+//! request validation) used to re-implement the same comma-split +
+//! `DeviceKind::parse` loop with its own error strings. [`TargetSpec`]
+//! is the one parser: a list of parts plus an optional cluster size
+//! (`--cluster N`, the TAPA-CS multi-FPGA path), with errors that name
+//! the unknown token and list every known part.
+
+use super::parts::DeviceKind;
+
+/// Upper bound on `--cluster N` — the TAPA-CS formulation targets 2–4
+/// FPGAs; 8 leaves headroom without letting a typo like `--cluster 250`
+/// build a 250-slot synthetic device.
+pub const MAX_CLUSTER_CHIPS: usize = 8;
+
+/// A parsed compile/bench target: which parts to run on, and how many
+/// identical chips each part's run partitions across (1 = single
+/// device, the default).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TargetSpec {
+    /// Parts to run, in request order (duplicates rejected).
+    pub devices: Vec<DeviceKind>,
+    /// Chips per target for the chip-level partition stage; 1 disables
+    /// [`crate::flow::Stage::Cluster`].
+    pub cluster: usize,
+}
+
+/// Why a target spec failed to parse.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TargetError {
+    /// A comma-separated token did not name a known part.
+    UnknownDevice(String),
+    /// The spec had no device tokens at all.
+    Empty,
+    /// The same part was listed twice.
+    DuplicateDevice(DeviceKind),
+    /// `--cluster N` outside `1..=MAX_CLUSTER_CHIPS`.
+    BadCluster(usize),
+}
+
+/// Known part names, lowercase, comma-separated — shared by every error
+/// message so they can never drift from [`DeviceKind::ALL`].
+pub fn known_devices() -> String {
+    DeviceKind::ALL
+        .iter()
+        .map(|d| d.name().to_ascii_lowercase())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+impl std::fmt::Display for TargetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TargetError::UnknownDevice(part) => {
+                write!(f, "unknown device `{part}` (known devices: {})", known_devices())
+            }
+            TargetError::Empty => {
+                write!(f, "empty device spec (known devices: {})", known_devices())
+            }
+            TargetError::DuplicateDevice(d) => {
+                write!(f, "device `{}` listed twice", d.name().to_ascii_lowercase())
+            }
+            TargetError::BadCluster(n) => {
+                write!(f, "bad cluster size {n} (expected 1..={MAX_CLUSTER_CHIPS})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TargetError {}
+
+impl TargetSpec {
+    /// Parse a comma-separated device list (`u250`, `u250,u280`, case
+    /// insensitive). Cluster size starts at 1; see
+    /// [`TargetSpec::with_cluster`].
+    pub fn parse(spec: &str) -> Result<TargetSpec, TargetError> {
+        let mut devices = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some(kind) = DeviceKind::parse(part) else {
+                return Err(TargetError::UnknownDevice(part.to_string()));
+            };
+            if devices.contains(&kind) {
+                return Err(TargetError::DuplicateDevice(kind));
+            }
+            devices.push(kind);
+        }
+        if devices.is_empty() {
+            return Err(TargetError::Empty);
+        }
+        Ok(TargetSpec { devices, cluster: 1 })
+    }
+
+    /// A single-part target (the common case; also the daemon's per-unit
+    /// validation path).
+    pub fn single(kind: DeviceKind) -> TargetSpec {
+        TargetSpec { devices: vec![kind], cluster: 1 }
+    }
+
+    /// Attach a cluster size (from `--cluster N`).
+    pub fn with_cluster(mut self, chips: usize) -> Result<TargetSpec, TargetError> {
+        if chips == 0 || chips > MAX_CLUSTER_CHIPS {
+            return Err(TargetError::BadCluster(chips));
+        }
+        self.cluster = chips;
+        Ok(self)
+    }
+
+    /// The sole device when the spec is single-part.
+    pub fn only(&self) -> Option<DeviceKind> {
+        match self.devices[..] {
+            [d] => Some(d),
+            _ => None,
+        }
+    }
+
+    /// More than one part requested (`SessionSet` path).
+    pub fn is_multi(&self) -> bool {
+        self.devices.len() > 1
+    }
+
+    /// Chip-level partitioning requested (`Stage::Cluster` enabled).
+    pub fn is_cluster(&self) -> bool {
+        self.cluster > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_and_lists_case_insensitively() {
+        assert_eq!(TargetSpec::parse("u250").unwrap().devices, vec![DeviceKind::U250]);
+        assert_eq!(
+            TargetSpec::parse("U280, u250").unwrap().devices,
+            vec![DeviceKind::U280, DeviceKind::U250]
+        );
+        let t = TargetSpec::parse("u250").unwrap();
+        assert_eq!(t.only(), Some(DeviceKind::U250));
+        assert!(!t.is_multi());
+        assert!(!t.is_cluster());
+    }
+
+    #[test]
+    fn errors_name_the_part_and_list_known_ones() {
+        let err = TargetSpec::parse("u250,u999").unwrap_err();
+        assert_eq!(err, TargetError::UnknownDevice("u999".into()));
+        let msg = err.to_string();
+        assert!(msg.contains("u999"), "{msg}");
+        assert!(msg.contains("u250") && msg.contains("u280"), "{msg}");
+        assert_eq!(TargetSpec::parse(" , ").unwrap_err(), TargetError::Empty);
+        assert_eq!(
+            TargetSpec::parse("u250,U250").unwrap_err(),
+            TargetError::DuplicateDevice(DeviceKind::U250)
+        );
+    }
+
+    #[test]
+    fn cluster_sizes_are_bounded() {
+        let t = TargetSpec::parse("u250").unwrap().with_cluster(2).unwrap();
+        assert_eq!(t.cluster, 2);
+        assert!(t.is_cluster());
+        assert!(TargetSpec::parse("u250").unwrap().with_cluster(1).is_ok());
+        assert_eq!(
+            TargetSpec::parse("u250").unwrap().with_cluster(0).unwrap_err(),
+            TargetError::BadCluster(0)
+        );
+        assert_eq!(
+            TargetSpec::parse("u250").unwrap().with_cluster(9).unwrap_err(),
+            TargetError::BadCluster(9)
+        );
+    }
+
+    #[test]
+    fn known_device_list_tracks_device_kind_all() {
+        let known = known_devices();
+        for d in DeviceKind::ALL {
+            assert!(known.contains(&d.name().to_ascii_lowercase()), "{known}");
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! Chip-level partitioning across a cluster of identical FPGAs
+//! (TAPA-CS, "Enabling Scalable Accelerator Design on Distributed
+//! HBM-FPGAs").
+//!
+//! The same formulation as coarse-grained floorplanning, one level up:
+//! the "device" is a chain of N identical chips, each modelled as one
+//! aggregate slot, and the boundary between adjacent chips is an
+//! inter-FPGA link — like an SLR boundary but with a far smaller bit
+//! budget and a much higher crossing delay (the flow pipelines
+//! inter-chip edges with [`ClusterOptions::stages_per_link`] register
+//! stages instead of the SLR default of two). Because the cluster is
+//! just another [`Device`], the solve reuses the full
+//! `solver::MilpBackend` escalation chain (Exact → Greedy+FM), the
+//! proved-result memo, and warm starts through the caller's
+//! [`SolverContext`] — cluster sweeps re-answer identical chip-level
+//! problems for free, byte-identical for any `--jobs`.
+
+use crate::device::area::NUM_RESOURCE_KINDS;
+use crate::device::{AreaVector, Device, Slot, SlotId};
+use crate::graph::TaskGraph;
+use crate::hls::TaskEstimate;
+use crate::solver::SolverContext;
+
+use super::{cost, partition_device_in, FloorplanConfig, FloorplanError, PartitionStats};
+
+/// Default per-link bit budget. An inter-FPGA link (network or direct
+/// serial) carries orders of magnitude fewer wires than the ~23k SLL
+/// bits of an SLR boundary; 4096 bits models a handful of bonded
+/// serial lanes.
+pub const DEFAULT_LINK_BITS: u64 = 4096;
+
+/// Default register stages inserted per inter-chip crossing — the
+/// link-delay analogue of `stages_per_crossing` (2 per SLR boundary).
+pub const DEFAULT_LINK_STAGES: u32 = 8;
+
+/// Options for the chip-level partition stage (`tapa compile
+/// --cluster N`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterOptions {
+    /// Number of identical chips; 1 disables the stage.
+    pub chips: usize,
+    /// Hard per-link bit budget (the SLL-capacity analogue).
+    pub link_bits: u64,
+    /// Pipeline stages per inter-chip crossing.
+    pub stages_per_link: u32,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            chips: 1,
+            link_bits: DEFAULT_LINK_BITS,
+            stages_per_link: DEFAULT_LINK_STAGES,
+        }
+    }
+}
+
+impl ClusterOptions {
+    /// Chip-level partitioning requested.
+    pub fn enabled(&self) -> bool {
+        self.chips > 1
+    }
+}
+
+/// A chip-level partition of one task graph over N identical chips.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterPartition {
+    /// Number of chips in the cluster.
+    pub num_chips: usize,
+    /// Chip of each task instance (indexed by `InstId`).
+    pub assignment: Vec<usize>,
+    /// Eq. 1 crossing cost at chip granularity (link crossings weighted
+    /// by edge width).
+    pub cost: u64,
+    /// Indices of edges whose endpoints sit on different chips.
+    pub cut_edges: Vec<usize>,
+    /// Bits crossing each of the `num_chips - 1` links (link `i` joins
+    /// chips `i` and `i+1`; an edge between chips `a < b` occupies every
+    /// link in `a..b`).
+    pub link_bits: Vec<u64>,
+    /// The per-link budget the partition was solved under.
+    pub link_capacity_bits: u64,
+    /// Per-iteration solver statistics (chip-granularity Table 11).
+    pub stats: Vec<PartitionStats>,
+}
+
+impl ClusterPartition {
+    /// Per-link occupancy as a fraction of the budget.
+    pub fn link_utilization(&self) -> Vec<f64> {
+        self.link_bits
+            .iter()
+            .map(|&b| b as f64 / self.link_capacity_bits as f64)
+            .collect()
+    }
+}
+
+/// The synthetic device the chip-level solve runs on: an `n × 1` grid
+/// with one aggregate slot per chip (full-chip capacity and DDR ports)
+/// and the inter-FPGA link budget as the row-boundary (SLL-style)
+/// capacity. Building a [`Device`] — rather than a bespoke solver — is
+/// what lets the whole floorplanning stack apply unchanged.
+pub fn cluster_device(chip: &Device, chips: usize, link_bits: u64) -> Device {
+    let capacity = chip.total_capacity();
+    let ddr_ports = chip.total_ddr_ports();
+    Device {
+        name: format!("{}x{chips}", chip.name),
+        rows: chips,
+        cols: 1,
+        slots: (0..chips)
+            .map(|r| Slot { row: r, col: 0, capacity, ddr_ports })
+            .collect(),
+        sll_capacity_bits: link_bits,
+        col_capacity_bits: 0,
+        // HBM channel capacity rides along inside the aggregate slot
+        // capacity vector; per-chip channel binding happens later, on
+        // the real chip device.
+        hbm: None,
+        num_slr: chips,
+        ip_interference: 0.0,
+    }
+}
+
+/// Partition one task graph across `opts.chips` identical chips,
+/// through the caller's [`SolverContext`] (warm starts + proved-result
+/// memo). Mirrors [`super::floorplan_in`]: feasibility pre-check, then
+/// the solver escalation chain with utilization-ratio relaxation, plus
+/// the hard per-link bit-budget check no single-device path has.
+pub fn partition_cluster_in(
+    g: &TaskGraph,
+    chip: &Device,
+    estimates: &[TaskEstimate],
+    opts: &ClusterOptions,
+    cfg: &FloorplanConfig,
+    warm: Option<&[usize]>,
+    ctx: &mut SolverContext,
+) -> Result<ClusterPartition, FloorplanError> {
+    let chips = opts.chips.max(1);
+    if chips == 1 {
+        // Trivial cluster: everything on chip 0, no links.
+        return Ok(ClusterPartition {
+            num_chips: 1,
+            assignment: vec![0; g.num_insts()],
+            cost: 0,
+            cut_edges: Vec::new(),
+            link_bits: Vec::new(),
+            link_capacity_bits: opts.link_bits,
+            stats: Vec::new(),
+        });
+    }
+    let device = cluster_device(chip, chips, opts.link_bits);
+
+    // Aggregate-capacity pre-check (mirrors `floorplan_in`).
+    let mut total = AreaVector::sum(estimates.iter().map(|e| &e.area));
+    for e in &g.edges {
+        total += crate::hls::fifo::fifo_area(e.width_bits, e.depth);
+    }
+    let cap = device.total_capacity();
+    if !total.fits_within(&cap) {
+        return Err(FloorplanError::DoesNotFit(format!(
+            "need [{total}] have [{cap}] across {chips} chips"
+        )));
+    }
+
+    let warm_slots: Option<Vec<SlotId>> = warm
+        .filter(|a| a.len() == g.num_insts())
+        .map(|a| a.iter().map(|&c| device.slot_id(c.min(chips - 1), 0)).collect());
+
+    // Requested ratio first, relaxing toward 1.0 on infeasibility.
+    let mut ratio = cfg.max_util;
+    let (assignment_slots, stats) = loop {
+        match partition_device_in(g, &device, estimates, ratio, cfg, warm_slots.as_deref(), ctx)
+        {
+            Ok(out) => break out,
+            Err(_) if ratio < 0.999 => ratio = (ratio + 0.07).min(1.0),
+            Err(_) => return Err(FloorplanError::Infeasible(ratio)),
+        }
+    };
+
+    let cost = cost::slot_crossing_cost(g, &device, &assignment_slots);
+    let assignment: Vec<usize> = assignment_slots.iter().map(|s| s.0).collect();
+
+    let mut cut_edges = Vec::new();
+    let mut link_bits = vec![0u64; chips - 1];
+    for (i, e) in g.edges.iter().enumerate() {
+        let (a, b) = (assignment[e.producer.0], assignment[e.consumer.0]);
+        if a != b {
+            cut_edges.push(i);
+            for link in a.min(b)..a.max(b) {
+                link_bits[link] += e.width_bits as u64;
+            }
+        }
+    }
+    // The link budget is hard: the solver minimizes the cut, so a
+    // violation here means no acceptable partition exists at all.
+    for (link, &bits) in link_bits.iter().enumerate() {
+        if bits > opts.link_bits {
+            return Err(FloorplanError::LinkOverBudget(link, bits, opts.link_bits));
+        }
+    }
+
+    Ok(ClusterPartition {
+        num_chips: chips,
+        assignment,
+        cost,
+        cut_edges,
+        link_bits,
+        link_capacity_bits: opts.link_bits,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::u250;
+    use crate::graph::{ComputeSpec, TaskGraphBuilder};
+    use crate::hls::estimate_all;
+
+    fn spec(fat: u32) -> ComputeSpec {
+        ComputeSpec {
+            mac_ops: 25 * fat,
+            alu_ops: 200 * fat,
+            bram_bytes: 48 * 1024 * fat as u64,
+            uram_bytes: 0,
+            trip_count: 512,
+            ii: 1,
+            pipeline_depth: 6,
+        }
+    }
+
+    fn chain(n: usize, fat: u32) -> TaskGraph {
+        let mut b = TaskGraphBuilder::new(&format!("cluster_chain_{n}x{fat}"));
+        let p = b.proto("K", spec(fat));
+        let ids = b.invoke_n(p, "k", n);
+        for i in 0..n - 1 {
+            b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+        }
+        b.build().unwrap()
+    }
+
+    /// A chain sized to overflow one chip (so a 2-chip cluster must
+    /// spread) while fitting comfortably in two. Instance count derives
+    /// from the estimator's own numbers, so the test tracks any area
+    /// model change instead of hard-coding a size.
+    fn spread_chain(chip: &Device) -> (TaskGraph, Vec<TaskEstimate>) {
+        let mut b = TaskGraphBuilder::new("probe");
+        let p = b.proto("K", spec(8));
+        b.invoke(p, "k0");
+        let one = estimate_all(&b.build().unwrap())[0].area.as_array();
+        let cap = chip.total_capacity().as_array();
+        let mut frac: f64 = 0.0;
+        for i in 0..NUM_RESOURCE_KINDS {
+            if cap[i] > 0 {
+                frac = frac.max(one[i] as f64 / cap[i] as f64);
+            }
+        }
+        assert!(frac > 0.0);
+        // 115% of one chip: must spread onto the second chip, and at
+        // ~58% per chip it cannot need a third.
+        let n = ((1.15 / frac).ceil() as usize).max(2);
+        assert!(n <= 64, "probe task too small, solve would explode (n={n})");
+        let g = chain(n, 8);
+        let est = estimate_all(&g);
+        (g, est)
+    }
+
+    #[test]
+    fn cluster_device_aggregates_chip_capacity() {
+        let chip = u250();
+        let d = cluster_device(&chip, 3, 4096);
+        assert_eq!(d.rows, 3);
+        assert_eq!(d.cols, 1);
+        assert_eq!(d.num_slots(), 3);
+        assert_eq!(d.sll_capacity_bits, 4096);
+        assert_eq!(d.col_capacity_bits, 0);
+        for s in &d.slots {
+            assert_eq!(s.capacity, chip.total_capacity());
+            assert_eq!(s.ddr_ports, chip.total_ddr_ports());
+        }
+        assert_eq!(d.total_capacity().as_array()[0], 3 * chip.total_capacity().as_array()[0]);
+    }
+
+    #[test]
+    fn small_design_stays_on_one_chip() {
+        let chip = u250();
+        let g = chain(6, 1);
+        let est = estimate_all(&g);
+        let opts = ClusterOptions { chips: 2, ..Default::default() };
+        let mut ctx = SolverContext::new();
+        let part = partition_cluster_in(
+            &g, &chip, &est, &opts, &FloorplanConfig::default(), None, &mut ctx,
+        )
+        .unwrap();
+        assert_eq!(part.num_chips, 2);
+        // A design that fits one chip has a zero-cut optimum.
+        assert_eq!(part.cost, 0);
+        assert!(part.cut_edges.is_empty());
+        assert_eq!(part.link_bits, vec![0]);
+        assert_eq!(part.link_utilization(), vec![0.0]);
+        let first = part.assignment[0];
+        assert!(part.assignment.iter().all(|&c| c == first));
+    }
+
+    #[test]
+    fn oversized_design_spreads_with_bounded_links() {
+        let chip = u250();
+        let (g, est) = spread_chain(&chip);
+        let opts = ClusterOptions { chips: 2, ..Default::default() };
+        let mut ctx = SolverContext::new();
+        let part = partition_cluster_in(
+            &g, &chip, &est, &opts, &FloorplanConfig::default(), None, &mut ctx,
+        )
+        .unwrap();
+        assert!(part.assignment.contains(&0) && part.assignment.contains(&1), "must spread");
+        assert!(!part.cut_edges.is_empty());
+        assert!(part.link_bits[0] > 0 && part.link_bits[0] <= opts.link_bits);
+        let util = part.link_utilization();
+        assert!(util[0] > 0.0 && util[0] <= 1.0);
+        // Per-chip load fits the chip.
+        let cap = chip.total_capacity();
+        for c in 0..2 {
+            let load = AreaVector::sum(
+                part.assignment
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &chip_of)| chip_of == c)
+                    .map(|(i, _)| &est[i].area),
+            );
+            assert!(load.fits_within(&cap), "chip {c} overloaded");
+        }
+        assert!(!part.stats.is_empty(), "chip-level solve reports stats");
+    }
+
+    #[test]
+    fn link_budget_is_hard() {
+        let chip = u250();
+        let (g, est) = spread_chain(&chip);
+        // Any cut carries ≥ one 128-bit edge; a 1-bit budget must fail.
+        let opts = ClusterOptions { chips: 2, link_bits: 1, ..Default::default() };
+        let mut ctx = SolverContext::new();
+        let err = partition_cluster_in(
+            &g, &chip, &est, &opts, &FloorplanConfig::default(), None, &mut ctx,
+        )
+        .unwrap_err();
+        assert!(matches!(err, FloorplanError::LinkOverBudget(0, _, 1)), "{err}");
+    }
+
+    #[test]
+    fn memoized_resolve_is_free_and_identical() {
+        let chip = u250();
+        let (g, est) = spread_chain(&chip);
+        let opts = ClusterOptions { chips: 2, ..Default::default() };
+        let cfg = FloorplanConfig::default();
+        let mut ctx = SolverContext::new();
+        let cold = partition_cluster_in(&g, &chip, &est, &opts, &cfg, None, &mut ctx).unwrap();
+        let nodes_before = ctx.total_nodes;
+        let again =
+            partition_cluster_in(&g, &chip, &est, &opts, &cfg, Some(&cold.assignment), &mut ctx)
+                .unwrap();
+        assert_eq!(again, cold, "memoized chip-level solve must reproduce the partition");
+        assert_eq!(ctx.total_nodes, nodes_before, "memo answers the repeat for free");
+        assert!(ctx.warm_hits > 0, "memo hits accounted as warm hits");
+    }
+
+    #[test]
+    fn partition_identical_for_any_jobs() {
+        let chip = u250();
+        let (g, est) = spread_chain(&chip);
+        let opts = ClusterOptions { chips: 2, ..Default::default() };
+        let cfg = FloorplanConfig::default();
+        let mut ctx1 = SolverContext::new().with_jobs(1);
+        let p1 = partition_cluster_in(&g, &chip, &est, &opts, &cfg, None, &mut ctx1).unwrap();
+        for jobs in [2, 4, 8] {
+            let mut ctx = SolverContext::new().with_jobs(jobs);
+            let p = partition_cluster_in(&g, &chip, &est, &opts, &cfg, None, &mut ctx).unwrap();
+            assert_eq!(p, p1, "jobs={jobs} diverged");
+        }
+    }
+
+    #[test]
+    fn single_chip_cluster_is_trivial() {
+        let chip = u250();
+        let g = chain(4, 1);
+        let est = estimate_all(&g);
+        let opts = ClusterOptions::default();
+        assert!(!opts.enabled());
+        let mut ctx = SolverContext::new();
+        let part = partition_cluster_in(
+            &g, &chip, &est, &opts, &FloorplanConfig::default(), None, &mut ctx,
+        )
+        .unwrap();
+        assert_eq!(part.num_chips, 1);
+        assert!(part.assignment.iter().all(|&c| c == 0));
+        assert!(part.link_bits.is_empty());
+        assert_eq!(ctx.solves, 0, "no chip-level solve for a single chip");
+    }
+}

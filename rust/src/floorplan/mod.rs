@@ -6,11 +6,13 @@
 //! a utilization-ratio sweep yields multiple Pareto floorplan candidates
 //! (§6.3).
 
+pub mod cluster;
 pub mod cost;
 pub mod hbm_bind;
 pub mod multi;
 pub mod partition;
 
+pub use cluster::{partition_cluster_in, ClusterOptions, ClusterPartition};
 pub use cost::slot_crossing_cost;
 pub use hbm_bind::{bind_hbm_channels, HbmBinding};
 pub use multi::{generate_candidates, sweep_points, SweepPoint};
@@ -67,6 +69,8 @@ pub enum FloorplanError {
     Infeasible(f64),
     #[error("not enough {0} ports: design needs {1}, device has {2}")]
     NotEnoughPorts(&'static str, usize, usize),
+    #[error("inter-chip link {0} over budget: {1} bits > {2} bits")]
+    LinkOverBudget(usize, u64, u64),
 }
 
 /// A completed floorplan: one slot per task instance.

@@ -111,7 +111,7 @@ pub enum SolveMethod {
 }
 
 /// Per-iteration statistics — the rows of Table 11.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PartitionStats {
     pub iteration: usize,
     pub axis: Axis,

@@ -91,7 +91,7 @@ impl BatchRunner {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{run_flow, SimOptions};
+    use super::super::SimOptions;
     use super::*;
     use crate::bench_suite::stencil::stencil;
     use crate::device::DeviceKind;
@@ -134,7 +134,7 @@ mod tests {
     }
 
     #[test]
-    fn batch_matches_monolithic_run_flow() {
+    fn batch_matches_standalone_sessions() {
         let cfg = fast_cfg();
         let mut runner = BatchRunner::new(cfg.clone()).workers(2);
         for (d, v) in suite() {
@@ -142,7 +142,9 @@ mod tests {
         }
         let results = runner.run();
         for ((d, v), got) in suite().into_iter().zip(results) {
-            let want = run_flow(&d, v, &cfg);
+            let want = Session::new(d.clone(), v, cfg.clone())
+                .run_all(&RustStep)
+                .expect("in-memory session cannot fail");
             assert_eq!(got.fmax_mhz, want.fmax_mhz, "{} {}", d.name, v.name());
             assert_eq!(got.util_pct, want.util_pct, "{} {}", d.name, v.name());
         }

@@ -16,7 +16,7 @@
 //! A unit is `(design, device, variant, util_ratio)`:
 //!
 //! * `util_ratio: None` — one full staged session
-//!   ([`super::run_flow`]); the result carries Fmax, cycles and the
+//!   ([`super::Session`]); the result carries Fmax, cycles and the
 //!   five utilization percentages.
 //! * `util_ratio: Some(r)` — one §6.3 multi-floorplan sweep point:
 //!   solve the candidate floorplan at exactly ratio `r` and implement

@@ -4,21 +4,23 @@
 //!
 //! ```text
 //! Session(design, variant)
-//!   Estimate → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim
-//!      │           │         │         │         │       │      │     │
-//!      └───────────┴──────── SessionContext (typed artifacts) ────────┘
+//!   Estimate → [Cluster] → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim
+//!      │           │           │         │         │         │       │      │     │
+//!      └───────────┴────────── SessionContext (typed artifacts) ───────────┴─────┘
 //!                     │ checkpoint / resume (JSON in a workdir)
 //!                     │ StageCache shared across variants + devices
 //!                     └ BatchRunner fans sessions over threads
 //! ```
 //!
-//! [`Session`] is the primary API: run `up_to(Stage::Floorplan)`, persist
-//! to a work directory, resume later, and completed stages are never
-//! recomputed. [`run_flow`] / [`run_flow_with_executor`] remain as thin
-//! one-shot wrappers. [`BatchRunner`] executes many `(design, variant)`
-//! sessions across worker threads with a shared [`StageCache`], so e.g.
-//! `Baseline` and `Tapa` on the same design reuse one set of HLS
-//! estimates.
+//! [`Session`] is the *only* flow entry point: run
+//! `up_to(Stage::Floorplan)`, persist to a work directory, resume later,
+//! and completed stages are never recomputed; `run_all` is the one-shot
+//! form (the old `run_flow` free function was retired in its favor).
+//! `Cluster` only runs for `--cluster N` multi-FPGA targets — otherwise
+//! it is skipped outright. [`BatchRunner`] executes many
+//! `(design, variant)` sessions across worker threads with a shared
+//! [`StageCache`], so e.g. `Baseline` and `Tapa` on the same design
+//! reuse one set of HLS estimates.
 
 pub mod batch;
 pub mod manifest;
@@ -28,11 +30,13 @@ pub mod stage;
 
 pub use batch::{run_indexed, BatchJob, BatchRunner};
 pub use session::{
-    FloorplanArtifact, PipelineArtifact, Session, SessionContext, SessionError,
-    SessionSet, SimArtifact, StageCache, SweepArtifact, SweepCandidate,
-    SweepSolverTelemetry,
+    ChipReport, ClusterArtifact, FloorplanArtifact, PipelineArtifact, Session,
+    SessionContext, SessionError, SessionSet, SimArtifact, StageCache,
+    SweepArtifact, SweepCandidate, SweepSolverTelemetry,
 };
 pub use stage::Stage;
+
+pub use crate::floorplan::ClusterOptions;
 
 use crate::device::{Device, DeviceKind};
 use crate::floorplan::{Floorplan, FloorplanConfig};
@@ -138,6 +142,9 @@ pub struct FlowConfig {
     pub analytical: AnalyticalParams,
     pub sim: SimOptions,
     pub sweep: SweepOptions,
+    /// TAPA-CS multi-FPGA clustering (`--cluster N`). `chips: 1`
+    /// (default) disables [`Stage::Cluster`] entirely.
+    pub cluster: ClusterOptions,
 }
 
 /// Best-candidate selection policy for the §6.3 multi-floorplan sweep
@@ -205,11 +212,6 @@ impl Default for SimOptions {
     }
 }
 
-/// Run one variant of the flow on a design — a one-shot [`Session`].
-pub fn run_flow(design: &Design, variant: FlowVariant, cfg: &FlowConfig) -> FlowResult {
-    run_flow_with_executor(design, variant, cfg, &RustStep)
-}
-
 /// Implement one §6.3 floorplan candidate end to end and report its
 /// post-route Fmax — byte-for-byte the per-candidate evaluation
 /// [`Stage::Sweep`] (and Table 10) performs, on the deterministic Rust
@@ -246,19 +248,6 @@ pub fn evaluate_sweep_candidate_in(
     session::evaluate_candidate_in(g, device, estimates, fp, cfg, &RustStep, phys)
 }
 
-/// Run one variant with an explicit analytical-step executor (the PJRT
-/// engine from [`crate::runtime`] or the Rust fallback).
-pub fn run_flow_with_executor(
-    design: &Design,
-    variant: FlowVariant,
-    cfg: &FlowConfig,
-    exec: &dyn StepExecutor,
-) -> FlowResult {
-    Session::new(design.clone(), variant, cfg.clone())
-        .run_all(exec)
-        .expect("in-memory session cannot fail")
-}
-
 /// Resource utilization of a (possibly pipelined) design on a device.
 pub(crate) fn utilization_pct(
     g: &TaskGraph,
@@ -291,6 +280,12 @@ mod tests {
     use super::*;
     use crate::graph::{ComputeSpec, TaskGraphBuilder};
 
+    fn run(d: &Design, v: FlowVariant, cfg: &FlowConfig) -> FlowResult {
+        Session::new(d.clone(), v, cfg.clone())
+            .run_all(&RustStep)
+            .expect("in-memory session cannot fail")
+    }
+
     fn design(n: usize, fat: u32) -> Design {
         let mut b = TaskGraphBuilder::new(&format!("flow_test_{n}x{fat}"));
         let p = b.proto(
@@ -320,8 +315,8 @@ mod tests {
     fn tapa_beats_baseline_on_large_design() {
         let d = design(20, 4);
         let cfg = FlowConfig::default();
-        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
-        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let orig = run(&d, FlowVariant::Baseline, &cfg);
+        let opt = run(&d, FlowVariant::Tapa, &cfg);
         let fo = orig.fmax_mhz.unwrap_or(0.0);
         let ft = opt.fmax_mhz.expect("tapa flow must route");
         assert!(ft > fo, "tapa {ft} must beat baseline {fo}");
@@ -332,8 +327,8 @@ mod tests {
     fn cycles_nearly_identical_between_variants() {
         let d = design(8, 1);
         let cfg = FlowConfig::default();
-        let orig = run_flow(&d, FlowVariant::Baseline, &cfg);
-        let opt = run_flow(&d, FlowVariant::Tapa, &cfg);
+        let orig = run(&d, FlowVariant::Baseline, &cfg);
+        let opt = run(&d, FlowVariant::Tapa, &cfg);
         let (co, ct) = (orig.cycles.unwrap(), opt.cycles.unwrap());
         let delta = ct as i64 - co as i64;
         assert!(delta >= 0);
@@ -348,7 +343,7 @@ mod tests {
             ..Default::default()
         };
         for v in FlowVariant::ALL {
-            let r = run_flow(&d, v, &cfg);
+            let r = run(&d, v, &cfg);
             assert_eq!(r.variant, v.canonical());
         }
     }
@@ -360,8 +355,8 @@ mod tests {
             sim: SimOptions { enabled: false, ..Default::default() },
             ..Default::default()
         };
-        let full = run_flow(&d, FlowVariant::Tapa, &cfg);
-        let fponly = run_flow(&d, FlowVariant::FloorplanOnlyNoPipeline, &cfg);
+        let full = run(&d, FlowVariant::Tapa, &cfg);
+        let fponly = run(&d, FlowVariant::FloorplanOnlyNoPipeline, &cfg);
         let f_full = full.fmax_mhz.unwrap_or(0.0);
         let f_fp = fponly.fmax_mhz.unwrap_or(0.0);
         assert!(f_full > f_fp, "full={f_full} floorplan-only={f_fp}");
@@ -391,7 +386,7 @@ mod tests {
             FlowVariant::FloorplanOnlyNoPipeline,
             FlowVariant::PipelineOnlyNoConstraints,
         ] {
-            let r = run_flow(&d, v, &cfg);
+            let r = run(&d, v, &cfg);
             assert_eq!(r.variant, v.canonical(), "requested {}", v.name());
             assert!(r.floorplan.is_none(), "degraded run has no floorplan");
         }

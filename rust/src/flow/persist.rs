@@ -7,10 +7,9 @@
 //! prefix of stages.
 //!
 //! **Format stability.** The on-disk layout is versioned
-//! ([`FORMAT_VERSION`], currently 4: v3 plus the sweep's `phys`
-//! accounting block — the incremental physical-design engine's
-//! warm-evaluation / re-timed-edge / placer-step telemetry). Within a
-//! version the byte layout is frozen —
+//! ([`FORMAT_VERSION`], currently 5: v4 plus the `cluster` field — the
+//! TAPA-CS multi-FPGA partition artifact, `null` for single-device
+//! runs). Within a version the byte layout is frozen —
 //! `rust/tests/data/golden_sweep_ctx.json` is a committed golden
 //! checkpoint that must keep round-tripping byte-identically, so resume
 //! compatibility cannot silently break; any layout change must bump the
@@ -28,8 +27,8 @@ use crate::timing::TimingReport;
 use crate::util::json::Json;
 
 use super::session::{
-    FloorplanArtifact, PipelineArtifact, SessionContext, SessionError, SimArtifact,
-    SweepArtifact, SweepCandidate, SweepSolverTelemetry,
+    ChipReport, ClusterArtifact, FloorplanArtifact, PipelineArtifact, SessionContext,
+    SessionError, SimArtifact, SweepArtifact, SweepCandidate, SweepSolverTelemetry,
 };
 use super::stage::Stage;
 use super::FlowVariant;
@@ -37,8 +36,9 @@ use super::FlowVariant;
 /// On-disk checkpoint format version (see the module docs for the
 /// stability guarantee). v3 = v2 + solver telemetry (per-iteration `gap`,
 /// sweep `solver` block). v4 = v3 + the sweep's `phys` block (incremental
-/// physical-design engine telemetry).
-pub const FORMAT_VERSION: u64 = 4;
+/// physical-design engine telemetry). v5 = v4 + the `cluster` field
+/// (TAPA-CS multi-FPGA partition; `null` unless `--cluster N` ran).
+pub const FORMAT_VERSION: u64 = 5;
 
 // ---------------------------------------------------------------------------
 // Writing
@@ -118,6 +118,27 @@ fn method_name(m: SolveMethod) -> &'static str {
     }
 }
 
+fn stats_json(stats: &[PartitionStats]) -> Json {
+    Json::Arr(
+        stats
+            .iter()
+            .map(|st| {
+                Json::Obj(vec![
+                    ("iteration".into(), unum(st.iteration as u64)),
+                    ("axis".into(), Json::Str(axis_name(st.axis).into())),
+                    ("num_vertices".into(), unum(st.num_vertices as u64)),
+                    ("num_aux_vars".into(), unum(st.num_aux_vars as u64)),
+                    ("solve_seconds".into(), num(st.solve_seconds)),
+                    ("method".into(), Json::Str(method_name(st.method).into())),
+                    ("proved_optimal".into(), Json::Bool(st.proved_optimal)),
+                    ("bb_nodes".into(), unum(st.bb_nodes as u64)),
+                    ("gap".into(), opt(&st.gap, |&g| num(g))),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn floorplan_json(fp: &Floorplan) -> Json {
     Json::Obj(vec![
         (
@@ -126,27 +147,38 @@ fn floorplan_json(fp: &Floorplan) -> Json {
         ),
         ("cost".into(), unum(fp.cost)),
         ("util_ratio".into(), num(fp.util_ratio)),
+        ("stats".into(), stats_json(&fp.stats)),
+    ])
+}
+
+fn cluster_json(cl: &ClusterArtifact) -> Json {
+    Json::Obj(vec![
+        ("num_chips".into(), unum(cl.num_chips as u64)),
+        ("degraded".into(), Json::Bool(cl.degraded)),
+        ("assignment".into(), u32_arr(&cl.assignment)),
+        ("cost".into(), unum(cl.cost)),
+        ("cut_edges".into(), u32_arr(&cl.cut_edges)),
         (
-            "stats".into(),
+            "link_bits".into(),
+            Json::Arr(cl.link_bits.iter().map(|&b| unum(b)).collect()),
+        ),
+        ("link_capacity_bits".into(), unum(cl.link_capacity_bits)),
+        (
+            "chips".into(),
             Json::Arr(
-                fp.stats
+                cl.chips
                     .iter()
-                    .map(|st| {
+                    .map(|c| {
                         Json::Obj(vec![
-                            ("iteration".into(), unum(st.iteration as u64)),
-                            ("axis".into(), Json::Str(axis_name(st.axis).into())),
-                            ("num_vertices".into(), unum(st.num_vertices as u64)),
-                            ("num_aux_vars".into(), unum(st.num_aux_vars as u64)),
-                            ("solve_seconds".into(), num(st.solve_seconds)),
-                            ("method".into(), Json::Str(method_name(st.method).into())),
-                            ("proved_optimal".into(), Json::Bool(st.proved_optimal)),
-                            ("bb_nodes".into(), unum(st.bb_nodes as u64)),
-                            ("gap".into(), opt(&st.gap, |&g| num(g))),
+                            ("chip".into(), unum(c.chip as u64)),
+                            ("insts".into(), u32_arr(&c.insts)),
+                            ("fmax_mhz".into(), opt(&c.fmax_mhz, |&f| num(f))),
                         ])
                     })
                     .collect(),
             ),
         ),
+        ("stats".into(), stats_json(&cl.stats)),
     ])
 }
 
@@ -273,6 +305,7 @@ pub fn context_to_json_text(ctx: &SessionContext) -> String {
                 Json::Arr(es.iter().map(estimate_json).collect())
             }),
         ),
+        ("cluster".to_string(), opt(&ctx.cluster, cluster_json)),
         (
             "floorplan".to_string(),
             opt(&ctx.floorplan, |fa| {
@@ -382,6 +415,16 @@ fn u32_vec(o: &Json, key: &str) -> R<Vec<u32>> {
         .collect()
 }
 
+fn u64_vec(o: &Json, key: &str) -> R<Vec<u64>> {
+    get_arr(o, key)?
+        .iter()
+        .map(|v| {
+            v.as_u64()
+                .ok_or_else(|| bad(format!("`{key}` element is not an integer")))
+        })
+        .collect()
+}
+
 pub(crate) fn f64_vec(o: &Json, key: &str) -> R<Vec<f64>> {
     get_arr(o, key)?
         .iter()
@@ -428,12 +471,8 @@ fn parse_estimate(v: &Json) -> R<TaskEstimate> {
     })
 }
 
-fn parse_floorplan(v: &Json) -> R<Floorplan> {
-    let assignment = get_arr(v, "assignment")?
-        .iter()
-        .map(|s| s.as_usize().map(SlotId).ok_or_else(|| bad("bad slot id")))
-        .collect::<R<Vec<_>>>()?;
-    let stats = get_arr(v, "stats")?
+fn parse_stats(v: &Json) -> R<Vec<PartitionStats>> {
+    get_arr(v, "stats")?
         .iter()
         .map(|st| {
             Ok(PartitionStats {
@@ -459,12 +498,45 @@ fn parse_floorplan(v: &Json) -> R<Floorplan> {
                 })?,
             })
         })
+        .collect()
+}
+
+fn parse_floorplan(v: &Json) -> R<Floorplan> {
+    let assignment = get_arr(v, "assignment")?
+        .iter()
+        .map(|s| s.as_usize().map(SlotId).ok_or_else(|| bad("bad slot id")))
         .collect::<R<Vec<_>>>()?;
     Ok(Floorplan {
         assignment,
         cost: get_u64(v, "cost")?,
         util_ratio: get_f64(v, "util_ratio")?,
-        stats,
+        stats: parse_stats(v)?,
+    })
+}
+
+fn parse_cluster(v: &Json) -> R<ClusterArtifact> {
+    let chips = get_arr(v, "chips")?
+        .iter()
+        .map(|c| {
+            Ok(ChipReport {
+                chip: get_u32(c, "chip")?,
+                insts: u32_vec(c, "insts")?,
+                fmax_mhz: get_opt(c, "fmax_mhz", |x| {
+                    x.as_f64().ok_or_else(|| bad("fmax_mhz not a number"))
+                })?,
+            })
+        })
+        .collect::<R<Vec<_>>>()?;
+    Ok(ClusterArtifact {
+        num_chips: get_usize(v, "num_chips")?,
+        degraded: get_bool(v, "degraded")?,
+        assignment: u32_vec(v, "assignment")?,
+        cost: get_u64(v, "cost")?,
+        cut_edges: u32_vec(v, "cut_edges")?,
+        link_bits: u64_vec(v, "link_bits")?,
+        link_capacity_bits: get_u64(v, "link_capacity_bits")?,
+        chips,
+        stats: parse_stats(v)?,
     })
 }
 
@@ -607,6 +679,7 @@ pub fn context_from_json_text(text: &str) -> R<SessionContext> {
                 .map(parse_estimate)
                 .collect()
         })?,
+        cluster: get_opt(&root, "cluster", parse_cluster)?,
         floorplan: get_opt(&root, "floorplan", |v| {
             Ok(FloorplanArtifact {
                 degraded: get_bool(v, "degraded")?,
@@ -728,13 +801,39 @@ mod tests {
     }
 
     #[test]
+    fn cluster_context_roundtrips_byte_identically() {
+        let mut cfg = FlowConfig::default();
+        cfg.sim.enabled = false;
+        cfg.cluster.chips = 2;
+        let mut s = Session::new(small_design(), super::super::FlowVariant::Tapa, cfg);
+        s.up_to(Stage::Cluster, &RustStep).unwrap();
+        let cl = s.context().cluster.as_ref().expect("cluster artifact present");
+        assert_eq!(cl.num_chips, 2);
+        let text = context_to_json_text(s.context());
+        let back = context_from_json_text(&text).unwrap();
+        assert_eq!(context_to_json_text(&back), text);
+        let back_cl = back.cluster.as_ref().unwrap();
+        assert_eq!(back_cl.num_chips, cl.num_chips);
+        assert_eq!(back_cl.assignment, cl.assignment);
+        assert_eq!(back_cl.cut_edges, cl.cut_edges);
+        assert_eq!(back_cl.link_bits, cl.link_bits);
+        assert_eq!(back_cl.link_capacity_bits, cl.link_capacity_bits);
+        assert_eq!(back_cl.chips.len(), cl.chips.len());
+        for (a, b) in back_cl.chips.iter().zip(&cl.chips) {
+            assert_eq!(a.chip, b.chip);
+            assert_eq!(a.insts, b.insts);
+            assert_eq!(a.fmax_mhz, b.fmax_mhz);
+        }
+    }
+
+    #[test]
     fn rejects_bad_checkpoints() {
         assert!(context_from_json_text("not json").is_err());
         assert!(context_from_json_text("{}").is_err());
         let ctx =
             SessionContext::new("d", DeviceKind::U250, super::super::FlowVariant::Tapa);
         let bumped = context_to_json_text(&ctx)
-            .replace("\"version\":4", "\"version\":99");
+            .replace("\"version\":5", "\"version\":99");
         assert!(context_from_json_text(&bumped).is_err());
         let wrong_dev =
             context_to_json_text(&ctx).replace("\"device\":\"U250\"", "\"device\":\"U999\"");

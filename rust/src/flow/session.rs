@@ -21,7 +21,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::device::{Device, DeviceKind};
-use crate::floorplan::{multi, Floorplan, FloorplanConfig};
+use crate::floorplan::{cluster, multi, Floorplan, FloorplanConfig, PartitionStats};
 use crate::graph::{InstId, TaskGraph};
 use crate::hls::{estimate_all, TaskEstimate};
 use crate::phys::{PhysContext, PhysTelemetry, SweepSchedule};
@@ -149,6 +149,84 @@ pub struct SimArtifact {
     pub cycles: Option<u64>,
 }
 
+/// One chip's slice of a [`ClusterArtifact`]: which instances landed on
+/// it and the post-route Fmax of its independently floorplanned and
+/// implemented subgraph.
+#[derive(Clone, Debug, Default)]
+pub struct ChipReport {
+    pub chip: u32,
+    /// Original instance indices assigned to this chip.
+    pub insts: Vec<u32>,
+    /// Post-route Fmax of the chip's subgraph; `None` for an empty chip
+    /// or one whose subgraph failed to floorplan/route.
+    pub fmax_mhz: Option<f64>,
+}
+
+/// Artifact of [`Stage::Cluster`] — the TAPA-CS chip-level partition of
+/// the design across N identical devices, plus the per-chip
+/// implementation results merged back together. Each chip's induced
+/// subgraph runs the existing Floorplan→Place→Route→Sta chain through
+/// per-chip [`crate::phys::PhysEngine`]s inside the session's one
+/// shared [`PhysContext`].
+#[derive(Clone, Debug, Default)]
+pub struct ClusterArtifact {
+    /// Number of chips in the cluster.
+    pub num_chips: usize,
+    /// Chip of each task instance (indexed by `InstId`).
+    pub assignment: Vec<u32>,
+    /// Chip-granularity Eq. 1 crossing cost.
+    pub cost: u64,
+    /// Indices of edges cut between chips.
+    pub cut_edges: Vec<u32>,
+    /// Bits crossing each of the `num_chips - 1` inter-FPGA links.
+    pub link_bits: Vec<u64>,
+    /// The hard per-link bit budget the partition was solved under.
+    pub link_capacity_bits: u64,
+    /// Per-chip membership and Fmax, in chip order.
+    pub chips: Vec<ChipReport>,
+    /// Chip-level solver statistics (Table-11 rows at chip granularity).
+    pub stats: Vec<PartitionStats>,
+    /// Chip-level partitioning was infeasible (over link budget or does
+    /// not fit N chips); the session continues on the single-device
+    /// path.
+    pub degraded: bool,
+}
+
+impl ClusterArtifact {
+    /// Per-link occupancy as a fraction of the budget.
+    pub fn link_utilization(&self) -> Vec<f64> {
+        self.link_bits
+            .iter()
+            .map(|&b| {
+                if self.link_capacity_bits == 0 {
+                    0.0
+                } else {
+                    b as f64 / self.link_capacity_bits as f64
+                }
+            })
+            .collect()
+    }
+
+    /// System Fmax: the slowest populated chip bounds the cluster. `None`
+    /// when any populated chip failed to implement (or nothing ran).
+    pub fn fmax_mhz(&self) -> Option<f64> {
+        let populated: Vec<&ChipReport> =
+            self.chips.iter().filter(|c| !c.insts.is_empty()).collect();
+        if populated.is_empty() {
+            return None;
+        }
+        let mut min: Option<f64> = None;
+        for c in populated {
+            let f = c.fmax_mhz?;
+            min = Some(match min {
+                Some(m) if m <= f => m,
+                _ => f,
+            });
+        }
+        min
+    }
+}
+
 /// Everything a session has computed so far — one slot per stage, plus
 /// identity for checkpoint validation.
 #[derive(Clone, Debug)]
@@ -162,6 +240,7 @@ pub struct SessionContext {
     /// Stages completed, in execution order.
     pub completed: Vec<Stage>,
     pub estimates: Option<Vec<TaskEstimate>>,
+    pub cluster: Option<ClusterArtifact>,
     pub floorplan: Option<FloorplanArtifact>,
     pub sweep: Option<SweepArtifact>,
     pub pipeline: Option<PipelineArtifact>,
@@ -179,6 +258,7 @@ impl SessionContext {
             variant,
             completed: Vec::new(),
             estimates: None,
+            cluster: None,
             floorplan: None,
             sweep: None,
             pipeline: None,
@@ -540,6 +620,7 @@ impl Session {
         for st in &ctx.completed {
             let present = match st {
                 Stage::Estimate => ctx.estimates.is_some(),
+                Stage::Cluster => ctx.cluster.is_some(),
                 Stage::Floorplan => ctx.floorplan.is_some(),
                 Stage::Sweep => ctx.sweep.is_some(),
                 Stage::Pipeline => ctx.pipeline.is_some(),
@@ -561,6 +642,15 @@ impl Session {
                 return Err(SessionError::Mismatch(format!(
                     "checkpoint has {} estimates for a {}-instance design",
                     est.len(),
+                    n_insts
+                )));
+            }
+        }
+        if let Some(cl) = &ctx.cluster {
+            if !cl.degraded && cl.assignment.len() != n_insts {
+                return Err(SessionError::Mismatch(format!(
+                    "checkpoint cluster assigns {} of {} instances",
+                    cl.assignment.len(),
                     n_insts
                 )));
             }
@@ -727,6 +817,13 @@ impl Session {
         for st in Stage::ALL {
             if st > target {
                 break;
+            }
+            // Chip-level partitioning only exists for `--cluster N` runs;
+            // a single-device session skips the stage entirely (it is not
+            // recorded as completed), keeping its checkpoints byte-
+            // identical to pre-cluster builds.
+            if st == Stage::Cluster && !self.cfg.cluster.enabled() {
+                continue;
             }
             if self.ctx.is_complete(st) {
                 continue;
@@ -1001,6 +1098,86 @@ impl Session {
         SweepArtifact { points, best, solver, phys: phys_t, sched }
     }
 
+    /// [`Stage::Cluster`]: split the task graph across
+    /// `cfg.cluster.chips` identical devices with the chip-granularity
+    /// MILP (inter-FPGA links modeled as wide-but-slow SLR-style
+    /// boundaries with a hard bit budget), then push each chip's induced
+    /// subgraph through the ordinary Floorplan→Place→Route→Sta chain.
+    /// All solves run through the session's shared [`PhysContext`], so a
+    /// cluster sweep warm-starts chip partitions exactly like floorplan
+    /// solves. Chips are evaluated in chip order — `--jobs` parallelism
+    /// lives below the solver API, keeping the artifact byte-identical
+    /// for any job count.
+    fn run_cluster(&mut self, exec: &dyn StepExecutor) -> ClusterArtifact {
+        let est = self.ctx.estimates.clone().expect("estimate stage done");
+        let device = self.device();
+        let opts = self.cfg.cluster.clone();
+        let phys = Arc::clone(&self.phys);
+        let mut phys = phys.lock().unwrap();
+        phys.solver.jobs = self.jobs;
+        let part = match cluster::partition_cluster_in(
+            &self.graph,
+            &device,
+            &est,
+            &opts,
+            &self.cfg.floorplan,
+            None,
+            &mut phys.solver,
+        ) {
+            Ok(p) => p,
+            Err(_) => {
+                // Infeasible at chip granularity (over the link budget or
+                // too big for N chips): record a degraded artifact and let
+                // the rest of the session proceed on the single-device
+                // path, mirroring floorplan degradation.
+                return ClusterArtifact {
+                    num_chips: opts.chips,
+                    link_capacity_bits: opts.link_bits,
+                    degraded: true,
+                    ..ClusterArtifact::default()
+                };
+            }
+        };
+        let mut chips = Vec::with_capacity(part.num_chips);
+        for chip in 0..part.num_chips {
+            let (sub, kept) = self.graph.chip_subgraph(&part.assignment, chip);
+            let sub_est: Vec<TaskEstimate> = kept.iter().map(|&i| est[i].clone()).collect();
+            let fmax_mhz = if sub.num_insts() == 0 {
+                None
+            } else {
+                match crate::floorplan::floorplan_in(
+                    &sub,
+                    &device,
+                    &sub_est,
+                    &self.cfg.floorplan,
+                    None,
+                    &mut phys.solver,
+                ) {
+                    Ok(fp) => evaluate_candidate_in(
+                        &sub, &device, &sub_est, &fp, &self.cfg, exec, &mut phys,
+                    ),
+                    Err(_) => None,
+                }
+            };
+            chips.push(ChipReport {
+                chip: chip as u32,
+                insts: kept.iter().map(|&i| i as u32).collect(),
+                fmax_mhz,
+            });
+        }
+        ClusterArtifact {
+            num_chips: part.num_chips,
+            assignment: part.assignment.iter().map(|&c| c as u32).collect(),
+            cost: part.cost,
+            cut_edges: part.cut_edges.iter().map(|&e| e as u32).collect(),
+            link_bits: part.link_bits.clone(),
+            link_capacity_bits: part.link_capacity_bits,
+            chips,
+            stats: part.stats.clone(),
+            degraded: false,
+        }
+    }
+
     fn run_stage(&mut self, st: Stage, exec: &dyn StepExecutor) {
         match st {
             Stage::Estimate => {
@@ -1009,6 +1186,10 @@ impl Session {
                     None => estimate_all(&self.design.graph),
                 };
                 self.ctx.estimates = Some(est);
+            }
+            Stage::Cluster => {
+                let art = self.run_cluster(exec);
+                self.ctx.cluster = Some(art);
             }
             Stage::Floorplan => {
                 let art = if self.variant == FlowVariant::Baseline {
@@ -1260,6 +1441,20 @@ impl SessionSet {
         SessionSet { sessions: Self::share_phys_by_region(sessions), cache }
     }
 
+    /// Fresh sessions from a parsed [`TargetSpec`]: one session per
+    /// device, with the spec's cluster size applied to every session's
+    /// [`super::FlowConfig::cluster`]. This is the one construction path
+    /// shared by `tapa compile`, `bench`, and the serve daemon.
+    pub fn for_target(
+        design: &Design,
+        spec: &crate::device::TargetSpec,
+        variant: FlowVariant,
+        mut cfg: FlowConfig,
+    ) -> SessionSet {
+        cfg.cluster.chips = spec.cluster;
+        Self::for_devices(design, &spec.devices, variant, cfg)
+    }
+
     /// Strict resume: every device must have a checkpoint in `workdir`,
     /// mirroring the single-device `--resume` behaviour — a typo'd
     /// directory errors instead of silently recomputing an expensive
@@ -1401,10 +1596,25 @@ mod tests {
             s.executed_stages(),
             &[Stage::Estimate, Stage::Floorplan, Stage::Sweep, Stage::Pipeline]
         );
-        // Continuing does not re-run completed stages.
+        // Continuing does not re-run completed stages. Cluster is absent:
+        // a single-device session skips it entirely.
         s.up_to(Stage::Sim, &RustStep).unwrap();
-        assert_eq!(s.executed_stages().len(), Stage::ALL.len());
-        assert_eq!(s.executed_stages(), &Stage::ALL);
+        assert_eq!(s.executed_stages().len(), Stage::ALL.len() - 1);
+        assert_eq!(
+            s.executed_stages(),
+            &[
+                Stage::Estimate,
+                Stage::Floorplan,
+                Stage::Sweep,
+                Stage::Pipeline,
+                Stage::Place,
+                Stage::Route,
+                Stage::Sta,
+                Stage::Sim,
+            ]
+        );
+        assert!(!s.context().completed.contains(&Stage::Cluster));
+        assert!(s.context().cluster.is_none());
         let again = s.executed_stages().len();
         s.up_to(Stage::Sim, &RustStep).unwrap();
         assert_eq!(s.executed_stages().len(), again);
@@ -1423,17 +1633,78 @@ mod tests {
     }
 
     #[test]
-    fn session_matches_monolithic_flow() {
+    fn independent_sessions_agree() {
+        // Two fresh sessions (separate PhysContexts, separate caches)
+        // over the same design must agree bit-for-bit — the determinism
+        // contract the retired `run_flow` wrapper used to pin.
         let d = chain_design(8);
         let cfg = FlowConfig::default();
         for variant in FlowVariant::ALL {
-            let via_flow = super::super::run_flow(&d, variant, &cfg);
-            let mut s = Session::new(d.clone(), variant, cfg.clone());
-            let via_session = s.run_all(&RustStep).unwrap();
-            assert_eq!(via_session.variant, via_flow.variant, "{}", variant.name());
-            assert_eq!(via_session.fmax_mhz, via_flow.fmax_mhz, "{}", variant.name());
-            assert_eq!(via_session.cycles, via_flow.cycles, "{}", variant.name());
-            assert_eq!(via_session.util_pct, via_flow.util_pct, "{}", variant.name());
+            let a = Session::new(d.clone(), variant, cfg.clone())
+                .run_all(&RustStep)
+                .unwrap();
+            let b = Session::new(d.clone(), variant, cfg.clone())
+                .run_all(&RustStep)
+                .unwrap();
+            assert_eq!(a.variant, b.variant, "{}", variant.name());
+            assert_eq!(a.fmax_mhz, b.fmax_mhz, "{}", variant.name());
+            assert_eq!(a.cycles, b.cycles, "{}", variant.name());
+            assert_eq!(a.util_pct, b.util_pct, "{}", variant.name());
+        }
+    }
+
+    #[test]
+    fn cluster_stage_partitions_and_reports_chips() {
+        let mut cfg = FlowConfig::default();
+        cfg.cluster.chips = 2;
+        let mut s = Session::new(chain_design(8), FlowVariant::Tapa, cfg);
+        s.up_to(Stage::Cluster, &RustStep).unwrap();
+        assert_eq!(s.executed_stages(), &[Stage::Estimate, Stage::Cluster]);
+        let art = s.context().cluster.clone().expect("cluster stage ran");
+        assert!(!art.degraded);
+        assert_eq!(art.num_chips, 2);
+        assert_eq!(art.assignment.len(), 8);
+        assert_eq!(art.chips.len(), 2);
+        assert_eq!(art.link_bits.len(), 1);
+        assert_eq!(art.link_utilization().len(), 1);
+        // Every populated chip implements and reports an Fmax; the
+        // system Fmax is the min over populated chips.
+        for c in art.chips.iter().filter(|c| !c.insts.is_empty()) {
+            assert!(c.fmax_mhz.is_some(), "chip {} has no fmax", c.chip);
+        }
+        assert!(art.fmax_mhz().is_some());
+        // Chip membership covers each instance exactly once.
+        let mut seen = vec![false; 8];
+        for c in &art.chips {
+            for &i in &c.insts {
+                assert!(!seen[i as usize]);
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cluster_artifact_identical_for_any_jobs() {
+        let mut cfg = FlowConfig::default();
+        cfg.cluster.chips = 2;
+        cfg.sim.enabled = false;
+        let d = chain_design(8);
+        let run = |jobs: usize| {
+            let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone()).with_jobs(jobs);
+            s.up_to(Stage::Cluster, &RustStep).unwrap();
+            s.context().cluster.clone().unwrap()
+        };
+        let a = run(1);
+        for jobs in [2, 4, 8] {
+            let b = run(jobs);
+            assert_eq!(a.assignment, b.assignment, "jobs={jobs}");
+            assert_eq!(a.cost, b.cost, "jobs={jobs}");
+            assert_eq!(a.cut_edges, b.cut_edges, "jobs={jobs}");
+            assert_eq!(a.link_bits, b.link_bits, "jobs={jobs}");
+            let fa: Vec<Option<f64>> = a.chips.iter().map(|c| c.fmax_mhz).collect();
+            let fb: Vec<Option<f64>> = b.chips.iter().map(|c| c.fmax_mhz).collect();
+            assert_eq!(fa, fb, "jobs={jobs}");
         }
     }
 

@@ -1,7 +1,7 @@
-//! The eight explicit stages of the staged compilation pipeline.
+//! The nine explicit stages of the staged compilation pipeline.
 //!
 //! Declared in pipeline order so the derived `Ord` matches execution
-//! order: `Estimate < Floorplan < … < Sim`. [`crate::flow::Session`]
+//! order: `Estimate < Cluster < … < Sim`. [`crate::flow::Session`]
 //! walks this sequence, persisting one typed artifact per stage.
 
 /// One step of the `tapa compile` pipeline (Fig. 1, decomposed).
@@ -9,6 +9,11 @@
 pub enum Stage {
     /// HLS area/schedule estimation per task (stands in for Vitis HLS).
     Estimate,
+    /// Chip-level partitioning across a cluster of identical devices
+    /// (TAPA-CS): split the task graph over N FPGAs before any
+    /// single-device work happens. Skipped entirely (not recorded as
+    /// completed) unless `--cluster N` with N > 1 is requested.
+    Cluster,
     /// Coarse-grained floorplanning, including the §5.2 feedback loop
     /// with trial pipelining.
     Floorplan,
@@ -32,8 +37,9 @@ pub enum Stage {
 
 impl Stage {
     /// All stages, in execution order.
-    pub const ALL: [Stage; 8] = [
+    pub const ALL: [Stage; 9] = [
         Stage::Estimate,
+        Stage::Cluster,
         Stage::Floorplan,
         Stage::Sweep,
         Stage::Pipeline,
@@ -52,6 +58,7 @@ impl Stage {
     pub fn name(self) -> &'static str {
         match self {
             Stage::Estimate => "estimate",
+            Stage::Cluster => "cluster",
             Stage::Floorplan => "floorplan",
             Stage::Sweep => "sweep",
             Stage::Pipeline => "pipeline",
@@ -67,6 +74,17 @@ impl Stage {
     pub fn parse(s: &str) -> Option<Stage> {
         Stage::ALL.into_iter().find(|st| st.name() == s)
     }
+
+    /// All stage names, space-separated, for CLI error messages — stays
+    /// current when stages are added because it derives from
+    /// [`Stage::ALL`].
+    pub fn names() -> String {
+        Stage::ALL
+            .iter()
+            .map(|st| st.name())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
 }
 
 impl std::fmt::Display for Stage {
@@ -81,7 +99,8 @@ mod tests {
 
     #[test]
     fn order_matches_pipeline() {
-        assert!(Stage::Estimate < Stage::Floorplan);
+        assert!(Stage::Estimate < Stage::Cluster);
+        assert!(Stage::Cluster < Stage::Floorplan);
         assert!(Stage::Floorplan < Stage::Sweep);
         assert!(Stage::Sweep < Stage::Pipeline);
         assert!(Stage::Route < Stage::Sim);
@@ -96,5 +115,13 @@ mod tests {
             assert_eq!(Stage::parse(st.name()), Some(st));
         }
         assert_eq!(Stage::parse("synth"), None);
+    }
+
+    #[test]
+    fn names_lists_every_stage() {
+        let names = Stage::names();
+        for st in Stage::ALL {
+            assert!(names.contains(st.name()), "{} missing from {names}", st.name());
+        }
     }
 }

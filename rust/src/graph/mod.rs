@@ -230,6 +230,56 @@ impl TaskGraph {
             .map(|e| e.width_bits as u64)
             .sum()
     }
+
+    /// The induced subgraph of the instances assigned to one chip of a
+    /// multi-FPGA cluster (`assignment[i]` = chip of instance `i`).
+    ///
+    /// Instance ids are remapped densely in original order; prototypes
+    /// are carried over unchanged so `ProtoId`s stay valid. Edges and
+    /// `same_slot` pairs survive only when both endpoints live on the
+    /// chip (cut edges become inter-chip link traffic, not intra-chip
+    /// FIFOs), and external ports follow their owner. The subgraph gets
+    /// a distinct name (`{name}@chip{k}`) so downstream caches keyed by
+    /// graph identity never conflate chips. Returns the subgraph plus
+    /// the original index of each kept instance.
+    pub fn chip_subgraph(&self, assignment: &[usize], chip: usize) -> (TaskGraph, Vec<usize>) {
+        assert_eq!(assignment.len(), self.insts.len());
+        let kept: Vec<usize> =
+            (0..self.insts.len()).filter(|&i| assignment[i] == chip).collect();
+        let mut remap = vec![usize::MAX; self.insts.len()];
+        for (new, &old) in kept.iter().enumerate() {
+            remap[old] = new;
+        }
+        let on_chip = |id: InstId| remap[id.0] != usize::MAX;
+        let sub = TaskGraph {
+            name: format!("{}@chip{chip}", self.name),
+            protos: self.protos.clone(),
+            insts: kept.iter().map(|&i| self.insts[i].clone()).collect(),
+            edges: self
+                .edges
+                .iter()
+                .filter(|e| on_chip(e.producer) && on_chip(e.consumer))
+                .map(|e| Edge {
+                    producer: InstId(remap[e.producer.0]),
+                    consumer: InstId(remap[e.consumer.0]),
+                    ..e.clone()
+                })
+                .collect(),
+            ext_ports: self
+                .ext_ports
+                .iter()
+                .filter(|p| on_chip(p.owner))
+                .map(|p| ExtPort { owner: InstId(remap[p.owner.0]), ..p.clone() })
+                .collect(),
+            same_slot: self
+                .same_slot
+                .iter()
+                .filter(|(a, b)| on_chip(*a) && on_chip(*b))
+                .map(|(a, b)| (InstId(remap[a.0]), InstId(remap[b.0])))
+                .collect(),
+        };
+        (sub, kept)
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +319,31 @@ mod tests {
         let g = b.build().unwrap();
         assert_eq!(g.hbm_ports(), 2);
         assert_eq!(g.hbm_demand(InstId(0)).hbm_ch, 2);
+    }
+
+    #[test]
+    fn chip_subgraph_remaps_and_drops_cut_edges() {
+        let g = tiny_graph();
+        // load0 on chip 0, add0 on chip 1: the stream is a cut edge and
+        // must vanish from both subgraphs; the port follows load0.
+        let (c0, kept0) = g.chip_subgraph(&[0, 1], 0);
+        assert_eq!(kept0, vec![0]);
+        assert_eq!(c0.name, "tiny@chip0");
+        assert_eq!(c0.num_insts(), 1);
+        assert_eq!(c0.num_edges(), 0);
+        assert_eq!(c0.ext_ports.len(), 1);
+        assert_eq!(c0.ext_ports[0].owner, InstId(0));
+        let (c1, kept1) = g.chip_subgraph(&[0, 1], 1);
+        assert_eq!(kept1, vec![1]);
+        assert_eq!(c1.num_insts(), 1);
+        assert_eq!(c1.num_edges(), 0);
+        assert!(c1.ext_ports.is_empty());
+        // Same chip for both: the edge survives with remapped endpoints.
+        let (all, kept) = g.chip_subgraph(&[1, 1], 1);
+        assert_eq!(kept, vec![0, 1]);
+        assert_eq!(all.num_edges(), 1);
+        assert_eq!(all.edges[0].producer, InstId(0));
+        assert_eq!(all.edges[0].consumer, InstId(1));
     }
 
     #[test]

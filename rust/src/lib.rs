@@ -38,17 +38,20 @@
 //!
 //! All of the above is orchestrated by the **staged compilation API** in
 //! [`flow`]: a [`flow::Session`] walks the explicit stage pipeline
-//! `Estimate → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim`,
-//! storing one typed artifact per stage in a [`flow::SessionContext`].
-//! Sessions checkpoint/resume through JSON work directories (`tapa
+//! `Estimate → [Cluster] → Floorplan → Sweep → Pipeline → Place → Route
+//! → Sta → Sim`, storing one typed artifact per stage in a
+//! [`flow::SessionContext`] (the TAPA-CS `Cluster` stage only runs for
+//! multi-FPGA targets, `tapa compile --cluster N`). Sessions
+//! checkpoint/resume through JSON work directories (`tapa
 //! compile --to floorplan --workdir W`, then `--resume` skips completed
 //! stages — §6.3 sweep points included), share variant-independent
 //! artifacts through a [`flow::StageCache`] (HLS estimates per design,
 //! sweep candidates per `(design, device, util_ratio)`), compile one
 //! design for several parts at once with [`flow::SessionSet`] (`tapa
-//! compile --device u250,u280 --sweep`), and fan out across threads with
-//! the [`flow::BatchRunner`] (`tapa bench 43-designs --jobs N`). The
-//! one-shot [`flow::run_flow`] remains as a thin wrapper.
+//! compile --device u250,u280 --sweep`, a [`device::TargetSpec`]), and
+//! fan out across threads with the [`flow::BatchRunner`] (`tapa bench
+//! 43-designs --jobs N`). `Session` is the only flow entry point; the
+//! old one-shot `run_flow` wrapper was retired.
 //!
 //! ```
 //! use tapa::bench_suite::stencil::stencil;

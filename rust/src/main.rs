@@ -11,9 +11,12 @@
 //!       [--solver-budget B]         cap the exact ILP search (<N>nodes or
 //!                                    <N>ms, converted to nodes — runs
 //!                                    reproduce across machines)
+//!       [--cluster N]               TAPA-CS: partition across N identical
+//!                                    chips, implement each independently
 //!       [--workdir DIR]
-//!       [--to STAGE]                stop after STAGE (estimate, floorplan,
-//!                                    sweep, pipeline, place, route, sta, sim)
+//!       [--to STAGE]                stop after STAGE (estimate, cluster,
+//!                                    floorplan, sweep, pipeline, place,
+//!                                    route, sta, sim)
 //!       [--resume]                  continue from the workdir checkpoint
 //! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
 //!       [--jobs N]                  parallel sessions (43-designs suite)
@@ -62,7 +65,7 @@ use std::process::ExitCode;
 
 use tapa::bench_suite::{all_autobridge_designs, experiments};
 use tapa::config::Config;
-use tapa::device::DeviceKind;
+use tapa::device::{DeviceKind, TargetSpec};
 use tapa::flow::{FlowConfig, FlowVariant, SelectPolicy, Session, SessionSet, Stage};
 use tapa::place::{RustStep, StepExecutor};
 use tapa::report::fmt_mhz;
@@ -94,7 +97,7 @@ fn print_help() {
         "tapa — task-parallel dataflow flow with HLS/physical-design \
          co-optimization\n\n\
          USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
-         [--config FILE] [--no-sim]\n               [--device D[,D...]] [--sweep] \
+         [--config FILE] [--no-sim]\n               [--device D[,D...]] [--cluster N] [--sweep] \
          [--select fmax|cost] [--jobs N]\n               [--solver-budget <N>nodes|<N>ms] \
          [--workdir DIR] [--to STAGE]\n               \
          [--resume] [--store DIR]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n               \
@@ -107,10 +110,17 @@ fn print_help() {
          [--device D] [--variant V] [--ratio R] | --ping | --stats |\n               \
          --shutdown) [--async] [--meta]\n  \
          tapa engine-info\n\n\
-         STAGES (for --to): estimate floorplan sweep pipeline place route sta sim\n\
+         STAGES (for --to): estimate cluster floorplan sweep pipeline place route\n  \
+         sta sim\n\
          DEVICES (for --device): u250 u280 — a comma-separated list compiles the\n  \
          design for every part as one session set sharing a single HLS Estimate\n  \
          artifact (checkpoints in --workdir are device-qualified).\n\
+         CLUSTER: --cluster N partitions the task graph across N identical chips\n  \
+         (TAPA-CS) with the same MILP escalation chain at chip granularity;\n  \
+         inter-FPGA links carry a hard bit budget and each chip's subgraph is\n  \
+         floorplanned and implemented independently. The run stops at the\n  \
+         cluster stage by default (per-chip fmax + link utilization); byte-\n  \
+         identical for any --jobs. See docs/multi-fpga.md.\n\
          SWEEP: --sweep runs the multi-floorplan utilization-ratio sweep (§6.3) as\n  \
          a pipeline stage; candidates are cached per (design, device, ratio) and\n  \
          --resume never re-solves completed sweep points. --select picks the\n  \
@@ -253,18 +263,15 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         },
         None => None,
     };
-    let target = match flag_value(args, "--to") {
+    let to_flag = match flag_value(args, "--to") {
         Some(s) => match Stage::parse(&s) {
-            Some(st) => st,
+            Some(st) => Some(st),
             None => {
-                eprintln!(
-                    "unknown stage {s} (stages: estimate floorplan sweep pipeline \
-                     place route sta sim)"
-                );
+                eprintln!("unknown stage `{s}` (stages: {})", Stage::names());
                 return ExitCode::FAILURE;
             }
         },
-        None => Stage::Sim,
+        None => None,
     };
     let workdir = flag_value(args, "--workdir").map(PathBuf::from);
     let resume = has_flag(args, "--resume");
@@ -291,31 +298,50 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     let Ok(jobs) = parse_jobs(args) else {
         return ExitCode::FAILURE;
     };
-    let devices: Vec<DeviceKind> = match flag_value(args, "--device") {
-        Some(spec) => {
-            let mut v = Vec::new();
-            for part in spec.split(',').filter(|p| !p.is_empty()) {
-                match DeviceKind::parse(part) {
-                    Some(d) => v.push(d),
-                    None => {
-                        eprintln!("unknown device {part} (devices: u250 u280)");
-                        return ExitCode::FAILURE;
-                    }
-                }
-            }
-            if v.is_empty() {
-                eprintln!("--device requires at least one of: u250 u280");
+    let device_flag = match flag_value(args, "--device") {
+        Some(s) => match TargetSpec::parse(&s) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("{e}");
                 return ExitCode::FAILURE;
             }
-            v
-        }
-        None => Vec::new(),
+        },
+        None => None,
+    };
+    let cluster_flag = match flag_value(args, "--cluster") {
+        Some(n) => match n.parse::<usize>() {
+            Ok(c) => Some(c),
+            Err(_) => {
+                eprintln!("--cluster requires an integer chip count, got `{n}`");
+                return ExitCode::FAILURE;
+            }
+        },
+        None => None,
     };
 
     let Some(mut design) = tapa::bench_suite::find_design(&name) else {
         eprintln!("unknown design {name} (see `tapa list`)");
         return ExitCode::FAILURE;
     };
+
+    // One typed target: the --device list (defaulting to the design's
+    // catalogue part) plus the --cluster chip count.
+    let spec = {
+        let base = device_flag.unwrap_or_else(|| TargetSpec::single(design.device));
+        match base.with_cluster(cluster_flag.unwrap_or(1)) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("{e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    };
+    cfg.cluster.chips = spec.cluster;
+    let devices: Vec<DeviceKind> = spec.devices.clone();
+    // A cluster compile's deliverable is the chip partition + per-chip
+    // implementation merged in the ClusterArtifact; later single-device
+    // stages only run if --to explicitly asks for them.
+    let target = to_flag.unwrap_or(if spec.is_cluster() { Stage::Cluster } else { Stage::Sim });
 
     if let Some(store_dir) = flag_value(args, "--store") {
         // One-shot compile-as-a-service mode: route the request through
@@ -330,6 +356,13 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         }
         if devices.len() > 1 {
             eprintln!("--store compiles one device per request; pass a single --device");
+            return ExitCode::FAILURE;
+        }
+        if spec.is_cluster() {
+            eprintln!(
+                "--store serves single-device work units; cluster runs are not \
+                 store-backed (drop --cluster or --store)"
+            );
             return ExitCode::FAILURE;
         }
         let ratio = match flag_value(args, "--ratio") {
@@ -413,9 +446,15 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         println!("  checkpoint  : {}", path.display());
     }
 
+    let cluster_hint = if spec.is_cluster() {
+        format!("--cluster {} ", spec.cluster)
+    } else {
+        String::new()
+    };
     let Some(r) = session.result() else {
         // Stopped before the end of the pipeline — report what exists.
         let ctx = session.context();
+        print_cluster(ctx);
         if let Some(fa) = &ctx.floorplan {
             match &fa.floorplan {
                 Some(fp) => println!(
@@ -432,10 +471,10 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         }
         match session.workdir_path() {
             // Repeat the flags that select this checkpoint and config —
-            // a hint without --device/--sweep would miss the checkpoint
-            // or re-solve work the sweep config change invalidates.
+            // a hint without --device/--sweep/--cluster would miss the
+            // checkpoint or re-solve work the config change invalidates.
             Some(dir) => println!(
-                "  resume with : tapa compile --design {name} --device {} {}--resume \
+                "  resume with : tapa compile --design {name} --device {} {}{cluster_hint}--resume \
                  --workdir {}",
                 session.design().device.name().to_ascii_lowercase(),
                 if sweep_flag { "--sweep " } else { "" },
@@ -467,11 +506,54 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if let Some(fp) = &r.floorplan {
         println!("  floorplan   : cost {} @ util ratio {:.2}", fp.cost, fp.util_ratio);
     }
+    print_cluster(session.context());
     print_sweep(session.context());
     if let Some(c) = r.cycles {
         println!("  sim cycles  : {c}");
     }
     ExitCode::SUCCESS
+}
+
+/// Render the TAPA-CS multi-FPGA artifact: the chip partition, per-chip
+/// Fmax, and inter-FPGA link occupancy against the hard bit budget.
+/// (Line prefixes are deliberately distinct from the sweep/phys/fmax
+/// lines the CI regression jobs grep out of compile output.)
+fn print_cluster(ctx: &tapa::flow::SessionContext) {
+    let Some(cl) = &ctx.cluster else { return };
+    if cl.degraded {
+        println!(
+            "  cluster     : DEGRADED (no feasible {}-chip partition)",
+            cl.num_chips
+        );
+        return;
+    }
+    println!(
+        "  cluster     : {} chips, {} cut edge(s), chip-level cost {}",
+        cl.num_chips,
+        cl.cut_edges.len(),
+        cl.cost
+    );
+    for c in &cl.chips {
+        println!(
+            "  chip {:<7}: {} task(s), fmax {} MHz",
+            c.chip,
+            c.insts.len(),
+            fmt_mhz(c.fmax_mhz)
+        );
+    }
+    for (i, (&bits, util)) in
+        cl.link_bits.iter().zip(cl.link_utilization()).enumerate()
+    {
+        println!(
+            "  link {:<7}: {bits}/{} bits ({:.1}% of budget)",
+            i,
+            cl.link_capacity_bits,
+            util * 100.0
+        );
+    }
+    if let Some(f) = cl.fmax_mhz() {
+        println!("  system clk  : {} MHz (slowest chip)", fmt_mhz(Some(f)));
+    }
 }
 
 /// Render the §6.3 sweep artifact (one cell per unique sweep point).
@@ -659,6 +741,7 @@ fn compile_multi_device(
                 }
             }
         }
+        print_cluster(session.context());
         print_sweep(session.context());
     }
     let (est_computes, est_hits) = set.cache().stats();
@@ -1308,7 +1391,17 @@ fn build_request(args: &[String]) -> Result<tapa::util::json::Json, String> {
     }
     if let Some(name) = flag_value(args, "--design") {
         let device = match flag_value(args, "--device") {
-            Some(d) => d,
+            // Validate client-side through the typed target parser so a
+            // typo fails here with the full known-device list instead of
+            // a daemon round-trip; the daemon re-validates anyway.
+            Some(d) => {
+                let spec = TargetSpec::parse(&d).map_err(|e| e.to_string())?;
+                spec.only()
+                    .map(|k| k.name().to_ascii_lowercase())
+                    .ok_or_else(|| {
+                        format!("submit compiles one device per request, got `{d}`")
+                    })?
+            }
             // Default to the design's catalogue device so quick requests
             // don't need the flag; the daemon re-validates.
             None => tapa::bench_suite::find_design(&name)

@@ -59,7 +59,6 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::bench_suite::experiments::{execute_unit_warm, suite_cfg, suite_table, suite_units};
-use crate::device::DeviceKind;
 use crate::flow::manifest::{unit_result_to_json, UnitResult, WorkUnit};
 use crate::flow::{FlowConfig, FlowVariant, StageCache};
 use crate::phys::PhysContext;
@@ -521,8 +520,16 @@ fn parse_unit(req: &Json) -> Result<WorkUnit, String> {
         .get("device")
         .and_then(Json::as_str)
         .ok_or("run request needs a `device` field")?;
-    let device = DeviceKind::parse(device_name)
-        .ok_or_else(|| format!("unknown device `{device_name}`"))?;
+    // The typed target parser produces the canonical error (names the
+    // unknown part and lists every known device), shared with the CLI.
+    let device = crate::device::TargetSpec::parse(device_name)
+        .map_err(|e| e.to_string())
+        .and_then(|t| match t.only() {
+            Some(d) => Ok(d),
+            None => Err(format!(
+                "run requests compile one device at a time, got `{device_name}`"
+            )),
+        })?;
     let variant_name = req.get("variant").and_then(Json::as_str).unwrap_or("tapa");
     let variant = FlowVariant::parse(variant_name)
         .ok_or_else(|| format!("unknown variant `{variant_name}`"))?;
@@ -537,6 +544,7 @@ fn parse_unit(req: &Json) -> Result<WorkUnit, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::DeviceKind;
 
     fn tempdir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("tapa_{tag}_{}", std::process::id()));
@@ -576,6 +584,10 @@ mod tests {
         assert_eq!(u.variant, FlowVariant::Baseline);
         assert_eq!(u.util_ratio, Some(0.7));
         let bad = Json::parse("{\"op\":\"run\",\"design\":\"d\",\"device\":\"u999\"}").unwrap();
-        assert!(parse_unit(&bad).is_err());
+        let msg = parse_unit(&bad).unwrap_err();
+        assert!(
+            msg.contains("u999") && msg.contains("u250") && msg.contains("u280"),
+            "device error must name the part and list known ones: {msg}"
+        );
     }
 }

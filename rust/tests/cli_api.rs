@@ -1,0 +1,85 @@
+//! End-to-end tests of the `tapa` binary's argument surface: the typed
+//! [`TargetSpec`] device parsing, the self-describing `--to` stage
+//! errors, and the `--cluster` compile path — the contracts a user hits
+//! first when a flag is misspelled.
+
+use std::process::{Command, Output};
+
+fn tapa(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_tapa"))
+        .args(args)
+        .output()
+        .expect("tapa binary runs")
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn bad_to_stage_error_lists_every_stage() {
+    let out = tapa(&["compile", "--design", "stencil_k1_u250", "--to", "bogus"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("unknown stage `bogus`"), "got: {err}");
+    // The error enumerates the full pipeline so the user never has to
+    // guess a stage name.
+    for stage in [
+        "estimate", "cluster", "floorplan", "sweep", "pipeline", "place",
+        "route", "sta", "sim",
+    ] {
+        assert!(err.contains(stage), "stage list missing `{stage}`: {err}");
+    }
+}
+
+#[test]
+fn bad_device_error_names_the_part_and_the_alternatives() {
+    let out = tapa(&["compile", "--design", "stencil_k1_u250", "--device", "u999"]);
+    assert!(!out.status.success());
+    let err = stderr(&out);
+    assert!(err.contains("u999"), "error must name the bad part: {err}");
+    assert!(
+        err.contains("u250") && err.contains("u280"),
+        "error must list the known parts: {err}"
+    );
+}
+
+#[test]
+fn bad_cluster_count_is_rejected_with_the_valid_range() {
+    let out = tapa(&["compile", "--design", "stencil_k1_u250", "--cluster", "two"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--cluster requires an integer chip count"));
+
+    let out = tapa(&["compile", "--design", "stencil_k1_u250", "--cluster", "99"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("99"), "range error names the count");
+}
+
+#[test]
+fn cluster_compile_reports_per_chip_fmax_and_link_utilization() {
+    let out = tapa(&[
+        "compile", "--design", "stencil_k3_u250", "--cluster", "2", "--no-sim",
+    ]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("cluster"), "got: {text}");
+    assert!(text.contains("chip 0"), "per-chip rows: {text}");
+    assert!(text.contains("chip 1"), "per-chip rows: {text}");
+    assert!(text.contains("of budget"), "link utilization row: {text}");
+    assert!(text.contains("system clk"), "system clock row: {text}");
+}
+
+#[test]
+fn single_device_compile_does_not_mention_the_cluster_stage() {
+    let out = tapa(&["compile", "--design", "stencil_k1_u250", "--no-sim"]);
+    assert!(out.status.success(), "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(
+        !text.contains("chip 0"),
+        "single-device output must be cluster-free: {text}"
+    );
+}

@@ -1,29 +1,68 @@
 //! Golden checkpoint: locks the versioned `flow::persist` on-disk format.
 //!
 //! `data/golden_sweep_ctx.json` is a committed, known-good serialized
-//! [`SessionContext`] (format v4, with a §6.3 `SweepArtifact` including
+//! [`SessionContext`] (format v5, with a §6.3 `SweepArtifact` including
 //! its solver telemetry and the incremental physical-design engine's
-//! `phys` accounting). The parser must accept it and the writer must
-//! reproduce it byte for byte — so a future PR cannot silently change
-//! the layout and break `--resume` compatibility. Any intentional layout
-//! change must bump `flow::persist::FORMAT_VERSION` and refresh this
-//! golden.
+//! `phys` accounting), and `data/golden_cluster_ctx.json` locks the
+//! TAPA-CS multi-FPGA `ClusterArtifact` added in v5. The parser must
+//! accept them and the writer must reproduce them byte for byte — so a
+//! future PR cannot silently change the layout and break `--resume`
+//! compatibility. Any intentional layout change must bump
+//! `flow::persist::FORMAT_VERSION` and refresh the goldens.
 
 use tapa::device::DeviceKind;
 use tapa::flow::{persist, FlowVariant, Stage};
 
 const GOLDEN: &str = include_str!("data/golden_sweep_ctx.json");
+const GOLDEN_CLUSTER: &str = include_str!("data/golden_cluster_ctx.json");
 
 #[test]
-fn golden_v4_checkpoint_roundtrips_byte_identically() {
+fn golden_v5_checkpoint_roundtrips_byte_identically() {
     let ctx = persist::context_from_json_text(GOLDEN).expect("golden checkpoint parses");
     assert_eq!(
         persist::context_to_json_text(&ctx),
         GOLDEN,
-        "writer drifted from the committed v4 checkpoint format — resume \
+        "writer drifted from the committed v5 checkpoint format — resume \
          compatibility would break; bump FORMAT_VERSION and refresh the golden \
          instead of changing the layout in place"
     );
+}
+
+#[test]
+fn golden_cluster_checkpoint_roundtrips_byte_identically() {
+    let ctx =
+        persist::context_from_json_text(GOLDEN_CLUSTER).expect("golden cluster ctx parses");
+    assert_eq!(
+        persist::context_to_json_text(&ctx),
+        GOLDEN_CLUSTER,
+        "writer drifted from the committed ClusterArtifact layout — bump \
+         FORMAT_VERSION and refresh the golden instead of changing it in place"
+    );
+}
+
+#[test]
+fn golden_cluster_checkpoint_carries_the_expected_artifact() {
+    let ctx = persist::context_from_json_text(GOLDEN_CLUSTER).unwrap();
+    assert_eq!(ctx.design_name, "golden_cluster");
+    assert_eq!(ctx.device, DeviceKind::U250);
+    assert_eq!(ctx.completed, vec![Stage::Estimate, Stage::Cluster]);
+    let cl = ctx.cluster.as_ref().expect("cluster artifact");
+    assert!(!cl.degraded);
+    assert_eq!(cl.num_chips, 2);
+    assert_eq!(cl.assignment, vec![0, 1]);
+    assert_eq!(cl.cut_edges, vec![0]);
+    assert_eq!(cl.link_bits, vec![128]);
+    assert_eq!(cl.link_capacity_bits, 4096);
+    assert_eq!(cl.link_utilization(), vec![128.0 / 4096.0]);
+    assert_eq!(cl.chips.len(), 2);
+    assert_eq!(cl.chips[0].insts, vec![0]);
+    assert_eq!(cl.chips[1].insts, vec![1]);
+    assert_eq!(cl.chips[0].fmax_mhz, Some(312.5));
+    assert_eq!(cl.chips[1].fmax_mhz, Some(298.25));
+    // System Fmax = the slowest chip.
+    assert_eq!(cl.fmax_mhz(), Some(298.25));
+    assert_eq!(cl.stats.len(), 1);
+    assert!(ctx.floorplan.is_none());
 }
 
 #[test]
@@ -37,6 +76,8 @@ fn golden_checkpoint_carries_the_expected_artifacts() {
         vec![Stage::Estimate, Stage::Floorplan, Stage::Sweep]
     );
     assert_eq!(ctx.estimates.as_ref().map(|e| e.len()), Some(2));
+    // v5: single-device checkpoints carry an explicit null cluster field.
+    assert!(ctx.cluster.is_none());
 
     let fa = ctx.floorplan.as_ref().expect("floorplan artifact");
     assert!(!fa.degraded);

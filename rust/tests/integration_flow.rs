@@ -5,13 +5,22 @@
 
 use tapa::bench_suite::{self, experiments};
 use tapa::device::DeviceKind;
-use tapa::flow::{run_flow, FlowConfig, FlowVariant, SimOptions};
+use tapa::flow::{Design, FlowConfig, FlowResult, FlowVariant, Session, SimOptions};
+use tapa::place::RustStep;
 
 fn fast_cfg() -> FlowConfig {
     FlowConfig {
         sim: SimOptions { enabled: false, ..Default::default() },
         ..Default::default()
     }
+}
+
+/// One design through one variant via the [`Session`] API (the flow's
+/// single entry point since the `run_flow` wrapper was retired).
+fn run_flow(d: &Design, v: FlowVariant, cfg: &FlowConfig) -> FlowResult {
+    Session::new(d.clone(), v, cfg.clone())
+        .run_all(&RustStep)
+        .expect("in-memory session cannot fail")
 }
 
 #[test]

@@ -9,8 +9,8 @@ use std::sync::Arc;
 use tapa::bench_suite::stencil::stencil;
 use tapa::device::DeviceKind;
 use tapa::flow::{
-    persist, run_flow, BatchRunner, Design, FlowConfig, FlowVariant, Session,
-    SimOptions, Stage, StageCache,
+    persist, BatchRunner, Design, FlowConfig, FlowVariant, Session, SimOptions,
+    Stage, StageCache,
 };
 use tapa::graph::{ComputeSpec, TaskGraphBuilder};
 use tapa::place::RustStep;
@@ -77,7 +77,7 @@ fn context_json_roundtrips_through_disk() {
 }
 
 #[test]
-fn up_to_then_resume_equals_one_shot_run_flow() {
+fn up_to_then_resume_equals_one_shot_session() {
     let dir = workdir("resume");
     let cfg = FlowConfig::default();
     let d = chain_design("resume_chain", 8);
@@ -105,7 +105,9 @@ fn up_to_then_resume_equals_one_shot_run_flow() {
     );
 
     // …and the final result is identical to the uninterrupted flow.
-    let want = run_flow(&d, FlowVariant::Tapa, &cfg);
+    let want = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone())
+        .run_all(&RustStep)
+        .unwrap();
     assert_eq!(r.variant, want.variant);
     assert_eq!(r.fmax_mhz, want.fmax_mhz);
     assert_eq!(r.cycles, want.cycles);
@@ -210,4 +212,34 @@ fn shared_cache_estimates_once_per_design_across_variants() {
     let (computes, hits) = cache.stats();
     assert_eq!(computes, 1, "one design → one HLS estimation");
     assert_eq!(hits, 2, "the two other variants hit the cache");
+}
+
+#[test]
+fn cluster_checkpoint_is_byte_identical_for_any_jobs() {
+    // The acceptance bar for TAPA-CS: chip-level partitioning (and the
+    // per-chip implementation it drives) must be deterministic under the
+    // solver's parallel branch-and-bound, so the persisted checkpoint is
+    // byte-for-byte independent of `--jobs`.
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.cluster.chips = 2;
+    let d = chain_design("cluster_jobs_chain", 10);
+    let bytes = |jobs: usize| {
+        let dir = workdir(&format!("cluster_j{jobs}"));
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone())
+            .with_workdir(&dir)
+            .with_jobs(jobs);
+        s.up_to(Stage::Cluster, &RustStep).unwrap();
+        let path =
+            Session::checkpoint_path(&dir, &d.name, DeviceKind::U250, FlowVariant::Tapa);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        text
+    };
+    let one = bytes(1);
+    assert!(one.contains("\"cluster\":{"), "checkpoint carries the artifact");
+    assert_eq!(one, bytes(4));
+    assert_eq!(one, bytes(8));
 }

@@ -249,6 +249,51 @@ fn gc_is_deterministic_lru_and_respects_pins() {
 }
 
 #[test]
+fn format_bump_orphans_old_store_entries_instead_of_misserving() {
+    // The other half of the staleness fold: an object written under the
+    // *previous* FORMAT_VERSION must never be served for today's key —
+    // the version word re-keys the id, so the old object is merely an
+    // orphan that GC adopts (and can evict), not a cache hit.
+    let dir = storedir("stale_version");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let cfg = FlowConfig::default();
+    let key = StoreKey::for_unit(&unit("stale", None), &cfg);
+
+    // Recompute the id exactly as `StoreKey::id` does, but with the
+    // previous on-disk format version — a pre-bump store entry.
+    let mut h = tapa::util::Fnv1a::new();
+    h.write_u64(tapa::store::STORE_VERSION);
+    h.write_u64(tapa::flow::persist::FORMAT_VERSION - 1);
+    h.write_u64(tapa::flow::manifest::MANIFEST_VERSION);
+    h.write_bytes(key.kind.name().as_bytes());
+    h.write_u64(key.design_hash);
+    h.write_u64(key.device_fp);
+    h.write_u64(key.config_hash);
+    let old_id = h.finish();
+    assert_ne!(old_id, key.id(), "version bump must re-key the store");
+
+    // Plant the old-version object on disk, as a pre-bump daemon left it.
+    std::fs::write(
+        dir.join(tapa::store::OBJECT_DIR).join(format!("{old_id:016x}.json")),
+        unit_result_to_json(&result(123.0)).write(),
+    )
+    .unwrap();
+
+    // Today's key misses: the old bytes are unreachable under the new id.
+    assert!(store.get_unit(&key).is_none(), "stale object must not be served");
+    let (_, served) = store.get_or_compute(&key, || Ok(result(321.0)));
+    assert_eq!(served, Served::Cold, "bumped format recomputes");
+
+    // GC adopts the orphan into the ledger rather than forgetting it,
+    // and LRU-evicts it first (it has no recorded use).
+    assert_eq!(store.gc(10), 0);
+    assert_eq!(store.len(), 2, "orphan adopted alongside the fresh artifact");
+    assert_eq!(store.gc(1), 1);
+    assert!(store.get_unit(&key).is_some(), "fresh artifact survives the GC");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn gc_readopts_objects_orphaned_by_lost_index_races() {
     let dir = storedir("orphans");
     let store = ArtifactStore::open(&dir).unwrap();
