@@ -28,7 +28,7 @@ use crate::phys::PhysContext;
 use crate::place::RustStep;
 use crate::report::{fmt_cong, fmt_cycles, fmt_gap, fmt_mhz, fmt_pct, Table};
 use crate::sim::BurstDetector;
-use crate::store::{ArtifactStore, Served, StoreKey};
+use crate::store::{config_fingerprint, ArtifactStore, Served, StoreKey};
 use crate::util::stats::mean;
 
 /// Experiment identifiers (`tapa bench --list`).
@@ -434,6 +434,36 @@ pub fn run_manifest(
     run_manifest_stored(m, cfg, jobs, save_path, None)
 }
 
+/// The warm [`PhysContext`] owning `unit`'s effective region
+/// fingerprint (merged columns for the coarse 4-slot variant — the view
+/// the executor compiles against), shared across units via `map` and
+/// persisted against `store` — the shard-worker/one-shot mirror of the
+/// serve daemon's per-region context. Created on first use with the
+/// store attached as its warm-state target, so every process (daemon,
+/// `--store` CLI run, fleet worker) starts from the same spilled solver
+/// memo and engine state.
+pub fn warm_phys_for(
+    store: &Arc<ArtifactStore>,
+    map: &Mutex<HashMap<u64, Arc<Mutex<PhysContext>>>>,
+    unit: &WorkUnit,
+    cfg: &FlowConfig,
+) -> Arc<Mutex<PhysContext>> {
+    let device = match unit.variant {
+        FlowVariant::TapaCoarse4Slot => unit.device.device().merged_columns(),
+        _ => unit.device.device(),
+    };
+    let fp = device.region_fingerprint();
+    map.lock()
+        .unwrap()
+        .entry(fp)
+        .or_insert_with(|| {
+            let mut ctx = PhysContext::with_solver_budget(cfg.floorplan.solver_budget);
+            ctx.attach_warm_store(store.clone(), fp, config_fingerprint(cfg));
+            Arc::new(Mutex::new(ctx))
+        })
+        .clone()
+}
+
 /// [`run_manifest`] with an optional shared [`ArtifactStore`]: every
 /// unit is served through [`ArtifactStore::get_or_compute`], so results
 /// already published by any cooperating process (a previous run, another
@@ -441,13 +471,15 @@ pub fn run_manifest(
 /// cold results are published for the next process. `wall_seconds` is
 /// only measured for cold evaluations (store-served units cost nothing
 /// and must stay byte-deterministic); the store moves it into its index
-/// as the unit's cost history for [`Manifest::plan_weighted`].
+/// as the unit's cost history for [`Manifest::plan_weighted`]. Cold
+/// units run against the store's persisted warm state
+/// ([`warm_phys_for`]) and spill what they learned back afterwards.
 pub fn run_manifest_stored(
     m: &mut Manifest,
     cfg: &FlowConfig,
     jobs: usize,
     save_path: Option<&Path>,
-    store: Option<&ArtifactStore>,
+    store: Option<&Arc<ArtifactStore>>,
 ) -> Result<(usize, usize), SessionError> {
     let todo: Vec<usize> = m
         .units
@@ -466,6 +498,7 @@ pub fn run_manifest_stored(
         .into_iter()
         .map(|d| (d.name.clone(), d))
         .collect();
+    let phys_map = Mutex::new(HashMap::new());
     run_indexed(todo.len(), jobs, |i| {
         let idx = todo[i];
         let unit = shared.lock().unwrap().units[idx].unit.clone();
@@ -473,19 +506,28 @@ pub fn run_manifest_stored(
             Some(d) => {
                 let mut d = d.clone();
                 d.device = unit.device;
+                let warm = store.map(|s| warm_phys_for(s, &phys_map, &unit, cfg));
                 // Per-unit wall-clock rides in the manifest (never in
                 // the byte-compared CSVs): cost-weighted sharding weighs
                 // units by it instead of round-robin counting.
                 let t0 = std::time::Instant::now();
-                execute_resolved_unit(d, &unit, cfg, Some(&cache), None, 1).map(|mut r| {
-                    r.wall_seconds = Some(t0.elapsed().as_secs_f64());
-                    r
-                })
+                execute_resolved_unit(d, &unit, cfg, Some(&cache), warm.as_ref(), 1).map(
+                    |mut r| {
+                        r.wall_seconds = Some(t0.elapsed().as_secs_f64());
+                        r
+                    },
+                )
             }
             None => Err(format!("unknown design `{}`", unit.design)),
         };
         let res = match store {
-            Some(s) => s.get_or_compute(&StoreKey::for_unit(&unit, cfg), compute).0,
+            Some(s) => {
+                let (r, served) = s.get_or_compute(&StoreKey::for_unit(&unit, cfg), compute);
+                if served == Served::Cold {
+                    warm_phys_for(s, &phys_map, &unit, cfg).lock().unwrap().spill_warm();
+                }
+                r
+            }
             None => compute(),
         };
         let mut g = shared.lock().unwrap();
@@ -597,7 +639,7 @@ pub fn stored_suite_table(
     id: &str,
     cfg: &FlowConfig,
     jobs: usize,
-    store: &ArtifactStore,
+    store: &Arc<ArtifactStore>,
 ) -> Option<(Table, (u64, u64))> {
     let units = suite_units(id)?;
     let cfg = suite_cfg(id, cfg);
@@ -606,6 +648,7 @@ pub fn stored_suite_table(
         .into_iter()
         .map(|d| (d.name.clone(), d))
         .collect();
+    let phys_map = Mutex::new(HashMap::new());
     let served: Vec<(UnitResult, Served)> = run_indexed(units.len(), jobs, |i| {
         let u = &units[i];
         let key = StoreKey::for_unit(u, &cfg);
@@ -615,8 +658,12 @@ pub fn stored_suite_table(
                 .ok_or_else(|| format!("unknown design `{}`", u.design))?
                 .clone();
             d.device = u.device;
-            execute_resolved_unit(d, u, &cfg, Some(&cache), None, 1)
+            let warm = warm_phys_for(store, &phys_map, u, &cfg);
+            execute_resolved_unit(d, u, &cfg, Some(&cache), Some(&warm), 1)
         });
+        if served == Served::Cold {
+            warm_phys_for(store, &phys_map, u, &cfg).lock().unwrap().spill_warm();
+        }
         (
             res.unwrap_or_else(|e| panic!("unit `{}` failed: {e}", u.key())),
             served,

@@ -38,6 +38,11 @@ use super::FlowVariant;
 /// sweep `solver` block). v4 = v3 + the sweep's `phys` block (incremental
 /// physical-design engine telemetry). v5 = v4 + the `cluster` field
 /// (TAPA-CS multi-FPGA partition; `null` unless `--cluster N` ran).
+///
+/// Store ids fold this version too — including the warm-state objects
+/// (`crate::store`): bumping it orphans persisted artifacts *and*
+/// persisted solver/phys/sim warm state, which then rebuilds from one
+/// cold evaluation instead of ever being served stale.
 pub const FORMAT_VERSION: u64 = 5;
 
 // ---------------------------------------------------------------------------

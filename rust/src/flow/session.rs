@@ -1105,66 +1105,114 @@ impl Session {
     /// subgraph through the ordinary Floorplan→Place→Route→Sta chain.
     /// All solves run through the session's shared [`PhysContext`], so a
     /// cluster sweep warm-starts chip partitions exactly like floorplan
-    /// solves. Chips are evaluated in chip order — `--jobs` parallelism
-    /// lives below the solver API, keeping the artifact byte-identical
-    /// for any job count.
+    /// solves. With `--jobs N` and the deterministic Rust step, populated
+    /// chips are implemented in parallel (one worker context per chip)
+    /// and merged in submission order; chip solves are canonical
+    /// (warm-start-independent, PR 4) and the Rust-step evaluation is
+    /// warm≡cold (PR 5), so the artifact stays byte-identical for any
+    /// job count.
     fn run_cluster(&mut self, exec: &dyn StepExecutor) -> ClusterArtifact {
         let est = self.ctx.estimates.clone().expect("estimate stage done");
         let device = self.device();
         let opts = self.cfg.cluster.clone();
-        let phys = Arc::clone(&self.phys);
-        let mut phys = phys.lock().unwrap();
-        phys.solver.jobs = self.jobs;
-        let part = match cluster::partition_cluster_in(
-            &self.graph,
-            &device,
-            &est,
-            &opts,
-            &self.cfg.floorplan,
-            None,
-            &mut phys.solver,
-        ) {
-            Ok(p) => p,
-            Err(_) => {
-                // Infeasible at chip granularity (over the link budget or
-                // too big for N chips): record a degraded artifact and let
-                // the rest of the session proceed on the single-device
-                // path, mirroring floorplan degradation.
-                return ClusterArtifact {
-                    num_chips: opts.chips,
-                    link_capacity_bits: opts.link_bits,
-                    degraded: true,
-                    ..ClusterArtifact::default()
-                };
+        let part = {
+            let phys = Arc::clone(&self.phys);
+            let mut phys = phys.lock().unwrap();
+            phys.solver.jobs = self.jobs;
+            match cluster::partition_cluster_in(
+                &self.graph,
+                &device,
+                &est,
+                &opts,
+                &self.cfg.floorplan,
+                None,
+                &mut phys.solver,
+            ) {
+                Ok(p) => p,
+                Err(_) => {
+                    // Infeasible at chip granularity (over the link budget
+                    // or too big for N chips): record a degraded artifact
+                    // and let the rest of the session proceed on the
+                    // single-device path, mirroring floorplan degradation.
+                    return ClusterArtifact {
+                        num_chips: opts.chips,
+                        link_capacity_bits: opts.link_bits,
+                        degraded: true,
+                        ..ClusterArtifact::default()
+                    };
+                }
             }
         };
-        let mut chips = Vec::with_capacity(part.num_chips);
-        for chip in 0..part.num_chips {
-            let (sub, kept) = self.graph.chip_subgraph(&part.assignment, chip);
-            let sub_est: Vec<TaskEstimate> = kept.iter().map(|&i| est[i].clone()).collect();
-            let fmax_mhz = if sub.num_insts() == 0 {
-                None
-            } else {
-                match crate::floorplan::floorplan_in(
-                    &sub,
-                    &device,
-                    &sub_est,
-                    &self.cfg.floorplan,
-                    None,
-                    &mut phys.solver,
-                ) {
-                    Ok(fp) => evaluate_candidate_in(
-                        &sub, &device, &sub_est, &fp, &self.cfg, exec, &mut phys,
-                    ),
-                    Err(_) => None,
+        let chips: Vec<ChipReport> = if self.jobs > 1 && exec.name() == RustStep.name() {
+            // Parallel chip implementation. Each worker gets a private
+            // context: per-chip floorplan solves answer canonically with
+            // or without the shared solver memo, and the engine
+            // evaluation of a fresh context is exactly the cold result
+            // the warm path reproduces — so this fan-out cannot change a
+            // byte relative to the sequential loop below. `run_indexed`
+            // returns results in chip (submission) order.
+            let graph = &self.graph;
+            let cfg = &self.cfg;
+            let budget = cfg.floorplan.solver_budget;
+            crate::util::pool::run_indexed(part.num_chips, self.jobs, |chip| {
+                let (sub, kept) = graph.chip_subgraph(&part.assignment, chip);
+                let sub_est: Vec<TaskEstimate> = kept.iter().map(|&i| est[i].clone()).collect();
+                let fmax_mhz = if sub.num_insts() == 0 {
+                    None
+                } else {
+                    let mut ctx = PhysContext::with_solver_budget(budget);
+                    match crate::floorplan::floorplan_in(
+                        &sub,
+                        &device,
+                        &sub_est,
+                        &cfg.floorplan,
+                        None,
+                        &mut ctx.solver,
+                    ) {
+                        Ok(fp) => evaluate_candidate_in(
+                            &sub, &device, &sub_est, &fp, cfg, &RustStep, &mut ctx,
+                        ),
+                        Err(_) => None,
+                    }
+                };
+                ChipReport {
+                    chip: chip as u32,
+                    insts: kept.iter().map(|&i| i as u32).collect(),
+                    fmax_mhz,
                 }
-            };
-            chips.push(ChipReport {
-                chip: chip as u32,
-                insts: kept.iter().map(|&i| i as u32).collect(),
-                fmax_mhz,
-            });
-        }
+            })
+        } else {
+            let phys = Arc::clone(&self.phys);
+            let mut phys = phys.lock().unwrap();
+            let mut chips = Vec::with_capacity(part.num_chips);
+            for chip in 0..part.num_chips {
+                let (sub, kept) = self.graph.chip_subgraph(&part.assignment, chip);
+                let sub_est: Vec<TaskEstimate> = kept.iter().map(|&i| est[i].clone()).collect();
+                let fmax_mhz = if sub.num_insts() == 0 {
+                    None
+                } else {
+                    match crate::floorplan::floorplan_in(
+                        &sub,
+                        &device,
+                        &sub_est,
+                        &self.cfg.floorplan,
+                        None,
+                        &mut phys.solver,
+                    ) {
+                        Ok(fp) => evaluate_candidate_in(
+                            &sub, &device, &sub_est, &fp, &self.cfg, exec, &mut phys,
+                        ),
+                        Err(_) => None,
+                    }
+                };
+                chips.push(ChipReport {
+                    chip: chip as u32,
+                    insts: kept.iter().map(|&i| i as u32).collect(),
+                    fmax_mhz,
+                });
+            }
+            chips
+        };
         ClusterArtifact {
             num_chips: part.num_chips,
             assignment: part.assignment.iter().map(|&c| c as u32).collect(),

@@ -79,6 +79,7 @@ fn main() -> ExitCode {
         Some("merge") => cmd_merge(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("submit") => cmd_submit(&args[1..]),
+        Some("gc") => cmd_gc(&args[1..]),
         Some("engine-info") => cmd_engine_info(),
         Some("help") | Some("--help") | None => {
             print_help();
@@ -109,6 +110,7 @@ fn print_help() {
          tapa submit --workdir DIR (--suite ID [--csv] | --design NAME\n               \
          [--device D] [--variant V] [--ratio R] | --ping | --stats |\n               \
          --shutdown) [--async] [--meta]\n  \
+         tapa gc --store DIR [--max-entries N] [--max-bytes BYTES]\n  \
          tapa engine-info\n\n\
          STAGES (for --to): estimate cluster floorplan sweep pipeline place route\n  \
          sta sim\n\
@@ -150,7 +152,13 @@ fn print_help() {
          store at W/store shared with the one-shot `--store DIR` paths of\n  \
          `compile` and `bench` (byte-identical artifacts either way). `submit`\n  \
          is the thin client; --async exercises submit/poll/fetch, --meta prints\n  \
-         the raw response line. See docs/serve.md."
+         the raw response line. See docs/serve.md.\n\
+         GC: `gc --store DIR` bounds the shared store: --max-entries N evicts\n  \
+         artifacts down to N, --max-bytes B evicts until the on-disk objects fit\n  \
+         in B bytes; both run in deterministic LRU order and never touch pinned\n  \
+         (in-flight) entries. Warm-state objects (persisted solver/phys/sim warm\n  \
+         starts) participate like any other entry — evicting one costs a future\n  \
+         process one cold evaluation, never correctness."
     );
 }
 
@@ -770,10 +778,10 @@ fn compile_stored(
     jobs: usize,
 ) -> ExitCode {
     use tapa::flow::manifest::{unit_result_to_json, WorkUnit};
-    use tapa::store::{ArtifactStore, StoreKey};
+    use tapa::store::{ArtifactStore, Served, StoreKey};
 
     let store = match ArtifactStore::open(PathBuf::from(store_dir)) {
-        Ok(s) => s,
+        Ok(s) => std::sync::Arc::new(s),
         Err(e) => {
             eprintln!("cannot open store {store_dir}: {e}");
             return ExitCode::FAILURE;
@@ -786,12 +794,22 @@ fn compile_stored(
         util_ratio: ratio,
     };
     let key = StoreKey::for_unit(&unit, cfg);
+    let phys_map = std::sync::Mutex::new(std::collections::HashMap::new());
     let t0 = std::time::Instant::now();
     let (res, served) = store.get_or_compute(&key, || {
         // The intra-unit width only affects wall-clock, never bytes, so
         // the store stays coherent across clients of any --jobs value.
-        experiments::execute_unit_warm(&unit, cfg, None, None, jobs)
+        // A cold evaluation runs against the store's persisted warm
+        // state (solver memo + engine snapshots) instead of from zero.
+        let warm = experiments::warm_phys_for(&store, &phys_map, &unit, cfg);
+        experiments::execute_unit_warm(&unit, cfg, None, Some(&warm), jobs)
     });
+    if served == Served::Cold {
+        experiments::warm_phys_for(&store, &phys_map, &unit, cfg)
+            .lock()
+            .unwrap()
+            .spill_warm();
+    }
     match res {
         Ok(r) => {
             eprintln!(
@@ -810,6 +828,62 @@ fn compile_stored(
             ExitCode::FAILURE
         }
     }
+}
+
+/// `tapa gc --store DIR [--max-entries N] [--max-bytes BYTES]`: bound
+/// the shared artifact store. The entry-count policy runs first, then
+/// the byte budget; both evict in deterministic LRU order (ascending
+/// last-use, ties by id) and never touch pinned in-flight entries.
+/// Warm-state objects participate like any other entry — evicting one
+/// costs a future process one cold evaluation, never correctness.
+fn cmd_gc(args: &[String]) -> ExitCode {
+    let Some(store_dir) = flag_value(args, "--store") else {
+        eprintln!("gc requires --store DIR");
+        return ExitCode::FAILURE;
+    };
+    let parse_budget = |name: &str| -> Result<Option<u64>, ()> {
+        match flag_value(args, name) {
+            None => Ok(None),
+            Some(s) => match s.parse::<u64>() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => {
+                    eprintln!("{name} requires a non-negative integer, got {s}");
+                    Err(())
+                }
+            },
+        }
+    };
+    let (Ok(max_entries), Ok(max_bytes)) =
+        (parse_budget("--max-entries"), parse_budget("--max-bytes"))
+    else {
+        return ExitCode::FAILURE;
+    };
+    if max_entries.is_none() && max_bytes.is_none() {
+        eprintln!("gc needs at least one policy: --max-entries N and/or --max-bytes BYTES");
+        return ExitCode::FAILURE;
+    }
+    let store = match tapa::store::ArtifactStore::open(PathBuf::from(&store_dir)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot open store {store_dir}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let mut evicted = 0usize;
+    if let Some(n) = max_entries {
+        evicted += store.gc(n as usize);
+    }
+    if let Some(b) = max_bytes {
+        evicted += store.gc_bytes(b);
+    }
+    let s = store.stats();
+    println!(
+        "gc {}: evicted {evicted} object(s); {} artifact(s) + {} warm-state object(s) remain",
+        store.root().display(),
+        s.entries,
+        s.warm_entries
+    );
+    ExitCode::SUCCESS
 }
 
 fn cmd_bench(args: &[String]) -> ExitCode {
@@ -841,7 +915,7 @@ fn cmd_bench(args: &[String]) -> ExitCode {
         // published into) the shared artifact store — the same funnel the
         // `serve` daemon and `--shard --store` workers use.
         let store = match tapa::store::ArtifactStore::open(&sdir) {
-            Ok(s) => s,
+            Ok(s) => std::sync::Arc::new(s),
             Err(e) => {
                 eprintln!("cannot open store {}: {e}", sdir.display());
                 return ExitCode::FAILURE;
@@ -917,7 +991,7 @@ fn cmd_bench_shard(
     let scfg = experiments::suite_cfg(id, cfg);
     let store = match &store_dir {
         Some(sdir) => match tapa::store::ArtifactStore::open(sdir) {
-            Ok(s) => Some(s),
+            Ok(s) => Some(std::sync::Arc::new(s)),
             Err(e) => {
                 eprintln!("cannot open store {}: {e}", sdir.display());
                 return ExitCode::FAILURE;

@@ -16,6 +16,8 @@ use crate::place::analytical::{self, step_positions, AnalyticalParams, PlacerArr
 use crate::place::{place_floorplan_guided, PlaceStrategy, Placement, RustStep, StepExecutor};
 use crate::route::{self, RouteBits, RouteReport};
 use crate::timing::{self, TimingReport};
+use crate::util::hexbits;
+use crate::util::json::Json;
 
 use super::{PhysJitter, PhysTelemetry};
 
@@ -155,6 +157,240 @@ impl PhysEngine {
     /// design). Also enabled context-wide by `TAPA_PHYS_VERIFY=1`.
     pub fn set_verify(&mut self, on: bool) {
         self.verify = on;
+    }
+
+    /// The engine's structural identity (the [`PhysEngine::matches`]
+    /// fields), hex-bit packed — embedded in every exported state object
+    /// and re-checked verbatim on import, so disk-loaded warm state is
+    /// exactly as guarded as in-memory reuse.
+    fn identity_fields(&self) -> Vec<(String, Json)> {
+        vec![
+            ("design".into(), Json::Str(self.graph.name.clone())),
+            ("insts".into(), Json::Num(self.graph.num_insts() as f64)),
+            (
+                "edges".into(),
+                Json::Str(hexbits::pack_u64s(self.graph.edges.iter().flat_map(|e| {
+                    [e.producer.0 as u64, e.consumer.0 as u64, e.width_bits as u64]
+                }))),
+            ),
+            ("device".into(), Json::Str(self.device.name.clone())),
+            (
+                "regions".into(),
+                Json::Str(format!("{:016x}", self.device.region_fingerprint())),
+            ),
+            (
+                "areas".into(),
+                Json::Str(hexbits::pack_u64s(
+                    self.estimates.iter().flat_map(|e| e.area.as_array()),
+                )),
+            ),
+        ]
+    }
+
+    /// Serialize the previous evaluation's full state (trajectory, route
+    /// bits, delay caches) for persistence in the artifact store, or
+    /// `None` when the engine has not evaluated yet. Everything numeric
+    /// is hex-bit packed, so identical states serialize to identical
+    /// bytes (the store's byte-compare spill dedup depends on this).
+    pub(super) fn export_state(&self) -> Option<Json> {
+        let s = self.state.as_ref()?;
+        let mut fields = self.identity_fields();
+        fields.extend([
+            (
+                "assignment".into(),
+                Json::Str(hexbits::pack_u64s(s.assignment.iter().map(|slot| slot.0 as u64))),
+            ),
+            ("stages".into(), Json::Str(hexbits::pack_u32s(s.stages.iter().copied()))),
+            ("params_lr".into(), Json::Num(s.params_key.0 as f64)),
+            ("params_alpha".into(), Json::Num(s.params_key.1 as f64)),
+            ("params_iters".into(), Json::Num(s.params_key.2 as f64)),
+            ("anchors".into(), Json::Str(hexbits::pack_f32s(s.anchors.iter().copied()))),
+            ("steps".into(), Json::Num(s.steps as f64)),
+            (
+                "pos".into(),
+                Json::Arr(
+                    s.pos
+                        .iter()
+                        .map(|p| Json::Str(hexbits::pack_f32s(p.iter().copied())))
+                        .collect(),
+                ),
+            ),
+            (
+                "wl_terms".into(),
+                Json::Arr(
+                    s.wl_terms
+                        .iter()
+                        .map(|t| Json::Str(hexbits::pack_f32s(t.iter().copied())))
+                        .collect(),
+                ),
+            ),
+            (
+                "slot_area".into(),
+                Json::Str(hexbits::pack_u64s(
+                    s.bits.slot_area.iter().flat_map(|a| a.as_array()),
+                )),
+            ),
+            (
+                "net_bits".into(),
+                Json::Str(hexbits::pack_u64s(s.bits.net_bits.iter().copied())),
+            ),
+            (
+                "boundary_bits".into(),
+                Json::Str(hexbits::pack_u64s(s.bits.boundary_bits.iter().copied())),
+            ),
+            (
+                "slot_congestion".into(),
+                Json::Str(hexbits::pack_f64s(s.report.slot_congestion.iter().copied())),
+            ),
+            (
+                "boundary_util".into(),
+                Json::Str(hexbits::pack_f64s(s.report.boundary_util.iter().copied())),
+            ),
+            ("max_congestion".into(), Json::Str(hexbits::pack_f64s([s.report.max_congestion]))),
+            ("max_boundary".into(), Json::Str(hexbits::pack_f64s([s.report.max_boundary]))),
+            ("placement_failed".into(), Json::Bool(s.report.placement_failed)),
+            ("routing_failed".into(), Json::Bool(s.report.routing_failed)),
+            (
+                "edge_delay".into(),
+                Json::Str(hexbits::pack_f64s(s.edge_delay.iter().copied())),
+            ),
+            (
+                "inst_delay".into(),
+                Json::Str(hexbits::pack_f64s(s.inst_delay.iter().copied())),
+            ),
+        ]);
+        Some(Json::Obj(fields))
+    }
+
+    /// Adopt a previously exported state. Refused (returning `false`)
+    /// unless the embedded identity echo matches this engine's structure
+    /// exactly and every vector has the shape the engine would itself
+    /// produce — a corrupt, truncated or mis-keyed object can cost at
+    /// most a cold evaluation, never a wrong or crashing one. A loaded
+    /// state then flows through [`PhysEngine::evaluate`]'s ordinary warm
+    /// path, including the `TAPA_PHYS_VERIFY` cold re-check. Never
+    /// overwrites live state.
+    pub(super) fn import_state(&mut self, v: &Json) -> bool {
+        if self.state.is_some() {
+            return false;
+        }
+        for (name, want) in self.identity_fields() {
+            let ok = match (v.get(&name), &want) {
+                (Some(Json::Str(got)), Json::Str(w)) => got == w,
+                (Some(Json::Num(got)), Json::Num(w)) => got == w,
+                _ => false,
+            };
+            if !ok {
+                return false;
+            }
+        }
+        match self.parse_state(v) {
+            Some(state) => {
+                self.state = Some(state);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn parse_state(&self, v: &Json) -> Option<EvalState> {
+        let n = self.graph.num_insts();
+        let ne = self.graph.num_edges();
+        let nslots = self.device.num_slots();
+        let nbounds = self.device.rows.saturating_sub(1);
+        let sval = |name: &str| v.get(name).and_then(Json::as_str);
+
+        let raw = hexbits::unpack_u64s(sval("assignment")?)?;
+        if raw.len() != n || raw.iter().any(|&s| s as usize >= nslots) {
+            return None;
+        }
+        let assignment: Vec<crate::device::SlotId> =
+            raw.iter().map(|&s| crate::device::SlotId(s as usize)).collect();
+        let stages = hexbits::unpack_u32s(sval("stages")?)?;
+        if stages.len() != ne {
+            return None;
+        }
+        let params_key = (
+            v.get("params_lr")?.as_u64()? as u32,
+            v.get("params_alpha")?.as_u64()? as u32,
+            v.get("params_iters")?.as_u64()? as usize,
+        );
+        let anchors = hexbits::unpack_f32s(sval("anchors")?)?;
+        if anchors.len() != 2 * n {
+            return None;
+        }
+        let steps = v.get("steps")?.as_u64()? as usize;
+        let pos: Vec<Vec<f32>> = v
+            .get("pos")?
+            .as_arr()?
+            .iter()
+            .map(|p| hexbits::unpack_f32s(p.as_str()?))
+            .collect::<Option<Vec<_>>>()?;
+        if pos.len() != steps + 1 || pos.iter().any(|p| p.len() != 2 * n) {
+            return None;
+        }
+        let wl_terms: Vec<Vec<f32>> = v
+            .get("wl_terms")?
+            .as_arr()?
+            .iter()
+            .map(|t| hexbits::unpack_f32s(t.as_str()?))
+            .collect::<Option<Vec<_>>>()?;
+        if wl_terms.len() != steps || wl_terms.iter().any(|t| t.len() != ne) {
+            return None;
+        }
+        let area_width = crate::device::AreaVector::ZERO.as_array().len();
+        let slot_area_raw = hexbits::unpack_u64s(sval("slot_area")?)?;
+        if slot_area_raw.len() != area_width * nslots {
+            return None;
+        }
+        let slot_area: Vec<crate::device::AreaVector> = slot_area_raw
+            .chunks(area_width)
+            .map(|c| crate::device::AreaVector::from_array(c.try_into().expect("chunk width")))
+            .collect();
+        let net_bits = hexbits::unpack_u64s(sval("net_bits")?)?;
+        let boundary_bits = hexbits::unpack_u64s(sval("boundary_bits")?)?;
+        if net_bits.len() != nslots || boundary_bits.len() != nbounds {
+            return None;
+        }
+        let slot_congestion = hexbits::unpack_f64s(sval("slot_congestion")?)?;
+        let boundary_util = hexbits::unpack_f64s(sval("boundary_util")?)?;
+        if slot_congestion.len() != nslots || boundary_util.len() != nbounds {
+            return None;
+        }
+        let one = |name: &str| {
+            let vals = hexbits::unpack_f64s(sval(name)?)?;
+            if vals.len() == 1 {
+                Some(vals[0])
+            } else {
+                None
+            }
+        };
+        let report = RouteReport {
+            slot_congestion,
+            boundary_util,
+            max_congestion: one("max_congestion")?,
+            max_boundary: one("max_boundary")?,
+            placement_failed: v.get("placement_failed")?.as_bool()?,
+            routing_failed: v.get("routing_failed")?.as_bool()?,
+        };
+        let edge_delay = hexbits::unpack_f64s(sval("edge_delay")?)?;
+        let inst_delay = hexbits::unpack_f64s(sval("inst_delay")?)?;
+        if edge_delay.len() != ne || inst_delay.len() != n {
+            return None;
+        }
+        Some(EvalState {
+            assignment,
+            stages,
+            params_key,
+            anchors,
+            pos,
+            wl_terms,
+            steps,
+            bits: RouteBits { slot_area, net_bits, boundary_bits },
+            report,
+            edge_delay,
+            inst_delay,
+        })
     }
 
     /// Drop the previous evaluation's state; the next evaluation runs

@@ -88,6 +88,7 @@ pub use sched::SweepSchedule;
 pub(crate) use sched::evaluate_chained;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::device::Device;
 use crate::graph::TaskGraph;
@@ -96,6 +97,7 @@ use crate::place::PlaceStrategy;
 use crate::route::route_jitter;
 use crate::sim::SimEngine;
 use crate::solver::SolverContext;
+use crate::store::{ArtifactStore, StoreKey};
 
 /// The deterministic P&R jitter pair of one `(design, strategy)` — the
 /// router's and the STA's factors, derived once here and passed down.
@@ -180,6 +182,43 @@ impl PhysTelemetry {
     }
 }
 
+/// Warm-state persistence accounting: how often the attached store
+/// answered a context/engine construction with persisted warm state
+/// ([`PhysContext::attach_warm_store`]), and how many objects
+/// [`PhysContext::spill_warm`] actually wrote. Surfaced as
+/// `warm_state_hits`/`warm_state_misses`/`warm_state_spills` in the
+/// serve `stats` op and `--store` bench responses. All counters stay 0
+/// when no store is attached.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// Persisted warm-state objects found and adopted (solver memo on
+    /// attach, phys/sim state on first engine build).
+    pub hits: u64,
+    /// Lookups that found no (usable) persisted object.
+    pub misses: u64,
+    /// Objects actually written by [`PhysContext::spill_warm`]
+    /// (byte-identical re-spills are deduplicated and not counted).
+    pub spills: u64,
+}
+
+impl WarmStats {
+    /// Field-wise sum (aggregation across contexts).
+    pub fn accumulate(&mut self, o: &WarmStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.spills += o.spills;
+    }
+}
+
+/// The attached persistence target: the store plus the key components
+/// every warm object of this context folds ([`StoreKey::warm_solver`]
+/// and friends).
+struct WarmStore {
+    store: Arc<ArtifactStore>,
+    region_fp: u64,
+    config_hash: u64,
+}
+
 /// Incremental physical-design state threaded through consecutive
 /// related evaluations — the one context of the unified engine. See the
 /// module docs for what it carries and where the flow threads it.
@@ -195,6 +234,11 @@ pub struct PhysContext {
     sims: HashMap<u64, SimEngine>,
     /// Re-run every warm evaluation cold and compare (`TAPA_PHYS_VERIFY`).
     verify: bool,
+    /// Persistent warm-state target ([`Self::attach_warm_store`]); `None`
+    /// = purely in-memory context (the historical behavior).
+    warm: Option<WarmStore>,
+    /// Warm-state persistence hit/miss/spill accounting.
+    pub warm_stats: WarmStats,
 }
 
 impl Default for PhysContext {
@@ -212,6 +256,8 @@ impl PhysContext {
             engines: HashMap::new(),
             sims: HashMap::new(),
             verify: std::env::var_os("TAPA_PHYS_VERIFY").is_some(),
+            warm: None,
+            warm_stats: WarmStats::default(),
         }
     }
 
@@ -226,6 +272,72 @@ impl PhysContext {
         ctx
     }
 
+    /// Attach a persistent warm-state target: every engine built through
+    /// this context from now on first looks for its spilled state under
+    /// `(region_fp, config_hash)`-derived [`StoreKey`]s, and
+    /// [`Self::spill_warm`] writes back there. The solver's proved-result
+    /// memo is loaded eagerly right here (it is context-wide, not
+    /// per-engine), so a fresh process answers its first structurally
+    /// known solve with zero cold solver evals. Disk-loaded state obeys
+    /// the same determinism contract as in-memory warm state: it flows
+    /// through the ordinary warm paths, so `TAPA_PHYS_VERIFY=1` re-runs
+    /// and compares it cold like any other warm evaluation.
+    pub fn attach_warm_store(
+        &mut self,
+        store: Arc<ArtifactStore>,
+        region_fp: u64,
+        config_hash: u64,
+    ) {
+        match store.get_warm(&StoreKey::warm_solver(region_fp, config_hash)) {
+            Some(payload) => {
+                self.solver.import_memo(&payload);
+                self.warm_stats.hits += 1;
+            }
+            None => self.warm_stats.misses += 1,
+        }
+        self.warm = Some(WarmStore { store, region_fp, config_hash });
+    }
+
+    /// Spill the context's warm state to the attached store: the solver
+    /// memo (always, even when empty — presence marks the context as
+    /// persisted), every phys engine's evaluation state, and every sim
+    /// engine's memo, in sorted key order. Writes are atomic and
+    /// deduplicated byte-for-byte by the store, so repeated spills of
+    /// unchanged state write nothing. Returns the number of objects
+    /// actually written (also accumulated into
+    /// [`PhysContext::warm_stats`]); store errors skip the one object
+    /// and continue — spilling is an optimization, never a failure mode.
+    pub fn spill_warm(&mut self) -> usize {
+        let Some(w) = &self.warm else { return 0 };
+        let mut spilled = 0usize;
+        let put = |key: StoreKey, payload: &crate::util::json::Json| -> bool {
+            matches!(w.store.put_warm(&key, payload), Ok(true))
+        };
+        if put(StoreKey::warm_solver(w.region_fp, w.config_hash), &self.solver.export_memo()) {
+            spilled += 1;
+        }
+        let mut keys: Vec<u64> = self.engines.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            if let Some(payload) = self.engines[&key].export_state() {
+                if put(StoreKey::warm_phys(key, w.region_fp, w.config_hash), &payload) {
+                    spilled += 1;
+                }
+            }
+        }
+        let mut keys: Vec<u64> = self.sims.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            if let Some(payload) = self.sims[&key].export_memo() {
+                if put(StoreKey::warm_sim(key, w.config_hash), &payload) {
+                    spilled += 1;
+                }
+            }
+        }
+        self.warm_stats.spills += spilled as u64;
+        spilled
+    }
+
     /// The engine owning `(g, device, estimates)`'s net model, built on
     /// first use. Estimates are part of the identity (a session's
     /// register-augmented estimates get their own engine, distinct from
@@ -233,7 +345,9 @@ impl PhysContext {
     /// hash equality alone: a cached engine re-checks its identity
     /// structurally (same discipline as the solver memo) and a colliding
     /// key is rebuilt fresh instead of handing back the wrong design's
-    /// state.
+    /// state. With a warm store attached, a freshly built engine first
+    /// tries to adopt its persisted state — which embeds the same full
+    /// structural identity and is refused on any mismatch.
     pub fn engine_for(
         &mut self,
         g: &TaskGraph,
@@ -241,37 +355,44 @@ impl PhysContext {
         estimates: &[TaskEstimate],
     ) -> &mut PhysEngine {
         let key = engine_key(g, device, estimates);
-        let verify = self.verify;
-        let entry = self
-            .engines
-            .entry(key)
-            .or_insert_with(|| PhysEngine::new(g, device, estimates, verify));
-        if !entry.matches(g, device, estimates) {
-            // 64-bit FNV collision between two distinct identities:
-            // correctness first — replace with a fresh engine for the
-            // requested triple (losing only warm state).
-            *entry = PhysEngine::new(g, device, estimates, verify);
+        // A missing entry and a 64-bit FNV collision between two distinct
+        // identities are handled the same way: build fresh for the
+        // requested triple (a collision loses only warm state).
+        let fresh = !self.engines.get(&key).is_some_and(|e| e.matches(g, device, estimates));
+        if fresh {
+            let mut eng = PhysEngine::new(g, device, estimates, self.verify);
+            if let Some(w) = &self.warm {
+                match w.store.get_warm(&StoreKey::warm_phys(key, w.region_fp, w.config_hash)) {
+                    Some(payload) if eng.import_state(&payload) => self.warm_stats.hits += 1,
+                    _ => self.warm_stats.misses += 1,
+                }
+            }
+            self.engines.insert(key, eng);
         }
-        entry
+        self.engines.get_mut(&key).expect("engine just ensured")
     }
 
     /// The incremental simulation engine owning `(g, estimates)`'s memo,
     /// built on first use — the `sim` counterpart of [`Self::engine_for`],
     /// with the same structural collision guard (the sim identity is the
-    /// full serialized behavioral state, compared exactly).
+    /// full serialized behavioral state, compared exactly) and the same
+    /// persisted-state adoption on fresh builds.
     pub fn sim_for(&mut self, g: &TaskGraph, estimates: &[TaskEstimate]) -> &mut SimEngine {
         let mut h = crate::util::Fnv1a::new();
         h.write_bytes(&crate::sim::incr::identity(g, estimates));
         let key = h.finish();
-        let verify = self.verify;
-        let entry = self
-            .sims
-            .entry(key)
-            .or_insert_with(|| SimEngine::new(g, estimates, verify));
-        if !entry.matches(g, estimates) {
-            *entry = SimEngine::new(g, estimates, verify);
+        let fresh = !self.sims.get(&key).is_some_and(|s| s.matches(g, estimates));
+        if fresh {
+            let mut eng = SimEngine::new(g, estimates, self.verify);
+            if let Some(w) = &self.warm {
+                match w.store.get_warm(&StoreKey::warm_sim(key, w.config_hash)) {
+                    Some(payload) if eng.import_memo(&payload) => self.warm_stats.hits += 1,
+                    _ => self.warm_stats.misses += 1,
+                }
+            }
+            self.sims.insert(key, eng);
         }
-        entry
+        self.sims.get_mut(&key).expect("sim engine just ensured")
     }
 
     /// Enable/disable warm-vs-cold verification context-wide — the

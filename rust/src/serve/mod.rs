@@ -15,7 +15,12 @@
 //!   per device `region_fingerprint`, kept alive between requests — the
 //!   same sharing rule as `SessionSet::share_phys_by_region`, safe
 //!   because warm solves are canonical and warm phys evaluations are
-//!   bit-identical to cold (the PR 4/5 contracts);
+//!   bit-identical to cold (the PR 4/5 contracts) — and **persisted**:
+//!   each context spills its solver memo and engine state into the
+//!   store as warm-state objects after every cold evaluation and loads
+//!   them back on construction, so a restarted daemon (or a fresh
+//!   `--store` worker) answers its first repeat request with zero cold
+//!   solver evals (`warm_state_*` counters; see `docs/serve.md`);
 //! * a shared [`StageCache`] (HLS estimates once per design);
 //! * an async job queue (`submit` → `poll` → `fetch`) drained by worker
 //!   threads, each job fanning out over [`run_indexed`].
@@ -61,8 +66,8 @@ use std::time::Duration;
 use crate::bench_suite::experiments::{execute_unit_warm, suite_cfg, suite_table, suite_units};
 use crate::flow::manifest::{unit_result_to_json, UnitResult, WorkUnit};
 use crate::flow::{FlowConfig, FlowVariant, StageCache};
-use crate::phys::PhysContext;
-use crate::store::{ArtifactStore, Served, StoreKey};
+use crate::phys::{PhysContext, WarmStats};
+use crate::store::{config_fingerprint, ArtifactStore, Served, StoreKey};
 use crate::util::json::Json;
 use crate::util::pool::run_indexed;
 
@@ -97,7 +102,7 @@ pub struct Server {
     /// Worker threads per request fan-out (`run_indexed`) and queue
     /// drain width.
     jobs: usize,
-    store: ArtifactStore,
+    store: Arc<ArtifactStore>,
     cache: Arc<StageCache>,
     /// One warm context per effective `region_fingerprint`.
     phys: Mutex<HashMap<u64, Arc<Mutex<PhysContext>>>>,
@@ -113,7 +118,8 @@ pub struct Server {
 impl Server {
     /// Open a server over `workdir` (store at `<workdir>/store`).
     pub fn open(workdir: &Path, jobs: usize, cfg: FlowConfig) -> Result<Arc<Server>, String> {
-        let store = ArtifactStore::open(workdir.join(STORE_DIR)).map_err(|e| e.to_string())?;
+        let store =
+            Arc::new(ArtifactStore::open(workdir.join(STORE_DIR)).map_err(|e| e.to_string())?);
         Ok(Arc::new(Server {
             cfg,
             jobs: jobs.max(1),
@@ -134,6 +140,12 @@ impl Server {
         &self.store
     }
 
+    /// The store as a shareable handle (warm-state attach, shard-worker
+    /// sharing in tests).
+    pub fn store_arc(&self) -> Arc<ArtifactStore> {
+        self.store.clone()
+    }
+
     /// Has `shutdown` been requested?
     pub fn stopped(&self) -> bool {
         self.stop.load(Ordering::SeqCst)
@@ -142,7 +154,10 @@ impl Server {
     /// The warm context owning `unit`'s effective region fingerprint
     /// (merged columns for the coarse 4-slot variant — the same view the
     /// executor compiles against). Created on first use with the
-    /// daemon's configured solver budget.
+    /// daemon's configured solver budget, with the daemon's store
+    /// attached as its warm-state persistence target — so a context
+    /// created after a restart immediately re-adopts the solver memo a
+    /// previous daemon spilled.
     fn phys_for(&self, unit: &WorkUnit) -> Arc<Mutex<PhysContext>> {
         let device = match unit.variant {
             FlowVariant::TapaCoarse4Slot => unit.device.device().merged_columns(),
@@ -154,11 +169,22 @@ impl Server {
             .unwrap()
             .entry(fp)
             .or_insert_with(|| {
-                Arc::new(Mutex::new(PhysContext::with_solver_budget(
-                    self.cfg.floorplan.solver_budget,
-                )))
+                let mut ctx =
+                    PhysContext::with_solver_budget(self.cfg.floorplan.solver_budget);
+                ctx.attach_warm_store(self.store.clone(), fp, config_fingerprint(&self.cfg));
+                Arc::new(Mutex::new(ctx))
             })
             .clone()
+    }
+
+    /// Aggregate warm-state persistence counters over every live
+    /// context.
+    fn warm_state_stats(&self) -> WarmStats {
+        let mut w = WarmStats::default();
+        for ctx in self.phys.lock().unwrap().values() {
+            w.accumulate(&ctx.lock().unwrap().warm_stats);
+        }
+        w
     }
 
     /// Serve one unit under `cfg` through the store funnel with the warm
@@ -179,6 +205,10 @@ impl Server {
         });
         if out.1 == Served::Cold {
             self.cold_evals.fetch_add(1, Ordering::Relaxed);
+            // The context just gained warm state worth keeping: spill it
+            // now (byte-identical re-spills are deduplicated), so even a
+            // killed daemon leaves the store warm.
+            phys.lock().unwrap().spill_warm();
         }
         out
     }
@@ -189,6 +219,7 @@ impl Server {
         let unit = parse_unit(req)?;
         let (res, served) = self.run_unit(&unit, &self.cfg, self.jobs);
         let result = res?;
+        let w = self.warm_state_stats();
         Ok(Json::Obj(vec![
             ("ok".into(), Json::Bool(true)),
             ("op".into(), Json::Str("run".into())),
@@ -202,6 +233,9 @@ impl Server {
                 "cold_evals".into(),
                 Json::Num(if served == Served::Cold { 1.0 } else { 0.0 }),
             ),
+            ("warm_state_hits".into(), Json::Num(w.hits as f64)),
+            ("warm_state_misses".into(), Json::Num(w.misses as f64)),
+            ("warm_state_spills".into(), Json::Num(w.spills as f64)),
             ("result".into(), unit_result_to_json(&result)),
         ]))
     }
@@ -231,6 +265,7 @@ impl Server {
         }
         let table = suite_table(&suite, &results)
             .ok_or_else(|| format!("could not reassemble suite `{suite}`"))?;
+        let w = self.warm_state_stats();
         Ok(Json::Obj(vec![
             ("ok".into(), Json::Bool(true)),
             ("op".into(), Json::Str("bench".into())),
@@ -239,12 +274,16 @@ impl Server {
             ("cold_evals".into(), Json::Num(cold as f64)),
             ("store_hits".into(), Json::Num(hits as f64)),
             ("dedup_waits".into(), Json::Num(dedup as f64)),
+            ("warm_state_hits".into(), Json::Num(w.hits as f64)),
+            ("warm_state_misses".into(), Json::Num(w.misses as f64)),
+            ("warm_state_spills".into(), Json::Num(w.spills as f64)),
             ("csv".into(), Json::Str(table.to_csv())),
         ]))
     }
 
     fn handle_stats(&self) -> Json {
         let s = self.store.stats();
+        let w = self.warm_state_stats();
         let (mut solver_cold, mut phys_evals, mut phys_warm) = (0u64, 0u64, 0u64);
         let contexts = {
             let phys = self.phys.lock().unwrap();
@@ -264,11 +303,15 @@ impl Server {
             ("store_misses".into(), Json::Num(s.misses as f64)),
             ("dedup_waits".into(), Json::Num(s.dedups as f64)),
             ("store_entries".into(), Json::Num(s.entries as f64)),
+            ("warm_entries".into(), Json::Num(s.warm_entries as f64)),
             ("cold_evals".into(), Json::Num(self.cold_evals.load(Ordering::Relaxed) as f64)),
             ("phys_contexts".into(), Json::Num(contexts as f64)),
             ("solver_cold_solves".into(), Json::Num(solver_cold as f64)),
             ("phys_evals".into(), Json::Num(phys_evals as f64)),
             ("phys_warm_evals".into(), Json::Num(phys_warm as f64)),
+            ("warm_state_hits".into(), Json::Num(w.hits as f64)),
+            ("warm_state_misses".into(), Json::Num(w.misses as f64)),
+            ("warm_state_spills".into(), Json::Num(w.spills as f64)),
         ])
     }
 

@@ -9,6 +9,9 @@
 
 use std::collections::VecDeque;
 
+use crate::util::hexbits;
+use crate::util::json::Json;
+
 /// A data token: payload plus the end-of-transaction marker (§3.3.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Token {
@@ -134,6 +137,81 @@ impl Fifo {
     /// Drained completely?
     pub fn is_drained(&self) -> bool {
         self.store.is_empty() && self.in_flight.is_empty()
+    }
+
+    /// Hex-bit serialization of the full FIFO state (warm-state
+    /// persistence — see [`crate::sim::incr`]). Deterministic bytes for
+    /// identical state.
+    pub(super) fn export(&self) -> Json {
+        Json::Obj(vec![
+            ("capacity".into(), Json::Num(self.capacity as f64)),
+            ("latency".into(), Json::Num(self.latency as f64)),
+            (
+                "store_vals".into(),
+                Json::Str(hexbits::pack_u64s(self.store.iter().map(|t| t.value))),
+            ),
+            (
+                "store_eot".into(),
+                Json::Str(hexbits::pack_bools(self.store.iter().map(|t| t.eot))),
+            ),
+            (
+                "flight_at".into(),
+                Json::Str(hexbits::pack_u64s(self.in_flight.iter().map(|&(a, _)| a))),
+            ),
+            (
+                "flight_vals".into(),
+                Json::Str(hexbits::pack_u64s(self.in_flight.iter().map(|&(_, t)| t.value))),
+            ),
+            (
+                "flight_eot".into(),
+                Json::Str(hexbits::pack_bools(self.in_flight.iter().map(|&(_, t)| t.eot))),
+            ),
+            ("pushed".into(), Json::Str(hexbits::pack_u64s([self.pushed]))),
+            ("popped".into(), Json::Str(hexbits::pack_u64s([self.popped]))),
+            ("peak".into(), Json::Str(hexbits::pack_u64s([self.peak_occupancy as u64]))),
+        ])
+    }
+
+    /// Inverse of [`Fifo::export`]; `None` on any malformed or
+    /// inconsistent field.
+    pub(super) fn import(v: &Json) -> Option<Fifo> {
+        let sval = |name: &str| v.get(name).and_then(Json::as_str);
+        let one = |name: &str| {
+            let vals = hexbits::unpack_u64s(sval(name)?)?;
+            if vals.len() == 1 {
+                Some(vals[0])
+            } else {
+                None
+            }
+        };
+        let store_vals = hexbits::unpack_u64s(sval("store_vals")?)?;
+        let store_eot = hexbits::unpack_bools(sval("store_eot")?)?;
+        let flight_at = hexbits::unpack_u64s(sval("flight_at")?)?;
+        let flight_vals = hexbits::unpack_u64s(sval("flight_vals")?)?;
+        let flight_eot = hexbits::unpack_bools(sval("flight_eot")?)?;
+        if store_vals.len() != store_eot.len()
+            || flight_at.len() != flight_vals.len()
+            || flight_at.len() != flight_eot.len()
+        {
+            return None;
+        }
+        Some(Fifo {
+            capacity: v.get("capacity")?.as_usize()?,
+            latency: v.get("latency")?.as_u64()? as u32,
+            store: store_vals
+                .iter()
+                .zip(&store_eot)
+                .map(|(&value, &eot)| Token { value, eot })
+                .collect(),
+            in_flight: flight_at
+                .iter()
+                .zip(flight_vals.iter().zip(&flight_eot))
+                .map(|(&at, (&value, &eot))| (at, Token { value, eot }))
+                .collect(),
+            pushed: one("pushed")?,
+            popped: one("popped")?,
+            peak_occupancy: one("peak")? as usize,
+        })
     }
 }
 

@@ -45,8 +45,12 @@
 
 use crate::graph::TaskGraph;
 use crate::hls::TaskEstimate;
+use crate::util::hexbits;
+use crate::util::json::Json;
 
 use super::engine::{assemble_result, build_state, edge_fifo, run_loop, SimError, SimState};
+use super::fifo::Fifo;
+use super::node::PipelinedNode;
 use super::{SimConfig, SimResult};
 
 /// Live snapshots kept per memo before the recording interval doubles
@@ -207,6 +211,151 @@ impl SimEngine {
     /// Drop the memo; the next run goes cold.
     pub fn reset(&mut self) {
         self.memo = None;
+    }
+
+    /// Serialize the memo for warm-state persistence
+    /// ([`crate::store::StoreKey::warm_sim`]). `None` when nothing is
+    /// memoized. Deterministic bytes: identical memos export identical
+    /// JSON, so the store's spill dedup can byte-compare. Counters are
+    /// process-local and deliberately not exported.
+    pub fn export_memo(&self) -> Option<Json> {
+        let m = self.memo.as_ref()?;
+        let snapshots: Vec<Json> = m
+            .snapshots
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("now".into(), Json::Str(hexbits::pack_u64s([s.now]))),
+                    (
+                        "fifos".into(),
+                        Json::Arr(s.state.fifos.iter().map(Fifo::export).collect()),
+                    ),
+                    (
+                        "nodes".into(),
+                        Json::Arr(s.state.nodes.iter().map(PipelinedNode::export).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Some(Json::Obj(vec![
+            ("identity".into(), Json::Str(hexbits::pack_bytes(self.identity.iter().copied()))),
+            ("edge_lat".into(), Json::Str(hexbits::pack_u32s(m.edge_lat.iter().copied()))),
+            ("max_cycles".into(), Json::Str(hexbits::pack_u64s([m.cfg_key.0]))),
+            ("mem_latency".into(), Json::Num(f64::from(m.cfg_key.1))),
+            ("cycles".into(), Json::Str(hexbits::pack_u64s([m.result.cycles]))),
+            ("tokens".into(), Json::Str(hexbits::pack_u64s([m.result.tokens_delivered]))),
+            (
+                "peak".into(),
+                Json::Str(hexbits::pack_u64s(
+                    m.result.peak_occupancy.iter().map(|&p| p as u64),
+                )),
+            ),
+            (
+                "stall_in".into(),
+                Json::Str(hexbits::pack_u64s(m.result.stalls.iter().map(|&(i, _)| i))),
+            ),
+            (
+                "stall_out".into(),
+                Json::Str(hexbits::pack_u64s(m.result.stalls.iter().map(|&(_, o)| o))),
+            ),
+            (
+                "first_push".into(),
+                Json::Str(hexbits::pack_u64s(
+                    m.first_push.iter().map(|fp| fp.unwrap_or(u64::MAX)),
+                )),
+            ),
+            ("interval".into(), Json::Str(hexbits::pack_u64s([m.interval]))),
+            ("snapshots".into(), Json::Arr(snapshots)),
+        ]))
+    }
+
+    /// Inverse of [`SimEngine::export_memo`]: adopt a disk-loaded memo.
+    /// Refuses (returns `false`) when a live memo already exists, when
+    /// the embedded identity echo differs from this engine's identity,
+    /// or on any malformed/shape-inconsistent field — a bad object costs
+    /// one cold run, never a wrong answer. Counters are untouched.
+    pub fn import_memo(&mut self, v: &Json) -> bool {
+        if self.memo.is_some() {
+            return false;
+        }
+        match self.parse_memo(v) {
+            Some(m) => {
+                self.memo = Some(m);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn parse_memo(&self, v: &Json) -> Option<Memo> {
+        let sval = |name: &str| v.get(name).and_then(Json::as_str);
+        let one = |name: &str| {
+            let vals = hexbits::unpack_u64s(sval(name)?)?;
+            if vals.len() == 1 {
+                Some(vals[0])
+            } else {
+                None
+            }
+        };
+        if hexbits::unpack_bytes(sval("identity")?)? != self.identity {
+            return None;
+        }
+        let edge_lat = hexbits::unpack_u32s(sval("edge_lat")?)?;
+        let ne = edge_lat.len();
+        let peak = hexbits::unpack_u64s(sval("peak")?)?;
+        let stall_in = hexbits::unpack_u64s(sval("stall_in")?)?;
+        let stall_out = hexbits::unpack_u64s(sval("stall_out")?)?;
+        let first_push_raw = hexbits::unpack_u64s(sval("first_push")?)?;
+        if peak.len() != ne || first_push_raw.len() != ne || stall_in.len() != stall_out.len() {
+            return None;
+        }
+        let nn = stall_in.len();
+        let interval = one("interval")?;
+        if interval == 0 {
+            return None;
+        }
+        let mut snapshots = Vec::new();
+        for sv in v.get("snapshots")?.as_arr()? {
+            let now = {
+                let vals = hexbits::unpack_u64s(sv.get("now").and_then(Json::as_str)?)?;
+                if vals.len() == 1 {
+                    vals[0]
+                } else {
+                    return None;
+                }
+            };
+            if snapshots.last().is_some_and(|s: &Snapshot| s.now >= now) {
+                return None; // snapshot cycles must be strictly ascending
+            }
+            let fifos: Vec<Fifo> =
+                sv.get("fifos")?.as_arr()?.iter().map(Fifo::import).collect::<Option<_>>()?;
+            let nodes: Vec<PipelinedNode> = sv
+                .get("nodes")?
+                .as_arr()?
+                .iter()
+                .map(PipelinedNode::import)
+                .collect::<Option<_>>()?;
+            if fifos.len() != ne || nodes.len() != nn {
+                return None;
+            }
+            snapshots.push(Snapshot { now, state: SimState { fifos, nodes } });
+        }
+        Some(Memo {
+            edge_lat,
+            cfg_key: (one("max_cycles")?, v.get("mem_latency")?.as_u64()? as u32),
+            result: SimResult {
+                cycles: one("cycles")?,
+                tokens_delivered: one("tokens")?,
+                peak_occupancy: peak.iter().map(|&p| p as usize).collect(),
+                stalls: stall_in.iter().copied().zip(stall_out).collect(),
+            },
+            snapshots,
+            first_push: first_push_raw
+                .iter()
+                .map(|&c| if c == u64::MAX { None } else { Some(c) })
+                .collect(),
+            interval,
+        })
     }
 
     /// [`super::simulate`], incrementally: a repeat of the memoized run
@@ -480,6 +629,35 @@ mod tests {
                 (w, c) => panic!("outcome mismatch: warm={w:?} cold={c:?}"),
             }
         }
+    }
+
+    /// A serialized memo survives a JSON round trip, answers a repeat
+    /// run as a memo hit in a fresh engine, and resumes latency deltas
+    /// off the disk-loaded snapshots under verify with zero divergences.
+    #[test]
+    fn exported_memo_round_trips_into_a_fresh_engine() {
+        let g = chain(3, 150);
+        let est = estimate_all(&g);
+        let cfg = SimConfig::default();
+        let mut a = SimEngine::new(&g, &est, false);
+        let r = a.simulate(&g, &est, &[2, 0], &cfg).unwrap();
+        let dump = a.export_memo().unwrap();
+        let text = dump.write();
+        assert_eq!(text, a.export_memo().unwrap().write(), "export bytes deterministic");
+        let mut b = SimEngine::new(&g, &est, true);
+        assert!(b.import_memo(&Json::parse(&text).unwrap()));
+        assert!(!b.import_memo(&dump), "a live memo is never overwritten");
+        let warm = b.simulate(&g, &est, &[2, 0], &cfg).unwrap();
+        assert_eq!(warm, r);
+        assert_eq!(b.memo_hits, 1, "disk-loaded memo answers a repeat directly");
+        let delta = b.simulate(&g, &est, &[2, 4], &cfg).unwrap();
+        assert_eq!(delta, simulate(&g, &est, &[2, 4], &cfg).unwrap());
+        assert_eq!(b.redone_cold, 0, "resume off disk-loaded snapshots verified cold");
+        // A different identity refuses the object outright.
+        let g2 = chain(4, 150);
+        let mut other = SimEngine::new(&g2, &estimate_all(&g2), false);
+        assert!(!other.import_memo(&dump));
+        assert!(other.memo.is_none());
     }
 
     /// Identity distinguishes behavioral changes (schedules, depths,

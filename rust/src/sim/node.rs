@@ -10,6 +10,8 @@
 
 use super::fifo::{Fifo, Token};
 use crate::hls::FsmSchedule;
+use crate::util::hexbits;
+use crate::util::json::Json;
 use std::collections::VecDeque;
 
 /// Lifecycle of a node.
@@ -232,6 +234,104 @@ impl PipelinedNode {
             debug_assert!(ok);
         }
         true
+    }
+
+    /// Hex-bit serialization of the full node state (warm-state
+    /// persistence — see [`crate::sim::incr`]). Deterministic bytes for
+    /// identical state.
+    pub(super) fn export(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("ii".into(), Json::Num(self.schedule.ii as f64)),
+            ("depth".into(), Json::Num(self.schedule.pipeline_depth as f64)),
+            ("trip".into(), Json::Str(hexbits::pack_u64s([self.schedule.trip_count]))),
+            ("startup".into(), Json::Num(self.schedule.startup_cycles as f64)),
+            ("drain".into(), Json::Num(self.schedule.drain_cycles as f64)),
+            (
+                "inputs".into(),
+                Json::Str(hexbits::pack_u64s(self.inputs.iter().map(|&f| f as u64))),
+            ),
+            (
+                "feedback".into(),
+                Json::Str(hexbits::pack_u64s(self.feedback_inputs.iter().map(|&f| f as u64))),
+            ),
+            (
+                "outputs".into(),
+                Json::Str(hexbits::pack_u64s(self.outputs.iter().map(|&f| f as u64))),
+            ),
+            ("detached".into(), Json::Bool(self.detached)),
+            (
+                "state".into(),
+                Json::Num(match self.state {
+                    NodeState::Starting => 0.0,
+                    NodeState::Running => 1.0,
+                    NodeState::Draining => 2.0,
+                    NodeState::Done => 3.0,
+                }),
+            ),
+            ("wait".into(), Json::Num(self.wait as f64)),
+            ("ii_wait".into(), Json::Num(self.ii_wait as f64)),
+            ("fired".into(), Json::Str(hexbits::pack_u64s([self.fired]))),
+            (
+                "pipe_at".into(),
+                Json::Str(hexbits::pack_u64s(self.in_pipe.iter().map(|&(e, _)| e))),
+            ),
+            (
+                "pipe_vals".into(),
+                Json::Str(hexbits::pack_u64s(self.in_pipe.iter().map(|&(_, v)| v))),
+            ),
+            ("stall_in".into(), Json::Str(hexbits::pack_u64s([self.stall_in]))),
+            ("stall_out".into(), Json::Str(hexbits::pack_u64s([self.stall_out]))),
+        ])
+    }
+
+    /// Inverse of [`PipelinedNode::export`]; `None` on any malformed or
+    /// inconsistent field.
+    pub(super) fn import(v: &Json) -> Option<PipelinedNode> {
+        let sval = |name: &str| v.get(name).and_then(Json::as_str);
+        let one = |name: &str| {
+            let vals = hexbits::unpack_u64s(sval(name)?)?;
+            if vals.len() == 1 {
+                Some(vals[0])
+            } else {
+                None
+            }
+        };
+        let idx = |name: &str| -> Option<Vec<usize>> {
+            Some(hexbits::unpack_u64s(sval(name)?)?.iter().map(|&f| f as usize).collect())
+        };
+        let pipe_at = hexbits::unpack_u64s(sval("pipe_at")?)?;
+        let pipe_vals = hexbits::unpack_u64s(sval("pipe_vals")?)?;
+        if pipe_at.len() != pipe_vals.len() {
+            return None;
+        }
+        Some(PipelinedNode {
+            name: v.get("name")?.as_str()?.to_string(),
+            schedule: FsmSchedule {
+                ii: v.get("ii")?.as_u64()? as u32,
+                pipeline_depth: v.get("depth")?.as_u64()? as u32,
+                trip_count: one("trip")?,
+                startup_cycles: v.get("startup")?.as_u64()? as u32,
+                drain_cycles: v.get("drain")?.as_u64()? as u32,
+            },
+            inputs: idx("inputs")?,
+            feedback_inputs: idx("feedback")?,
+            outputs: idx("outputs")?,
+            detached: v.get("detached")?.as_bool()?,
+            state: match v.get("state")?.as_u64()? {
+                0 => NodeState::Starting,
+                1 => NodeState::Running,
+                2 => NodeState::Draining,
+                3 => NodeState::Done,
+                _ => return None,
+            },
+            wait: v.get("wait")?.as_u64()? as u32,
+            ii_wait: v.get("ii_wait")?.as_u64()? as u32,
+            fired: one("fired")?,
+            in_pipe: pipe_at.iter().copied().zip(pipe_vals).collect(),
+            stall_in: one("stall_in")?,
+            stall_out: one("stall_out")?,
+        })
     }
 }
 

@@ -66,6 +66,8 @@ use std::time::Instant;
 
 use crate::ilp::simplex::{solve_lp, LpOutcome};
 use crate::ilp::{Cmp, Constraint, Problem};
+use crate::util::hexbits;
+use crate::util::json::Json;
 
 /// Canonical-extraction tolerance. Objective values of the problems this
 /// crate solves exactly (§4.3 partitioning: integer edge widths × integer
@@ -351,6 +353,53 @@ impl SolverContext {
         out
     }
 
+    /// Number of memoized proved results.
+    pub fn memo_len(&self) -> usize {
+        self.memo.values().map(Vec::len).sum()
+    }
+
+    /// Serialize the proved-result memo for persistence in the artifact
+    /// store (the warm-solver object payload). Deterministic: entries
+    /// are emitted in ascending fingerprint order and all floats/ints
+    /// are hex-bit packed ([`crate::util::hexbits`]), so identical memos
+    /// always serialize to identical bytes (the store's byte-compare
+    /// spill dedup depends on this).
+    pub fn export_memo(&self) -> Json {
+        let mut keys: Vec<u64> = self.memo.keys().copied().collect();
+        keys.sort_unstable();
+        let mut entries = Vec::new();
+        for k in keys {
+            for e in &self.memo[&k] {
+                entries.push(memo_entry_to_json(e));
+            }
+        }
+        Json::Obj(vec![("entries".into(), Json::Arr(entries))])
+    }
+
+    /// Merge entries from an exported memo into this context. Each entry
+    /// is re-fingerprinted from its deserialized `Problem` — a reuse
+    /// still requires full structural equality at solve time, so a
+    /// corrupt or mis-keyed object can cost at most a wasted entry,
+    /// never a wrong answer. Malformed entries and structural duplicates
+    /// are skipped. Returns the number of entries imported.
+    pub fn import_memo(&mut self, v: &Json) -> usize {
+        let Some(list) = v.get("entries").and_then(Json::as_arr) else {
+            return 0;
+        };
+        let mut imported = 0;
+        for e in list {
+            let Some(entry) = memo_entry_from_json(e) else { continue };
+            let key = fingerprint(&entry.problem);
+            let bucket = self.memo.entry(key).or_default();
+            if bucket.iter().any(|have| have.problem == entry.problem) {
+                continue;
+            }
+            bucket.push(entry);
+            imported += 1;
+        }
+        imported
+    }
+
     /// Solve a pure LP (no integrality), tracked. This is the §5.2 SDC
     /// path: no branching, `nodes = 0` by construction.
     pub fn solve_lp(&mut self, p: &Problem) -> (LpOutcome, SolverStats) {
@@ -402,6 +451,121 @@ fn fingerprint(p: &Problem) -> u64 {
         }
     }
     h
+}
+
+// ---------------------------------------------------------------------------
+// Memo persistence (hex-bit JSON — see `SolverContext::export_memo`)
+// ---------------------------------------------------------------------------
+
+fn memo_entry_to_json(e: &MemoEntry) -> Json {
+    let p = &e.problem;
+    let constraints: Vec<Json> = p
+        .constraints
+        .iter()
+        .map(|c| {
+            Json::Obj(vec![
+                (
+                    "cmp".into(),
+                    Json::Num(match c.cmp {
+                        Cmp::Le => 0.0,
+                        Cmp::Ge => 1.0,
+                        Cmp::Eq => 2.0,
+                    }),
+                ),
+                ("rhs".into(), Json::Str(hexbits::pack_f64s([c.rhs]))),
+                (
+                    "vars".into(),
+                    Json::Str(hexbits::pack_u64s(c.coeffs.iter().map(|&(j, _)| j as u64))),
+                ),
+                (
+                    "coefs".into(),
+                    Json::Str(hexbits::pack_f64s(c.coeffs.iter().map(|&(_, a)| a))),
+                ),
+            ])
+        })
+        .collect();
+    let outcome = match &e.outcome {
+        MemoOutcome::Optimal { x, obj, gap } => Json::Obj(vec![
+            ("kind".into(), Json::Str("optimal".into())),
+            ("x".into(), Json::Str(hexbits::pack_f64s(x.iter().copied()))),
+            ("obj".into(), Json::Str(hexbits::pack_f64s([*obj]))),
+            (
+                "gap".into(),
+                match gap {
+                    Some(g) => Json::Str(hexbits::pack_f64s([*g])),
+                    None => Json::Null,
+                },
+            ),
+        ]),
+        MemoOutcome::Infeasible => {
+            Json::Obj(vec![("kind".into(), Json::Str("infeasible".into()))])
+        }
+    };
+    Json::Obj(vec![
+        ("num_vars".into(), Json::Num(p.num_vars as f64)),
+        ("objective".into(), Json::Str(hexbits::pack_f64s(p.objective.iter().copied()))),
+        ("binary".into(), Json::Str(hexbits::pack_bools(p.binary.iter().copied()))),
+        ("constraints".into(), Json::Arr(constraints)),
+        ("outcome".into(), outcome),
+    ])
+}
+
+fn one_f64(v: &Json) -> Option<f64> {
+    let vals = hexbits::unpack_f64s(v.as_str()?)?;
+    if vals.len() == 1 {
+        Some(vals[0])
+    } else {
+        None
+    }
+}
+
+fn memo_entry_from_json(v: &Json) -> Option<MemoEntry> {
+    let num_vars = v.get("num_vars")?.as_u64()? as usize;
+    let objective = hexbits::unpack_f64s(v.get("objective")?.as_str()?)?;
+    let binary = hexbits::unpack_bools(v.get("binary")?.as_str()?)?;
+    if objective.len() != num_vars || binary.len() != num_vars {
+        return None;
+    }
+    let mut problem = Problem::new(num_vars);
+    problem.objective = objective;
+    problem.binary = binary;
+    for c in v.get("constraints")?.as_arr()? {
+        let cmp = match c.get("cmp")?.as_u64()? {
+            0 => Cmp::Le,
+            1 => Cmp::Ge,
+            2 => Cmp::Eq,
+            _ => return None,
+        };
+        let rhs = one_f64(c.get("rhs")?)?;
+        let vars = hexbits::unpack_u64s(c.get("vars")?.as_str()?)?;
+        let coefs = hexbits::unpack_f64s(c.get("coefs")?.as_str()?)?;
+        if vars.len() != coefs.len() || vars.iter().any(|&j| j as usize >= num_vars) {
+            return None;
+        }
+        problem.add(Constraint {
+            coeffs: vars.iter().zip(&coefs).map(|(&j, &a)| (j as usize, a)).collect(),
+            cmp,
+            rhs,
+        });
+    }
+    let o = v.get("outcome")?;
+    let outcome = match o.get("kind")?.as_str()? {
+        "optimal" => {
+            let x = hexbits::unpack_f64s(o.get("x")?.as_str()?)?;
+            if x.len() != num_vars {
+                return None;
+            }
+            let obj = one_f64(o.get("obj")?)?;
+            let gap = match o.get("gap") {
+                Some(Json::Null) | None => None,
+                Some(g) => Some(one_f64(g)?),
+            };
+            MemoOutcome::Optimal { x, obj, gap }
+        }
+        "infeasible" => MemoOutcome::Infeasible,
+        _ => return None,
+    };
+    Some(MemoEntry { problem, outcome })
 }
 
 // ---------------------------------------------------------------------------
@@ -592,6 +756,41 @@ mod tests {
         assert!(s2.warm_hit);
         assert_eq!(ctx.warm_hits, 1);
         assert_eq!(ctx.solves, 2);
+    }
+
+    #[test]
+    fn exported_memo_warm_starts_a_fresh_context_identically() {
+        let mut p = Problem::new(2);
+        p.objective = vec![-1.0, -1.0];
+        p.binary = vec![true, true];
+        p.add(Constraint::le(vec![(0, 1.0), (1, 1.0)], 1.5));
+        let mut a = SolverContext::new();
+        let MilpOutcome::Optimal { x: x1, obj: o1, .. } =
+            a.solve_milp(&ExactBackend, &p, &SolveParams::default(), None)
+        else {
+            panic!("solve must be optimal");
+        };
+        assert_eq!(a.memo_len(), 1);
+        let exported = a.export_memo();
+        // Deterministic bytes: re-exporting the same memo is identical.
+        assert_eq!(exported.write(), a.export_memo().write());
+
+        let mut b = SolverContext::new();
+        assert_eq!(b.import_memo(&exported), 1);
+        // Re-importing is a structural no-op.
+        assert_eq!(b.import_memo(&exported), 0);
+        let MilpOutcome::Optimal { x: x2, obj: o2, stats } =
+            b.solve_milp(&ExactBackend, &p, &SolveParams::default(), None)
+        else {
+            panic!("imported memo must answer optimal");
+        };
+        assert!(stats.warm_hit, "imported entry must serve the solve warm");
+        assert_eq!(stats.nodes, 0);
+        assert_eq!(x1, x2, "disk round-trip must hand back the identical solution");
+        assert_eq!(o1.to_bits(), o2.to_bits());
+        assert_eq!(b.cold_solves(), 0);
+        // Garbage payloads import nothing.
+        assert_eq!(SolverContext::new().import_memo(&Json::Num(3.0)), 0);
     }
 
     #[test]

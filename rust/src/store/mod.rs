@@ -68,6 +68,27 @@
 //! payloads strip the machine-dependent `wall_seconds` field (it moves
 //! to the index `cost` column), so a store-served result is
 //! byte-identical to a freshly computed one.
+//!
+//! ## Warm state
+//!
+//! Besides finished artifacts the store persists *warm state* — the
+//! in-process caches PRs 4–7 built (the `SolverContext` proved-result
+//! memo, `PhysEngine` placement/route/STA state, `SimEngine` snapshot
+//! memos) — under the dedicated warm [`ArtifactKind`]s, so a restarted
+//! daemon or a fresh fleet worker starts warm instead of re-paying cold
+//! solves. Warm objects are *hints, never truth*: every consumer
+//! re-validates structurally before reuse (the solver memo requires full
+//! `Problem` equality, phys/sim state carries a structural identity echo
+//! checked on import) and a warm-served result is provably byte-identical
+//! to cold (the PR 4/5/7 contracts, with `TAPA_PHYS_VERIFY` covering
+//! disk-loaded state through the same verify path). Warm ids additionally
+//! fold [`WARM_VERSION`], so a warm-layout bump orphans old warm objects
+//! without disturbing artifact ids. Spills go through
+//! [`ArtifactStore::put_warm`]: atomic write-to-temp+rename with
+//! byte-compare in-flight dedup (N concurrent identical spills, one
+//! write). Warm entries share the index LRU clock, so
+//! [`ArtifactStore::gc`]/[`ArtifactStore::gc_bytes`] evict them like any
+//! other entry.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -87,6 +108,11 @@ use crate::util::Fnv1a;
 /// it orphans (never mis-serves) artifacts written by older layouts.
 pub const STORE_VERSION: u64 = 1;
 
+/// On-disk warm-state layout version — folded into warm key ids only
+/// (see [`StoreKey::id`]), so a warm serialization change orphans old
+/// warm objects without invalidating finished artifacts.
+pub const WARM_VERSION: u64 = 1;
+
 /// The index (LRU ledger) file inside a store directory.
 pub const INDEX_FILE: &str = "index.json";
 
@@ -102,6 +128,15 @@ pub enum ArtifactKind {
     Session,
     /// One §6.3 sweep point (a `util_ratio: Some(r)` unit).
     SweepPoint,
+    /// Persisted `SolverContext` proved-result memo for one
+    /// `(region, config)` warm context.
+    WarmSolver,
+    /// Persisted `PhysEngine` placement/route/STA state for one
+    /// `(engine identity, region, config)`.
+    WarmPhys,
+    /// Persisted `SimEngine` snapshot memo for one
+    /// `(sim identity, config)`.
+    WarmSim,
 }
 
 impl ArtifactKind {
@@ -109,13 +144,32 @@ impl ArtifactKind {
         match self {
             ArtifactKind::Session => "session",
             ArtifactKind::SweepPoint => "sweep",
+            ArtifactKind::WarmSolver => "warm-solver",
+            ArtifactKind::WarmPhys => "warm-phys",
+            ArtifactKind::WarmSim => "warm-sim",
         }
     }
 
     pub fn parse(s: &str) -> Option<ArtifactKind> {
-        [ArtifactKind::Session, ArtifactKind::SweepPoint]
-            .into_iter()
-            .find(|k| k.name() == s)
+        [
+            ArtifactKind::Session,
+            ArtifactKind::SweepPoint,
+            ArtifactKind::WarmSolver,
+            ArtifactKind::WarmPhys,
+            ArtifactKind::WarmSim,
+        ]
+        .into_iter()
+        .find(|k| k.name() == s)
+    }
+
+    /// True for the warm-state kinds (persisted caches, not finished
+    /// artifacts) — they fold [`WARM_VERSION`] into their id and are
+    /// excluded from the artifact `entries` count in [`StoreStats`].
+    pub fn is_warm(self) -> bool {
+        matches!(
+            self,
+            ArtifactKind::WarmSolver | ArtifactKind::WarmPhys | ArtifactKind::WarmSim
+        )
     }
 }
 
@@ -180,13 +234,54 @@ impl StoreKey {
         }
     }
 
+    /// Key of the persisted solver memo for one warm context: the
+    /// effective region fingerprint the context serves and the flow
+    /// config it was created under. Design-independent — the memo is
+    /// validated per-entry by full structural `Problem` equality.
+    pub fn warm_solver(region_fp: u64, config_hash: u64) -> StoreKey {
+        StoreKey {
+            kind: ArtifactKind::WarmSolver,
+            design_hash: 0,
+            device_fp: region_fp,
+            config_hash,
+        }
+    }
+
+    /// Key of one persisted `PhysEngine` state: the engine identity
+    /// (design + device + estimates — `phys::engine_key`) plus the warm
+    /// context's region fingerprint and config hash.
+    pub fn warm_phys(engine_key: u64, region_fp: u64, config_hash: u64) -> StoreKey {
+        StoreKey {
+            kind: ArtifactKind::WarmPhys,
+            design_hash: engine_key,
+            device_fp: region_fp,
+            config_hash,
+        }
+    }
+
+    /// Key of one persisted `SimEngine` memo: the sim identity hash plus
+    /// the config hash (simulation is device-independent).
+    pub fn warm_sim(sim_key: u64, config_hash: u64) -> StoreKey {
+        StoreKey {
+            kind: ArtifactKind::WarmSim,
+            design_hash: sim_key,
+            device_fp: 0,
+            config_hash,
+        }
+    }
+
     /// The on-disk identity: every key component plus every on-disk
-    /// format version (the staleness fold — see the module docs).
+    /// format version (the staleness fold — see the module docs). Warm
+    /// kinds additionally fold [`WARM_VERSION`], so warm-layout bumps
+    /// orphan warm objects only.
     pub fn id(&self) -> u64 {
         let mut h = Fnv1a::new();
         h.write_u64(STORE_VERSION);
         h.write_u64(FORMAT_VERSION);
         h.write_u64(MANIFEST_VERSION);
+        if self.kind.is_warm() {
+            h.write_u64(WARM_VERSION);
+        }
         h.write_bytes(self.kind.name().as_bytes());
         h.write_u64(self.design_hash);
         h.write_u64(self.device_fp);
@@ -231,8 +326,10 @@ pub struct StoreStats {
     pub misses: u64,
     /// Requests deduplicated onto a concurrent identical request.
     pub dedups: u64,
-    /// Artifacts currently in the index.
+    /// Finished artifacts currently in the index (warm state excluded).
     pub entries: usize,
+    /// Warm-state objects currently in the index.
+    pub warm_entries: usize,
 }
 
 /// One in-flight evaluation other requesters of the same key wait on.
@@ -475,13 +572,92 @@ impl ArtifactStore {
         Ok(())
     }
 
+    // -- warm state -------------------------------------------------------
+
+    /// Fetch the warm-state payload for `key`, verifying the object's
+    /// store/warm versions and stored key components structurally (an id
+    /// collision or a stale layout misses instead of serving wrong warm
+    /// state). A hit bumps the entry's LRU seq but does not count toward
+    /// the artifact hit/miss counters — warm traffic is reported
+    /// separately (`phys::WarmStats`).
+    pub fn get_warm(&self, key: &StoreKey) -> Option<Json> {
+        debug_assert!(key.kind.is_warm());
+        let text = std::fs::read_to_string(self.object_path(key.id())).ok()?;
+        let root = Json::parse(&text).ok()?;
+        if root.get("version").and_then(Json::as_u64) != Some(STORE_VERSION) {
+            return None;
+        }
+        if root.get("warm_version").and_then(Json::as_u64) != Some(WARM_VERSION) {
+            return None;
+        }
+        let hexes = [
+            ("design_hash", key.design_hash),
+            ("device_fp", key.device_fp),
+            ("config_hash", key.config_hash),
+        ];
+        for (field, want) in hexes {
+            let got = root
+                .get(field)
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())?;
+            if got != want {
+                return None;
+            }
+        }
+        if root.get("kind").and_then(Json::as_str) != Some(key.kind.name()) {
+            return None;
+        }
+        let payload = root.get("payload")?.clone();
+        self.touch(key, None);
+        Some(payload)
+    }
+
+    /// Spill a warm-state payload atomically, deduplicating in-flight
+    /// identical spills: the whole read-compare-write-index cycle runs
+    /// under the index lock, and a payload whose serialized bytes match
+    /// the object already on disk skips the write (the entry's LRU seq
+    /// is still bumped). Returns `true` iff this call wrote the object —
+    /// N concurrent identical spills report exactly one write.
+    pub fn put_warm(&self, key: &StoreKey, payload: &Json) -> Result<bool, SessionError> {
+        debug_assert!(key.kind.is_warm());
+        let doc = Json::Obj(vec![
+            ("version".into(), Json::Num(STORE_VERSION as f64)),
+            ("warm_version".into(), Json::Num(WARM_VERSION as f64)),
+            ("kind".into(), Json::Str(key.kind.name().into())),
+            ("design_hash".into(), Json::Str(format!("{:016x}", key.design_hash))),
+            ("device_fp".into(), Json::Str(format!("{:016x}", key.device_fp))),
+            ("config_hash".into(), Json::Str(format!("{:016x}", key.config_hash))),
+            ("payload".into(), payload.clone()),
+        ]);
+        let mut text = doc.write();
+        text.push('\n');
+        let _g = self.index_lock.lock().unwrap();
+        let path = self.object_path(key.id());
+        let fresh = std::fs::read_to_string(&path).map(|have| have != text).unwrap_or(true);
+        if fresh {
+            self.write_atomic(&path, &text)?;
+        }
+        // Bump the LRU seq inline — `touch` would re-take the held lock.
+        let mut ix = self.load_index();
+        ix.seq += 1;
+        let seq = ix.seq;
+        let e = ix.entries.entry(key.id()).or_insert(IndexEntry {
+            kind: key.kind.name().to_string(),
+            seq,
+            cost: None,
+        });
+        e.seq = seq;
+        let _ = self.save_index(&ix);
+        Ok(fresh)
+    }
+
     /// Last recorded computation cost of `key` in wall-seconds — the
     /// store history cost-weighted shard planning seeds from.
     pub fn unit_cost(&self, key: &StoreKey) -> Option<f64> {
         self.load_index().entries.get(&key.id()).and_then(|e| e.cost)
     }
 
-    /// Number of indexed artifacts.
+    /// Number of indexed entries (finished artifacts plus warm state).
     pub fn len(&self) -> usize {
         self.load_index().entries.len()
     }
@@ -490,13 +666,23 @@ impl ArtifactStore {
         self.len() == 0
     }
 
-    /// `(hits, misses, dedups, entries)` snapshot.
+    /// Counter snapshot; `entries` counts finished artifacts and
+    /// `warm_entries` counts warm-state objects (partitioned by the
+    /// index `kind` column, so serve telemetry can keep reporting the
+    /// artifact count unchanged by warm spills).
     pub fn stats(&self) -> StoreStats {
+        let ix = self.load_index();
+        let warm = ix
+            .entries
+            .values()
+            .filter(|e| ArtifactKind::parse(&e.kind).is_some_and(ArtifactKind::is_warm))
+            .count();
         StoreStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             dedups: self.dedups.load(Ordering::Relaxed),
-            entries: self.len(),
+            entries: ix.entries.len() - warm,
+            warm_entries: warm,
         }
     }
 
@@ -526,26 +712,7 @@ impl ArtifactStore {
     pub fn gc(&self, max_entries: usize) -> usize {
         let _g = self.index_lock.lock().unwrap();
         let mut ix = self.load_index();
-        // Adopt orphaned objects at seq 0 (oldest — they have no
-        // recorded use), in deterministic filename order.
-        let dir = self.root.join(OBJECT_DIR);
-        let mut names: Vec<String> = std::fs::read_dir(&dir)
-            .map(|rd| {
-                rd.filter_map(|e| e.ok())
-                    .filter_map(|e| e.file_name().into_string().ok())
-                    .collect()
-            })
-            .unwrap_or_default();
-        names.sort();
-        for name in names {
-            let Some(hex) = name.strip_suffix(".json") else { continue };
-            let Ok(id) = u64::from_str_radix(hex, 16) else { continue };
-            ix.entries.entry(id).or_insert(IndexEntry {
-                kind: "session".to_string(),
-                seq: 0,
-                cost: None,
-            });
-        }
+        self.adopt_orphans(&mut ix);
         if ix.entries.len() <= max_entries {
             let _ = self.save_index(&ix);
             return 0;
@@ -573,6 +740,76 @@ impl ArtifactStore {
         }
         let _ = self.save_index(&ix);
         evicted
+    }
+
+    /// Evict artifacts down to a total object-byte budget, in the same
+    /// deterministic LRU order as [`ArtifactStore::gc`] (ascending
+    /// `(last-use seq, id)`, pinned ids skipped, orphans re-adopted
+    /// first). Warm-state objects make size pressure real for long-lived
+    /// stores; this is the byte-budget policy `tapa gc --max-bytes`
+    /// surfaces. Returns the number of evicted objects.
+    pub fn gc_bytes(&self, max_bytes: u64) -> usize {
+        let _g = self.index_lock.lock().unwrap();
+        let mut ix = self.load_index();
+        self.adopt_orphans(&mut ix);
+        let size_of = |id: u64| {
+            std::fs::metadata(self.object_path(id)).map(|m| m.len()).unwrap_or(0)
+        };
+        let mut total: u64 = ix.entries.keys().map(|&id| size_of(id)).sum();
+        if total <= max_bytes {
+            let _ = self.save_index(&ix);
+            return 0;
+        }
+        let pins = self.pins.lock().unwrap();
+        let mut order: Vec<(u64, u64)> = ix
+            .entries
+            .iter()
+            .filter(|(id, _)| !pins.contains_key(id))
+            .map(|(id, e)| (e.seq, *id))
+            .collect();
+        drop(pins);
+        order.sort_unstable();
+        let mut evicted = 0;
+        for &(_, id) in &order {
+            if total <= max_bytes {
+                break;
+            }
+            let sz = size_of(id);
+            if std::fs::remove_file(self.object_path(id)).is_ok() {
+                ix.entries.remove(&id);
+                total = total.saturating_sub(sz);
+                evicted += 1;
+            } else if !self.object_path(id).exists() {
+                ix.entries.remove(&id);
+                total = total.saturating_sub(sz);
+            }
+        }
+        let _ = self.save_index(&ix);
+        evicted
+    }
+
+    /// Adopt objects missing from the index at seq 0 (oldest — they have
+    /// no recorded use), in deterministic filename order. Must be called
+    /// with `index_lock` held.
+    fn adopt_orphans(&self, ix: &mut Index) {
+        let dir = self.root.join(OBJECT_DIR);
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| e.file_name().into_string().ok())
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        for name in names {
+            let Some(hex) = name.strip_suffix(".json") else { continue };
+            let Ok(id) = u64::from_str_radix(hex, 16) else { continue };
+            ix.entries.entry(id).or_insert(IndexEntry {
+                kind: "session".to_string(),
+                seq: 0,
+                cost: None,
+            });
+        }
     }
 
     // -- the evaluation funnel -------------------------------------------
@@ -689,6 +926,33 @@ mod tests {
         assert_eq!(base.id(), again.id());
         assert_eq!(base.hex(), again.hex());
         assert_eq!(base.hex().len(), 16);
+    }
+
+    #[test]
+    fn warm_keys_are_versioned_and_distinct() {
+        let a = StoreKey::warm_solver(1, 2);
+        let b = StoreKey::warm_phys(7, 1, 2);
+        let c = StoreKey::warm_sim(7, 2);
+        assert!(a.kind.is_warm() && b.kind.is_warm() && c.kind.is_warm());
+        assert_ne!(a.id(), b.id());
+        assert_ne!(a.id(), c.id());
+        assert_ne!(b.id(), c.id());
+        assert_ne!(StoreKey::warm_solver(1, 2).id(), StoreKey::warm_solver(1, 3).id());
+        assert_ne!(StoreKey::warm_phys(7, 1, 2).id(), StoreKey::warm_phys(8, 1, 2).id());
+        // The warm id preimage folds WARM_VERSION after the shared
+        // version folds — a bump orphans warm objects only.
+        let mut h = Fnv1a::new();
+        h.write_u64(STORE_VERSION);
+        h.write_u64(FORMAT_VERSION);
+        h.write_u64(MANIFEST_VERSION);
+        h.write_u64(WARM_VERSION);
+        h.write_bytes(ArtifactKind::WarmSolver.name().as_bytes());
+        h.write_u64(0);
+        h.write_u64(1);
+        h.write_u64(2);
+        assert_eq!(a.id(), h.finish());
+        assert!(!ArtifactKind::Session.is_warm());
+        assert_eq!(ArtifactKind::parse("warm-phys"), Some(ArtifactKind::WarmPhys));
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Fixed-width hex packing for exact binary round-trips through JSON.
+//!
+//! The persistent warm-state objects (see [`crate::store`]) must reproduce
+//! solver/phys/sim state *bit-for-bit*: `f64::NAN`, `f32` subnormals and
+//! `u64` values above 2^53 all survive, none of which the numeric JSON
+//! writer guarantees. Values are therefore packed into strings of
+//! fixed-width lowercase hex words — 16 chars per 64-bit value, 8 per
+//! 32-bit value, 2 per byte, 1 (`'0'`/`'1'`) per bool — with no
+//! separators. Decoding is strict: any non-hex char or a length that is
+//! not a multiple of the word width yields `None` rather than a guess.
+
+use std::fmt::Write as _;
+
+/// Pack 64-bit words as 16 hex chars each.
+pub fn pack_u64s(vals: impl IntoIterator<Item = u64>) -> String {
+    let mut s = String::new();
+    for v in vals {
+        let _ = write!(s, "{v:016x}");
+    }
+    s
+}
+
+/// Inverse of [`pack_u64s`]; `None` on malformed input.
+pub fn unpack_u64s(s: &str) -> Option<Vec<u64>> {
+    unpack_words(s, 16)
+}
+
+/// Pack 32-bit words as 8 hex chars each.
+pub fn pack_u32s(vals: impl IntoIterator<Item = u32>) -> String {
+    let mut s = String::new();
+    for v in vals {
+        let _ = write!(s, "{v:08x}");
+    }
+    s
+}
+
+/// Inverse of [`pack_u32s`]; `None` on malformed input.
+pub fn unpack_u32s(s: &str) -> Option<Vec<u32>> {
+    Some(unpack_words(s, 8)?.into_iter().map(|v| v as u32).collect())
+}
+
+/// Pack `f64`s by IEEE-754 bit pattern (16 hex chars each).
+pub fn pack_f64s(vals: impl IntoIterator<Item = f64>) -> String {
+    pack_u64s(vals.into_iter().map(f64::to_bits))
+}
+
+/// Inverse of [`pack_f64s`]; `None` on malformed input.
+pub fn unpack_f64s(s: &str) -> Option<Vec<f64>> {
+    Some(unpack_u64s(s)?.into_iter().map(f64::from_bits).collect())
+}
+
+/// Pack `f32`s by IEEE-754 bit pattern (8 hex chars each).
+pub fn pack_f32s(vals: impl IntoIterator<Item = f32>) -> String {
+    pack_u32s(vals.into_iter().map(f32::to_bits))
+}
+
+/// Inverse of [`pack_f32s`]; `None` on malformed input.
+pub fn unpack_f32s(s: &str) -> Option<Vec<f32>> {
+    Some(unpack_u32s(s)?.into_iter().map(f32::from_bits).collect())
+}
+
+/// Pack raw bytes as 2 hex chars each.
+pub fn pack_bytes(vals: impl IntoIterator<Item = u8>) -> String {
+    let mut s = String::new();
+    for v in vals {
+        let _ = write!(s, "{v:02x}");
+    }
+    s
+}
+
+/// Inverse of [`pack_bytes`]; `None` on malformed input.
+pub fn unpack_bytes(s: &str) -> Option<Vec<u8>> {
+    Some(unpack_words(s, 2)?.into_iter().map(|v| v as u8).collect())
+}
+
+/// Pack bools as one `'0'`/`'1'` char each.
+pub fn pack_bools(vals: impl IntoIterator<Item = bool>) -> String {
+    vals.into_iter().map(|b| if b { '1' } else { '0' }).collect()
+}
+
+/// Inverse of [`pack_bools`]; `None` on any char other than `'0'`/`'1'`.
+pub fn unpack_bools(s: &str) -> Option<Vec<bool>> {
+    s.chars()
+        .map(|c| match c {
+            '0' => Some(false),
+            '1' => Some(true),
+            _ => None,
+        })
+        .collect()
+}
+
+fn unpack_words(s: &str, width: usize) -> Option<Vec<u64>> {
+    let b = s.as_bytes();
+    if b.len() % width != 0 {
+        return None;
+    }
+    b.chunks(width)
+        .map(|chunk| {
+            let word = std::str::from_utf8(chunk).ok()?;
+            u64::from_str_radix(word, 16).ok()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip_covers_full_range() {
+        let vals = vec![0, 1, u64::MAX, 1 << 53, (1 << 53) + 1, 0xdead_beef_cafe_f00d];
+        assert_eq!(unpack_u64s(&pack_u64s(vals.iter().copied())).unwrap(), vals);
+        assert_eq!(unpack_u64s("").unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        let vals = vec![0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, f64::MIN_POSITIVE / 2.0];
+        let back = unpack_f64s(&pack_f64s(vals.iter().copied())).unwrap();
+        let bits: Vec<u64> = back.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u64> = vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn f32_and_u32_roundtrip() {
+        let f = vec![0.0f32, -1.25, f32::NAN, f32::MIN_POSITIVE / 4.0];
+        let back = unpack_f32s(&pack_f32s(f.iter().copied())).unwrap();
+        assert_eq!(
+            back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            f.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let u = vec![0u32, 7, u32::MAX];
+        assert_eq!(unpack_u32s(&pack_u32s(u.iter().copied())).unwrap(), u);
+    }
+
+    #[test]
+    fn bytes_and_bools_roundtrip() {
+        let b = vec![0u8, 0x7f, 0xff, 1];
+        assert_eq!(unpack_bytes(&pack_bytes(b.iter().copied())).unwrap(), b);
+        let flags = vec![true, false, true, true];
+        assert_eq!(pack_bools(flags.iter().copied()), "1011");
+        assert_eq!(unpack_bools("1011").unwrap(), flags);
+    }
+
+    #[test]
+    fn malformed_input_is_rejected() {
+        assert!(unpack_u64s("0123").is_none()); // not a multiple of 16
+        assert!(unpack_u64s("zzzzzzzzzzzzzzzz").is_none()); // non-hex
+        assert!(unpack_u32s("0123456").is_none());
+        assert!(unpack_bools("012").is_none());
+        assert!(unpack_bytes("abc").is_none());
+    }
+}

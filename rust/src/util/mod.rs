@@ -4,6 +4,7 @@
 //! need: seeded generators, many-case runners, and failure reporting with
 //! the offending seed).
 
+pub mod hexbits;
 pub mod json;
 pub mod pool;
 pub mod rng;

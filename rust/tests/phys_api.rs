@@ -425,6 +425,85 @@ fn warm_chained_sweep_scores_equal_cold_per_point_scores() {
     }
 }
 
+/// The PR 9 tentpole property end to end: warm state spilled to an
+/// [`ArtifactStore`] and reloaded into a *fresh* context answers the
+/// same work bitwise-identically to cold — solver floorplan, phys
+/// evaluation, and simulation — with zero cold solver evals, and the
+/// `TAPA_PHYS_VERIFY` guard (programmatically, [`PhysContext::set_verify`])
+/// passes over the disk-loaded state with zero divergences.
+#[test]
+fn spilled_warm_state_reloads_bitwise_equal_to_cold() {
+    use tapa::sim::SimConfig;
+    use tapa::store::{config_fingerprint, ArtifactStore};
+    let g = chain_graph("phys_spill_chain", 10);
+    let d = DeviceKind::U250.device();
+    let est = estimate_all(&g);
+    let params = AnalyticalParams::default();
+    let fcfg = FloorplanConfig::default();
+    let scfg = SimConfig::default();
+    let lats: Vec<u32> = vec![2; g.num_edges()];
+    let dir =
+        std::env::temp_dir().join(format!("tapa_phys_warm_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let region_fp = d.region_fingerprint();
+    let cfg_hash = config_fingerprint(&FlowConfig::default());
+
+    // First process: solve, evaluate, simulate — then spill.
+    let mut a = PhysContext::new();
+    a.attach_warm_store(store.clone(), region_fp, cfg_hash);
+    assert_eq!(a.warm_stats.misses, 1, "empty store: the solver memo lookup misses");
+    let plan = tapa::floorplan::floorplan_in(&g, &d, &est, &fcfg, None, &mut a.solver).unwrap();
+    assert!(a.solver.memo_len() >= 1, "proved solves populate the memo");
+    let eval_a = a.engine_for(&g, &d, &est).evaluate(&plan, &lats, &params);
+    let sim_a = a.sim_for(&g, &est).simulate(&g, &est, &lats, &scfg).unwrap();
+    let (a_solves, a_warm) = (a.solver.solves, a.solver.warm_hits);
+    let spilled = a.spill_warm();
+    assert_eq!(spilled, 3, "solver memo + one engine + one sim spilled");
+    assert_eq!(a.warm_stats.spills, 3);
+    assert_eq!(a.spill_warm(), 0, "unchanged state re-spills are fully deduplicated");
+
+    // Second process (fresh context, same store): everything loads warm.
+    let mut b = PhysContext::new();
+    b.attach_warm_store(store.clone(), region_fp, cfg_hash);
+    b.set_verify(true);
+    assert_eq!(b.warm_stats.hits, 1, "solver memo served from the store");
+    assert_eq!(b.solver.memo_len(), a.solver.memo_len(), "memo round-trips whole");
+    let plan_b =
+        tapa::floorplan::floorplan_in(&g, &d, &est, &fcfg, None, &mut b.solver).unwrap();
+    assert_eq!(plan_b.assignment, plan.assignment, "warm-served floorplan identical");
+    assert_eq!(b.solver.solves, a_solves, "same work submitted");
+    assert!(
+        b.solver.warm_hits > a_warm,
+        "repeat solves answered from the disk-loaded memo: {} vs {a_warm}",
+        b.solver.warm_hits
+    );
+    assert_eq!(
+        b.solver.solves - b.solver.warm_hits,
+        0,
+        "zero cold solver evals on the warm-started process"
+    );
+    let eval_b = b.engine_for(&g, &d, &est).evaluate(&plan, &lats, &params);
+    let sim_b = b.sim_for(&g, &est).simulate(&g, &est, &lats, &scfg).unwrap();
+    assert_eq!(b.warm_stats.hits, 3, "engine state and sim memo also loaded warm");
+    assert_eq!(b.warm_stats.misses, 0);
+    assert_same_eval(&eval_b, &eval_a, "warm-loaded vs original");
+    assert_eq!(sim_b, sim_a, "warm-loaded simulation bitwise equal");
+    // The verify guard re-ran every warm answer cold over the
+    // disk-loaded state: zero divergences allowed.
+    assert_eq!(b.telemetry().redone_cold, 0, "phys verify over disk-loaded state");
+    assert_eq!(b.sim_for(&g, &est).redone_cold, 0, "sim verify over disk-loaded state");
+
+    // Truly cold reference (no store): the warm-loaded answers equal it.
+    let mut cold = PhysContext::new();
+    let eval_c = cold.engine_for(&g, &d, &est).evaluate(&plan, &lats, &params);
+    let sim_c = cold.sim_for(&g, &est).simulate(&g, &est, &lats, &scfg).unwrap();
+    assert_same_eval(&eval_b, &eval_c, "warm-loaded vs cold");
+    assert_eq!(sim_b, sim_c);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Satellite: [`SessionSet`] shares one `PhysContext` across devices
 /// whose region trees coincide, so the second device's identical
 /// floorplan solves are answered from the shared proved-result memo

@@ -130,6 +130,48 @@ fn bench_csv_matches_in_process_suite_and_repeats_warm() {
 }
 
 #[test]
+fn restarted_daemon_starts_warm_from_persisted_state() {
+    // The tentpole contract: a daemon restart over a warm store answers
+    // a repeated `run` with zero cold evaluations and a byte-identical
+    // response, and the fresh per-region context re-adopts the persisted
+    // solver memo (warm-state hit) instead of starting from zero.
+    let (dir, srv) = open("warmstate", 1);
+    let unit = suite_units("fast-suite").unwrap().remove(0);
+    let first = ok(&srv, &run_line(&unit));
+    assert_eq!(first.get("served").and_then(Json::as_str), Some("cold"));
+    assert!(
+        first.get("warm_state_spills").and_then(Json::as_u64).unwrap() >= 1,
+        "a cold evaluation must spill warm state: {first:?}"
+    );
+    assert!(
+        srv.store().stats().warm_entries >= 1,
+        "spilled warm-state objects must be indexed"
+    );
+    let want = first.get("result").expect("result").write();
+
+    drop(srv);
+    let srv = Server::open(&dir, 1, FlowConfig::default()).unwrap();
+    let v = ok(&srv, &run_line(&unit));
+    assert_eq!(v.get("served").and_then(Json::as_str), Some("store"));
+    assert_eq!(v.get("cold_evals").and_then(Json::as_u64), Some(0));
+    assert!(
+        v.get("warm_state_hits").and_then(Json::as_u64).unwrap() >= 1,
+        "restarted daemon must adopt the persisted solver memo: {v:?}"
+    );
+    assert_eq!(v.get("result").expect("result").write(), want);
+
+    let stats = ok(&srv, "{\"op\":\"stats\"}");
+    assert_eq!(
+        stats.get("solver_cold_solves").and_then(Json::as_u64),
+        Some(0),
+        "a warm restart answers the repeat with zero cold solver evals"
+    );
+    assert!(stats.get("warm_state_hits").and_then(Json::as_u64).unwrap() >= 1);
+    assert!(stats.get("warm_entries").and_then(Json::as_u64).unwrap() >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn submit_poll_fetch_returns_the_synchronous_response() {
     let (dir, srv) = open("queue", 2);
     let unit = suite_units("fast-suite").unwrap().remove(0);
@@ -212,10 +254,12 @@ fn shard_worker_and_daemon_share_one_store() {
     let scfg = suite_cfg("fast-suite", &FlowConfig::default());
     let mut m = Manifest::plan("fast-suite", &units, Shard::parse("0/1").unwrap());
     let (done, failed) =
-        experiments::run_manifest_stored(&mut m, &scfg, 2, None, Some(srv.store()))
+        experiments::run_manifest_stored(&mut m, &scfg, 2, None, Some(&srv.store_arc()))
             .unwrap();
     assert_eq!((done, failed), (units.len(), 0));
-    assert_eq!(srv.store().len(), units.len());
+    // Every unit artifact is in the store; warm-state objects ride
+    // alongside but are counted separately.
+    assert_eq!(srv.store().stats().entries, units.len());
 
     // The daemon's whole suite is now warm: zero cold evaluations. Its
     // effective bench config is suite_cfg(daemon cfg) == scfg, so the

@@ -294,6 +294,137 @@ fn format_bump_orphans_old_store_entries_instead_of_misserving() {
 }
 
 #[test]
+fn warm_version_bump_orphans_persisted_warm_state() {
+    use tapa::util::json::Json;
+    // Warm objects carry their own layout version, folded into the id
+    // *and* echoed in the envelope. Both halves must refuse stale state:
+    // a pre-bump object is unreachable under today's id, and an envelope
+    // whose `warm_version` word disagrees misses even at the right path.
+    let dir = storedir("warm_stale");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let key = StoreKey::warm_solver(0xabc, 0xdef);
+    let payload = Json::Obj(vec![("entries".into(), Json::Arr(vec![]))]);
+    assert!(store.put_warm(&key, &payload).unwrap());
+    assert_eq!(store.get_warm(&key), Some(payload.clone()));
+
+    // Half one: recompute the id as a pre-bump daemon would have (the
+    // previous WARM_VERSION in the fold) and plant an object there. The
+    // current key must never reach it.
+    let mut h = tapa::util::Fnv1a::new();
+    h.write_u64(tapa::store::STORE_VERSION);
+    h.write_u64(tapa::flow::persist::FORMAT_VERSION);
+    h.write_u64(tapa::flow::manifest::MANIFEST_VERSION);
+    h.write_u64(tapa::store::WARM_VERSION - 1);
+    h.write_bytes(ArtifactKind::WarmSolver.name().as_bytes());
+    h.write_u64(key.design_hash);
+    h.write_u64(key.device_fp);
+    h.write_u64(key.config_hash);
+    let old_id = h.finish();
+    assert_ne!(old_id, key.id(), "warm version bump must re-key warm objects");
+
+    // Half two: corrupt the envelope version word in place — the object
+    // sits at today's id, yet `get_warm` must miss rather than serve it.
+    let path = dir.join(tapa::store::OBJECT_DIR).join(format!("{:016x}.json", key.id()));
+    let good = std::fs::read_to_string(&path).unwrap();
+    let stale = good.replace(
+        &format!("\"warm_version\":{}", tapa::store::WARM_VERSION),
+        &format!("\"warm_version\":{}", tapa::store::WARM_VERSION + 1),
+    );
+    assert_ne!(good, stale, "envelope must carry the warm version word");
+    std::fs::write(dir.join(tapa::store::OBJECT_DIR).join(format!("{old_id:016x}.json")), &good)
+        .unwrap();
+    std::fs::write(&path, &stale).unwrap();
+    assert_eq!(store.get_warm(&key), None, "stale warm state must never be served");
+
+    // A fresh spill simply overwrites the stale object in place.
+    assert!(store.put_warm(&key, &payload).unwrap());
+    assert_eq!(store.get_warm(&key), Some(payload));
+
+    // The pre-bump object is an orphan: GC adopts it into the ledger
+    // (evictable, never served) instead of leaking it on disk.
+    assert_eq!(store.gc(10), 0);
+    assert_eq!(store.len(), 2, "orphaned old-version warm object adopted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_warm_spills_write_once() {
+    use tapa::util::json::Json;
+    let dir = storedir("warm_dedup");
+    let store = Arc::new(ArtifactStore::open(&dir).unwrap());
+    let key = StoreKey::warm_phys(3, 0x11, 0x22);
+    let payload = Json::Obj(vec![("state".into(), Json::Str("deadbeef".into()))]);
+
+    const N: usize = 8;
+    let barrier = Arc::new(Barrier::new(N));
+    let mut handles = Vec::new();
+    for _ in 0..N {
+        let store = store.clone();
+        let payload = payload.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            store.put_warm(&key, &payload).unwrap()
+        }));
+    }
+    let writes = handles.into_iter().filter(|h| h.join().unwrap()).count();
+    assert_eq!(writes, 1, "N identical concurrent spills, exactly one write");
+    assert_eq!(store.get_warm(&key), Some(payload.clone()));
+
+    // Identical re-spill from a fresh instance is also deduplicated by
+    // byte-compare against the object on disk.
+    let other = ArtifactStore::open(&dir).unwrap();
+    assert!(!other.put_warm(&key, &payload).unwrap(), "identical re-spill deduped");
+    // A genuinely new payload writes again (state grew since last spill).
+    let grown = Json::Obj(vec![("state".into(), Json::Str("deadbeefcafe".into()))]);
+    assert!(other.put_warm(&key, &grown).unwrap());
+    assert_eq!(other.get_warm(&key), Some(grown));
+
+    // Warm objects are partitioned out of the artifact entry count.
+    let stats = store.stats();
+    assert_eq!(stats.entries, 0, "no finished artifacts");
+    assert_eq!(stats.warm_entries, 1, "one warm object");
+    assert_eq!(store.len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_bytes_evicts_lru_down_to_byte_budget_and_respects_pins() {
+    let dir = storedir("gc_bytes");
+    let store = ArtifactStore::open(&dir).unwrap();
+    let cfg = FlowConfig::default();
+    let keys: Vec<StoreKey> = (0..3)
+        .map(|i| StoreKey::for_unit(&unit(&format!("b{i}"), None), &cfg))
+        .collect();
+    for (i, k) in keys.iter().enumerate() {
+        store.put_unit(k, &result(i as f64)).unwrap();
+    }
+    let size = |k: &StoreKey| {
+        let path = dir.join(tapa::store::OBJECT_DIR).join(format!("{:016x}.json", k.id()));
+        std::fs::metadata(path).unwrap().len()
+    };
+    let total: u64 = keys.iter().map(size).sum();
+
+    // Budget exactly covering everything evicts nothing.
+    assert_eq!(store.gc_bytes(total), 0);
+
+    // b0 is the LRU; pinning it shifts eviction onto b1.
+    store.pin(&keys[0]);
+    let evicted = store.gc_bytes(total - 1);
+    assert_eq!(evicted, 1);
+    assert!(store.get_unit(&keys[1]).is_none(), "unpinned LRU evicted");
+    assert!(store.get_unit(&keys[2]).is_some());
+    store.unpin(&keys[0]);
+
+    // Zero budget clears every unpinned object (the reads above bumped
+    // recency, but nothing fits in 0 bytes).
+    let evicted = store.gc_bytes(0);
+    assert_eq!(evicted, 2);
+    assert_eq!(store.len(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn gc_readopts_objects_orphaned_by_lost_index_races() {
     let dir = storedir("orphans");
     let store = ArtifactStore::open(&dir).unwrap();
