@@ -35,7 +35,7 @@ use crate::util::stats::mean;
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table1", "table2", "table3", "table4", "table5", "table6", "table7",
     "table8", "table9", "table10", "table11", "fig12", "fig13", "fig14",
-    "fig15", "headline", "cluster", "43-designs", "fast-suite",
+    "fig15", "headline", "cluster", "43-designs", "fast-suite", "explore",
 ];
 
 /// Experiments that decompose into manifest work units and therefore
@@ -72,6 +72,7 @@ pub fn run_experiment_jobs(id: &str, cfg: &FlowConfig, jobs: usize) -> Option<Ta
         "cluster" => cluster_partitioning(cfg),
         "43-designs" => designs43(cfg, jobs),
         "fast-suite" => fast_suite(cfg, jobs),
+        "explore" => explore_comparison(cfg, jobs),
         _ => return None,
     })
 }
@@ -775,6 +776,64 @@ pub fn fast_suite(cfg: &FlowConfig, jobs: usize) -> Table {
     batch_suite_table("fast-suite", cfg, jobs).expect("fast suite")
 }
 
+/// `tapa bench explore`: [`Stage::Explore`]'s adaptive joint search
+/// head-to-head against the classic §6.3 1-D ratio sweep over the
+/// [`fast_designs`]. Each mode runs in a *fresh* session (no shared warm
+/// state), so the cold-eval columns are an honest accounting of what each
+/// search paid. Every column is `--jobs`-invariant — artifacts are
+/// byte-identical across worker counts and cold-eval counts come from the
+/// persisted [`crate::phys::PhysTelemetry`] — so the CSV byte-diffs clean
+/// between `--jobs 1` and `--jobs 8` runs (the CI `explore-regression`
+/// job relies on this, and on Explore ≥ Sweep MHz per row).
+pub fn explore_comparison(cfg: &FlowConfig, jobs: usize) -> Table {
+    let mut t = Table::new(
+        "Explore — adaptive joint search vs 1-D ratio sweep (fast suite)",
+        &[
+            "Design",
+            "Device",
+            "Sweep (MHz)",
+            "Explore (MHz)",
+            "Points",
+            "Rungs",
+            "Sweep cold",
+            "Explore cold",
+            "Warm evals",
+        ],
+    );
+    for design in fast_designs() {
+        let sweep = run_sweep_stage(&design, cfg, None)
+            .expect("in-memory sweep session cannot fail");
+        let mut ecfg = no_sim(cfg);
+        ecfg.explore.enabled = true;
+        let mut s = Session::new(design.clone(), FlowVariant::Tapa, ecfg)
+            .with_jobs(jobs);
+        s.up_to(Stage::Explore, &RustStep)
+            .expect("in-memory explore session cannot fail");
+        let explore = s
+            .context()
+            .explore
+            .clone()
+            .expect("enabled explore stage always records an artifact");
+        let sweep_fmax = sweep.best.and_then(|i| sweep.points[i].fmax_mhz);
+        let explore_fmax =
+            explore.adopted.and_then(|i| explore.points[i].fmax_mhz);
+        let sweep_cold = sweep.phys.evals - sweep.phys.warm_evals;
+        let explore_cold = explore.phys.evals - explore.phys.warm_evals;
+        t.row(vec![
+            design.name.clone(),
+            design.device.name().to_string(),
+            fmt_mhz(sweep_fmax),
+            fmt_mhz(explore_fmax),
+            explore.points.len().to_string(),
+            explore.rungs.len().to_string(),
+            sweep_cold.to_string(),
+            explore_cold.to_string(),
+            explore.phys.warm_evals.to_string(),
+        ]);
+    }
+    t
+}
+
 /// Table 1: burst-detector cycle trace for the published address sequence.
 pub fn table1_burst_detector() -> Table {
     let mut t = Table::new(
@@ -1384,7 +1443,26 @@ mod tests {
             assert!(run_experiment(id, &cfg).is_some(), "{id}");
         }
         assert!(run_experiment("nope", &cfg).is_none());
-        assert_eq!(ALL_EXPERIMENTS.len(), 19);
+        assert_eq!(ALL_EXPERIMENTS.len(), 20);
+    }
+
+    #[test]
+    fn explore_meets_or_beats_the_sweep_on_every_fast_design() {
+        let t = explore_comparison(&FlowConfig::default(), 2);
+        assert_eq!(t.rows.len(), 6);
+        for row in &t.rows {
+            // Rounded Fmax comparison is safe: rounding is monotonic and
+            // rung 0 replays the sweep grid, so adopted ≥ sweep bitwise.
+            let sweep: f64 = row[2].parse().expect("sweep MHz");
+            let explore: f64 = row[3].parse().expect("explore MHz");
+            assert!(explore >= sweep, "row {row:?}");
+            let sweep_cold: u64 = row[6].parse().expect("sweep cold evals");
+            let explore_cold: u64 = row[7].parse().expect("explore cold evals");
+            assert!(
+                explore_cold <= sweep_cold,
+                "explore must not pay more cold evals than the sweep: {row:?}"
+            );
+        }
     }
 
     #[test]

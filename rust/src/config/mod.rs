@@ -125,7 +125,7 @@ impl Config {
     }
 
     /// Build a [`crate::flow::FlowConfig`] from the `[floorplan]`,
-    /// `[placer]` and `[sim]` sections.
+    /// `[placer]`, `[explore]` and `[sim]` sections.
     pub fn flow_config(&self) -> crate::flow::FlowConfig {
         let mut fc = crate::flow::FlowConfig::default();
         fc.floorplan.max_util = self.f64_or("floorplan", "max_util", fc.floorplan.max_util);
@@ -146,6 +146,18 @@ impl Config {
                     "warning: bad [floorplan] solver_budget `{spec}` (expected <N>nodes \
                      or <N>ms); running without a budget"
                 );
+            }
+        }
+        fc.explore.enabled = self.bool_or("explore", "enabled", fc.explore.enabled);
+        if let Some(spec) = self.get("explore", "budget").and_then(Value::as_str) {
+            match crate::flow::ExploreBudget::parse(spec) {
+                Some(b) => fc.explore.budget = b,
+                // Same contract as solver_budget: a malformed cap is
+                // warned about, never silently widened.
+                None => eprintln!(
+                    "warning: bad [explore] budget `{spec}` (expected <N>evals or \
+                     <N>nodes); keeping the default"
+                ),
             }
         }
         fc.analytical.lr = self.f64_or("placer", "lr", fc.analytical.lr as f64) as f32;
@@ -248,6 +260,21 @@ lr = 0.01
         assert_eq!(c.flow_config().floorplan.solver_budget, Some(SolveBudget::Millis(500)));
         let c = Config::parse("[floorplan]\nsolver_budget = \"bogus\"").unwrap();
         assert_eq!(c.flow_config().floorplan.solver_budget, None);
+    }
+
+    #[test]
+    fn explore_section_parses_from_config() {
+        use crate::flow::ExploreBudget;
+        let c = Config::parse("[explore]\nenabled = true\nbudget = \"8evals\"").unwrap();
+        let fc = c.flow_config();
+        assert!(fc.explore.enabled);
+        assert_eq!(fc.explore.budget, ExploreBudget::Evals(8));
+        let c = Config::parse("[explore]\nbudget = \"512nodes\"").unwrap();
+        let fc = c.flow_config();
+        assert!(!fc.explore.enabled, "budget alone does not enable the search");
+        assert_eq!(fc.explore.budget, ExploreBudget::Nodes(512));
+        let c = Config::parse("[explore]\nbudget = \"bogus\"").unwrap();
+        assert_eq!(c.flow_config().explore.budget, ExploreBudget::default());
     }
 
     #[test]

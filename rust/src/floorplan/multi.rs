@@ -176,6 +176,30 @@ pub fn sweep_points_with(
     out
 }
 
+/// The initial local-perturbation step size for an adaptive search
+/// seeded from `seeds` (the sweep ratios): half the smallest positive
+/// gap between adjacent seeds, so the first refinement rung bisects the
+/// tightest seed interval instead of re-landing on a seed. Falls back
+/// to `0.05` (half the classic [`DEFAULT_SWEEP`] spacing) when `seeds`
+/// has fewer than two distinct values. Used by the `Stage::Explore`
+/// successive-halving loop in [`crate::flow::Session`].
+pub fn seed_step(seeds: &[f64]) -> f64 {
+    let mut sorted: Vec<f64> = seeds.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let mut min_gap = f64::INFINITY;
+    for w in sorted.windows(2) {
+        let gap = w[1] - w[0];
+        if gap > 0.0 && gap < min_gap {
+            min_gap = gap;
+        }
+    }
+    if min_gap.is_finite() {
+        min_gap * 0.5
+    } else {
+        0.05
+    }
+}
+
 /// Implement (pipeline → place → route → STA) every unique successful
 /// point of a solved sweep, scoring each with its post-route Fmax
 /// (Table 10), and return the scores aligned with `points` (failed and
@@ -300,6 +324,18 @@ mod tests {
         let rows = generate_with_failures(&g, &d, &est, &FloorplanConfig::default(), &[0.6, 0.8]);
         assert!(!rows.is_empty());
         assert!(rows.len() <= 2);
+    }
+
+    #[test]
+    fn seed_step_halves_the_tightest_seed_gap() {
+        // Classic sweep: uniform 0.05 spacing → first step ~0.025.
+        assert!((seed_step(&DEFAULT_SWEEP) - 0.025).abs() < 1e-9);
+        // Unordered and uneven seeds: tightest gap wins.
+        assert!((seed_step(&[0.9, 0.5, 0.6]) - 0.05).abs() < 1e-9);
+        // Degenerate seed lists fall back to half the classic spacing.
+        assert_eq!(seed_step(&[0.7]), 0.05);
+        assert_eq!(seed_step(&[0.7, 0.7]), 0.05);
+        assert_eq!(seed_step(&[]), 0.05);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! Session(design, variant)
-//!   Estimate → [Cluster] → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim
+//!   Estimate → [Cluster] → [Explore] → Floorplan → Sweep → Pipeline → Place → Route → Sta → Sim
 //!      │           │           │         │         │         │       │      │     │
 //!      └───────────┴────────── SessionContext (typed artifacts) ───────────┴─────┘
 //!                     │ checkpoint / resume (JSON in a workdir)
@@ -16,8 +16,9 @@
 //! `up_to(Stage::Floorplan)`, persist to a work directory, resume later,
 //! and completed stages are never recomputed; `run_all` is the one-shot
 //! form (the old `run_flow` free function was retired in its favor).
-//! `Cluster` only runs for `--cluster N` multi-FPGA targets — otherwise
-//! it is skipped outright. [`BatchRunner`] executes many
+//! `Cluster` only runs for `--cluster N` multi-FPGA targets, and
+//! `Explore` only for `--explore` runs — otherwise each is skipped
+//! outright. [`BatchRunner`] executes many
 //! `(design, variant)` sessions across worker threads with a shared
 //! [`StageCache`], so e.g. `Baseline` and `Tapa` on the same design
 //! reuse one set of HLS estimates.
@@ -30,9 +31,10 @@ pub mod stage;
 
 pub use batch::{run_indexed, BatchJob, BatchRunner};
 pub use session::{
-    ChipReport, ClusterArtifact, FloorplanArtifact, PipelineArtifact, Session,
-    SessionContext, SessionError, SessionSet, SimArtifact, StageCache,
-    SweepArtifact, SweepCandidate, SweepSolverTelemetry,
+    ChipReport, ClusterArtifact, ExploreArtifact, ExploreCandidate, ExploreRung,
+    FloorplanArtifact, PipelineArtifact, Session, SessionContext, SessionError,
+    SessionSet, SimArtifact, StageCache, SweepArtifact, SweepCandidate,
+    SweepSolverTelemetry,
 };
 pub use stage::Stage;
 
@@ -142,6 +144,10 @@ pub struct FlowConfig {
     pub analytical: AnalyticalParams,
     pub sim: SimOptions,
     pub sweep: SweepOptions,
+    /// Adaptive joint design-space exploration (`--explore`). Disabled by
+    /// default; when enabled, [`Stage::Explore`] replaces the 1-D sweep
+    /// as the floorplan-selection mechanism.
+    pub explore: ExploreOptions,
     /// TAPA-CS multi-FPGA clustering (`--cluster N`). `chips: 1`
     /// (default) disables [`Stage::Cluster`] entirely.
     pub cluster: ClusterOptions,
@@ -195,6 +201,82 @@ impl Default for SweepOptions {
             select: SelectPolicy::BestFmax,
         }
     }
+}
+
+/// Deterministic evaluation budget for [`Stage::Explore`]
+/// (`--explore-budget <N>evals|<N>nodes`).
+///
+/// The budget is enforced in **scored candidate implementations**, never
+/// in wall-clock time, so a budgeted exploration visits the identical
+/// point set on any machine — the same calibration idiom as
+/// [`crate::solver::SolveBudget`]. A node-denominated budget is
+/// converted once, up front, through the fixed
+/// [`ExploreBudget::NODES_PER_EVAL`] constant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExploreBudget {
+    /// Hard cap on scored candidate implementations.
+    Evals(usize),
+    /// Budget denominated in branch-and-bound node equivalents, converted
+    /// to evals deterministically (convenient when sizing exploration
+    /// against a `--solver-budget`).
+    Nodes(usize),
+}
+
+impl ExploreBudget {
+    /// Fixed node-equivalents-per-eval calibration for
+    /// [`ExploreBudget::Nodes`] (one candidate implementation costs about
+    /// as much as a mid-size exact partitioning solve; the exact value
+    /// matters less than it being a constant).
+    pub const NODES_PER_EVAL: usize = 64;
+
+    /// The deterministic cap on scored implementations this budget grants
+    /// one exploration.
+    pub fn eval_cap(&self) -> usize {
+        match self {
+            ExploreBudget::Evals(n) => (*n).max(1),
+            ExploreBudget::Nodes(n) => (n / Self::NODES_PER_EVAL).max(1),
+        }
+    }
+
+    /// Parse the CLI/config spec: `<N>evals` or `<N>nodes` (e.g.
+    /// `24evals`, `2048nodes`).
+    pub fn parse(s: &str) -> Option<ExploreBudget> {
+        let s = s.trim();
+        if let Some(n) = s.strip_suffix("evals") {
+            return n.trim().parse::<usize>().ok().filter(|&n| n > 0).map(ExploreBudget::Evals);
+        }
+        if let Some(n) = s.strip_suffix("nodes") {
+            return n.trim().parse::<usize>().ok().filter(|&n| n > 0).map(ExploreBudget::Nodes);
+        }
+        None
+    }
+
+    /// Inverse of [`ExploreBudget::parse`] (checkpoints, diagnostics).
+    pub fn label(&self) -> String {
+        match self {
+            ExploreBudget::Evals(n) => format!("{n}evals"),
+            ExploreBudget::Nodes(n) => format!("{n}nodes"),
+        }
+    }
+}
+
+impl Default for ExploreBudget {
+    fn default() -> Self {
+        ExploreBudget::Evals(24)
+    }
+}
+
+/// Adaptive joint design-space exploration options ([`Stage::Explore`]).
+/// Off by default — `tapa compile --explore` (or setting `enabled`)
+/// replaces the 1-D `--sweep` with successive halving over the joint
+/// knob space. Rung 0 seeds from the classic ratio grid
+/// (`SweepOptions::ratios`), and survivors are scored with the sweep's
+/// `--select` policy, so the two searches stay directly comparable.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExploreOptions {
+    pub enabled: bool,
+    /// Deterministic cap on scored candidate implementations.
+    pub budget: ExploreBudget,
 }
 
 /// Simulation options for the flow.
@@ -360,6 +442,29 @@ mod tests {
         let f_full = full.fmax_mhz.unwrap_or(0.0);
         let f_fp = fponly.fmax_mhz.unwrap_or(0.0);
         assert!(f_full > f_fp, "full={f_full} floorplan-only={f_fp}");
+    }
+
+    #[test]
+    fn explore_budget_parses_and_converts_deterministically() {
+        assert_eq!(ExploreBudget::parse("24evals"), Some(ExploreBudget::Evals(24)));
+        assert_eq!(ExploreBudget::parse(" 2048nodes "), Some(ExploreBudget::Nodes(2048)));
+        assert_eq!(ExploreBudget::parse("0evals"), None);
+        assert_eq!(ExploreBudget::parse("12"), None);
+        assert_eq!(ExploreBudget::parse("fastevals"), None);
+        assert_eq!(ExploreBudget::Evals(7).eval_cap(), 7);
+        assert_eq!(
+            ExploreBudget::Nodes(2048).eval_cap(),
+            2048 / ExploreBudget::NODES_PER_EVAL
+        );
+        assert_eq!(ExploreBudget::Nodes(1).eval_cap(), 1);
+        assert_eq!(
+            ExploreBudget::parse(&ExploreBudget::Evals(9).label()),
+            Some(ExploreBudget::Evals(9))
+        );
+        assert_eq!(
+            ExploreBudget::parse(&ExploreBudget::Nodes(9).label()),
+            Some(ExploreBudget::Nodes(9))
+        );
     }
 
     #[test]

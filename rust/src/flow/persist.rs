@@ -7,9 +7,9 @@
 //! prefix of stages.
 //!
 //! **Format stability.** The on-disk layout is versioned
-//! ([`FORMAT_VERSION`], currently 5: v4 plus the `cluster` field — the
-//! TAPA-CS multi-FPGA partition artifact, `null` for single-device
-//! runs). Within a version the byte layout is frozen —
+//! ([`FORMAT_VERSION`], currently 6: v5 plus the `explore` field — the
+//! adaptive design-space-exploration artifact, `null` unless
+//! `--explore` ran). Within a version the byte layout is frozen —
 //! `rust/tests/data/golden_sweep_ctx.json` is a committed golden
 //! checkpoint that must keep round-tripping byte-identically, so resume
 //! compatibility cannot silently break; any layout change must bump the
@@ -27,8 +27,9 @@ use crate::timing::TimingReport;
 use crate::util::json::Json;
 
 use super::session::{
-    ChipReport, ClusterArtifact, FloorplanArtifact, PipelineArtifact, SessionContext,
-    SessionError, SimArtifact, SweepArtifact, SweepCandidate, SweepSolverTelemetry,
+    ChipReport, ClusterArtifact, ExploreArtifact, ExploreCandidate, ExploreRung,
+    FloorplanArtifact, PipelineArtifact, SessionContext, SessionError, SimArtifact,
+    SweepArtifact, SweepCandidate, SweepSolverTelemetry,
 };
 use super::stage::Stage;
 use super::FlowVariant;
@@ -38,12 +39,14 @@ use super::FlowVariant;
 /// sweep `solver` block). v4 = v3 + the sweep's `phys` block (incremental
 /// physical-design engine telemetry). v5 = v4 + the `cluster` field
 /// (TAPA-CS multi-FPGA partition; `null` unless `--cluster N` ran).
+/// v6 = v5 + the `explore` field (adaptive joint design-space
+/// exploration; `null` unless `--explore` ran).
 ///
 /// Store ids fold this version too — including the warm-state objects
 /// (`crate::store`): bumping it orphans persisted artifacts *and*
 /// persisted solver/phys/sim warm state, which then rebuilds from one
 /// cold evaluation instead of ever being served stale.
-pub const FORMAT_VERSION: u64 = 5;
+pub const FORMAT_VERSION: u64 = 6;
 
 // ---------------------------------------------------------------------------
 // Writing
@@ -245,29 +248,31 @@ fn timing_json(t: &TimingReport) -> Json {
     ])
 }
 
+fn solver_telemetry_json(t: &SweepSolverTelemetry) -> Json {
+    Json::Obj(vec![
+        ("solves".into(), unum(t.solves)),
+        ("warm_hits".into(), unum(t.warm_hits)),
+        ("bb_nodes".into(), unum(t.bb_nodes)),
+    ])
+}
+
+fn phys_telemetry_json(t: &crate::phys::PhysTelemetry) -> Json {
+    Json::Obj(vec![
+        ("evals".into(), unum(t.evals)),
+        ("warm_evals".into(), unum(t.warm_evals)),
+        ("moved_instances".into(), unum(t.moved_instances)),
+        ("retimed_edges".into(), unum(t.retimed_edges)),
+        ("cold_retimed_edges".into(), unum(t.cold_retimed_edges)),
+        ("placer_steps".into(), unum(t.placer_steps)),
+        ("cold_placer_steps".into(), unum(t.cold_placer_steps)),
+        ("redone_cold".into(), unum(t.redone_cold)),
+    ])
+}
+
 fn sweep_json(sw: &SweepArtifact) -> Json {
     Json::Obj(vec![
-        (
-            "solver".into(),
-            Json::Obj(vec![
-                ("solves".into(), unum(sw.solver.solves)),
-                ("warm_hits".into(), unum(sw.solver.warm_hits)),
-                ("bb_nodes".into(), unum(sw.solver.bb_nodes)),
-            ]),
-        ),
-        (
-            "phys".into(),
-            Json::Obj(vec![
-                ("evals".into(), unum(sw.phys.evals)),
-                ("warm_evals".into(), unum(sw.phys.warm_evals)),
-                ("moved_instances".into(), unum(sw.phys.moved_instances)),
-                ("retimed_edges".into(), unum(sw.phys.retimed_edges)),
-                ("cold_retimed_edges".into(), unum(sw.phys.cold_retimed_edges)),
-                ("placer_steps".into(), unum(sw.phys.placer_steps)),
-                ("cold_placer_steps".into(), unum(sw.phys.cold_placer_steps)),
-                ("redone_cold".into(), unum(sw.phys.redone_cold)),
-            ]),
-        ),
+        ("solver".into(), solver_telemetry_json(&sw.solver)),
+        ("phys".into(), phys_telemetry_json(&sw.phys)),
         ("best".into(), opt(&sw.best, |&b| unum(b as u64))),
         (
             "points".into(),
@@ -277,6 +282,52 @@ fn sweep_json(sw: &SweepArtifact) -> Json {
                     .map(|p| {
                         Json::Obj(vec![
                             ("util_ratio".into(), num(p.util_ratio)),
+                            ("duplicate_of".into(), opt(&p.duplicate_of, |&i| unum(i as u64))),
+                            ("fmax_mhz".into(), opt(&p.fmax_mhz, |&f| num(f))),
+                            ("plan".into(), opt(&p.plan, floorplan_json)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn explore_json(ex: &ExploreArtifact) -> Json {
+    Json::Obj(vec![
+        ("budget".into(), Json::Str(ex.budget.clone())),
+        ("evals_used".into(), unum(ex.evals_used)),
+        ("solver".into(), solver_telemetry_json(&ex.solver)),
+        ("phys".into(), phys_telemetry_json(&ex.phys)),
+        ("adopted".into(), opt(&ex.adopted, |&a| unum(a as u64))),
+        (
+            "rungs".into(),
+            Json::Arr(
+                ex.rungs
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            ("rung".into(), unum(r.rung as u64)),
+                            ("candidates".into(), unum(r.candidates as u64)),
+                            ("survivors".into(), unum(r.survivors as u64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "points".into(),
+            Json::Arr(
+                ex.points
+                    .iter()
+                    .map(|p| {
+                        Json::Obj(vec![
+                            ("util_ratio".into(), num(p.util_ratio)),
+                            (
+                                "stages_per_crossing".into(),
+                                unum(p.stages_per_crossing as u64),
+                            ),
+                            ("rung".into(), unum(p.rung as u64)),
                             ("duplicate_of".into(), opt(&p.duplicate_of, |&i| unum(i as u64))),
                             ("fmax_mhz".into(), opt(&p.fmax_mhz, |&f| num(f))),
                             ("plan".into(), opt(&p.plan, floorplan_json)),
@@ -311,6 +362,7 @@ pub fn context_to_json_text(ctx: &SessionContext) -> String {
             }),
         ),
         ("cluster".to_string(), opt(&ctx.cluster, cluster_json)),
+        ("explore".to_string(), opt(&ctx.explore, explore_json)),
         (
             "floorplan".to_string(),
             opt(&ctx.floorplan, |fa| {
@@ -605,6 +657,27 @@ fn parse_timing(v: &Json) -> R<TimingReport> {
     })
 }
 
+fn parse_solver_telemetry(sv: &Json) -> R<SweepSolverTelemetry> {
+    Ok(SweepSolverTelemetry {
+        solves: get_u64(sv, "solves")?,
+        warm_hits: get_u64(sv, "warm_hits")?,
+        bb_nodes: get_u64(sv, "bb_nodes")?,
+    })
+}
+
+fn parse_phys_telemetry(ph: &Json) -> R<crate::phys::PhysTelemetry> {
+    Ok(crate::phys::PhysTelemetry {
+        evals: get_u64(ph, "evals")?,
+        warm_evals: get_u64(ph, "warm_evals")?,
+        moved_instances: get_u64(ph, "moved_instances")?,
+        retimed_edges: get_u64(ph, "retimed_edges")?,
+        cold_retimed_edges: get_u64(ph, "cold_retimed_edges")?,
+        placer_steps: get_u64(ph, "placer_steps")?,
+        cold_placer_steps: get_u64(ph, "cold_placer_steps")?,
+        redone_cold: get_u64(ph, "redone_cold")?,
+    })
+}
+
 fn parse_sweep(v: &Json) -> R<SweepArtifact> {
     let points = get_arr(v, "points")?
         .iter()
@@ -621,30 +694,58 @@ fn parse_sweep(v: &Json) -> R<SweepArtifact> {
             })
         })
         .collect::<R<Vec<_>>>()?;
-    let sv = field(v, "solver")?;
-    let ph = field(v, "phys")?;
     Ok(SweepArtifact {
         best: get_opt(v, "best", |x| {
             x.as_usize().ok_or_else(|| bad("best not an integer"))
         })?,
         points,
-        solver: SweepSolverTelemetry {
-            solves: get_u64(sv, "solves")?,
-            warm_hits: get_u64(sv, "warm_hits")?,
-            bb_nodes: get_u64(sv, "bb_nodes")?,
-        },
-        phys: crate::phys::PhysTelemetry {
-            evals: get_u64(ph, "evals")?,
-            warm_evals: get_u64(ph, "warm_evals")?,
-            moved_instances: get_u64(ph, "moved_instances")?,
-            retimed_edges: get_u64(ph, "retimed_edges")?,
-            cold_retimed_edges: get_u64(ph, "cold_retimed_edges")?,
-            placer_steps: get_u64(ph, "placer_steps")?,
-            cold_placer_steps: get_u64(ph, "cold_placer_steps")?,
-            redone_cold: get_u64(ph, "redone_cold")?,
-        },
+        solver: parse_solver_telemetry(field(v, "solver")?)?,
+        phys: parse_phys_telemetry(field(v, "phys")?)?,
         // The schedule is `--jobs`-dependent by design, so it is never
         // persisted: resumed artifacts report the default (no run).
+        sched: Default::default(),
+    })
+}
+
+fn parse_explore(v: &Json) -> R<ExploreArtifact> {
+    let rungs = get_arr(v, "rungs")?
+        .iter()
+        .map(|r| {
+            Ok(ExploreRung {
+                rung: get_u32(r, "rung")?,
+                candidates: get_u32(r, "candidates")?,
+                survivors: get_u32(r, "survivors")?,
+            })
+        })
+        .collect::<R<Vec<_>>>()?;
+    let points = get_arr(v, "points")?
+        .iter()
+        .map(|p| {
+            Ok(ExploreCandidate {
+                util_ratio: get_f64(p, "util_ratio")?,
+                stages_per_crossing: get_u32(p, "stages_per_crossing")?,
+                rung: get_u32(p, "rung")?,
+                duplicate_of: get_opt(p, "duplicate_of", |x| {
+                    x.as_usize().ok_or_else(|| bad("duplicate_of not an integer"))
+                })?,
+                fmax_mhz: get_opt(p, "fmax_mhz", |x| {
+                    x.as_f64().ok_or_else(|| bad("fmax_mhz not a number"))
+                })?,
+                plan: get_opt(p, "plan", parse_floorplan)?,
+            })
+        })
+        .collect::<R<Vec<_>>>()?;
+    Ok(ExploreArtifact {
+        budget: get_str(v, "budget")?.to_string(),
+        evals_used: get_u64(v, "evals_used")?,
+        solver: parse_solver_telemetry(field(v, "solver")?)?,
+        phys: parse_phys_telemetry(field(v, "phys")?)?,
+        adopted: get_opt(v, "adopted", |x| {
+            x.as_usize().ok_or_else(|| bad("adopted not an integer"))
+        })?,
+        rungs,
+        points,
+        // Like the sweep's: `--jobs`-dependent by design, never persisted.
         sched: Default::default(),
     })
 }
@@ -685,6 +786,7 @@ pub fn context_from_json_text(text: &str) -> R<SessionContext> {
                 .collect()
         })?,
         cluster: get_opt(&root, "cluster", parse_cluster)?,
+        explore: get_opt(&root, "explore", parse_explore)?,
         floorplan: get_opt(&root, "floorplan", |v| {
             Ok(FloorplanArtifact {
                 degraded: get_bool(v, "degraded")?,
@@ -832,13 +934,47 @@ mod tests {
     }
 
     #[test]
+    fn explore_context_roundtrips_byte_identically() {
+        let mut cfg = FlowConfig::default();
+        cfg.sim.enabled = false;
+        cfg.explore.enabled = true;
+        cfg.sweep.ratios = vec![0.6, 0.75];
+        let mut s = Session::new(small_design(), super::super::FlowVariant::Tapa, cfg);
+        let _ = s.run_all(&RustStep).unwrap();
+        let ex = s.context().explore.as_ref().expect("explore artifact present");
+        assert!(!ex.points.is_empty());
+        assert!(!ex.rungs.is_empty());
+        let text = context_to_json_text(s.context());
+        let back = context_from_json_text(&text).unwrap();
+        assert_eq!(context_to_json_text(&back), text);
+        let back_ex = back.explore.as_ref().unwrap();
+        assert_eq!(back_ex.adopted, ex.adopted);
+        assert_eq!(back_ex.budget, ex.budget);
+        assert_eq!(back_ex.evals_used, ex.evals_used);
+        assert_eq!(back_ex.rungs, ex.rungs);
+        assert_eq!(back_ex.solver, ex.solver);
+        assert_eq!(back_ex.phys, ex.phys);
+        // The schedule is jobs-dependent, so it never round-trips.
+        assert_eq!(back_ex.sched, Default::default());
+        assert_eq!(back_ex.points.len(), ex.points.len());
+        for (a, b) in back_ex.points.iter().zip(&ex.points) {
+            assert_eq!(a.util_ratio, b.util_ratio);
+            assert_eq!(a.stages_per_crossing, b.stages_per_crossing);
+            assert_eq!(a.rung, b.rung);
+            assert_eq!(a.duplicate_of, b.duplicate_of);
+            assert_eq!(a.fmax_mhz, b.fmax_mhz);
+            assert_eq!(a.plan.is_some(), b.plan.is_some());
+        }
+    }
+
+    #[test]
     fn rejects_bad_checkpoints() {
         assert!(context_from_json_text("not json").is_err());
         assert!(context_from_json_text("{}").is_err());
         let ctx =
             SessionContext::new("d", DeviceKind::U250, super::super::FlowVariant::Tapa);
         let bumped = context_to_json_text(&ctx)
-            .replace("\"version\":5", "\"version\":99");
+            .replace("\"version\":6", "\"version\":99");
         assert!(context_from_json_text(&bumped).is_err());
         let wrong_dev =
             context_to_json_text(&ctx).replace("\"device\":\"U250\"", "\"device\":\"U999\"");

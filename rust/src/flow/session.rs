@@ -15,7 +15,7 @@
 //! never re-solved. [`SessionSet`] lifts this to multi-device sessions:
 //! one design against U250 and U280 with a single Estimate artifact.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -142,6 +142,78 @@ pub struct SweepCandidate {
     pub fmax_mhz: Option<f64>,
 }
 
+/// Artifact of [`Stage::Explore`] — the adaptive joint design-space
+/// exploration.
+///
+/// Successive halving over `util_ratio × stages_per_crossing`: rung 0
+/// seeds the classic §6.3 ratio grid, each rung keeps the top half of
+/// its scored candidates under the session's [`SelectPolicy`] and
+/// locally perturbs the survivors, until the deterministic
+/// [`crate::flow::ExploreBudget`] is exhausted. Every visited point is
+/// recorded (duplicates marked, not dropped — same lossless policy as
+/// [`SweepArtifact`]), so the artifact replays the whole search. Empty
+/// when exploration is disabled.
+#[derive(Clone, Debug, Default)]
+pub struct ExploreArtifact {
+    /// Every visited point, in visit order (rung-major).
+    pub points: Vec<ExploreCandidate>,
+    /// One row per successive-halving rung, in rung order.
+    pub rungs: Vec<ExploreRung>,
+    /// Index into `points` of the adopted point; `None` when exploration
+    /// is disabled or no point produced a usable floorplan.
+    pub adopted: Option<usize>,
+    /// Label of the [`crate::flow::ExploreBudget`] the search ran under
+    /// (e.g. `24evals`); empty when exploration is disabled.
+    pub budget: String,
+    /// Scored candidate implementations charged against the budget —
+    /// duplicates and infeasible points cost nothing. Always
+    /// `<= budget.eval_cap()`.
+    pub evals_used: u64,
+    /// Solver accounting of the candidate generation, mirroring the
+    /// sweep's [`SweepSolverTelemetry`].
+    pub solver: SweepSolverTelemetry,
+    /// Physical-design accounting of the candidate implementation
+    /// rungs (warm evaluations, moved instances, re-timed vs cold edge
+    /// counts). Deterministic, so it rides in checkpoints.
+    pub phys: PhysTelemetry,
+    /// How the rung implementations were scheduled across `--jobs` warm
+    /// sub-chains (field-wise sums over the rungs). The one legitimately
+    /// `--jobs`-dependent output, so it is NOT persisted in checkpoints
+    /// (resumed artifacts read `Default`) and is excluded from
+    /// cross-jobs identity comparisons.
+    pub sched: SweepSchedule,
+}
+
+/// One visited exploration point inside an [`ExploreArtifact`].
+#[derive(Clone, Debug)]
+pub struct ExploreCandidate {
+    pub util_ratio: f64,
+    /// Crossing-pipelining depth this point was implemented with (the
+    /// second explored knob; the floorplan solve itself is independent
+    /// of it).
+    pub stages_per_crossing: u32,
+    /// Successive-halving rung that visited this point (0 = seed grid).
+    pub rung: u32,
+    /// `Some(i)` when the slot assignment *and* pipelining depth
+    /// duplicate the (earlier, unique) point `i`'s.
+    pub duplicate_of: Option<usize>,
+    /// `None` when partitioning was infeasible at this ratio.
+    pub plan: Option<Floorplan>,
+    /// Post-route Fmax of the implemented candidate; `None` for failed
+    /// or duplicate points and for candidates that did not route.
+    pub fmax_mhz: Option<f64>,
+}
+
+/// One successive-halving rung of an [`ExploreArtifact`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExploreRung {
+    pub rung: u32,
+    /// Points visited by this rung (duplicates and failures included).
+    pub candidates: u32,
+    /// Scored candidates kept to seed the next rung's perturbations.
+    pub survivors: u32,
+}
+
 /// Artifact of [`Stage::Sim`]. Wrapped so "simulation ran and was skipped
 /// or failed" is distinguishable from "stage not executed yet".
 #[derive(Clone, Debug, Default)]
@@ -241,6 +313,7 @@ pub struct SessionContext {
     pub completed: Vec<Stage>,
     pub estimates: Option<Vec<TaskEstimate>>,
     pub cluster: Option<ClusterArtifact>,
+    pub explore: Option<ExploreArtifact>,
     pub floorplan: Option<FloorplanArtifact>,
     pub sweep: Option<SweepArtifact>,
     pub pipeline: Option<PipelineArtifact>,
@@ -259,6 +332,7 @@ impl SessionContext {
             completed: Vec::new(),
             estimates: None,
             cluster: None,
+            explore: None,
             floorplan: None,
             sweep: None,
             pipeline: None,
@@ -621,6 +695,7 @@ impl Session {
             let present = match st {
                 Stage::Estimate => ctx.estimates.is_some(),
                 Stage::Cluster => ctx.cluster.is_some(),
+                Stage::Explore => ctx.explore.is_some(),
                 Stage::Floorplan => ctx.floorplan.is_some(),
                 Stage::Sweep => ctx.sweep.is_some(),
                 Stage::Pipeline => ctx.pipeline.is_some(),
@@ -707,6 +782,35 @@ impl Session {
                 }
             }
         }
+        if let Some(ex) = &ctx.explore {
+            if let Some(a) = ex.adopted {
+                if a >= ex.points.len() {
+                    return Err(SessionError::Mismatch(format!(
+                        "checkpoint explore adopted index {a} out of {} points",
+                        ex.points.len()
+                    )));
+                }
+            }
+            for pt in &ex.points {
+                if let Some(fp) = &pt.plan {
+                    if fp.assignment.len() != n_insts {
+                        return Err(SessionError::Mismatch(format!(
+                            "checkpoint explore candidate assigns {} of {} instances",
+                            fp.assignment.len(),
+                            n_insts
+                        )));
+                    }
+                }
+                if let Some(di) = pt.duplicate_of {
+                    if di >= ex.points.len() {
+                        return Err(SessionError::Mismatch(format!(
+                            "checkpoint explore duplicate index {di} out of {} points",
+                            ex.points.len()
+                        )));
+                    }
+                }
+            }
+        }
         // Config-vs-checkpoint mismatches around the sweep. (a) The
         // checkpoint completed Sweep as a disabled no-op (empty artifact)
         // but this session asks for the sweep: invalidate Sweep and
@@ -746,6 +850,39 @@ impl Session {
                     .is_some_and(|fa| fa.floorplan.is_none() && !fa.degraded)
             {
                 ctx.completed.retain(|&s| s < Stage::Floorplan);
+                ctx.floorplan = None;
+                ctx.sweep = None;
+                ctx.pipeline = None;
+                ctx.placement = None;
+                ctx.route = None;
+                ctx.timing = None;
+                ctx.sim = None;
+            }
+            // The same enabled/disabled special-casing for the explore
+            // stage. (c) The checkpoint chose its floorplan without
+            // exploration but this session asks for `--explore`: the
+            // floorplan (and everything downstream) reflects a search
+            // that never ran, so invalidate back to before Explore. (d)
+            // The checkpoint's floorplan was adopted from an exploration
+            // this session has disabled: same invalidation, so the §5.2
+            // feedback solve (or the sweep) chooses afresh.
+            if cfg.explore.enabled
+                && !ctx.is_complete(Stage::Explore)
+                && ctx.is_complete(Stage::Floorplan)
+            {
+                ctx.completed.retain(|&s| s < Stage::Explore);
+                ctx.explore = None;
+                ctx.floorplan = None;
+                ctx.sweep = None;
+                ctx.pipeline = None;
+                ctx.placement = None;
+                ctx.route = None;
+                ctx.timing = None;
+                ctx.sim = None;
+            }
+            if !cfg.explore.enabled && ctx.is_complete(Stage::Explore) {
+                ctx.completed.retain(|&s| s < Stage::Explore);
+                ctx.explore = None;
                 ctx.floorplan = None;
                 ctx.sweep = None;
                 ctx.pipeline = None;
@@ -823,6 +960,13 @@ impl Session {
             // recorded as completed), keeping its checkpoints byte-
             // identical to pre-cluster builds.
             if st == Stage::Cluster && !self.cfg.cluster.enabled() {
+                continue;
+            }
+            // Likewise, joint design-space exploration only exists for
+            // `--explore` runs; other sessions skip the stage entirely
+            // (not recorded as completed), keeping their checkpoints
+            // byte-identical to pre-explore builds.
+            if st == Stage::Explore && !self.cfg.explore.enabled {
                 continue;
             }
             if self.ctx.is_complete(st) {
@@ -1098,6 +1242,266 @@ impl Session {
         SweepArtifact { points, best, solver, phys: phys_t, sched }
     }
 
+    /// [`Stage::Explore`]: adaptive joint design-space exploration by
+    /// successive halving over `util_ratio × stages_per_crossing`.
+    ///
+    /// Rung 0 solves and implements exactly the classic §6.3 ratio grid
+    /// (same candidate list, same order, same fresh engine — so its
+    /// scores are bit-identical to `run_sweep`'s and the adopted point
+    /// can never lose to the 1-D sweep winner). Each rung then keeps the
+    /// top half of its scored candidates under the session's
+    /// [`SelectPolicy`] and perturbs every survivor locally — ratio
+    /// `± step` at the same pipelining depth, plus the same ratio at the
+    /// toggled depth — with the step halving per rung, until the
+    /// frontier empties, the step bottoms out, or the deterministic
+    /// [`crate::flow::ExploreBudget`] is exhausted.
+    ///
+    /// Budget semantics: only *scored implementations* are charged —
+    /// duplicates and infeasible solves are free — and the cap is
+    /// checked before each solve, so a truncated search visits a
+    /// reproducible point prefix on any machine. All floorplan solves
+    /// warm-chain through the shared [`SolverContext`] (and the
+    /// [`StageCache`] when present; the solve is independent of the
+    /// pipelining knob, so cached ratios serve both depths), and each
+    /// rung's implementations run through
+    /// [`crate::phys::SweepSchedule`]'s hybrid warm/speculative
+    /// scheduler — so the artifact is byte-identical for any `--jobs`.
+    fn run_explore(&mut self) -> ExploreArtifact {
+        const MIN_STEP: f64 = 0.005;
+        let est = self.ctx.estimates.clone().expect("estimate stage done");
+        let device = self.device();
+        let cfg = self.cfg.clone();
+        let jobs = self.jobs;
+        let eval_cap = cfg.explore.budget.eval_cap();
+        let base_spc = cfg.floorplan.stages_per_crossing;
+        let alt_spc = base_spc + 1;
+        let phys_arc = Arc::clone(&self.phys);
+        let mut phys = phys_arc.lock().unwrap();
+        phys.solver.jobs = jobs;
+        phys.solver.budget = cfg.floorplan.solver_budget;
+        // The context may be shared (SessionSet) or reused across calls,
+        // so this exploration's telemetry is isolated as a delta.
+        let solves0 = (phys.solver.solves, phys.solver.warm_hits, phys.solver.total_nodes);
+        let phys0 = phys.telemetry();
+
+        let g = &self.design.graph;
+        let mut points: Vec<ExploreCandidate> = Vec::new();
+        let mut rungs: Vec<ExploreRung> = Vec::new();
+        let mut sched = SweepSchedule::default();
+        let mut last: Option<Floorplan> = None;
+        // Rung 0 is the raw seed grid, verbatim (ratios may repeat; the
+        // sweep solves repeats too, so the grids stay comparable).
+        // Later rungs consult `visited` so no point is solved twice.
+        let mut frontier: Vec<(f64, u32)> =
+            cfg.sweep.ratios.iter().map(|&r| (r, base_spc)).collect();
+        let mut visited: HashSet<(u64, u32)> =
+            frontier.iter().map(|&(r, s)| (r.to_bits(), s)).collect();
+        let mut step = multi::seed_step(&cfg.sweep.ratios);
+        let mut rung_no: u32 = 0;
+        // Scored implementations committed so far, counting candidates
+        // solved this rung but not yet implemented — checked before each
+        // solve so truncation happens at a reproducible point.
+        let mut planned: usize = 0;
+        let mut evals_used: u64 = 0;
+        let mut truncated = false;
+
+        while !frontier.is_empty() && planned < eval_cap {
+            let rung_start = points.len();
+
+            // 1. Solve this rung's frontier, budget-gated, warm-chained,
+            //    deduplicated against *every* earlier point (keep-first,
+            //    matching `multi::sweep_points_with` on rung 0).
+            {
+                let solver_ctx = &mut phys.solver;
+                for &(ratio, spc) in &frontier {
+                    if planned >= eval_cap {
+                        truncated = true;
+                        break;
+                    }
+                    let plan = match &self.cache {
+                        Some(c) => (*c.sweep_plan_for_in(
+                            &self.design,
+                            &device,
+                            &est,
+                            &cfg.floorplan,
+                            ratio,
+                            last.as_ref(),
+                            &mut *solver_ctx,
+                        ))
+                        .clone(),
+                        None => multi::solve_point_in(
+                            g,
+                            &device,
+                            &est,
+                            &cfg.floorplan,
+                            ratio,
+                            last.as_ref(),
+                            &mut *solver_ctx,
+                        ),
+                    };
+                    if let Some(p) = &plan {
+                        last = Some(p.clone());
+                    }
+                    let duplicate_of = plan.as_ref().and_then(|p| {
+                        points.iter().position(|q| {
+                            q.duplicate_of.is_none()
+                                && q.stages_per_crossing == spc
+                                && q.plan
+                                    .as_ref()
+                                    .is_some_and(|qp| qp.assignment == p.assignment)
+                        })
+                    });
+                    if plan.is_some() && duplicate_of.is_none() {
+                        planned += 1;
+                    }
+                    points.push(ExploreCandidate {
+                        util_ratio: ratio,
+                        stages_per_crossing: spc,
+                        rung: rung_no,
+                        duplicate_of,
+                        plan,
+                        fmax_mhz: None,
+                    });
+                }
+            }
+
+            // 2. Implement the rung's unique successful candidates
+            //    through the hybrid warm/speculative scheduler (scores
+            //    and telemetry bit-identical for any `--jobs`). Each
+            //    candidate carries its own pipelining depth.
+            let mut idx: Vec<usize> = Vec::new();
+            let mut cands: Vec<(Floorplan, Vec<u32>)> = Vec::new();
+            for (i, p) in points.iter().enumerate().skip(rung_start) {
+                if p.duplicate_of.is_some() {
+                    continue;
+                }
+                let Some(fp) = p.plan.clone() else { continue };
+                let plan = pipeline_edges(g, &device, &fp, p.stages_per_crossing);
+                let stages: Vec<u32> = (0..g.num_edges()).map(|e| plan.total_lat(e)).collect();
+                idx.push(i);
+                cands.push((fp, stages));
+            }
+            evals_used += cands.len() as u64;
+            let (evals, s) = crate::phys::evaluate_chained(
+                g,
+                &device,
+                &est,
+                &cands,
+                &cfg.analytical,
+                jobs,
+                &mut phys,
+            );
+            sched.sub_chains += s.sub_chains;
+            sched.speculative_evals += s.speculative_evals;
+            sched.seam_mismatches += s.seam_mismatches;
+            for (i, ev) in idx.into_iter().zip(evals) {
+                points[i].fmax_mhz = ev.timing.fmax_mhz;
+            }
+
+            // 3. Rank the rung's scored candidates under the sweep's
+            //    selection policy (ties to the earliest point) and keep
+            //    the top half.
+            let mut ranked: Vec<usize> = (rung_start..points.len())
+                .filter(|&i| points[i].duplicate_of.is_none())
+                .filter(|&i| match cfg.sweep.select {
+                    SelectPolicy::BestFmax => points[i].fmax_mhz.is_some(),
+                    SelectPolicy::MinCost => points[i].plan.is_some(),
+                })
+                .collect();
+            match cfg.sweep.select {
+                SelectPolicy::BestFmax => ranked.sort_by(|&a, &b| {
+                    let fa = points[a].fmax_mhz.expect("ranked by fmax");
+                    let fb = points[b].fmax_mhz.expect("ranked by fmax");
+                    fb.partial_cmp(&fa)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                }),
+                SelectPolicy::MinCost => ranked.sort_by(|&a, &b| {
+                    let ca = points[a].plan.as_ref().expect("ranked by cost").cost;
+                    let cb = points[b].plan.as_ref().expect("ranked by cost").cost;
+                    ca.cmp(&cb).then(a.cmp(&b))
+                }),
+            }
+            let keep = ranked.len().saturating_add(1) / 2;
+            rungs.push(ExploreRung {
+                rung: rung_no,
+                candidates: (points.len() - rung_start) as u32,
+                survivors: keep as u32,
+            });
+            if truncated || keep == 0 || step < MIN_STEP {
+                break;
+            }
+
+            // 4. Perturb the survivors into the next rung's frontier:
+            //    ratio ± step at the same depth, same ratio at the
+            //    toggled depth. Already-visited points are skipped, the
+            //    step halves, and the loop continues until the budget or
+            //    the frontier runs out.
+            let mut next: Vec<(f64, u32)> = Vec::new();
+            for &i in &ranked[..keep] {
+                let r = points[i].util_ratio;
+                let spc = points[i].stages_per_crossing;
+                let toggled = if spc == base_spc { alt_spc } else { base_spc };
+                for cand in [
+                    ((r - step).clamp(0.05, 1.0), spc),
+                    ((r + step).clamp(0.05, 1.0), spc),
+                    (r, toggled),
+                ] {
+                    if visited.insert((cand.0.to_bits(), cand.1)) {
+                        next.push(cand);
+                    }
+                }
+            }
+            frontier = next;
+            step *= 0.5;
+            rung_no += 1;
+        }
+
+        let solver = SweepSolverTelemetry {
+            solves: phys.solver.solves - solves0.0,
+            warm_hits: phys.solver.warm_hits - solves0.1,
+            bb_nodes: phys.solver.total_nodes - solves0.2,
+        };
+        let phys_t = phys.telemetry().delta_since(&phys0);
+        drop(phys);
+
+        let adopted = select_best_explore(&points, cfg.sweep.select);
+        ExploreArtifact {
+            points,
+            rungs,
+            adopted,
+            budget: cfg.explore.budget.label(),
+            evals_used,
+            solver,
+            phys: phys_t,
+            sched,
+        }
+    }
+
+    /// Materialize the explore stage's adopted point as the session's
+    /// floorplan — the Floorplan stage body for explore-enabled
+    /// sessions, mirroring the sweep's adoption step (the working graph
+    /// is reset to the raw design graph; candidates bypass the §5.2
+    /// feedback loop). Falls back to the feedback solve when the search
+    /// adopted nothing.
+    fn adopt_explore_floorplan(&mut self) -> FloorplanArtifact {
+        let ex = self.ctx.explore.clone().expect("explore stage done");
+        let Some(ai) = ex.adopted else {
+            return self.solve_feedback_floorplan();
+        };
+        let p = &ex.points[ai];
+        let fp = p.plan.clone().expect("adopted candidate has a plan");
+        let device = self.device();
+        let raw = pipeline_edges(&self.design.graph, &device, &fp, p.stages_per_crossing);
+        self.graph = self.design.graph.clone();
+        FloorplanArtifact {
+            floorplan: Some(fp),
+            raw_plan: Some(raw),
+            extra_same_slot: Vec::new(),
+            degraded: false,
+        }
+    }
+
     /// [`Stage::Cluster`]: split the task graph across
     /// `cfg.cluster.chips` identical devices with the chip-granularity
     /// MILP (inter-FPGA links modeled as wide-but-slow SLR-style
@@ -1239,9 +1643,22 @@ impl Session {
                 let art = self.run_cluster(exec);
                 self.ctx.cluster = Some(art);
             }
+            Stage::Explore => {
+                let art = if !self.cfg.explore.enabled || self.variant == FlowVariant::Baseline {
+                    ExploreArtifact::default()
+                } else {
+                    self.run_explore()
+                };
+                self.ctx.explore = Some(art);
+            }
             Stage::Floorplan => {
                 let art = if self.variant == FlowVariant::Baseline {
                     FloorplanArtifact::default()
+                } else if self.cfg.explore.enabled && self.ctx.explore.is_some() {
+                    // The exploration picked the floorplan; materialize
+                    // its adopted point (feedback-solve fallback inside
+                    // when the search adopted nothing).
+                    self.adopt_explore_floorplan()
                 } else if self.cfg.sweep.enabled {
                     // The sweep picks the floorplan — don't pay the §5.2
                     // feedback loop for a plan the winner would overwrite
@@ -1255,7 +1672,13 @@ impl Session {
                 self.ctx.floorplan = Some(art);
             }
             Stage::Sweep => {
-                let art = if !self.cfg.sweep.enabled || self.variant == FlowVariant::Baseline {
+                // `--explore` supersedes the 1-D sweep: the floorplan is
+                // already adopted, so the sweep stage degrades to its
+                // disabled no-op artifact.
+                let art = if !self.cfg.sweep.enabled
+                    || self.cfg.explore.enabled
+                    || self.variant == FlowVariant::Baseline
+                {
                     SweepArtifact::default()
                 } else {
                     self.run_sweep()
@@ -1411,6 +1834,34 @@ pub(crate) fn evaluate_candidate_in(
 /// Pick the winning sweep point under a [`SelectPolicy`]. Ties go to the
 /// earliest point, so selection is deterministic.
 fn select_best(points: &[SweepCandidate], policy: SelectPolicy) -> Option<usize> {
+    match policy {
+        SelectPolicy::BestFmax => points
+            .iter()
+            .enumerate()
+            .filter_map(|(i, p)| p.fmax_mhz.map(|f| (i, f)))
+            .fold(None, |acc: Option<(usize, f64)>, (i, f)| match acc {
+                Some((_, bf)) if bf >= f => acc,
+                _ => Some((i, f)),
+            })
+            .map(|(i, _)| i),
+        SelectPolicy::MinCost => points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.duplicate_of.is_none())
+            .filter_map(|(i, p)| p.plan.as_ref().map(|fp| (i, fp.cost)))
+            .fold(None, |acc: Option<(usize, u64)>, (i, c)| match acc {
+                Some((_, bc)) if bc <= c => acc,
+                _ => Some((i, c)),
+            })
+            .map(|(i, _)| i),
+    }
+}
+
+/// Pick the adopted exploration point under a [`SelectPolicy`] — the
+/// same scoring as [`select_best`], lifted to [`ExploreCandidate`]s.
+/// Ties go to the earliest visited point, so a later rung only displaces
+/// the seed grid's winner by *strictly* improving on it.
+fn select_best_explore(points: &[ExploreCandidate], policy: SelectPolicy) -> Option<usize> {
     match policy {
         SelectPolicy::BestFmax => points
             .iter()
@@ -1644,10 +2095,11 @@ mod tests {
             s.executed_stages(),
             &[Stage::Estimate, Stage::Floorplan, Stage::Sweep, Stage::Pipeline]
         );
-        // Continuing does not re-run completed stages. Cluster is absent:
-        // a single-device session skips it entirely.
+        // Continuing does not re-run completed stages. Cluster and
+        // Explore are absent: a single-device, non-explore session skips
+        // both entirely.
         s.up_to(Stage::Sim, &RustStep).unwrap();
-        assert_eq!(s.executed_stages().len(), Stage::ALL.len() - 1);
+        assert_eq!(s.executed_stages().len(), Stage::ALL.len() - 2);
         assert_eq!(
             s.executed_stages(),
             &[
@@ -1663,6 +2115,8 @@ mod tests {
         );
         assert!(!s.context().completed.contains(&Stage::Cluster));
         assert!(s.context().cluster.is_none());
+        assert!(!s.context().completed.contains(&Stage::Explore));
+        assert!(s.context().explore.is_none());
         let again = s.executed_stages().len();
         s.up_to(Stage::Sim, &RustStep).unwrap();
         assert_eq!(s.executed_stages().len(), again);
@@ -1808,6 +2262,110 @@ mod tests {
         let fa: Vec<Option<f64>> = a.points.iter().map(|p| p.fmax_mhz).collect();
         let fb: Vec<Option<f64>> = b.points.iter().map(|p| p.fmax_mhz).collect();
         assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn explore_enabled_adopts_point_and_completes() {
+        let mut cfg = FlowConfig::default();
+        cfg.explore.enabled = true;
+        cfg.sweep.ratios = vec![0.6, 0.75, 0.9];
+        let mut s = Session::new(chain_design(8), FlowVariant::Tapa, cfg);
+        s.up_to(Stage::Floorplan, &RustStep).unwrap();
+        {
+            let ctx = s.context();
+            let ex = ctx.explore.as_ref().expect("explore stage ran");
+            assert_eq!(
+                ex.rungs[0].candidates as usize, 3,
+                "rung 0 visits the seed grid"
+            );
+            assert!(ex.points.len() >= 3);
+            assert!(ex.evals_used as usize <= ex.points.len());
+            assert_eq!(ex.budget, "24evals", "default budget label persisted");
+            let a = ex.adopted.expect("a small chain explores successfully");
+            // Every rung keeps at most half (rounded up) of its points.
+            for r in &ex.rungs {
+                assert!(r.survivors <= r.candidates.div_ceil(2).max(1));
+            }
+            // The adopted point is materialized as the session floorplan.
+            let fp = ctx
+                .floorplan
+                .as_ref()
+                .and_then(|f| f.floorplan.as_ref())
+                .expect("adopted point materialized");
+            assert_eq!(fp.assignment, ex.points[a].plan.as_ref().unwrap().assignment);
+            // The sweep stage did not run.
+            assert!(!ctx.is_complete(Stage::Sweep));
+        }
+        let r = s.run_all(&RustStep).unwrap();
+        assert!(r.fmax_mhz.is_some());
+        // The sweep stage completed as its disabled no-op.
+        let sw = s.context().sweep.as_ref().expect("sweep stage ran as no-op");
+        assert!(sw.points.is_empty());
+    }
+
+    #[test]
+    fn explore_rung0_matches_sweep_grid_and_never_loses() {
+        // The acceptance bar: rung 0 reproduces the 1-D sweep's scored
+        // grid bit for bit, so the adopted Fmax can only meet or beat
+        // the sweep winner — while charging no more cold (first-in-
+        // chain) evals than the sweep's full grid.
+        let d = chain_design(8);
+        let ratios = vec![0.6, 0.75, 0.9];
+        let mut sw_cfg = FlowConfig::default();
+        sw_cfg.sweep.enabled = true;
+        sw_cfg.sweep.ratios = ratios.clone();
+        let mut sw = Session::new(d.clone(), FlowVariant::Tapa, sw_cfg);
+        sw.up_to(Stage::Sweep, &RustStep).unwrap();
+        let sweep = sw.context().sweep.clone().unwrap();
+
+        let mut ex_cfg = FlowConfig::default();
+        ex_cfg.explore.enabled = true;
+        ex_cfg.sweep.ratios = ratios.clone();
+        let mut ex = Session::new(d, FlowVariant::Tapa, ex_cfg);
+        ex.up_to(Stage::Explore, &RustStep).unwrap();
+        let explore = ex.context().explore.clone().unwrap();
+
+        let rung0 = explore.rungs[0].candidates as usize;
+        assert_eq!(rung0, ratios.len());
+        for (sp, ep) in sweep.points.iter().zip(&explore.points[..rung0]) {
+            assert_eq!(sp.util_ratio, ep.util_ratio);
+            assert_eq!(sp.duplicate_of, ep.duplicate_of);
+            assert_eq!(sp.fmax_mhz, ep.fmax_mhz, "rung 0 scores == sweep scores");
+        }
+        let sweep_best = sweep.best.and_then(|b| sweep.points[b].fmax_mhz).unwrap();
+        let adopted = explore
+            .adopted
+            .and_then(|a| explore.points[a].fmax_mhz)
+            .unwrap();
+        assert!(
+            adopted >= sweep_best,
+            "explore adopted {adopted} < sweep winner {sweep_best}"
+        );
+    }
+
+    #[test]
+    fn explore_artifact_identical_for_any_jobs() {
+        let mut cfg = FlowConfig::default();
+        cfg.explore.enabled = true;
+        cfg.sweep.ratios = vec![0.6, 0.75];
+        let d = chain_design(8);
+        let run = |jobs: usize| {
+            let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg.clone()).with_jobs(jobs);
+            s.up_to(Stage::Explore, &RustStep).unwrap();
+            s.context().explore.clone().unwrap()
+        };
+        let a = run(1);
+        for jobs in [4, 8] {
+            let b = run(jobs);
+            assert_eq!(a.adopted, b.adopted, "jobs={jobs}");
+            assert_eq!(a.evals_used, b.evals_used, "jobs={jobs}");
+            assert_eq!(a.rungs, b.rungs, "jobs={jobs}");
+            assert_eq!(a.solver, b.solver, "jobs={jobs}");
+            assert_eq!(a.phys, b.phys, "jobs={jobs}");
+            let fa: Vec<Option<f64>> = a.points.iter().map(|p| p.fmax_mhz).collect();
+            let fb: Vec<Option<f64>> = b.points.iter().map(|p| p.fmax_mhz).collect();
+            assert_eq!(fa, fb, "jobs={jobs}");
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The nine explicit stages of the staged compilation pipeline.
+//! The ten explicit stages of the staged compilation pipeline.
 //!
 //! Declared in pipeline order so the derived `Ord` matches execution
 //! order: `Estimate < Cluster < … < Sim`. [`crate::flow::Session`]
@@ -14,6 +14,13 @@ pub enum Stage {
     /// single-device work happens. Skipped entirely (not recorded as
     /// completed) unless `--cluster N` with N > 1 is requested.
     Cluster,
+    /// Adaptive joint design-space exploration (successive halving over
+    /// util ratio × crossing-pipelining depth, warm-chained through the
+    /// incremental engines) that picks the floorplan the later stages
+    /// implement. Skipped entirely (not recorded as completed) unless
+    /// `--explore` is requested, keeping pre-explore checkpoints
+    /// byte-identical.
+    Explore,
     /// Coarse-grained floorplanning, including the §5.2 feedback loop
     /// with trial pipelining.
     Floorplan,
@@ -37,9 +44,10 @@ pub enum Stage {
 
 impl Stage {
     /// All stages, in execution order.
-    pub const ALL: [Stage; 9] = [
+    pub const ALL: [Stage; 10] = [
         Stage::Estimate,
         Stage::Cluster,
+        Stage::Explore,
         Stage::Floorplan,
         Stage::Sweep,
         Stage::Pipeline,
@@ -59,6 +67,7 @@ impl Stage {
         match self {
             Stage::Estimate => "estimate",
             Stage::Cluster => "cluster",
+            Stage::Explore => "explore",
             Stage::Floorplan => "floorplan",
             Stage::Sweep => "sweep",
             Stage::Pipeline => "pipeline",
@@ -100,7 +109,8 @@ mod tests {
     #[test]
     fn order_matches_pipeline() {
         assert!(Stage::Estimate < Stage::Cluster);
-        assert!(Stage::Cluster < Stage::Floorplan);
+        assert!(Stage::Cluster < Stage::Explore);
+        assert!(Stage::Explore < Stage::Floorplan);
         assert!(Stage::Floorplan < Stage::Sweep);
         assert!(Stage::Sweep < Stage::Pipeline);
         assert!(Stage::Route < Stage::Sim);

@@ -8,6 +8,9 @@
 //!       [--device D[,D..]]           tapa-4slot)
 //!       [--sweep] [--select P]      §6.3 multi-floorplan sweep; P picks
 //!       [--jobs N]                   the winner (fmax | cost)
+//!       [--explore]                 adaptive joint design-space exploration
+//!       [--explore-budget B]         over (util ratio × crossing depth);
+//!                                    B caps it (<N>evals or <N>nodes)
 //!       [--solver-budget B]         cap the exact ILP search (<N>nodes or
 //!                                    <N>ms, converted to nodes — runs
 //!                                    reproduce across machines)
@@ -15,8 +18,8 @@
 //!                                    chips, implement each independently
 //!       [--workdir DIR]
 //!       [--to STAGE]                stop after STAGE (estimate, cluster,
-//!                                    floorplan, sweep, pipeline, place,
-//!                                    route, sta, sim)
+//!                                    explore, floorplan, sweep, pipeline,
+//!                                    place, route, sta, sim)
 //!       [--resume]                  continue from the workdir checkpoint
 //! tapa bench ID [--csv] [--config F] regenerate a paper table/figure
 //!       [--jobs N]                  parallel sessions (43-designs suite)
@@ -32,7 +35,8 @@
 //!                                    artifact store at W/store
 //! tapa submit --workdir W ...       thin client for a running daemon
 //!       (--suite ID [--csv] | --design NAME [--device D] [--variant V]
-//!        [--ratio R] | --ping | --stats | --shutdown) [--async] [--meta]
+//!        [--ratio R] [--explore] | --ping | --stats | --shutdown)
+//!       [--async] [--meta]
 //! tapa engine-info                  check the PJRT artifact
 //! ```
 //!
@@ -99,7 +103,8 @@ fn print_help() {
          co-optimization\n\n\
          USAGE:\n  tapa list\n  tapa compile --design NAME [--variant V] \
          [--config FILE] [--no-sim]\n               [--device D[,D...]] [--cluster N] [--sweep] \
-         [--select fmax|cost] [--jobs N]\n               [--solver-budget <N>nodes|<N>ms] \
+         [--select fmax|cost] [--jobs N]\n               [--explore] \
+         [--explore-budget <N>evals|<N>nodes]\n               [--solver-budget <N>nodes|<N>ms] \
          [--workdir DIR] [--to STAGE]\n               \
          [--resume] [--store DIR]\n  tapa bench ID [--csv] [--config FILE] [--jobs N]\n               \
          [--solver-budget <N>nodes|<N>ms] [--shard k/N --workdir DIR]\n               \
@@ -108,12 +113,12 @@ fn print_help() {
          tapa serve --workdir DIR [--jobs N] [--config FILE]\n               \
          [--solver-budget <N>nodes|<N>ms] [--stdio]\n  \
          tapa submit --workdir DIR (--suite ID [--csv] | --design NAME\n               \
-         [--device D] [--variant V] [--ratio R] | --ping | --stats |\n               \
-         --shutdown) [--async] [--meta]\n  \
+         [--device D] [--variant V] [--ratio R] [--explore] | --ping |\n               \
+         --stats | --shutdown) [--async] [--meta]\n  \
          tapa gc --store DIR [--max-entries N] [--max-bytes BYTES]\n  \
          tapa engine-info\n\n\
-         STAGES (for --to): estimate cluster floorplan sweep pipeline place route\n  \
-         sta sim\n\
+         STAGES (for --to): estimate cluster explore floorplan sweep pipeline place\n  \
+         route sta sim\n\
          DEVICES (for --device): u250 u280 — a comma-separated list compiles the\n  \
          design for every part as one session set sharing a single HLS Estimate\n  \
          artifact (checkpoints in --workdir are device-qualified).\n\
@@ -130,6 +135,15 @@ fn print_help() {
          cost). --jobs N implements candidates over N worker threads (hybrid\n  \
          warm/speculative sub-chains; see docs/sweep-scheduling.md) with\n  \
          bit-identical artifacts for every N.\n\
+         EXPLORE: --explore replaces the 1-D sweep with an adaptive successive-\n  \
+         halving search of the joint (util ratio × stages-per-crossing) knob\n  \
+         space: rung 0 re-solves the classic ratio grid, survivors are locally\n  \
+         perturbed through the warm incremental solver/phys chain, and the best\n  \
+         visited point (by --select) becomes the adopted floorplan. The search\n  \
+         never spends more cold evaluations than the sweep's full grid and its\n  \
+         artifact is byte-identical for any --jobs. --explore-budget caps the\n  \
+         scored implementations (<N>evals, or <N>nodes at 64 nodes/eval);\n  \
+         --sweep and --explore are mutually exclusive. See docs/explore.md.\n\
          SOLVER: the partitioning ILP runs through the pluggable solver engine\n  \
          (exact warm-started branch-and-bound -> LP+FM -> greedy+FM escalation;\n  \
          see the `solver` module docs). --solver-budget caps the exact search\n  \
@@ -291,6 +305,33 @@ fn cmd_compile(args: &[String]) -> ExitCode {
     if sweep_flag {
         cfg.sweep.enabled = true;
     }
+    let explore_flag = has_flag(args, "--explore");
+    if explore_flag && sweep_flag {
+        eprintln!(
+            "--sweep and --explore are mutually exclusive: the adaptive explore \
+             stage supersedes the 1-D ratio sweep (pass exactly one)"
+        );
+        return ExitCode::FAILURE;
+    }
+    if explore_flag {
+        cfg.explore.enabled = true;
+    }
+    if let Some(spec) = flag_value(args, "--explore-budget") {
+        if !explore_flag {
+            eprintln!("--explore-budget only makes sense together with --explore");
+            return ExitCode::FAILURE;
+        }
+        match tapa::flow::ExploreBudget::parse(&spec) {
+            Some(b) => cfg.explore.budget = b,
+            None => {
+                eprintln!(
+                    "bad --explore-budget `{spec}` (expected <N>evals or <N>nodes, \
+                     e.g. 24evals or 1536nodes)"
+                );
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     if !apply_solver_budget(args, &mut cfg) {
         return ExitCode::FAILURE;
     }
@@ -367,9 +408,26 @@ fn cmd_compile(args: &[String]) -> ExitCode {
             return ExitCode::FAILURE;
         }
         if spec.is_cluster() {
+            // Self-describing: name the exact unsupported combination so
+            // the operator sees what this request was, not just a policy.
             eprintln!(
-                "--store serves single-device work units; cluster runs are not \
-                 store-backed (drop --cluster or --store)"
+                "--store serves single-device work units, but this request asks \
+                 for design `{name}` as a {}-chip cluster on {}: cluster runs are \
+                 not store-backed (drop --cluster {} to use the store, or drop \
+                 --store to run the cluster flow directly)",
+                spec.cluster,
+                devices.first().map(|d| d.name()).unwrap_or("?"),
+                spec.cluster
+            );
+            return ExitCode::FAILURE;
+        }
+        if cfg.explore.enabled {
+            eprintln!(
+                "--store serves single-point work units, but this request asks \
+                 for an adaptive --explore search of design `{name}`: the explore \
+                 stage is not store-backed as a one-shot (drop --explore, or run \
+                 it through `tapa serve` / `tapa submit --design {name} --explore`, \
+                 which shares the daemon's warm store)"
             );
             return ExitCode::FAILURE;
         }
@@ -473,19 +531,27 @@ fn cmd_compile(args: &[String]) -> ExitCode {
                 None => {}
             }
         }
+        print_explore(ctx);
         print_sweep(ctx);
         if let Some(t) = &ctx.timing {
             println!("  fmax        : {} MHz", fmt_mhz(t.fmax_mhz));
         }
         match session.workdir_path() {
             // Repeat the flags that select this checkpoint and config —
-            // a hint without --device/--sweep/--cluster would miss the
-            // checkpoint or re-solve work the config change invalidates.
+            // a hint without --device/--sweep/--explore/--cluster would
+            // miss the checkpoint or re-solve work the config change
+            // invalidates.
             Some(dir) => println!(
                 "  resume with : tapa compile --design {name} --device {} {}{cluster_hint}--resume \
                  --workdir {}",
                 session.design().device.name().to_ascii_lowercase(),
-                if sweep_flag { "--sweep " } else { "" },
+                if sweep_flag {
+                    "--sweep "
+                } else if explore_flag {
+                    "--explore "
+                } else {
+                    ""
+                },
                 dir.display()
             ),
             None => println!(
@@ -515,6 +581,7 @@ fn cmd_compile(args: &[String]) -> ExitCode {
         println!("  floorplan   : cost {} @ util ratio {:.2}", fp.cost, fp.util_ratio);
     }
     print_cluster(session.context());
+    print_explore(session.context());
     print_sweep(session.context());
     if let Some(c) = r.cycles {
         println!("  sim cycles  : {c}");
@@ -561,6 +628,69 @@ fn print_cluster(ctx: &tapa::flow::SessionContext) {
     }
     if let Some(f) = cl.fmax_mhz() {
         println!("  system clk  : {} MHz (slowest chip)", fmt_mhz(Some(f)));
+    }
+}
+
+/// Render the adaptive design-space-exploration artifact: rung shape,
+/// the adopted joint knob point, and the warm-eval telemetry the CI
+/// explore-regression job asserts on. (Line prefixes are deliberately
+/// distinct from the `sweep`/`best cand`/`phys`/`fmax` lines the
+/// phys-regression job greps out of compile output.)
+fn print_explore(ctx: &tapa::flow::SessionContext) {
+    let Some(art) = &ctx.explore else { return };
+    if art.points.is_empty() {
+        return;
+    }
+    let rungs: Vec<String> = art
+        .rungs
+        .iter()
+        .map(|r| format!("r{}:{}→{}", r.rung, r.candidates, r.survivors))
+        .collect();
+    println!(
+        "  explore     : {} point(s) over {} rung(s) [{}], budget {} ({} evals used)",
+        art.points.len(),
+        art.rungs.len(),
+        rungs.join(" "),
+        art.budget,
+        art.evals_used
+    );
+    if let Some(a) = art.adopted {
+        let p = &art.points[a];
+        println!(
+            "  adopted     : util ratio {:.3} × {} stage(s)/crossing ({} MHz)",
+            p.util_ratio,
+            p.stages_per_crossing,
+            fmt_mhz(p.fmax_mhz)
+        );
+    }
+    println!(
+        "  ex-solver   : {} solves ({} warm, {} cold), {} bb nodes",
+        art.solver.solves,
+        art.solver.warm_hits,
+        art.solver.solves.saturating_sub(art.solver.warm_hits),
+        art.solver.bb_nodes
+    );
+    let ph = &art.phys;
+    if ph.evals > 0 {
+        println!(
+            "  ex-phys     : {} evals ({} warm), retimed {}/{} edges, \
+             placer steps {}/{}, moved {} insts",
+            ph.evals,
+            ph.warm_evals,
+            ph.retimed_edges,
+            ph.cold_retimed_edges,
+            ph.placer_steps,
+            ph.cold_placer_steps,
+            ph.moved_instances
+        );
+    }
+    // Jobs-dependent scheduler shape, same caveat as the sweep's line.
+    let sc = &art.sched;
+    if sc.sub_chains > 0 {
+        println!(
+            "  ex-sched    : {} sub-chains, {} speculative cold evals, {} seam mismatches",
+            sc.sub_chains, sc.speculative_evals, sc.seam_mismatches
+        );
     }
 }
 
@@ -750,6 +880,7 @@ fn compile_multi_device(
             }
         }
         print_cluster(session.context());
+        print_explore(session.context());
         print_sweep(session.context());
     }
     let (est_computes, est_hits) = set.cache().stats();
@@ -1482,8 +1613,11 @@ fn build_request(args: &[String]) -> Result<tapa::util::json::Json, String> {
                 .map(|d| d.device.name().to_ascii_lowercase())
                 .ok_or_else(|| format!("unknown design {name}; pass --device explicitly"))?,
         };
+        // --explore asks the daemon for the adaptive design-space search
+        // instead of a plain single-point run.
+        let op = if has_flag(args, "--explore") { "explore" } else { "run" };
         let mut fields = vec![
-            ("op".into(), Json::Str("run".into())),
+            ("op".into(), Json::Str(op.into())),
             ("design".into(), Json::Str(name)),
             ("device".into(), Json::Str(device)),
         ];
@@ -1500,7 +1634,7 @@ fn build_request(args: &[String]) -> Result<tapa::util::json::Json, String> {
     }
     Err(
         "submit requires one of --ping, --stats, --shutdown, --suite ID, or \
-         --design NAME [--device D] [--variant V] [--ratio R]"
+         --design NAME [--device D] [--variant V] [--ratio R] [--explore]"
             .into(),
     )
 }

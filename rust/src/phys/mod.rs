@@ -378,12 +378,16 @@ impl PhysContext {
     /// full serialized behavioral state, compared exactly) and the same
     /// persisted-state adoption on fresh builds.
     pub fn sim_for(&mut self, g: &TaskGraph, estimates: &[TaskEstimate]) -> &mut SimEngine {
+        // Serialize the behavioral identity once: the same bytes feed the
+        // FNV key, the collision guard, and the fresh engine (previously
+        // each step re-serialized `(g, estimates)` from scratch).
+        let id = crate::sim::incr::identity(g, estimates);
         let mut h = crate::util::Fnv1a::new();
-        h.write_bytes(&crate::sim::incr::identity(g, estimates));
+        h.write_bytes(&id);
         let key = h.finish();
-        let fresh = !self.sims.get(&key).is_some_and(|s| s.matches(g, estimates));
+        let fresh = !self.sims.get(&key).is_some_and(|s| s.matches_identity(&id));
         if fresh {
-            let mut eng = SimEngine::new(g, estimates, self.verify);
+            let mut eng = SimEngine::with_identity(id, self.verify);
             if let Some(w) = &self.warm {
                 match w.store.get_warm(&StoreKey::warm_sim(key, w.config_hash)) {
                     Some(payload) if eng.import_memo(&payload) => self.warm_stats.hits += 1,

@@ -37,7 +37,8 @@
 //! | `ping` | liveness check |
 //! | `run` | compile one unit synchronously (`design`/`device`/`variant`, optional `ratio` for a sweep point) |
 //! | `bench` | run a whole sharding suite (`suite`), reply with its CSV |
-//! | `submit` | enqueue a `run`/`bench` request; replies with a job id |
+//! | `explore` | adaptive joint design-space exploration (`Stage::Explore`) for one design (`design`/`device`, optional `variant`); replies with every visited knob point, the rung history and the adopted winner |
+//! | `submit` | enqueue a `run`/`bench`/`explore` request; replies with a job id |
 //! | `poll` | job state: `queued` / `running` / `done` |
 //! | `fetch` | the finished job's response (error while unfinished) |
 //! | `stats` | store/solver/phys telemetry counters |
@@ -240,6 +241,90 @@ impl Server {
         ]))
     }
 
+    /// `op:"explore"` — run the adaptive joint design-space exploration
+    /// (`Stage::Explore`) for one design on the daemon's warm per-region
+    /// context. The deliverable is the search itself (every visited knob
+    /// point, the rung history, the adopted winner), so the response
+    /// carries the artifact's content rather than a stored unit payload;
+    /// the warm solver/phys state the search builds is spilled into the
+    /// store exactly like any other cold evaluation's, so later `run` /
+    /// `explore` requests start warm.
+    fn handle_explore(&self, req: &Json) -> Result<Json, String> {
+        let unit = parse_unit(req)?;
+        let mut design = crate::bench_suite::find_design(&unit.design)
+            .ok_or_else(|| format!("unknown design `{}`", unit.design))?;
+        design.device = unit.device;
+        let mut cfg = self.cfg.clone();
+        cfg.explore.enabled = true;
+        cfg.sweep.enabled = false;
+        cfg.sim.enabled = false;
+        let phys = self.phys_for(&unit);
+        let mut session = crate::flow::Session::new(design, unit.variant, cfg)
+            .with_cache(self.cache.clone())
+            .with_phys(phys.clone())
+            .with_jobs(self.jobs);
+        session
+            .up_to(crate::flow::Stage::Explore, &crate::place::RustStep)
+            .map_err(|e| e.to_string())?;
+        let ex = session
+            .context()
+            .explore
+            .clone()
+            .ok_or("explore produced no artifact")?;
+        self.cold_evals.fetch_add(1, Ordering::Relaxed);
+        phys.lock().unwrap().spill_warm();
+        let points: Vec<Json> = ex
+            .points
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    ("util_ratio".into(), Json::Num(p.util_ratio)),
+                    (
+                        "stages_per_crossing".into(),
+                        Json::Num(p.stages_per_crossing as f64),
+                    ),
+                    ("rung".into(), Json::Num(p.rung as f64)),
+                    (
+                        "fmax_mhz".into(),
+                        p.fmax_mhz.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        let rungs: Vec<Json> = ex
+            .rungs
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("rung".into(), Json::Num(r.rung as f64)),
+                    ("candidates".into(), Json::Num(r.candidates as f64)),
+                    ("survivors".into(), Json::Num(r.survivors as f64)),
+                ])
+            })
+            .collect();
+        let w = self.warm_state_stats();
+        Ok(Json::Obj(vec![
+            ("ok".into(), Json::Bool(true)),
+            ("op".into(), Json::Str("explore".into())),
+            ("unit".into(), Json::Str(unit.key())),
+            ("budget".into(), Json::Str(ex.budget.clone())),
+            ("evals_used".into(), Json::Num(ex.evals_used as f64)),
+            (
+                "adopted".into(),
+                ex.adopted.map(|a| Json::Num(a as f64)).unwrap_or(Json::Null),
+            ),
+            ("rungs".into(), Json::Arr(rungs)),
+            ("points".into(), Json::Arr(points)),
+            ("solver_solves".into(), Json::Num(ex.solver.solves as f64)),
+            ("solver_warm_hits".into(), Json::Num(ex.solver.warm_hits as f64)),
+            ("phys_evals".into(), Json::Num(ex.phys.evals as f64)),
+            ("phys_warm_evals".into(), Json::Num(ex.phys.warm_evals as f64)),
+            ("warm_state_hits".into(), Json::Num(w.hits as f64)),
+            ("warm_state_misses".into(), Json::Num(w.misses as f64)),
+            ("warm_state_spills".into(), Json::Num(w.spills as f64)),
+        ]))
+    }
+
     fn handle_bench(&self, req: &Json) -> Result<Json, String> {
         let suite = req
             .get("suite")
@@ -318,8 +403,8 @@ impl Server {
     fn handle_submit(self: &Arc<Self>, req: &Json) -> Result<Json, String> {
         let inner_op = req.get("request").and_then(|r| r.get("op")).and_then(Json::as_str);
         match inner_op {
-            Some("run") | Some("bench") => {}
-            _ => return Err("submit needs a `request` object with op run|bench".into()),
+            Some("run") | Some("bench") | Some("explore") => {}
+            _ => return Err("submit needs a `request` object with op run|bench|explore".into()),
         }
         let request = req.get("request").cloned().expect("checked above");
         let id = self.next_job.fetch_add(1, Ordering::SeqCst);
@@ -379,6 +464,7 @@ impl Server {
             ])),
             "run" => self.handle_run(req),
             "bench" => self.handle_bench(req),
+            "explore" => self.handle_explore(req),
             "stats" => Ok(self.handle_stats()),
             "submit" => self.handle_submit(req),
             "poll" => self.handle_poll(req),

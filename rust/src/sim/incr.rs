@@ -184,8 +184,16 @@ pub struct SimEngine {
 
 impl SimEngine {
     pub fn new(g: &TaskGraph, estimates: &[TaskEstimate], verify: bool) -> SimEngine {
+        SimEngine::with_identity(identity(g, estimates), verify)
+    }
+
+    /// [`SimEngine::new`] from a pre-serialized [`identity`] — lets
+    /// [`crate::phys::PhysContext::sim_for`] serialize `(g, estimates)`
+    /// once and reuse the bytes for its FNV key, the collision guard and
+    /// the engine itself, instead of re-serializing per use.
+    pub(crate) fn with_identity(identity: Vec<u8>, verify: bool) -> SimEngine {
         SimEngine {
-            identity: identity(g, estimates),
+            identity,
             verify,
             memo: None,
             runs: 0,
@@ -199,7 +207,13 @@ impl SimEngine {
     /// Exact identity check backing [`crate::phys::PhysContext::sim_for`]'s
     /// collision guard.
     pub fn matches(&self, g: &TaskGraph, estimates: &[TaskEstimate]) -> bool {
-        self.identity == identity(g, estimates)
+        self.matches_identity(&identity(g, estimates))
+    }
+
+    /// [`SimEngine::matches`] against already-serialized identity bytes —
+    /// the byte-exact compare without the serialization cost.
+    pub(crate) fn matches_identity(&self, id: &[u8]) -> bool {
+        self.identity == id
     }
 
     /// Re-run every resumed simulation cold and compare exactly (also

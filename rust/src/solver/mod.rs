@@ -252,6 +252,12 @@ pub struct SolverContext {
     pub total_seconds: f64,
     /// Tracked pure-LP solves ([`SolverContext::solve_lp`]).
     pub lp_solves: u64,
+    /// Structural problem comparisons performed against memo buckets
+    /// (lookup probes plus import dedup). The FNV fingerprint pre-filter
+    /// routes each probe to one bucket, so this stays near the hit count
+    /// instead of growing as `solves × memo_len`. Accounting only — not
+    /// serialized, and no effect on results.
+    pub memo_compares: u64,
 }
 
 impl SolverContext {
@@ -294,7 +300,13 @@ impl SolverContext {
         self.solves += 1;
         let key = fingerprint(p);
         if let Some(entries) = self.memo.get(&key) {
-            if let Some(e) = entries.iter().find(|e| &e.problem == p) {
+            let mut compares = 0u64;
+            let hit = entries.iter().find(|e| {
+                compares += 1;
+                &e.problem == p
+            });
+            self.memo_compares += compares;
+            if let Some(e) = hit {
                 self.warm_hits += 1;
                 let stats = SolverStats {
                     nodes: 0,
@@ -387,16 +399,22 @@ impl SolverContext {
             return 0;
         };
         let mut imported = 0;
+        let mut compares = 0u64;
         for e in list {
             let Some(entry) = memo_entry_from_json(e) else { continue };
             let key = fingerprint(&entry.problem);
             let bucket = self.memo.entry(key).or_default();
-            if bucket.iter().any(|have| have.problem == entry.problem) {
+            let duplicate = bucket.iter().any(|have| {
+                compares += 1;
+                have.problem == entry.problem
+            });
+            if duplicate {
                 continue;
             }
             bucket.push(entry);
             imported += 1;
         }
+        self.memo_compares += compares;
         imported
     }
 
@@ -756,6 +774,10 @@ mod tests {
         assert!(s2.warm_hit);
         assert_eq!(ctx.warm_hits, 1);
         assert_eq!(ctx.solves, 2);
+        // The fingerprint pre-filter sends the hit probe to a one-entry
+        // bucket: exactly one structural compare across both solves (the
+        // cold solve misses the empty map without comparing anything).
+        assert_eq!(ctx.memo_compares, 1);
     }
 
     #[test]
@@ -789,6 +811,9 @@ mod tests {
         assert_eq!(x1, x2, "disk round-trip must hand back the identical solution");
         assert_eq!(o1.to_bits(), o2.to_bits());
         assert_eq!(b.cold_solves(), 0);
+        // Compare accounting: first import lands in an empty bucket (0),
+        // the re-import dedups against it (1), the warm solve probes it (1).
+        assert_eq!(b.memo_compares, 2);
         // Garbage payloads import nothing.
         assert_eq!(SolverContext::new().import_memo(&Json::Num(3.0)), 0);
     }

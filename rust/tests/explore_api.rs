@@ -1,0 +1,309 @@
+//! Integration tests for [`Stage::Explore`] — the adaptive joint
+//! design-space exploration over warm incremental evals: checkpoint
+//! byte-identity across `--jobs` counts, deterministic budget
+//! truncation, resume that never re-searches, enable/disable
+//! invalidation transitions, and the acceptance bar against the 1-D
+//! ratio sweep (meet-or-beat Fmax at no more cold evals).
+
+use std::path::PathBuf;
+
+use tapa::device::DeviceKind;
+use tapa::flow::{
+    Design, ExploreBudget, FlowConfig, FlowVariant, Session, SimOptions, Stage,
+};
+use tapa::graph::{ComputeSpec, TaskGraphBuilder};
+use tapa::place::RustStep;
+
+/// Explore-enabled config, simulation off, with a short seed-ratio list
+/// so the tests stay fast. Rung 0 seeds from `sweep.ratios`, so any list
+/// exercises the same machinery as the default §6.3 grid.
+fn explore_cfg() -> FlowConfig {
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.explore.enabled = true;
+    cfg.sweep.ratios = vec![0.6, 0.7, 0.85];
+    cfg
+}
+
+/// The matching sweep-enabled config: same seed grid, sweep instead of
+/// explore — the head-to-head baseline.
+fn sweep_cfg() -> FlowConfig {
+    let mut cfg = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.sweep.enabled = true;
+    cfg.sweep.ratios = vec![0.6, 0.7, 0.85];
+    cfg
+}
+
+fn chain_design(name: &str, n: usize) -> Design {
+    let mut b = TaskGraphBuilder::new(name);
+    let p = b.proto(
+        "K",
+        ComputeSpec {
+            mac_ops: 25,
+            alu_ops: 200,
+            bram_bytes: 48 * 1024,
+            uram_bytes: 0,
+            trip_count: 256,
+            ii: 1,
+            pipeline_depth: 6,
+        },
+    );
+    let ids = b.invoke_n(p, "k", n);
+    for i in 0..n - 1 {
+        b.stream(&format!("s{i}"), 128, 2, ids[i], ids[i + 1]);
+    }
+    Design { name: name.to_string(), graph: b.build().unwrap(), device: DeviceKind::U250 }
+}
+
+/// Fresh scratch directory under the system temp dir (no tempfile crate
+/// offline).
+fn workdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tapa_explore_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn explore_checkpoint_bytes_identical_for_1_4_8_jobs() {
+    let d = chain_design("ex_jobs_chain", 8);
+    let run = |jobs: usize| {
+        let dir = workdir(&format!("jobs{jobs}"));
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, explore_cfg())
+            .with_workdir(&dir)
+            .with_jobs(jobs);
+        s.up_to(Stage::Explore, &RustStep).unwrap();
+        let path =
+            Session::checkpoint_path(&dir, &d.name, d.device, FlowVariant::Tapa);
+        let bytes = std::fs::read(&path).expect("explore checkpoint written");
+        let _ = std::fs::remove_dir_all(&dir);
+        bytes
+    };
+    let a = run(1);
+    for jobs in [4, 8] {
+        let b = run(jobs);
+        assert_eq!(
+            a, b,
+            "--jobs {jobs} checkpoint must be byte-identical to --jobs 1"
+        );
+    }
+}
+
+#[test]
+fn budget_truncates_the_search_deterministically() {
+    let d = chain_design("ex_budget_chain", 8);
+
+    // An untruncated reference search.
+    let full = {
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, explore_cfg());
+        s.up_to(Stage::Explore, &RustStep).unwrap();
+        s.context().explore.clone().unwrap()
+    };
+    assert!(full.points.len() >= 3, "the reference search visits the seed grid");
+    assert!(full.evals_used >= 1);
+
+    // A 4-eval budget truncates the search but still adopts a point, and
+    // two identical runs agree on every recorded field.
+    let run = |budget: ExploreBudget| {
+        let mut cfg = explore_cfg();
+        cfg.explore.budget = budget;
+        let mut s = Session::new(d.clone(), FlowVariant::Tapa, cfg);
+        s.up_to(Stage::Explore, &RustStep).unwrap();
+        s.context().explore.clone().unwrap()
+    };
+    let a = run(ExploreBudget::Evals(4));
+    let b = run(ExploreBudget::Evals(4));
+    assert_eq!(a.evals_used, b.evals_used);
+    assert_eq!(a.adopted, b.adopted);
+    assert_eq!(a.rungs, b.rungs);
+    assert!(a.evals_used <= 4, "budget is a hard cap: {} evals", a.evals_used);
+    assert!(a.evals_used <= full.evals_used);
+    assert!(a.adopted.is_some(), "a truncated search still adopts a point");
+    assert_eq!(a.budget, "4evals");
+
+    // A nodes-denominated budget converts deterministically: 256 nodes at
+    // 64 nodes/eval is the same 4-eval cap, so the search is identical —
+    // only the persisted label differs.
+    let n = run(ExploreBudget::Nodes(256));
+    assert_eq!(n.budget, "256nodes");
+    assert_eq!(n.evals_used, a.evals_used);
+    assert_eq!(n.adopted, a.adopted);
+    assert_eq!(n.rungs, a.rungs);
+}
+
+#[test]
+fn resume_skips_completed_explore() {
+    let dir = workdir("resume");
+    let d = chain_design("ex_resume_chain", 8);
+    let cfg = explore_cfg();
+
+    // `tapa compile --explore --to explore --workdir W`
+    let mut first =
+        Session::new(d.clone(), FlowVariant::Tapa, cfg.clone()).with_workdir(&dir);
+    first.up_to(Stage::Explore, &RustStep).unwrap();
+    let want = first.context().explore.clone().unwrap();
+    drop(first);
+
+    // `… --resume`: estimate and explore come from the checkpoint; only
+    // the post-explore stages execute, and the artifact round-trips
+    // losslessly (minus the never-persisted schedule).
+    let mut s =
+        Session::resume(d, Some(FlowVariant::Tapa), cfg, &dir).unwrap();
+    let r = s.run_all(&RustStep).unwrap();
+    assert!(r.fmax_mhz.is_some());
+    assert!(
+        s.resumed_stages().contains(&Stage::Explore),
+        "explore restored from checkpoint, not re-searched"
+    );
+    assert!(!s.executed_stages().contains(&Stage::Explore));
+    let got = s.context().explore.as_ref().unwrap();
+    assert_eq!(got.adopted, want.adopted);
+    assert_eq!(got.evals_used, want.evals_used);
+    assert_eq!(got.rungs, want.rungs);
+    assert_eq!(got.solver, want.solver);
+    assert_eq!(got.phys, want.phys);
+    let gf: Vec<Option<f64>> = got.points.iter().map(|p| p.fmax_mhz).collect();
+    let wf: Vec<Option<f64>> = want.points.iter().map(|p| p.fmax_mhz).collect();
+    assert_eq!(gf, wf);
+    assert_eq!(got.sched, Default::default(), "schedule is not persisted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_with_newly_enabled_explore_runs_the_search() {
+    let dir = workdir("enable");
+    let d = chain_design("ex_enable_chain", 6);
+    // First run WITHOUT explore, to completion.
+    let plain = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let mut s =
+        Session::new(d.clone(), FlowVariant::Tapa, plain).with_workdir(&dir);
+    s.run_all(&RustStep).unwrap();
+    drop(s);
+
+    // `--resume --explore`: the checkpoint is invalidated from Explore
+    // onward, so the search actually runs; the estimates are still reused.
+    let mut s =
+        Session::resume(d, Some(FlowVariant::Tapa), explore_cfg(), &dir).unwrap();
+    let r = s.run_all(&RustStep).unwrap();
+    assert!(s.resumed_stages().contains(&Stage::Estimate));
+    assert!(s.executed_stages().contains(&Stage::Explore));
+    let ex = s.context().explore.as_ref().unwrap();
+    assert!(ex.adopted.is_some(), "the search ran on resume");
+    assert!(r.fmax_mhz.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn explore_checkpoint_resumed_without_explore_resolves_floorplan() {
+    let dir = workdir("disable");
+    let d = chain_design("ex_disable_chain", 6);
+    // `--explore --to floorplan` leaves the adopted point as the session
+    // floorplan.
+    let mut s =
+        Session::new(d.clone(), FlowVariant::Tapa, explore_cfg()).with_workdir(&dir);
+    s.up_to(Stage::Floorplan, &RustStep).unwrap();
+    drop(s);
+
+    // Resuming WITHOUT explore must re-run the §5.2 feedback solve rather
+    // than keeping the explore-adopted plan under a config that never
+    // searched for it.
+    let plain = FlowConfig {
+        sim: SimOptions { enabled: false, ..Default::default() },
+        ..Default::default()
+    };
+    let mut s = Session::resume(d, Some(FlowVariant::Tapa), plain, &dir).unwrap();
+    let r = s.run_all(&RustStep).unwrap();
+    assert!(s.executed_stages().contains(&Stage::Floorplan));
+    assert!(r.floorplan.is_some(), "a real floorplan was solved");
+    assert!(r.fmax_mhz.is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn explore_meets_sweep_at_no_more_cold_evals_and_searches_jointly() {
+    for n in [6, 8, 10] {
+        let d = chain_design(&format!("ex_vs_sweep_{n}"), n);
+
+        let mut sw = Session::new(d.clone(), FlowVariant::Tapa, sweep_cfg());
+        sw.up_to(Stage::Sweep, &RustStep).unwrap();
+        let sweep = sw.context().sweep.clone().unwrap();
+
+        let mut ex = Session::new(d, FlowVariant::Tapa, explore_cfg());
+        ex.up_to(Stage::Explore, &RustStep).unwrap();
+        let explore = ex.context().explore.clone().unwrap();
+
+        // Meet-or-beat: rung 0 replays the sweep grid, so the adopted
+        // point can only match or improve on the sweep winner.
+        let sweep_best =
+            sweep.best.and_then(|b| sweep.points[b].fmax_mhz).expect("sweep adopts");
+        let adopted = explore
+            .adopted
+            .and_then(|a| explore.points[a].fmax_mhz)
+            .expect("explore adopts");
+        assert!(
+            adopted >= sweep_best,
+            "n={n}: explore adopted {adopted} < sweep winner {sweep_best}"
+        );
+
+        // …at no more cold (first-in-chain) physical evaluations than the
+        // sweep's full grid paid.
+        let sweep_cold = sweep.phys.evals - sweep.phys.warm_evals;
+        let explore_cold = explore.phys.evals - explore.phys.warm_evals;
+        assert!(
+            explore_cold <= sweep_cold,
+            "n={n}: explore paid {explore_cold} cold evals vs the sweep's {sweep_cold}"
+        );
+
+        // The search is genuinely joint: past rung 0 it perturbs the
+        // stages-per-crossing knob too, not just the ratio axis.
+        let base_spc = FlowConfig::default().floorplan.stages_per_crossing;
+        assert!(
+            explore.points.iter().any(|p| p.stages_per_crossing != base_spc),
+            "n={n}: no visited point toggled stages/crossing"
+        );
+    }
+}
+
+#[test]
+fn strict_improvements_are_never_discarded() {
+    // Whenever the search visits any point that strictly beats the sweep
+    // winner, the adopted point must strictly beat it too — the selector
+    // cannot adopt a worse point than the best it has scored.
+    let d = chain_design("ex_strict_chain", 8);
+
+    let mut sw = Session::new(d.clone(), FlowVariant::Tapa, sweep_cfg());
+    sw.up_to(Stage::Sweep, &RustStep).unwrap();
+    let sweep_best = {
+        let sweep = sw.context().sweep.as_ref().unwrap();
+        sweep.best.and_then(|b| sweep.points[b].fmax_mhz).unwrap()
+    };
+
+    let mut ex = Session::new(d, FlowVariant::Tapa, explore_cfg());
+    ex.up_to(Stage::Explore, &RustStep).unwrap();
+    let explore = ex.context().explore.clone().unwrap();
+    let adopted = explore
+        .adopted
+        .and_then(|a| explore.points[a].fmax_mhz)
+        .unwrap();
+    let best_visited = explore
+        .points
+        .iter()
+        .filter_map(|p| p.fmax_mhz)
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert_eq!(
+        adopted, best_visited,
+        "the adopted point is the best-scored visited point"
+    );
+    if best_visited > sweep_best {
+        assert!(adopted > sweep_best, "a visited strict win must be adopted");
+    }
+}

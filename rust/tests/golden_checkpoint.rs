@@ -1,11 +1,13 @@
 //! Golden checkpoint: locks the versioned `flow::persist` on-disk format.
 //!
 //! `data/golden_sweep_ctx.json` is a committed, known-good serialized
-//! [`SessionContext`] (format v5, with a §6.3 `SweepArtifact` including
+//! [`SessionContext`] (format v6, with a §6.3 `SweepArtifact` including
 //! its solver telemetry and the incremental physical-design engine's
-//! `phys` accounting), and `data/golden_cluster_ctx.json` locks the
-//! TAPA-CS multi-FPGA `ClusterArtifact` added in v5. The parser must
-//! accept them and the writer must reproduce them byte for byte — so a
+//! `phys` accounting), `data/golden_cluster_ctx.json` locks the
+//! TAPA-CS multi-FPGA `ClusterArtifact` added in v5, and
+//! `data/golden_explore_ctx.json` locks the adaptive design-space
+//! exploration `ExploreArtifact` added in v6. The parser must accept
+//! them and the writer must reproduce them byte for byte — so a
 //! future PR cannot silently change the layout and break `--resume`
 //! compatibility. Any intentional layout change must bump
 //! `flow::persist::FORMAT_VERSION` and refresh the goldens.
@@ -15,14 +17,15 @@ use tapa::flow::{persist, FlowVariant, Stage};
 
 const GOLDEN: &str = include_str!("data/golden_sweep_ctx.json");
 const GOLDEN_CLUSTER: &str = include_str!("data/golden_cluster_ctx.json");
+const GOLDEN_EXPLORE: &str = include_str!("data/golden_explore_ctx.json");
 
 #[test]
-fn golden_v5_checkpoint_roundtrips_byte_identically() {
+fn golden_v6_checkpoint_roundtrips_byte_identically() {
     let ctx = persist::context_from_json_text(GOLDEN).expect("golden checkpoint parses");
     assert_eq!(
         persist::context_to_json_text(&ctx),
         GOLDEN,
-        "writer drifted from the committed v5 checkpoint format — resume \
+        "writer drifted from the committed v6 checkpoint format — resume \
          compatibility would break; bump FORMAT_VERSION and refresh the golden \
          instead of changing the layout in place"
     );
@@ -36,6 +39,18 @@ fn golden_cluster_checkpoint_roundtrips_byte_identically() {
         persist::context_to_json_text(&ctx),
         GOLDEN_CLUSTER,
         "writer drifted from the committed ClusterArtifact layout — bump \
+         FORMAT_VERSION and refresh the golden instead of changing it in place"
+    );
+}
+
+#[test]
+fn golden_explore_checkpoint_roundtrips_byte_identically() {
+    let ctx =
+        persist::context_from_json_text(GOLDEN_EXPLORE).expect("golden explore ctx parses");
+    assert_eq!(
+        persist::context_to_json_text(&ctx),
+        GOLDEN_EXPLORE,
+        "writer drifted from the committed ExploreArtifact layout — bump \
          FORMAT_VERSION and refresh the golden instead of changing it in place"
     );
 }
@@ -62,7 +77,68 @@ fn golden_cluster_checkpoint_carries_the_expected_artifact() {
     // System Fmax = the slowest chip.
     assert_eq!(cl.fmax_mhz(), Some(298.25));
     assert_eq!(cl.stats.len(), 1);
+    assert!(ctx.explore.is_none());
     assert!(ctx.floorplan.is_none());
+}
+
+#[test]
+fn golden_explore_checkpoint_carries_the_expected_artifact() {
+    let ctx = persist::context_from_json_text(GOLDEN_EXPLORE).unwrap();
+    assert_eq!(ctx.design_name, "golden_explore");
+    assert_eq!(ctx.device, DeviceKind::U280);
+    assert_eq!(ctx.variant, FlowVariant::Tapa);
+    assert_eq!(
+        ctx.completed,
+        vec![Stage::Estimate, Stage::Explore, Stage::Floorplan]
+    );
+    let ex = ctx.explore.as_ref().expect("explore artifact");
+    assert_eq!(ex.budget, "24evals");
+    assert_eq!(ex.evals_used, 2);
+    // v6: the explore records solver + incremental-engine accounting.
+    assert_eq!(ex.solver.solves, 4);
+    assert_eq!(ex.solver.warm_hits, 2);
+    assert_eq!(ex.solver.bb_nodes, 8);
+    assert_eq!(ex.phys.evals, 2);
+    assert_eq!(ex.phys.warm_evals, 1);
+    // The jobs-dependent schedule is never persisted.
+    assert_eq!(ex.sched, Default::default());
+    assert_eq!(ex.rungs.len(), 2);
+    assert_eq!(ex.rungs[0].candidates, 2);
+    assert_eq!(ex.rungs[0].survivors, 1);
+    assert_eq!(ex.points.len(), 4);
+    // Point 0: rung-0 seed, fully implemented at the base pipelining depth.
+    assert_eq!(ex.points[0].util_ratio, 0.5);
+    assert_eq!(ex.points[0].stages_per_crossing, 2);
+    assert_eq!(ex.points[0].rung, 0);
+    assert_eq!(ex.points[0].fmax_mhz, Some(300.5));
+    // Point 1: a failed solve — no plan, no Fmax, but still recorded.
+    assert!(ex.points[1].plan.is_none());
+    assert!(ex.points[1].fmax_mhz.is_none());
+    // Point 2: the adopted winner — same ratio as point 0 but a deeper
+    // crossing pipeline, so it is NOT a duplicate.
+    assert_eq!(ex.adopted, Some(2));
+    assert_eq!(ex.points[2].stages_per_crossing, 3);
+    assert_eq!(ex.points[2].duplicate_of, None);
+    assert_eq!(ex.points[2].fmax_mhz, Some(312.5));
+    // Point 3: a perturbation whose solve collapsed onto point 0's
+    // assignment — solved but not re-implemented.
+    assert_eq!(ex.points[3].duplicate_of, Some(0));
+    assert_eq!(
+        ex.points[3].plan.as_ref().unwrap().assignment,
+        ex.points[0].plan.as_ref().unwrap().assignment
+    );
+
+    // The adopted floorplan carries the winner's assignment and the
+    // deeper crossing latency.
+    let fa = ctx.floorplan.as_ref().expect("floorplan artifact");
+    assert!(!fa.degraded);
+    let fp = fa.floorplan.as_ref().expect("adopted floorplan");
+    assert_eq!(
+        fp.assignment,
+        ex.points[2].plan.as_ref().unwrap().assignment
+    );
+    assert_eq!(fa.raw_plan.as_ref().unwrap().edge_lat, vec![3]);
+    assert!(ctx.sweep.is_none());
 }
 
 #[test]
@@ -78,6 +154,8 @@ fn golden_checkpoint_carries_the_expected_artifacts() {
     assert_eq!(ctx.estimates.as_ref().map(|e| e.len()), Some(2));
     // v5: single-device checkpoints carry an explicit null cluster field.
     assert!(ctx.cluster.is_none());
+    // v6: sweep-only checkpoints carry an explicit null explore field.
+    assert!(ctx.explore.is_none());
 
     let fa = ctx.floorplan.as_ref().expect("floorplan artifact");
     assert!(!fa.degraded);

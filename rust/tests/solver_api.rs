@@ -143,6 +143,26 @@ fn warm_sweep_matches_cold_points_and_saves_nodes() {
         "warm sweep must be strictly cheaper: warm {} vs cold {cold_nodes} nodes",
         art.solver.bb_nodes
     );
+
+    // Memo-lookup accounting: the fingerprint pre-filter must route each
+    // probe to its own (collision-only) bucket, so the structural compares
+    // stay bounded by the solve count instead of scanning every memoized
+    // problem (`solves × memo_len` without the pre-filter). The identical
+    // re-solves in this chain are answered by the memo, so at least one
+    // compare actually happened.
+    let phys = s.phys().lock().unwrap();
+    let solver = &phys.solver;
+    assert!(
+        solver.memo_compares >= 1,
+        "the light chain's identical re-solves must probe the memo"
+    );
+    assert!(
+        solver.memo_compares <= solver.solves,
+        "memo lookups scanned {} problems over {} solves — the fingerprint \
+         pre-filter is not pruning the scan",
+        solver.memo_compares,
+        solver.solves
+    );
 }
 
 /// Same solution-identity contract on a design where capacity rows make
